@@ -1,0 +1,156 @@
+//! **End-to-end driver** (DESIGN.md §validation): exercises the full
+//! three-layer stack on a real small workload, proving all layers compose:
+//!
+//! 1. loads the AOT artifacts (`make artifacts`) through the PJRT runtime —
+//!    the L1 Pallas kernels lowered via the L2 JAX graphs;
+//! 2. serves **batched gain requests** from the rust coordinator's hot
+//!    loop (DASH's filter rounds are exactly batched-inference rounds),
+//!    reporting request latency and throughput;
+//! 3. runs the full selection workload (DASH + parallel greedy + baselines)
+//!    against both the XLA and native backends, cross-checking values;
+//! 4. logs the value-vs-round curve to `results/e2e_curve.csv`.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example end_to_end
+//! ```
+
+use dash_select::algorithms::{Dash, DashConfig, Greedy, GreedyConfig};
+use dash_select::coordinator::{
+    AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob,
+};
+use dash_select::data::synthetic;
+use dash_select::objectives::Objective;
+use dash_select::oracle::XlaLregObjective;
+use dash_select::rng::Pcg64;
+use dash_select::runtime::{default_artifacts_dir, Manifest, RuntimeClient};
+use dash_select::util::csvio::CsvTable;
+use dash_select::util::Timer;
+use std::sync::Arc;
+
+fn main() -> Result<(), String> {
+    // ---- 1. runtime + artifacts ----
+    let dir = default_artifacts_dir();
+    let manifest = Manifest::load(&dir)
+        .map_err(|e| format!("{e}\nrun `make artifacts` first"))?;
+    let client = RuntimeClient::global().map_err(|e| e.to_string())?;
+    println!(
+        "PJRT platform: {}; {} artifacts loaded from {:?}",
+        client.platform().map_err(|e| e.to_string())?,
+        manifest.artifacts.len(),
+        manifest.dir
+    );
+    for a in &manifest.artifacts {
+        println!("  {:<28} kind={:<8} d={} s={} nc={}", a.name, a.kind.as_str(), a.d, a.s, a.nc);
+    }
+
+    // ---- 2. workload sized to the "small" artifact profile ----
+    // (d ≤ 256 samples, basis ≤ 64; 500 candidate features exercise the
+    // chunked batching path: 500 = 2 chunks of nc = 256)
+    let mut rng = Pcg64::seed_from(2024);
+    let data = synthetic::regression_d1(&mut rng, 250, 500, 80, 0.4);
+    let k = 48;
+    println!(
+        "\nworkload: {} ({} samples × {} features), k = {k}",
+        data.name,
+        data.d(),
+        data.n()
+    );
+
+    // ---- batched request serving: measure oracle latency/throughput ----
+    let xla_obj = XlaLregObjective::new(&data, &manifest, k).map_err(|e| e.to_string())?;
+    let st = xla_obj.state_for(&[0, 7, 100, 320]);
+    let all: Vec<usize> = (0..data.n()).collect();
+    // warmup (compiles nothing new, fills caches)
+    let _ = st.gains(&all);
+    let reqs = 20;
+    let t = Timer::start();
+    for _ in 0..reqs {
+        let g = st.gains(&all);
+        assert_eq!(g.len(), data.n());
+    }
+    let dt = t.elapsed_s();
+    println!(
+        "\nbatched oracle serving: {reqs} requests × {} candidate gains\n  latency {:.3} ms/request, throughput {:.0} gains/s",
+        data.n(),
+        1e3 * dt / reqs as f64,
+        reqs as f64 * data.n() as f64 / dt
+    );
+
+    // ---- 3. full selection on both backends ----
+    let leader = Leader::new();
+    let mut rows: Vec<(String, f64, usize, usize, f64)> = Vec::new();
+    let mut dash_history = Vec::new();
+    for (backend, tag) in [(Backend::Xla, "xla"), (Backend::Native, "native")] {
+        for (alg, name) in [
+            (AlgorithmChoice::Dash(DashConfig { k, ..Default::default() }), "dash"),
+            (
+                AlgorithmChoice::ParallelGreedy {
+                    cfg: GreedyConfig { k, ..Default::default() },
+                    threads: 4,
+                },
+                "parallel_sds_ma",
+            ),
+            (AlgorithmChoice::TopK, "top_k"),
+        ] {
+            let job = SelectionJob {
+                dataset: Arc::new(data.clone()),
+                objective: ObjectiveChoice::Lreg,
+                backend,
+                algorithm: alg,
+                k,
+                seed: 5,
+            };
+            let report = leader.run(&job)?;
+            if name == "dash" && tag == "xla" {
+                dash_history = report.result.history.clone();
+            }
+            rows.push((
+                format!("{name}[{tag}]"),
+                report.native_value,
+                report.result.rounds,
+                report.result.queries,
+                report.result.wall_s,
+            ));
+        }
+    }
+    println!("\n{:<24} {:>9} {:>8} {:>10} {:>9}", "algorithm[backend]", "R²", "rounds", "queries", "wall(s)");
+    for (name, v, rounds, queries, wall) in &rows {
+        println!("{name:<24} {v:>9.4} {rounds:>8} {queries:>10} {wall:>9.3}");
+    }
+
+    // cross-check: XLA and native DASH land within a whisker (same seed)
+    let v = |needle: &str| rows.iter().find(|r| r.0 == needle).map(|r| r.1).unwrap_or(0.0);
+    let diff = (v("dash[xla]") - v("dash[native]")).abs();
+    println!("\nbackend cross-check: |R²(xla) − R²(native)| = {diff:.2e}");
+    if diff > 0.05 {
+        return Err(format!("backend divergence too large: {diff}"));
+    }
+    let greedy_r = Greedy::new(GreedyConfig { k, ..Default::default() })
+        .run(&dash_select::objectives::LinearRegressionObjective::new(&data));
+    let dash_r = Dash::new(DashConfig { k, ..Default::default() })
+        .run(&XlaLregObjective::new(&data, &manifest, k).map_err(|e| e.to_string())?, &mut rng);
+    println!(
+        "paper shape check: DASH(xla) {:.4} vs greedy {:.4} ({:.0}% of greedy) in {} vs {} rounds",
+        dash_r.value,
+        greedy_r.value,
+        100.0 * dash_r.value / greedy_r.value.max(1e-12),
+        dash_r.rounds,
+        greedy_r.rounds
+    );
+
+    // ---- 4. value-vs-round curve ----
+    let mut curve = CsvTable::new(&["round", "value", "set_size", "queries"]);
+    for rec in &dash_history {
+        curve.push(vec![
+            rec.round.to_string(),
+            format!("{:.6}", rec.value),
+            rec.set_size.to_string(),
+            rec.queries.to_string(),
+        ]);
+    }
+    let out = dash_select::experiments::results_dir().join("e2e_curve.csv");
+    curve.save(&out).map_err(|e| e.to_string())?;
+    println!("\nwrote DASH(xla) value-vs-round curve to {out:?} ({} rounds)", curve.rows.len());
+    println!("end_to_end OK");
+    Ok(())
+}

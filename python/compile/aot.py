@@ -1,0 +1,116 @@
+"""AOT lowering: JAX (L2+L1) → HLO **text** artifacts + manifest.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts land in ``artifacts/`` together with ``manifest.json`` describing
+each module's shapes so the rust runtime (`runtime::artifact`) can pad its
+batches without re-deriving anything. Run via ``make artifacts``; the make
+rule skips the (slow) lowering when inputs are unchanged.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--profile small|paper]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Shape profiles. "small" compiles fast and serves tests + the quickstart
+# examples; "paper" matches the figure workloads (D1/D2 regression, D1-ed /
+# D2-ed design).  nc is the padded candidate-tile batch; s the padded basis.
+PROFILES = {
+    "small": [
+        ("lreg", dict(d=256, s=64, nc=256)),
+        ("aopt", dict(d=64, nc=256)),
+        ("logistic", dict(d=256, nc=256)),
+    ],
+    "paper": [
+        ("lreg", dict(d=1024, s=128, nc=512)),
+        ("lreg", dict(d=4096, s=128, nc=512)),
+        ("aopt", dict(d=256, nc=1024)),
+        ("aopt", dict(d=512, nc=1024)),
+        ("logistic", dict(d=1024, nc=512)),
+        ("logistic", dict(d=4096, nc=2560)),
+    ],
+}
+
+
+def build_entry(kind, dims):
+    if kind == "lreg":
+        args = model.lreg_example(dims["d"], dims["s"], dims["nc"])
+        fn = model.lreg_oracle
+    elif kind == "aopt":
+        args = model.aopt_example(dims["d"], dims["nc"])
+        fn = model.aopt_oracle
+    elif kind == "logistic":
+        args = model.logistic_example(dims["d"], dims["nc"])
+        fn = model.logistic_oracle
+    else:
+        raise ValueError(f"unknown kind {kind}")
+    return fn, args
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--profile", default="small", choices=list(PROFILES) + ["all"])
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    profiles = list(PROFILES) if args.profile == "all" else [args.profile]
+    seen = set()
+    for prof in profiles:
+        for kind, dims in PROFILES[prof]:
+            key = (kind, tuple(sorted(dims.items())))
+            if key in seen:
+                continue
+            seen.add(key)
+            fn, ex_args = build_entry(kind, dims)
+            lowered = jax.jit(fn).lower(*ex_args)
+            hlo = to_hlo_text(lowered)
+            dim_tag = "_".join(f"{k}{v}" for k, v in sorted(dims.items()))
+            fname = f"{kind}_{dim_tag}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            with open(path, "w") as f:
+                f.write(hlo)
+            entries.append(
+                {
+                    "name": f"{kind}_{dim_tag}",
+                    "kind": kind,
+                    "file": fname,
+                    "dims": dims,
+                    "dtype": "f32",
+                    "inputs": [list(a.shape) for a in ex_args],
+                    "outputs": 1,
+                }
+            )
+            print(f"wrote {path} ({len(hlo)} chars)")
+
+    manifest = {"version": 1, "artifacts": entries}
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: batched Bayesian A-optimality gains.
+
+Gain of adding stimulus x to the design: ``σ⁻²‖Mx‖² / (1 + σ⁻²xᵀMx)`` with
+M the current posterior covariance. Batched over a candidate tile this is
+the ``(d × d)·(d × TILE_N)`` matmul ``M·Xc`` plus two columnwise
+reductions. The posterior block stays VMEM-resident across grid steps
+(index_map pins it at (0,0)); candidate tiles stream. VMEM per step =
+d² + 2·d·TILE_N floats — d = 256/385 and TILE_N = 256 keeps this ≤ 4 MB
+in f32. ``interpret=True`` for the CPU PJRT path (see lreg_gains.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(m_ref, xc_ref, sig_ref, out_ref):
+    m = m_ref[...]  # (d, d)
+    xc = xc_ref[...]  # (d, tile)
+    sig = sig_ref[0]  # scalar σ⁻²
+    mx = m @ xc  # MXU matmul
+    num = sig * jnp.sum(mx * mx, axis=0)
+    den = 1.0 + sig * jnp.sum(xc * mx, axis=0)
+    out_ref[...] = (num / den).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def aopt_gains(m, xc, sigma_sq_inv, *, tile=256):
+    """Batched A-optimality gains via the Pallas kernel.
+
+    m: (d, d) posterior covariance; xc: (d, nc), nc a multiple of ``tile``;
+    sigma_sq_inv: (1,) array holding σ⁻². Returns (nc,) gains.
+    """
+    d = m.shape[0]
+    nc = xc.shape[1]
+    tile = min(tile, nc)  # shrink the tile for small batches
+    assert nc % tile == 0, f"candidate count {nc} must be a multiple of {tile}"
+    grid = (nc // tile,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, tile), lambda i: (0, i)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nc,), xc.dtype),
+        interpret=True,
+    )(m, xc, sigma_sq_inv)

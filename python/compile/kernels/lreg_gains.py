@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: batched regression marginal gains.
+
+The hot loop of every round of DASH / greedy on the regression objective is
+"score all candidate columns against the current solution" — a
+matmul-shaped sweep. The kernel tiles the **candidate axis** with
+``BlockSpec`` so each grid step streams one ``(d × TILE_N)`` candidate tile
+from HBM into VMEM while the basis block ``(d × s)`` and residual stay
+resident, drives the MXU with the ``(s × d)·(d × TILE_N)`` projection, and
+reduces to per-candidate gains in VMEM.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the paper ran
+multicore CPU Python; there is no kernel to port, so the BlockSpec schedule
+below is *our* mapping of the oracle onto a systolic-array budget:
+VMEM per step = d·s (basis) + d·TILE_N (tile) + s·TILE_N (projection)
+floats. With d ≤ 1024, s ≤ 256, TILE_N = 256 and f32 that is ≤ 4 MB.
+``interpret=True`` everywhere — the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so correctness runs through the interpreter and the same HLO
+is what the rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEN_FLOOR = 1e-10
+REL_DEN_FLOOR = 1e-5
+
+
+def _kernel(q_ref, r_ref, xc_ref, out_ref):
+    xc = xc_ref[...]  # (d, tile)
+    r = r_ref[...]  # (d,)
+    q = q_ref[...]  # (d, s)
+    num = jnp.square(xc.T @ r)  # (tile,)
+    qx = q.T @ xc  # (s, tile) — the MXU matmul
+    norm_sq = jnp.sum(xc * xc, axis=0)
+    den = norm_sq - jnp.sum(qx * qx, axis=0)
+    # relative dependence cutoff — see kernels/ref.py
+    floor = REL_DEN_FLOOR * norm_sq + DEN_FLOOR
+    out_ref[...] = jnp.where(
+        den > floor, num / jnp.maximum(den, DEN_FLOOR), 0.0
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def lreg_gains(q, r, xc, *, tile=256):
+    """Batched regression gains via the Pallas kernel.
+
+    q: (d, s) zero-padded orthonormal basis; r: (d,); xc: (d, nc) with
+    nc a multiple of ``tile``. Returns (nc,) gains.
+    """
+    d, s = q.shape
+    nc = xc.shape[1]
+    tile = min(tile, nc)  # shrink the tile for small batches
+    assert nc % tile == 0, f"candidate count {nc} must be a multiple of {tile}"
+    grid = (nc // tile,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, s), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, tile), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nc,), xc.dtype),
+        interpret=True,
+    )(q, r, xc)

@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracles — the correctness ground truth for the Pallas
+kernels (L1) and, transitively, for the AOT-compiled artifacts the rust
+runtime executes.
+
+Each function computes batched marginal gains for one of the paper's
+objectives given the *state summary* maintained by the rust coordinator:
+
+- linear regression (Cor. 7): orthonormal basis ``q`` of the selected
+  columns and residual ``r = y − QQᵀy``;
+- Bayesian A-optimality (Cor. 9): posterior covariance ``m``;
+- logistic regression (Cor. 8): working residual ``y − p`` and IRLS weights
+  ``w = p(1−p)`` (one-step / score-test gains — the quadratic approximation
+  of the refit gain at the current fit).
+
+All math is f32 (the PJRT CPU artifact dtype); the rust native oracle keeps
+f64 and the integration tests bound the drift.
+"""
+
+import jax.numpy as jnp
+
+# Floor below which a candidate direction counts as linearly dependent.
+DEN_FLOOR = 1e-10
+# relative cutoff: candidates with residual direction below this fraction of
+# their norm count as linearly dependent (f32 headroom)
+REL_DEN_FLOOR = 1e-5
+
+
+def lreg_gains_ref(q, r, xc):
+    """Regression gains: ``(x_aᵀr)² / (‖x_a‖² − ‖Qᵀx_a‖²)`` per candidate.
+
+    q:  (d, s)  orthonormal basis columns (zero-padded columns allowed)
+    r:  (d,)    residual of the response
+    xc: (d, nc) candidate feature columns
+    returns (nc,) gains (unnormalized; the caller divides by ‖y‖²)
+
+    The linear-dependence cutoff is *relative* to ‖x‖² — in f32 the
+    cancellation ‖x‖² − ‖Qᵀx‖² of an in-span candidate leaves noise of
+    order ε·‖x‖², which an absolute floor would amplify into huge gains.
+    """
+    num = jnp.square(xc.T @ r)  # (nc,)
+    qx = q.T @ xc  # (s, nc)
+    norm_sq = jnp.sum(xc * xc, axis=0)
+    den = norm_sq - jnp.sum(qx * qx, axis=0)
+    floor = REL_DEN_FLOOR * norm_sq + DEN_FLOOR
+    return jnp.where(den > floor, num / jnp.maximum(den, DEN_FLOOR), 0.0)
+
+
+def aopt_gains_ref(m, xc, sigma_sq_inv):
+    """A-optimality gains: ``σ⁻²‖Mx‖² / (1 + σ⁻²xᵀMx)`` per candidate.
+
+    m:  (d, d)  posterior covariance
+    xc: (d, nc) candidate stimuli
+    sigma_sq_inv: scalar σ⁻²
+    returns (nc,) gains (unnormalized; caller divides by Tr(Λ⁻¹))
+    """
+    mx = m @ xc  # (d, nc)
+    num = sigma_sq_inv * jnp.sum(mx * mx, axis=0)
+    den = 1.0 + sigma_sq_inv * jnp.sum(xc * mx, axis=0)
+    return num / den
+
+
+def logistic_gains_ref(xc, resid, w):
+    """Score-test logistic gains: ``(x_aᵀ(y−p))² / (2·x_aᵀ W x_a)``.
+
+    xc:    (d, nc) candidate feature columns
+    resid: (d,)    y − p at the current fit
+    w:     (d,)    IRLS weights p(1−p)
+    returns (nc,) one-step gain approximations (unnormalized log-likelihood
+    units; caller divides by d·ln2)
+    """
+    num = jnp.square(xc.T @ resid)
+    den = 2.0 * jnp.sum(w[:, None] * xc * xc, axis=0)
+    return jnp.where(den > DEN_FLOOR, num / jnp.maximum(den, DEN_FLOOR), 0.0)

@@ -1,0 +1,71 @@
+"""L2 — the JAX oracle graphs the rust coordinator executes.
+
+Each entry point wraps an L1 Pallas kernel into the exact padded-shape
+function that gets AOT-lowered to an HLO artifact. The rust side maintains
+the objective *state* (orthonormal basis / posterior covariance / working
+residuals, all O(d·s) or O(d²) incremental updates) and offloads the
+O(d·n) candidate sweeps — the per-round hot path — to these graphs.
+
+Build-time only: nothing in this package is imported at serving time.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.aopt_gains import aopt_gains
+from compile.kernels.logistic_gains import logistic_gains
+from compile.kernels.lreg_gains import lreg_gains
+
+
+def lreg_oracle(q, r, xc):
+    """Regression gains oracle. Output is a 1-tuple (AOT convention)."""
+    return (lreg_gains(q, r, xc),)
+
+
+def aopt_oracle(m, xc, sigma_sq_inv):
+    """A-optimality gains oracle."""
+    return (aopt_gains(m, xc, sigma_sq_inv),)
+
+
+def logistic_oracle(xc, resid, w):
+    """Score-test logistic gains oracle."""
+    return (logistic_gains(xc, resid, w),)
+
+
+def lreg_oracle_topm(q, r, xc, *, m_top):
+    """Fused variant: gains plus the indices/values of the top-m candidates
+    (saves shipping the full gain vector back when only the filter survivors
+    matter). Returns (gains, top_values, top_indices)."""
+    gains = lreg_gains(q, r, xc)
+    top_v, top_i = jnp.sort(gains)[::-1][:m_top], jnp.argsort(-gains)[:m_top]
+    return (gains, top_v, top_i.astype(jnp.int32))
+
+
+# Example-input builders used by aot.py — shapes define the artifact.
+def lreg_example(d, s, nc, dtype=jnp.float32):
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((d, s), dtype),
+        jax.ShapeDtypeStruct((d,), dtype),
+        jax.ShapeDtypeStruct((d, nc), dtype),
+    )
+
+
+def aopt_example(d, nc, dtype=jnp.float32):
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((d, d), dtype),
+        jax.ShapeDtypeStruct((d, nc), dtype),
+        jax.ShapeDtypeStruct((1,), dtype),
+    )
+
+
+def logistic_example(d, nc, dtype=jnp.float32):
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((d, nc), dtype),
+        jax.ShapeDtypeStruct((d,), dtype),
+        jax.ShapeDtypeStruct((d,), dtype),
+    )

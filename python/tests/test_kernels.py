@@ -1,0 +1,160 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp reference oracles.
+
+hypothesis sweeps shapes and seeds; every kernel must match ref.py to f32
+tolerance, including the padding/masking edge cases the rust batcher
+produces (zero-padded basis columns, zero-padded candidate columns).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.aopt_gains import aopt_gains
+from compile.kernels.logistic_gains import logistic_gains
+from compile.kernels.lreg_gains import lreg_gains
+
+TILE = 64  # small tile for fast interpret-mode tests
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def orthonormal_basis(rng, d, s_true, s_pad):
+    """d×s_pad basis with s_true real orthonormal columns, rest zero."""
+    a = rand(rng, d, max(s_true, 1))
+    q, _ = np.linalg.qr(a)
+    out = np.zeros((d, s_pad), dtype=np.float32)
+    out[:, :s_true] = q[:, :s_true]
+    return out
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(8, 96),
+    s_true=st.integers(0, 6),
+    tiles=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lreg_kernel_matches_ref(d, s_true, tiles, seed):
+    rng = np.random.default_rng(seed)
+    s_pad = 8
+    nc = TILE * tiles
+    q = orthonormal_basis(rng, d, s_true, s_pad)
+    r = rand(rng, d)
+    xc = rand(rng, d, nc)
+    got = np.asarray(lreg_gains(jnp.array(q), jnp.array(r), jnp.array(xc), tile=TILE))
+    want = np.asarray(ref.lreg_gains_ref(jnp.array(q), jnp.array(r), jnp.array(xc)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert got.shape == (nc,)
+    assert np.all(got >= 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(4, 48),
+    tiles=st.integers(1, 3),
+    sig=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aopt_kernel_matches_ref(d, tiles, sig, seed):
+    rng = np.random.default_rng(seed)
+    nc = TILE * tiles
+    b = rand(rng, d, d)
+    m = (b @ b.T / d + np.eye(d)).astype(np.float32)  # SPD covariance
+    xc = rand(rng, d, nc)
+    sig_arr = jnp.array([sig], dtype=jnp.float32)
+    got = np.asarray(aopt_gains(jnp.array(m), jnp.array(xc), sig_arr, tile=TILE))
+    want = np.asarray(ref.aopt_gains_ref(jnp.array(m), jnp.array(xc), sig))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    assert np.all(got >= 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(8, 96),
+    tiles=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_logistic_kernel_matches_ref(d, tiles, seed):
+    rng = np.random.default_rng(seed)
+    nc = TILE * tiles
+    xc = rand(rng, d, nc)
+    p = rng.uniform(0.05, 0.95, d).astype(np.float32)
+    y = (rng.uniform(0, 1, d) < 0.5).astype(np.float32)
+    resid = y - p
+    w = p * (1 - p)
+    got = np.asarray(
+        logistic_gains(jnp.array(xc), jnp.array(resid), jnp.array(w), tile=TILE)
+    )
+    want = np.asarray(
+        ref.logistic_gains_ref(jnp.array(xc), jnp.array(resid), jnp.array(w))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_lreg_padded_candidates_zero_gain():
+    """Zero-padded candidate columns (the rust batcher's padding) get 0."""
+    rng = np.random.default_rng(0)
+    d = 32
+    q = orthonormal_basis(rng, d, 2, 4)
+    r = rand(rng, d)
+    xc = np.zeros((d, TILE), dtype=np.float32)
+    xc[:, :3] = rand(rng, d, 3)
+    gains = np.asarray(lreg_gains(jnp.array(q), jnp.array(r), jnp.array(xc), tile=TILE))
+    assert np.all(gains[3:] == 0.0)
+    assert np.all(gains[:3] >= 0.0)
+
+
+def test_lreg_in_span_candidate_zero_gain():
+    """A candidate inside span(Q) must get zero gain, not a 0/0 blowup."""
+    rng = np.random.default_rng(1)
+    d = 24
+    q = orthonormal_basis(rng, d, 3, 4)
+    r = rand(rng, d)
+    xc = np.zeros((d, TILE), dtype=np.float32)
+    xc[:, 0] = 2.5 * q[:, 0] - 1.0 * q[:, 2]  # in span
+    xc[:, 1] = rand(rng, d)
+    gains = np.asarray(lreg_gains(jnp.array(q), jnp.array(r), jnp.array(xc), tile=TILE))
+    assert gains[0] == pytest.approx(0.0, abs=1e-3)
+    assert np.isfinite(gains).all()
+
+
+def test_lreg_empty_basis_matches_singleton_values():
+    """With S = ∅ the gain is (xᵀy)²/‖x‖² — check against direct numpy."""
+    rng = np.random.default_rng(2)
+    d = 40
+    q = np.zeros((d, 4), dtype=np.float32)
+    y = rand(rng, d)
+    xc = rand(rng, d, TILE)
+    gains = np.asarray(lreg_gains(jnp.array(q), jnp.array(y), jnp.array(xc), tile=TILE))
+    want = (xc.T @ y) ** 2 / np.sum(xc * xc, axis=0)
+    np.testing.assert_allclose(gains, want, rtol=1e-4)
+
+
+def test_aopt_gain_equals_trace_reduction():
+    """Kernel gain == Tr(M) − Tr(M') after the Sherman–Morrison update."""
+    rng = np.random.default_rng(3)
+    d = 12
+    beta_sq, sigma_sq = 1.0, 1.0
+    m = np.eye(d, dtype=np.float32) / beta_sq
+    xc = rand(rng, d, TILE)
+    sig = jnp.array([1.0 / sigma_sq], dtype=jnp.float32)
+    gains = np.asarray(aopt_gains(jnp.array(m), jnp.array(xc), sig, tile=TILE))
+    for j in [0, 5, TILE - 1]:
+        x = xc[:, j].astype(np.float64)
+        m64 = m.astype(np.float64)
+        a = np.linalg.inv(m64) + np.outer(x, x) / sigma_sq
+        m_new = np.linalg.inv(a)
+        want = np.trace(m64) - np.trace(m_new)
+        assert gains[j] == pytest.approx(want, rel=1e-3)
+
+
+def test_kernel_rejects_non_multiple_tile():
+    rng = np.random.default_rng(4)
+    q = orthonormal_basis(rng, 8, 1, 2)
+    with pytest.raises(AssertionError):
+        lreg_gains(jnp.array(q), jnp.zeros(8), jnp.zeros((8, TILE + 1)), tile=TILE)

@@ -1,0 +1,38 @@
+//! Figure 1 + Appendix A/J regeneration bench: the marginal-contribution
+//! sandwich scatter, the A.2 counterexample head-to-head, and the TOP-k
+//! worst-case bound audit.
+
+use dash_select::experiments::{appendix, fig1};
+
+fn main() {
+    dash_select::util::logging::set_level(dash_select::util::logging::Level::Info);
+
+    // --- Figure 1 ---
+    let out = fig1::run_fig1(&fig1::Fig1Config::default());
+    println!(
+        "fig1: {} scatter points; sampled gamma = {:.4}, alpha = gamma^2 = {:.4}",
+        out.scatter.rows.len(),
+        out.gamma,
+        out.alpha
+    );
+    println!(
+        "Thm. 6 sandwich: sum-singles/set-gain ratio observed in [{:.3}, {:.3}]",
+        out.ratio_lo, out.ratio_hi
+    );
+
+    // --- Appendix A.2 ---
+    for k in [2usize, 4, 8] {
+        let r = appendix::run_appendix_a2(k, 7);
+        println!(
+            "appendix A.2 k={k}: plain adaptive sampling failed={} (value {:.1}/{}), \
+             DASH failed={} (value {:.1}, rounds {})",
+            r.plain_failed, r.plain_value, r.opt, r.dash_failed, r.dash_value, r.dash_rounds
+        );
+    }
+
+    // --- Appendix J ---
+    let (table, violations) = appendix::run_topk_bound(20, 31);
+    println!("\nappendix J (TOP-k >= gamma^2 * OPT) over 20 instances:");
+    println!("{}", table.to_pretty());
+    println!("violations: {violations}");
+}

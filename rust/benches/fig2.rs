@@ -1,0 +1,34 @@
+//! Figure 2 regeneration bench: linear-regression feature selection on D1
+//! (synthetic) and D2-sim (clinical substitute) — all six panels.
+//!
+//! Prints the paper's series (value per round, accuracy per k, time per k)
+//! and the headline speedup. `DASH_SCALE=paper` for full-size runs.
+
+use dash_select::experiments::figs::{run_figure, speedup_summary, FigureConfig, FigureId, Panel};
+use dash_select::experiments::Scale;
+
+fn main() {
+    let scale = match std::env::var("DASH_SCALE").as_deref() {
+        Ok("paper") => Scale::Paper,
+        _ => Scale::Quick,
+    };
+    dash_select::util::logging::set_level(dash_select::util::logging::Level::Info);
+    let cfg = FigureConfig {
+        figure: FigureId::Fig2,
+        scale,
+        panel: Panel::All,
+        seed: 1,
+        algo_budget_s: 120.0,
+        ..Default::default()
+    };
+    let out = run_figure(&cfg);
+    for (label, table) in &out.tables {
+        println!("\n=== {label} ===");
+        println!("{}", table.to_pretty());
+        if label.ends_with("_time") {
+            if let Some(s) = speedup_summary(table) {
+                println!("fig2 adaptivity speedup (greedy rounds / dash rounds @ max k): {s:.2}x");
+            }
+        }
+    }
+}

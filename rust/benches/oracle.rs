@@ -1,0 +1,91 @@
+//! Oracle micro-benchmarks: the per-round hot path (batched candidate
+//! gains) on native vs XLA backends, plus the core linalg kernels they sit
+//! on. These are the numbers the §Perf iteration log in EXPERIMENTS.md
+//! tracks.
+//!
+//! Run: `cargo bench --offline --bench oracle` (DASH_BENCH_FAST=1 for a
+//! quick pass).
+
+use dash_select::bench::Bench;
+use dash_select::data::synthetic;
+use dash_select::linalg::{chol_rank1_update, cholesky, gemm_tn, Matrix};
+use dash_select::objectives::{
+    AOptimalityObjective, LinearRegressionObjective, Objective,
+};
+use dash_select::oracle::{XlaAoptObjective, XlaLregObjective};
+use dash_select::rng::Pcg64;
+use dash_select::runtime::{default_artifacts_dir, Manifest};
+
+fn main() {
+    let mut bench = Bench::new("oracle");
+    let mut rng = Pcg64::seed_from(1);
+
+    // ---- linalg substrate ----
+    let a = random_matrix(&mut rng, 256, 64);
+    let b = random_matrix(&mut rng, 256, 256);
+    bench.run("gemm_tn 64x256 * 256x256", || gemm_tn(&a, &b));
+
+    let spd = {
+        let mut s = dash_select::linalg::syrk(&random_matrix(&mut rng, 128, 128));
+        for i in 0..128 {
+            s.add_at(i, i, 128.0);
+        }
+        s
+    };
+    bench.run("cholesky 128", || cholesky(&spd).unwrap());
+    let f = cholesky(&spd).unwrap();
+    bench.run("chol_rank1_update 128", || {
+        let mut l = f.l.clone();
+        let mut x: Vec<f64> = (0..128).map(|i| (i as f64).sin()).collect();
+        chol_rank1_update(&mut l, &mut x);
+        l
+    });
+
+    // ---- native batched gains (the round hot path) ----
+    let ds = synthetic::regression_d1(&mut rng, 250, 500, 80, 0.4);
+    let lreg = LinearRegressionObjective::new(&ds);
+    let cand: Vec<usize> = (0..500).collect();
+    for s in [0usize, 16, 48] {
+        let set: Vec<usize> = (0..s).collect();
+        let st = lreg.state_for(&set);
+        bench.run(&format!("lreg native gains n=500 |S|={s}"), || st.gains(&cand));
+    }
+
+    let dsd = synthetic::design_d1(&mut rng, 64, 256, 0.6);
+    let aopt = AOptimalityObjective::new(&dsd, 1.0, 1.0);
+    let candd: Vec<usize> = (0..256).collect();
+    let std_ = aopt.state_for(&[1, 5, 9, 100]);
+    bench.run("aopt native gains n=256 d=64", || std_.gains(&candd));
+
+    // ---- XLA batched gains (needs artifacts) ----
+    let dir = default_artifacts_dir();
+    if let Ok(manifest) = Manifest::load(&dir) {
+        if let Ok(xla) = XlaLregObjective::new(&ds, &manifest, 48) {
+            for s in [0usize, 16, 48] {
+                let set: Vec<usize> = (0..s).collect();
+                let st = xla.state_for(&set);
+                let _ = st.gains(&cand); // warm compile path
+                bench.run(&format!("lreg XLA gains n=500 |S|={s}"), || st.gains(&cand));
+            }
+        }
+        if let Ok(xla) = XlaAoptObjective::new(&dsd, &manifest, 1.0, 1.0) {
+            let st = xla.state_for(&[1, 5, 9, 100]);
+            let _ = st.gains(&candd);
+            bench.run("aopt XLA gains n=256 d=64", || st.gains(&candd));
+        }
+    } else {
+        println!("(XLA benches skipped: run `make artifacts`)");
+    }
+
+    println!("\n{} benchmarks complete", bench.reports.len());
+}
+
+fn random_matrix(rng: &mut Pcg64, r: usize, c: usize) -> Matrix {
+    let mut m = Matrix::zeros(r, c);
+    for j in 0..c {
+        for i in 0..r {
+            m.set(i, j, rng.next_gaussian());
+        }
+    }
+    m
+}

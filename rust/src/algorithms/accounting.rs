@@ -1,0 +1,213 @@
+//! Shared run accounting: oracle queries, adaptive rounds, wallclock, and
+//! the modeled parallel runtime described in DESIGN.md §2.
+//!
+//! **Adaptivity accounting.** One *round* contains all oracle queries that
+//! could execute concurrently (they depend only on results of earlier
+//! rounds — Definition 3 in the paper). Algorithms call
+//! [`RunTracker::round`] around each such batch.
+//!
+//! **Modeled parallel time.** With `P` processors and per-round measured
+//! wallclock `w_r` over `q_r` queries, the modeled time of the round is
+//! `(w_r / q_r) · ⌈q_r / P⌉` — i.e. average query latency times the number
+//! of sequential waves. `P = ∞` gives the PRAM depth (one wave per round).
+
+use crate::util::timer::Timer;
+
+/// Per-round record for accuracy-vs-rounds curves.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    /// 1-based adaptive round index
+    pub round: usize,
+    /// objective value after this round
+    pub value: f64,
+    /// oracle queries issued in this round
+    pub queries: usize,
+    /// measured wallclock of this round (seconds)
+    pub wall_s: f64,
+    /// |S| after this round
+    pub set_size: usize,
+}
+
+/// Final output of a selection algorithm.
+#[derive(Debug, Clone)]
+pub struct SelectionResult {
+    pub algorithm: String,
+    pub set: Vec<usize>,
+    /// f(S) at termination
+    pub value: f64,
+    /// total adaptive rounds
+    pub rounds: usize,
+    /// total oracle queries
+    pub queries: usize,
+    /// measured single-process wallclock (seconds)
+    pub wall_s: f64,
+    pub history: Vec<RoundRecord>,
+    /// set when an iteration cap terminated the algorithm abnormally
+    /// (used by the Appendix A.2 non-termination demonstration)
+    pub hit_iteration_cap: bool,
+}
+
+impl SelectionResult {
+    /// Modeled parallel runtime with `p` processors (see module docs).
+    /// `None` = unlimited processors (PRAM depth in wall units).
+    pub fn modeled_parallel_s(&self, p: Option<usize>) -> f64 {
+        self.history
+            .iter()
+            .map(|r| {
+                if r.queries == 0 {
+                    r.wall_s
+                } else {
+                    let per_query = r.wall_s / r.queries as f64;
+                    let waves = match p {
+                        None => 1,
+                        Some(p) => r.queries.div_ceil(p.max(1)),
+                    };
+                    per_query * waves as f64
+                }
+            })
+            .sum()
+    }
+
+    /// Fraction of a reference value (e.g. vs greedy or OPT).
+    pub fn ratio_to(&self, reference: f64) -> f64 {
+        if reference.abs() < 1e-300 {
+            1.0
+        } else {
+            self.value / reference
+        }
+    }
+}
+
+/// Mutable accounting handle threaded through an algorithm run.
+pub struct RunTracker {
+    algorithm: String,
+    timer: Timer,
+    round_timer: Timer,
+    pub history: Vec<RoundRecord>,
+    queries_total: usize,
+    queries_this_round: usize,
+}
+
+impl RunTracker {
+    pub fn new(algorithm: &str) -> Self {
+        RunTracker {
+            algorithm: algorithm.to_string(),
+            timer: Timer::start(),
+            round_timer: Timer::start(),
+            history: Vec::new(),
+            queries_total: 0,
+            queries_this_round: 0,
+        }
+    }
+
+    /// Record `q` oracle queries in the current round.
+    pub fn add_queries(&mut self, q: usize) {
+        self.queries_total += q;
+        self.queries_this_round += q;
+    }
+
+    /// Close the current adaptive round, recording the objective value and
+    /// set size reached.
+    pub fn end_round(&mut self, value: f64, set_size: usize) {
+        let wall = self.round_timer.split_s();
+        let round = self.history.len() + 1;
+        self.history.push(RoundRecord {
+            round,
+            value,
+            queries: self.queries_this_round,
+            wall_s: wall,
+            set_size,
+        });
+        self.queries_this_round = 0;
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn queries(&self) -> usize {
+        self.queries_total
+    }
+
+    /// Finish the run.
+    pub fn finish(mut self, set: Vec<usize>, value: f64, hit_cap: bool) -> SelectionResult {
+        // flush a dangling partial round
+        if self.queries_this_round > 0 {
+            self.end_round(value, set.len());
+        }
+        SelectionResult {
+            algorithm: self.algorithm,
+            rounds: self.history.len(),
+            queries: self.queries_total,
+            wall_s: self.timer.elapsed_s(),
+            history: self.history,
+            set,
+            value,
+            hit_iteration_cap: hit_cap,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_result() -> SelectionResult {
+        let mut t = RunTracker::new("demo");
+        t.add_queries(10);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.end_round(0.5, 2);
+        t.add_queries(4);
+        t.end_round(0.8, 4);
+        t.finish(vec![1, 2, 3, 4], 0.8, false)
+    }
+
+    #[test]
+    fn accounting_totals() {
+        let r = demo_result();
+        assert_eq!(r.rounds, 2);
+        assert_eq!(r.queries, 14);
+        assert_eq!(r.history.len(), 2);
+        assert_eq!(r.history[0].queries, 10);
+        assert_eq!(r.history[1].round, 2);
+        assert!(r.wall_s > 0.0);
+        assert!(!r.hit_iteration_cap);
+    }
+
+    #[test]
+    fn modeled_parallel_shrinks_with_processors() {
+        let r = demo_result();
+        let seq = r.modeled_parallel_s(Some(1));
+        let four = r.modeled_parallel_s(Some(4));
+        let inf = r.modeled_parallel_s(None);
+        assert!(seq >= four - 1e-12);
+        assert!(four >= inf - 1e-12);
+        assert!(inf > 0.0);
+    }
+
+    #[test]
+    fn dangling_round_flushed() {
+        let mut t = RunTracker::new("x");
+        t.add_queries(3);
+        let r = t.finish(vec![0], 0.1, true);
+        assert_eq!(r.rounds, 1);
+        assert_eq!(r.queries, 3);
+        assert!(r.hit_iteration_cap);
+    }
+
+    #[test]
+    fn ratio_to_handles_zero() {
+        let r = demo_result();
+        assert_eq!(r.ratio_to(0.0), 1.0);
+        assert!((r.ratio_to(1.6) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_query_round_counts_wall() {
+        let mut t = RunTracker::new("x");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        t.end_round(0.0, 0);
+        let r = t.finish(vec![], 0.0, false);
+        assert!(r.modeled_parallel_s(Some(1)) > 0.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Plain submodular ADAPTIVE-SAMPLING (Balkanski–Singer [1,5]) — i.e. DASH
+//! with α = 1 and **no** guess-lowering escape hatch.
+//!
+//! Kept as a first-class baseline because Appendix A.2's central claim is
+//! that this algorithm *fails to terminate* on differentially submodular
+//! objectives: the filter step keeps discarding elements whose joint
+//! marginal can never reach the unscaled threshold. We bound the loop and
+//! report `hit_iteration_cap = true` when the failure manifests; the
+//! integration tests reproduce the Appendix A.2 constructions exactly.
+
+use super::dash::{Dash, DashConfig, OptEstimate};
+use super::SelectionResult;
+use crate::objectives::Objective;
+use crate::rng::Pcg64;
+
+/// Configuration for [`AdaptiveSampling`].
+#[derive(Debug, Clone)]
+pub struct AdaptiveSamplingConfig {
+    pub k: usize,
+    pub r: usize,
+    pub epsilon: f64,
+    pub samples: usize,
+    /// OPT must be supplied or guessed exactly as in DASH
+    pub opt: OptEstimate,
+    /// iteration budget after which non-termination is declared
+    pub max_rounds: usize,
+}
+
+impl Default for AdaptiveSamplingConfig {
+    fn default() -> Self {
+        AdaptiveSamplingConfig {
+            k: 10,
+            r: 0,
+            epsilon: 0.1,
+            samples: 5,
+            opt: OptEstimate::Auto,
+            max_rounds: 200,
+        }
+    }
+}
+
+/// The α = 1 adaptive sampling algorithm.
+pub struct AdaptiveSampling {
+    cfg: AdaptiveSamplingConfig,
+}
+
+impl AdaptiveSampling {
+    pub fn new(cfg: AdaptiveSamplingConfig) -> Self {
+        AdaptiveSampling { cfg }
+    }
+
+    pub fn run(&self, obj: &dyn Objective, rng: &mut Pcg64) -> SelectionResult {
+        let mut result = Dash::new(DashConfig {
+            k: self.cfg.k,
+            r: self.cfg.r,
+            epsilon: self.cfg.epsilon,
+            alpha: 1.0,
+            samples: self.cfg.samples,
+            opt: self.cfg.opt,
+            opt_guesses: 6,
+            max_rounds: self.cfg.max_rounds,
+            max_filter_iters: 0,
+        })
+        .run(obj, rng);
+        result.algorithm = "adaptive_sampling".into();
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Dash;
+    use crate::objectives::counterexamples::MinCounterexample;
+    use crate::objectives::Objective;
+
+    /// Appendix A.2: with OPT known, α=1 adaptive sampling cannot terminate
+    /// on the min-construction, while DASH (α ≤ 0.5) succeeds.
+    #[test]
+    fn appendix_a2_nontermination_vs_dash() {
+        let k = 2;
+        let f = MinCounterexample::new(k);
+        let opt = f.opt(); // = 2
+
+        let mut rng = Pcg64::seed_from(1);
+        let plain = AdaptiveSampling::new(AdaptiveSamplingConfig {
+            k,
+            r: 1,
+            epsilon: 0.0,
+            samples: 8,
+            opt: OptEstimate::Known(opt),
+            max_rounds: 60,
+        })
+        .run(&f, &mut rng);
+        assert!(
+            plain.hit_iteration_cap,
+            "plain adaptive sampling should fail on the counterexample; got value {} in {} rounds",
+            plain.value, plain.rounds
+        );
+        assert!(plain.value < opt, "must not reach OPT");
+
+        // DASH with the α of Lemma 12 (0.25-differentially submodular →
+        // α = 0.5 for the sandwich functions' ratio; even α = 0.5 works)
+        let mut rng = Pcg64::seed_from(2);
+        let dash = Dash::new(DashConfig {
+            k,
+            r: 1,
+            epsilon: 0.0,
+            alpha: 0.5,
+            samples: 8,
+            opt: OptEstimate::Known(opt),
+            opt_guesses: 1,
+            max_rounds: 60,
+            max_filter_iters: 0,
+        })
+        .run(&f, &mut rng);
+        assert!(
+            !dash.hit_iteration_cap,
+            "DASH must terminate on the counterexample (rounds {})",
+            dash.rounds
+        );
+        assert!(dash.value >= 1.0, "DASH adds a V-pair worth ≥ 1, got {}", dash.value);
+    }
+
+    /// On a genuinely submodular-ish instance both behave, and α=1 is just
+    /// DASH's special case.
+    #[test]
+    fn reduces_to_dash_alpha_one() {
+        let mut rng = Pcg64::seed_from(3);
+        let ds = crate::data::synthetic::design_d1(&mut rng, 12, 40, 0.3);
+        let obj = crate::objectives::AOptimalityObjective::new(&ds, 1.0, 1.0);
+        let r = AdaptiveSampling::new(AdaptiveSamplingConfig { k: 8, ..Default::default() })
+            .run(&obj, &mut rng);
+        assert_eq!(r.algorithm, "adaptive_sampling");
+        assert!(r.set.len() >= 6, "selected {}", r.set.len());
+        assert!(r.value > 0.0);
+    }
+
+    /// The A.1 example: the min construction's singleton filter kills all
+    /// of U, so any algorithm that adds one big set from the survivors is
+    /// stuck at value 1 (vs OPT = k).
+    #[test]
+    fn appendix_a1_single_round_set_addition_is_bad() {
+        let k = 6;
+        let f = MinCounterexample::new(k);
+        // "one-round" adaptive sampling: keep top singletons, add k of them
+        let st = f.empty_state();
+        let all: Vec<usize> = (0..f.n()).collect();
+        let gains = st.gains(&all);
+        let mut order: Vec<usize> = (0..f.n()).collect();
+        order.sort_by(|&a, &b| gains[b].partial_cmp(&gains[a]).unwrap());
+        let set: Vec<usize> = order.into_iter().take(k).collect();
+        let v = f.eval(&set);
+        assert_eq!(v, 1.0, "all-V set is worth exactly 1");
+        assert_eq!(f.opt(), k as f64);
+    }
+}

@@ -1,0 +1,146 @@
+//! Core of the DASH run loop, split from `dash.rs` for readability:
+//! a single fixed-OPT-guess execution of Algorithm 1.
+
+use super::{RunTracker, SelectionResult};
+use crate::objectives::{Objective, ObjectiveState};
+use crate::rng::Pcg64;
+
+pub(crate) struct GuessParams {
+    pub k: usize,
+    pub block: usize,
+    pub m: usize,
+    pub alpha: f64,
+    pub eps: f64,
+    pub filter_cap: usize,
+    pub max_rounds: usize,
+    pub opt: f64,
+}
+
+/// Run Algorithm 1 against one fixed OPT guess. Returns a complete
+/// `SelectionResult`; `hit_iteration_cap = true` when the guess could not
+/// be met (candidate pool exhausted or filter-iteration cap reached — the
+/// Appendix A.2 failure mode when α is too large).
+pub(crate) fn run_guess(
+    obj: &dyn Objective,
+    p: &GuessParams,
+    rng: &mut Pcg64,
+    label: &str,
+) -> SelectionResult {
+    let n = obj.n();
+    let mut tracker = RunTracker::new(label);
+    let mut st = obj.empty_state();
+    let mut hit_cap = false;
+
+    let mut x: Vec<usize> = Vec::with_capacity(n);
+    'outer: while st.set().len() < p.k && tracker.rounds() < p.max_rounds {
+        // refresh candidate pool: everything not selected
+        x.clear();
+        x.extend((0..n).filter(|a| !st.set().contains(a)));
+        let t = (1.0 - p.eps) * (p.opt - st.value());
+        if t <= 1e-12 {
+            break; // guess achieved
+        }
+        let filter_thresh = p.alpha * (1.0 + p.eps / 2.0) * t / p.k as f64;
+        let want = p.block.min(p.k - st.set().len());
+
+        let mut filter_iters = 0usize;
+        // Lemma 20 guarantees |X| shrinks by (1+ε/2)× per filter iteration
+        // while the guess is attainable; a pool that stops shrinking without
+        // reaching acceptance is a sampling-noise fixed point — declare the
+        // guess failed after a few stalled iterations instead of burning
+        // rounds to the worst-case cap.
+        let mut stalled = 0usize;
+        loop {
+            if tracker.rounds() >= p.max_rounds {
+                hit_cap = true;
+                break 'outer;
+            }
+            if x.is_empty() {
+                // every candidate filtered: this OPT guess is unattainable
+                hit_cap = true;
+                break 'outer;
+            }
+            let take = want.min(x.len());
+            // acceptance threshold α²·t·|R|/k — Algorithm 1's α²t/r for a
+            // full block |R| = k/r, scaled down pro rata when the remaining
+            // budget (or pool) forces a smaller block; otherwise an
+            // all-survivors pool could never satisfy a full-block bar and
+            // the loop would spin to the filter cap
+            let accept_thresh = p.alpha * p.alpha * t * take as f64 / p.k as f64;
+
+            // --- draw m sample blocks R ~ U(X), build their states ---
+            let mut sample_sets: Vec<Vec<usize>> = Vec::with_capacity(p.m);
+            let mut sample_states: Vec<Box<dyn ObjectiveState>> = Vec::with_capacity(p.m);
+            let mut set_gains = Vec::with_capacity(p.m);
+            for _ in 0..p.m {
+                let idx = rng.sample_indices(x.len(), take);
+                let r_set: Vec<usize> = idx.into_iter().map(|i| x[i]).collect();
+                let mut s2 = st.clone_box();
+                for &a in &r_set {
+                    s2.insert(a);
+                }
+                set_gains.push(s2.value() - st.value());
+                sample_sets.push(r_set);
+                sample_states.push(s2);
+            }
+            tracker.add_queries(p.m);
+            let e_hat = crate::util::mean(&set_gains);
+
+            if e_hat >= accept_thresh {
+                // accept a uniformly drawn block (one of the i.i.d. samples
+                // — same distribution as a fresh draw)
+                let pick = rng.gen_range_usize(0, p.m - 1);
+                st = sample_states.swap_remove(pick);
+                tracker.end_round(st.value(), st.set().len());
+                continue 'outer;
+            }
+
+            // --- filter step: expected marginals from the same samples ---
+            let mut sums = vec![0.0; x.len()];
+            let mut counts = vec![0u32; x.len()];
+            for (r_set, s2) in sample_sets.iter().zip(&sample_states) {
+                let gains = s2.gains(&x);
+                tracker.add_queries(x.len());
+                for (j, &a) in x.iter().enumerate() {
+                    // skip samples containing a: the estimator targets
+                    // E[f_{S∪(R\a)}(a)] and a ∈ R would bias it toward 0
+                    if !r_set.contains(&a) {
+                        sums[j] += gains[j];
+                        counts[j] += 1;
+                    }
+                }
+            }
+            let mut survivors = Vec::with_capacity(x.len());
+            for (j, &a) in x.iter().enumerate() {
+                let est = if counts[j] > 0 {
+                    sums[j] / counts[j] as f64
+                } else {
+                    // every sample contained a — fall back to the marginal
+                    // on top of S alone
+                    let g = st.gain(a);
+                    tracker.add_queries(1);
+                    g
+                };
+                if est >= filter_thresh {
+                    survivors.push(a);
+                }
+            }
+            if survivors.len() == x.len() {
+                stalled += 1;
+            } else {
+                stalled = 0;
+            }
+            x = survivors;
+            tracker.end_round(st.value(), st.set().len());
+
+            filter_iters += 1;
+            if filter_iters >= p.filter_cap || stalled >= 3 {
+                hit_cap = true;
+                break 'outer;
+            }
+        }
+    }
+
+    let value = st.value();
+    tracker.finish(st.set().to_vec(), value, hit_cap)
+}

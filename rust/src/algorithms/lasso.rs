@@ -1,0 +1,328 @@
+//! LASSO baselines (paper Appendix I.3): ℓ1-regularized linear regression
+//! via cyclic coordinate descent, and ℓ1-regularized logistic regression
+//! via proximal gradient. The benchmark sweeps the regularizer λ to recover
+//! ≈k features, exactly as the paper does ("manually varying the
+//! regularization parameter λ to select approximately k features").
+
+use super::{RunTracker, SelectionResult};
+use crate::linalg::{dot, Matrix};
+
+/// One point on a regularization path.
+#[derive(Debug, Clone)]
+pub struct LassoPathPoint {
+    pub lambda: f64,
+    /// selected support (nonzero coefficients), descending |w|
+    pub support: Vec<usize>,
+    /// fitted coefficients aligned with `support`
+    pub weights: Vec<f64>,
+}
+
+/// Configuration shared by both LASSO variants.
+#[derive(Debug, Clone)]
+pub struct LassoConfig {
+    /// number of λ values on the geometric path
+    pub path_len: usize,
+    /// λ_min = ratio · λ_max
+    pub lambda_min_ratio: f64,
+    /// coordinate-descent / proximal iterations per λ
+    pub max_iters: usize,
+    /// convergence tolerance on max coefficient change
+    pub tol: f64,
+}
+
+impl Default for LassoConfig {
+    fn default() -> Self {
+        LassoConfig { path_len: 60, lambda_min_ratio: 1e-3, max_iters: 300, tol: 1e-7 }
+    }
+}
+
+/// ℓ1 linear regression: `min_w ‖y − Xw‖²/(2d) + λ‖w‖₁` solved by cyclic
+/// coordinate descent with warm starts along a geometric λ path.
+pub struct Lasso {
+    cfg: LassoConfig,
+}
+
+impl Lasso {
+    pub fn new(cfg: LassoConfig) -> Self {
+        Lasso { cfg }
+    }
+
+    /// Full regularization path (largest λ first).
+    pub fn path(&self, x: &Matrix, y: &[f64]) -> Vec<LassoPathPoint> {
+        let d = x.rows();
+        let n = x.cols();
+        assert_eq!(y.len(), d);
+        let dinv = 1.0 / d as f64;
+        // per-column squared norms / d
+        let col_sq: Vec<f64> = (0..n).map(|j| dot(x.col(j), x.col(j)) * dinv).collect();
+        // λ_max: smallest λ with all-zero solution
+        let mut lambda_max: f64 = 0.0;
+        for j in 0..n {
+            lambda_max = lambda_max.max((dot(x.col(j), y) * dinv).abs());
+        }
+        if lambda_max <= 0.0 {
+            return Vec::new();
+        }
+        let lmin = lambda_max * self.cfg.lambda_min_ratio;
+        let steps = self.cfg.path_len.max(2);
+        let ratio = (lmin / lambda_max).powf(1.0 / (steps - 1) as f64);
+
+        let mut w = vec![0.0; n];
+        let mut resid = y.to_vec(); // r = y − Xw
+        let mut out = Vec::with_capacity(steps);
+        let mut lambda = lambda_max;
+        for _ in 0..steps {
+            for _iter in 0..self.cfg.max_iters {
+                let mut max_delta: f64 = 0.0;
+                for j in 0..n {
+                    if col_sq[j] <= 1e-12 {
+                        continue;
+                    }
+                    let xj = x.col(j);
+                    let wj = w[j];
+                    // ρ = x_jᵀ(r + x_j w_j)/d
+                    let rho = dot(xj, &resid) * dinv + col_sq[j] * wj;
+                    let new = soft_threshold(rho, lambda) / col_sq[j];
+                    if new != wj {
+                        crate::linalg::axpy(wj - new, xj, &mut resid);
+                        max_delta = max_delta.max((new - wj).abs());
+                        w[j] = new;
+                    }
+                }
+                if max_delta < self.cfg.tol {
+                    break;
+                }
+            }
+            out.push(make_point(lambda, &w));
+            lambda *= ratio;
+        }
+        out
+    }
+
+    /// Run the path and report the point whose support size is closest to
+    /// `k` (ties: larger support) as a [`SelectionResult`].
+    pub fn run_for_k(&self, x: &Matrix, y: &[f64], k: usize) -> SelectionResult {
+        let mut tracker = RunTracker::new("lasso");
+        let path = self.path(x, y);
+        // model cost: each λ step is a sequential optimization — count one
+        // round per path point, queries = n coordinate passes (approximate)
+        for _p in &path {
+            tracker.add_queries(x.cols());
+            tracker.end_round(0.0, 0);
+        }
+        let best = pick_k(&path, k);
+        let (support, value) = match best {
+            Some(p) => {
+                let mut s = p.support.clone();
+                s.truncate(k);
+                (s, 0.0)
+            }
+            None => (Vec::new(), 0.0),
+        };
+        tracker.finish(support, value, false)
+    }
+}
+
+/// ℓ1 logistic regression via proximal gradient (ISTA with backtracking):
+/// `min_w −ℓ(w)/d + λ‖w‖₁`.
+pub struct LassoLogistic {
+    cfg: LassoConfig,
+}
+
+impl LassoLogistic {
+    pub fn new(cfg: LassoConfig) -> Self {
+        LassoLogistic { cfg }
+    }
+
+    pub fn path(&self, x: &Matrix, y: &[f64]) -> Vec<LassoPathPoint> {
+        let d = x.rows();
+        let n = x.cols();
+        assert_eq!(y.len(), d);
+        let dinv = 1.0 / d as f64;
+        // gradient at w=0: Xᵀ(y − 0.5)/d
+        let half_resid: Vec<f64> = y.iter().map(|&v| v - 0.5).collect();
+        let mut lambda_max: f64 = 0.0;
+        for j in 0..n {
+            lambda_max = lambda_max.max((dot(x.col(j), &half_resid) * dinv).abs());
+        }
+        if lambda_max <= 0.0 {
+            return Vec::new();
+        }
+        let lmin = lambda_max * self.cfg.lambda_min_ratio;
+        let steps = self.cfg.path_len.max(2);
+        let ratio = (lmin / lambda_max).powf(1.0 / (steps - 1) as f64);
+
+        // Lipschitz bound for the logistic loss gradient: ‖X‖²/(4d); use a
+        // cheap upper bound via max column norm × n (safe, just smaller
+        // steps) — refine with a few power iterations on XᵀX.
+        let lip = {
+            let mut v = vec![1.0; n];
+            let mut xv = vec![0.0; d];
+            let mut xtxv = vec![0.0; n];
+            let mut est: f64 = 1.0;
+            for _ in 0..20 {
+                crate::linalg::gemv(x, &v, &mut xv);
+                crate::linalg::gemv_t(x, &xv, &mut xtxv);
+                est = crate::linalg::nrm2(&xtxv).max(1e-12);
+                let inv = 1.0 / est;
+                for (vi, ti) in v.iter_mut().zip(&xtxv) {
+                    *vi = ti * inv;
+                }
+            }
+            est * dinv / 4.0
+        };
+        let step = 1.0 / lip.max(1e-12);
+
+        let mut w = vec![0.0; n];
+        let mut out = Vec::with_capacity(steps);
+        let mut lambda = lambda_max;
+        let mut z = vec![0.0; d];
+        let mut grad = vec![0.0; n];
+        for _ in 0..steps {
+            for _iter in 0..self.cfg.max_iters {
+                crate::linalg::gemv(x, &w, &mut z);
+                let resid: Vec<f64> = y
+                    .iter()
+                    .zip(&z)
+                    .map(|(&yi, &zi)| yi - sigmoid(zi))
+                    .collect();
+                crate::linalg::gemv_t(x, &resid, &mut grad);
+                let mut max_delta: f64 = 0.0;
+                for j in 0..n {
+                    let target = w[j] + step * grad[j] * dinv;
+                    let new = soft_threshold(target, step * lambda);
+                    max_delta = max_delta.max((new - w[j]).abs());
+                    w[j] = new;
+                }
+                if max_delta < self.cfg.tol {
+                    break;
+                }
+            }
+            out.push(make_point(lambda, &w));
+            lambda *= ratio;
+        }
+        out
+    }
+
+    pub fn run_for_k(&self, x: &Matrix, y: &[f64], k: usize) -> SelectionResult {
+        let mut tracker = RunTracker::new("lasso_logistic");
+        let path = self.path(x, y);
+        for _p in &path {
+            tracker.add_queries(x.cols());
+            tracker.end_round(0.0, 0);
+        }
+        let best = pick_k(&path, k);
+        let support = best
+            .map(|p| {
+                let mut s = p.support.clone();
+                s.truncate(k);
+                s
+            })
+            .unwrap_or_default();
+        tracker.finish(support, 0.0, false)
+    }
+}
+
+#[inline]
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[inline]
+fn soft_threshold(v: f64, t: f64) -> f64 {
+    if v > t {
+        v - t
+    } else if v < -t {
+        v + t
+    } else {
+        0.0
+    }
+}
+
+fn make_point(lambda: f64, w: &[f64]) -> LassoPathPoint {
+    let mut support: Vec<usize> =
+        (0..w.len()).filter(|&j| w[j].abs() > 1e-10).collect();
+    support.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap());
+    let weights = support.iter().map(|&j| w[j]).collect();
+    LassoPathPoint { lambda, support, weights }
+}
+
+fn pick_k(path: &[LassoPathPoint], k: usize) -> Option<&LassoPathPoint> {
+    path.iter().min_by_key(|p| {
+        let diff = p.support.len().abs_diff(k);
+        // prefer supports ≥ k on ties (they can be truncated by |w|)
+        (diff, usize::from(p.support.len() < k))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+    }
+
+    #[test]
+    fn path_monotone_support_growth() {
+        let mut rng = Pcg64::seed_from(1);
+        let ds = synthetic::regression_d1(&mut rng, 150, 25, 6, 0.1);
+        let path = Lasso::new(LassoConfig::default()).path(&ds.x, &ds.y);
+        assert!(!path.is_empty());
+        // first point: empty or near-empty support; last: large support
+        assert!(path.first().unwrap().support.len() <= 1);
+        assert!(path.last().unwrap().support.len() >= 6);
+        // λ decreasing
+        for w in path.windows(2) {
+            assert!(w[1].lambda < w[0].lambda);
+        }
+    }
+
+    #[test]
+    fn recovers_sparse_signal() {
+        let mut rng = Pcg64::seed_from(2);
+        let ds = synthetic::regression_d1(&mut rng, 300, 30, 5, 0.05);
+        let r = Lasso::new(LassoConfig::default()).run_for_k(&ds.x, &ds.y, 5);
+        let hits = r.set.iter().filter(|a| ds.true_support.contains(a)).count();
+        assert!(hits >= 4, "lasso recovered {hits}/5: {:?}", r.set);
+    }
+
+    #[test]
+    fn run_for_k_sizes() {
+        let mut rng = Pcg64::seed_from(3);
+        let ds = synthetic::regression_d1(&mut rng, 100, 20, 8, 0.2);
+        for k in [1usize, 4, 10] {
+            let r = Lasso::new(LassoConfig::default()).run_for_k(&ds.x, &ds.y, k);
+            assert!(r.set.len() <= k);
+            assert!(!r.set.is_empty(), "k={k} selected nothing");
+        }
+    }
+
+    #[test]
+    fn logistic_path_selects_informative() {
+        let mut rng = Pcg64::seed_from(4);
+        let ds = synthetic::classification_d3(&mut rng, 400, 20, 4, 0.05);
+        let r = LassoLogistic::new(LassoConfig { max_iters: 200, ..Default::default() })
+            .run_for_k(&ds.x, &ds.y, 4);
+        assert!(!r.set.is_empty());
+        let hits = r.set.iter().filter(|a| ds.true_support.contains(a)).count();
+        assert!(hits >= 2, "logistic lasso recovered {hits}/4: {:?}", r.set);
+    }
+
+    #[test]
+    fn zero_response_empty_path() {
+        let x = Matrix::from_rows(3, 2, &[1., 0., 0., 1., 0., 0.]);
+        let path = Lasso::new(LassoConfig::default()).path(&x, &[0.0, 0.0, 0.0]);
+        assert!(path.is_empty());
+    }
+}

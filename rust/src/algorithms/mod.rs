@@ -1,0 +1,27 @@
+//! Selection algorithms: DASH (the paper's contribution) and every baseline
+//! from §5 — SDS_MA greedy (sequential, lazy, parallel), TOP-k, RANDOM,
+//! LASSO — plus plain submodular adaptive sampling (to exhibit the
+//! Appendix A.2 failure) and an adaptive-sequencing variant (§1.2 notes the
+//! framework extends to it).
+//!
+//! All algorithms consume an [`Objective`](crate::objectives::Objective) and
+//! produce a [`SelectionResult`] with identical accounting so the benchmark
+//! harness can compare values, adaptive rounds, oracle queries, measured
+//! wallclock, and modeled parallel runtime on equal footing.
+
+mod accounting;
+mod dash;
+mod dash_core;
+mod greedy;
+mod topk_random;
+mod lasso;
+mod adaptive_sampling;
+mod adaptive_seq;
+
+pub use accounting::{RoundRecord, RunTracker, SelectionResult};
+pub use adaptive_sampling::{AdaptiveSampling, AdaptiveSamplingConfig};
+pub use adaptive_seq::{AdaptiveSequencing, AdaptiveSequencingConfig};
+pub use dash::{Dash, DashConfig, OptEstimate};
+pub use greedy::{Greedy, GreedyConfig, ParallelGreedy};
+pub use lasso::{Lasso, LassoConfig, LassoLogistic, LassoPathPoint};
+pub use topk_random::{RandomSelect, TopK};

@@ -1,0 +1,151 @@
+//! The one-round baselines: TOP-k (best k singleton values; Appendix J
+//! shows a γ² worst-case bound for feature selection) and RANDOM.
+
+use super::{RunTracker, SelectionResult};
+use crate::objectives::Objective;
+use crate::rng::Pcg64;
+
+/// TOP-k: one round of all singleton queries, keep the k largest.
+pub struct TopK {
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK { k }
+    }
+
+    pub fn run(&self, obj: &dyn Objective) -> SelectionResult {
+        let n = obj.n();
+        let k = self.k.min(n);
+        let mut tracker = RunTracker::new("top_k");
+        let st = obj.empty_state();
+        let all: Vec<usize> = (0..n).collect();
+        let gains = st.gains(&all);
+        tracker.add_queries(n);
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| gains[b].partial_cmp(&gains[a]).unwrap_or(std::cmp::Ordering::Equal));
+        let set: Vec<usize> = order.into_iter().take(k).collect();
+        let value = obj.eval(&set);
+        tracker.add_queries(1);
+        tracker.end_round(value, set.len());
+        tracker.finish(set, value, false)
+    }
+}
+
+/// RANDOM: k uniform elements, zero oracle queries (one final evaluation
+/// for reporting).
+pub struct RandomSelect {
+    pub k: usize,
+}
+
+impl RandomSelect {
+    pub fn new(k: usize) -> Self {
+        RandomSelect { k }
+    }
+
+    pub fn run(&self, obj: &dyn Objective, rng: &mut Pcg64) -> SelectionResult {
+        let n = obj.n();
+        let k = self.k.min(n);
+        let mut tracker = RunTracker::new("random");
+        let set = rng.sample_indices(n, k);
+        let value = obj.eval(&set);
+        tracker.add_queries(1);
+        tracker.end_round(value, set.len());
+        tracker.finish(set, value, false)
+    }
+
+    /// Mean value over `trials` random draws (the figures report RANDOM as
+    /// an average since its variance is large).
+    pub fn run_mean(&self, obj: &dyn Objective, rng: &mut Pcg64, trials: usize) -> SelectionResult {
+        let mut best: Option<SelectionResult> = None;
+        let mut sum = 0.0;
+        for _ in 0..trials.max(1) {
+            let r = self.run(obj, rng);
+            sum += r.value;
+            if best.as_ref().map(|b| r.value > b.value).unwrap_or(true) {
+                best = Some(r);
+            }
+        }
+        let mut out = best.unwrap();
+        out.value = sum / trials.max(1) as f64;
+        out.algorithm = "random_mean".into();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::objectives::LinearRegressionObjective;
+
+    fn setup(seed: u64) -> LinearRegressionObjective {
+        let mut rng = Pcg64::seed_from(seed);
+        let ds = synthetic::regression_d1(&mut rng, 120, 25, 6, 0.1);
+        LinearRegressionObjective::new(&ds)
+    }
+
+    #[test]
+    fn topk_single_round() {
+        let obj = setup(1);
+        let r = TopK::new(8).run(&obj);
+        assert_eq!(r.set.len(), 8);
+        assert_eq!(r.rounds, 1);
+        assert_eq!(r.queries, 26); // n singletons + 1 final eval
+        assert!(r.value > 0.0);
+    }
+
+    #[test]
+    fn topk_picks_largest_singletons() {
+        let obj = setup(2);
+        let st = obj.empty_state();
+        let all: Vec<usize> = (0..obj.n()).collect();
+        let gains = st.gains(&all);
+        let r = TopK::new(3).run(&obj);
+        // every selected element's singleton gain >= every unselected one's
+        let min_sel = r.set.iter().map(|&a| gains[a]).fold(f64::INFINITY, f64::min);
+        let max_unsel = (0..obj.n())
+            .filter(|a| !r.set.contains(a))
+            .map(|a| gains[a])
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(min_sel >= max_unsel - 1e-12);
+    }
+
+    #[test]
+    fn random_selects_k_valid() {
+        let obj = setup(3);
+        let mut rng = Pcg64::seed_from(99);
+        let r = RandomSelect::new(10).run(&obj, &mut rng);
+        assert_eq!(r.set.len(), 10);
+        let mut d = r.set.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 10);
+        assert!(r.value >= 0.0);
+    }
+
+    #[test]
+    fn random_mean_averages() {
+        let obj = setup(4);
+        let mut rng = Pcg64::seed_from(100);
+        let r = RandomSelect::new(5).run_mean(&obj, &mut rng, 8);
+        assert_eq!(r.algorithm, "random_mean");
+        assert!(r.value > 0.0 && r.value <= 1.0);
+    }
+
+    #[test]
+    fn topk_usually_at_least_random() {
+        // statistical sanity: averaged over draws, TOP-k >= mean RANDOM here
+        let obj = setup(5);
+        let mut rng = Pcg64::seed_from(42);
+        let topk = TopK::new(6).run(&obj);
+        let rnd = RandomSelect::new(6).run_mean(&obj, &mut rng, 10);
+        assert!(
+            topk.value >= rnd.value * 0.9,
+            "topk {} vs random-mean {}",
+            topk.value,
+            rnd.value
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Micro-benchmark substrate (criterion is unavailable offline): warmup,
+//! timed iterations, and a mean/p50/p95 report. Used by the targets in
+//! `rust/benches/` (declared with `harness = false`).
+
+use crate::util::timer::fmt_duration_s;
+use crate::util::{mean, quantile, stddev};
+use std::time::Instant;
+
+/// One benchmark's timing summary.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchReport {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>6} iters  mean {:>9}  p50 {:>9}  p95 {:>9}  ±{:>8}",
+            self.name,
+            self.iters,
+            fmt_duration_s(self.mean_s),
+            fmt_duration_s(self.p50_s),
+            fmt_duration_s(self.p95_s),
+            fmt_duration_s(self.std_s),
+        )
+    }
+}
+
+/// Benchmark runner: `Bench::new("suite").run("case", || work())`.
+pub struct Bench {
+    suite: String,
+    /// minimum measured iterations
+    pub min_iters: usize,
+    /// stop adding iterations after this much measured time (seconds)
+    pub budget_s: f64,
+    /// warmup iterations
+    pub warmup: usize,
+    pub reports: Vec<BenchReport>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // Honor DASH_BENCH_FAST=1 for CI-speed runs.
+        let fast = std::env::var("DASH_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        Bench {
+            suite: suite.to_string(),
+            min_iters: if fast { 3 } else { 10 },
+            budget_s: if fast { 0.5 } else { 3.0 },
+            warmup: if fast { 1 } else { 2 },
+            reports: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should perform one complete unit of work per call.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchReport {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+            if samples.len() >= self.min_iters && start.elapsed().as_secs_f64() > self.budget_s {
+                break;
+            }
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        let report = BenchReport {
+            name: format!("{}/{}", self.suite, name),
+            iters: samples.len(),
+            mean_s: mean(&samples),
+            std_s: stddev(&samples),
+            p50_s: quantile(&samples, 0.5),
+            p95_s: quantile(&samples, 0.95),
+        };
+        println!("{}", report.line());
+        self.reports.push(report);
+        self.reports.last().unwrap()
+    }
+
+    /// Record an already-measured value (for end-to-end numbers computed by
+    /// an experiment run rather than a closure loop).
+    pub fn record(&mut self, name: &str, seconds: f64) {
+        let report = BenchReport {
+            name: format!("{}/{}", self.suite, name),
+            iters: 1,
+            mean_s: seconds,
+            std_s: 0.0,
+            p50_s: seconds,
+            p95_s: seconds,
+        };
+        println!("{}", report.line());
+        self.reports.push(report);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bench::new("test");
+        b.min_iters = 5;
+        b.budget_s = 0.01;
+        b.warmup = 1;
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_s > 0.0);
+        assert!(r.p95_s >= r.p50_s * 0.5);
+        assert!(r.name.starts_with("test/"));
+    }
+
+    #[test]
+    fn record_direct() {
+        let mut b = Bench::new("t");
+        b.record("e2e", 1.25);
+        assert_eq!(b.reports.len(), 1);
+        assert_eq!(b.reports[0].mean_s, 1.25);
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal CLI substrate (clap is unavailable offline): positional
+//! subcommands plus `--key value` / `--flag` options, with typed accessors
+//! and a generated usage block.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// positional arguments in order (subcommand first)
+    pub positional: Vec<String>,
+    /// `--key value` options; bare `--flag`s map to "true"
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("empty option name".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.options.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["experiment", "fig2", "--k", "25", "--save"]);
+        assert_eq!(a.subcommand(), Some("experiment"));
+        assert_eq!(a.positional[1], "fig2");
+        assert_eq!(a.get("k"), Some("25"));
+        assert!(a.get_flag("save"));
+        assert!(!a.get_flag("missing"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["run", "--algo=dash", "--seed=42"]);
+        assert_eq!(a.get("algo"), Some("dash"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let a = parse(&["x", "--k", "10", "--eps", "0.2"]);
+        assert_eq!(a.get_usize("k", 5).unwrap(), 10);
+        assert_eq!(a.get_usize("missing", 5).unwrap(), 5);
+        assert!((a.get_f64("eps", 0.1).unwrap() - 0.2).abs() < 1e-12);
+        assert!(a.get_usize("eps", 1).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["x", "--verbose", "--k", "3"]);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.get_usize("k", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn empty_option_rejected() {
+        assert!(Args::parse(vec!["--".to_string()]).is_err());
+    }
+}

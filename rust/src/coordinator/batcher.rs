@@ -1,0 +1,185 @@
+//! Dynamic request batching: aggregates small gain queries arriving from
+//! concurrent callers into fixed-size batches matched to the XLA
+//! artifacts' padded candidate shape, flushing on size or deadline —
+//! the same size-or-timeout discipline a serving router applies to
+//! incoming requests.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Configuration for [`BatchQueue`].
+#[derive(Debug, Clone)]
+pub struct BatchQueueConfig {
+    /// flush when this many items are queued (the artifact's nc)
+    pub max_batch: usize,
+    /// flush a non-empty queue after this long regardless of size
+    pub max_wait: Duration,
+}
+
+impl Default for BatchQueueConfig {
+    fn default() -> Self {
+        BatchQueueConfig { max_batch: 256, max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct Pending {
+    item: usize,
+    reply: Sender<f64>,
+}
+
+/// A size-or-deadline batch queue over candidate indices. The flush
+/// function evaluates a whole batch at once (one XLA dispatch) and the
+/// results are routed back to the individual submitters.
+pub struct BatchQueue {
+    cfg: BatchQueueConfig,
+    queue: Arc<Mutex<Vec<Pending>>>,
+    flush_fn: Arc<dyn Fn(&[usize]) -> Vec<f64> + Send + Sync>,
+    last_flush: Arc<Mutex<Instant>>,
+    /// total batches flushed (telemetry)
+    flushes: Arc<Mutex<usize>>,
+}
+
+impl BatchQueue {
+    pub fn new(
+        cfg: BatchQueueConfig,
+        flush_fn: impl Fn(&[usize]) -> Vec<f64> + Send + Sync + 'static,
+    ) -> Self {
+        BatchQueue {
+            cfg,
+            queue: Arc::new(Mutex::new(Vec::new())),
+            flush_fn: Arc::new(flush_fn),
+            last_flush: Arc::new(Mutex::new(Instant::now())),
+            flushes: Arc::new(Mutex::new(0)),
+        }
+    }
+
+    /// Submit one candidate; blocks until its batch is evaluated and
+    /// returns its gain. Deadline-based flushing happens opportunistically
+    /// on submit (no background thread needed for the synchronous callers
+    /// this library has).
+    pub fn submit(&self, item: usize) -> f64 {
+        let (tx, rx): (Sender<f64>, Receiver<f64>) = channel();
+        let should_flush = {
+            let mut q = self.queue.lock().unwrap();
+            q.push(Pending { item, reply: tx });
+            q.len() >= self.cfg.max_batch
+                || self.last_flush.lock().unwrap().elapsed() >= self.cfg.max_wait
+        };
+        if should_flush {
+            self.flush();
+        }
+        // if our reply hasn't arrived, force a flush (covers the race where
+        // another submitter drained the queue without our entry... or the
+        // deadline not yet reached with no further traffic)
+        match rx.try_recv() {
+            Ok(v) => v,
+            Err(_) => {
+                self.flush();
+                rx.recv().expect("batch flush must answer")
+            }
+        }
+    }
+
+    /// Submit many candidates at once (bypasses the queue when the batch is
+    /// already full-size).
+    pub fn submit_many(&self, items: &[usize]) -> Vec<f64> {
+        if items.len() >= self.cfg.max_batch {
+            *self.flushes.lock().unwrap() += 1;
+            return (self.flush_fn)(items);
+        }
+        items.iter().map(|&i| self.submit(i)).collect()
+    }
+
+    /// Drain and evaluate the queue.
+    pub fn flush(&self) {
+        let pending: Vec<Pending> = {
+            let mut q = self.queue.lock().unwrap();
+            std::mem::take(&mut *q)
+        };
+        if pending.is_empty() {
+            return;
+        }
+        *self.last_flush.lock().unwrap() = Instant::now();
+        *self.flushes.lock().unwrap() += 1;
+        let items: Vec<usize> = pending.iter().map(|p| p.item).collect();
+        let results = (self.flush_fn)(&items);
+        debug_assert_eq!(results.len(), items.len());
+        for (p, v) in pending.into_iter().zip(results) {
+            let _ = p.reply.send(v);
+        }
+    }
+
+    pub fn flush_count(&self) -> usize {
+        *self.flushes.lock().unwrap()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::threadpool::ThreadPool;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn batches_by_size() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&calls);
+        let q = BatchQueue::new(
+            BatchQueueConfig { max_batch: 4, max_wait: Duration::from_secs(60) },
+            move |items| {
+                c2.fetch_add(1, Ordering::SeqCst);
+                items.iter().map(|&i| i as f64 * 2.0).collect()
+            },
+        );
+        let out = q.submit_many(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(out, vec![2.0, 4.0, 6.0, 8.0, 10.0, 12.0, 14.0, 16.0]);
+        // full-size batches bypass: exactly one flush for 8 >= max_batch
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn small_submissions_get_answered() {
+        let q = BatchQueue::new(
+            BatchQueueConfig { max_batch: 100, max_wait: Duration::from_millis(0) },
+            |items| items.iter().map(|&i| i as f64 + 0.5).collect(),
+        );
+        assert_eq!(q.submit(7), 7.5);
+        assert_eq!(q.submit(9), 9.5);
+        assert!(q.flush_count() >= 2);
+        assert_eq!(q.queued(), 0);
+    }
+
+    #[test]
+    fn concurrent_submitters_all_answered() {
+        let evaluated = Arc::new(AtomicUsize::new(0));
+        let e2 = Arc::clone(&evaluated);
+        let q = Arc::new(BatchQueue::new(
+            BatchQueueConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+            move |items| {
+                e2.fetch_add(items.len(), Ordering::SeqCst);
+                items.iter().map(|&i| (i * i) as f64).collect()
+            },
+        ));
+        let pool = ThreadPool::new(4);
+        let q2 = Arc::clone(&q);
+        let results = pool.parallel_map(64, move |i| q2.submit(i));
+        for (i, v) in results.iter().enumerate() {
+            assert_eq!(*v, (i * i) as f64, "item {i}");
+        }
+        assert_eq!(evaluated.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn flush_on_empty_is_noop() {
+        let q = BatchQueue::new(BatchQueueConfig::default(), |items| {
+            items.iter().map(|_| 0.0).collect()
+        });
+        q.flush();
+        assert_eq!(q.flush_count(), 0);
+    }
+}

@@ -1,0 +1,363 @@
+//! The leader: owns job lifecycle. Resolves a [`SelectionJob`] into an
+//! objective (native or XLA-backed), executes the requested algorithm, and
+//! emits a [`SelectionReport`] plus metrics.
+
+use crate::algorithms::{
+    AdaptiveSampling, AdaptiveSamplingConfig, AdaptiveSequencing, AdaptiveSequencingConfig,
+    Dash, DashConfig, Greedy, GreedyConfig, Lasso, LassoConfig, LassoLogistic, ParallelGreedy,
+    RandomSelect, SelectionResult, TopK,
+};
+use crate::coordinator::MetricsRegistry;
+use crate::data::{Dataset, Task};
+use crate::objectives::{
+    AOptimalityObjective, LinearRegressionObjective, LogisticObjective, Objective,
+    OvrSoftmaxObjective, R2Objective,
+};
+use crate::rng::Pcg64;
+use crate::runtime::Manifest;
+use crate::util::json::Json;
+use std::sync::Arc;
+
+/// Which objective to optimize.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ObjectiveChoice {
+    /// `ℓ_reg` variance reduction (Cor. 7)
+    Lreg,
+    /// Appendix F R²
+    R2,
+    /// `ℓ_class` binary logistic (Cor. 8)
+    Logistic,
+    /// one-vs-rest multiclass (D4)
+    OvrSoftmax,
+    /// Bayesian A-optimality (Cor. 9)
+    Aopt { beta_sq: f64, sigma_sq: f64 },
+}
+
+/// Gains backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// pure-rust incremental states
+    Native,
+    /// PJRT-executed AOT artifacts for the batched sweeps
+    Xla,
+}
+
+/// Which algorithm to run.
+#[derive(Debug, Clone)]
+pub enum AlgorithmChoice {
+    Dash(DashConfig),
+    Greedy(GreedyConfig),
+    ParallelGreedy { cfg: GreedyConfig, threads: usize },
+    TopK,
+    Random { trials: usize },
+    Lasso(LassoConfig),
+    AdaptiveSampling(AdaptiveSamplingConfig),
+    AdaptiveSequencing(AdaptiveSequencingConfig),
+}
+
+impl AlgorithmChoice {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AlgorithmChoice::Dash(_) => "dash",
+            AlgorithmChoice::Greedy(c) if c.lazy => "sds_ma_lazy",
+            AlgorithmChoice::Greedy(_) => "sds_ma",
+            AlgorithmChoice::ParallelGreedy { .. } => "parallel_sds_ma",
+            AlgorithmChoice::TopK => "top_k",
+            AlgorithmChoice::Random { .. } => "random",
+            AlgorithmChoice::Lasso(_) => "lasso",
+            AlgorithmChoice::AdaptiveSampling(_) => "adaptive_sampling",
+            AlgorithmChoice::AdaptiveSequencing(_) => "adaptive_seq",
+        }
+    }
+}
+
+/// One selection job.
+#[derive(Clone)]
+pub struct SelectionJob {
+    pub dataset: Arc<Dataset>,
+    pub objective: ObjectiveChoice,
+    pub backend: Backend,
+    pub algorithm: AlgorithmChoice,
+    pub k: usize,
+    pub seed: u64,
+}
+
+/// Machine-readable job outcome.
+#[derive(Debug, Clone)]
+pub struct SelectionReport {
+    pub algorithm: String,
+    pub dataset: String,
+    pub objective: String,
+    pub backend: &'static str,
+    pub k: usize,
+    pub result: SelectionResult,
+    /// value recomputed under the *native* objective (so XLA- and
+    /// native-backend runs are compared on identical ground truth)
+    pub native_value: f64,
+}
+
+impl SelectionReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algorithm", self.algorithm.as_str().into()),
+            ("dataset", self.dataset.as_str().into()),
+            ("objective", self.objective.as_str().into()),
+            ("backend", self.backend.into()),
+            ("k", self.k.into()),
+            ("value", self.result.value.into()),
+            ("native_value", self.native_value.into()),
+            ("rounds", self.result.rounds.into()),
+            ("queries", self.result.queries.into()),
+            ("wall_s", self.result.wall_s.into()),
+            ("modeled_parallel_s_p64", self.result.modeled_parallel_s(Some(64)).into()),
+            ("hit_iteration_cap", self.result.hit_iteration_cap.into()),
+            ("set", Json::arr_usize(&self.result.set)),
+        ])
+    }
+}
+
+/// Job executor.
+pub struct Leader {
+    pub metrics: Arc<MetricsRegistry>,
+    manifest: Option<Manifest>,
+}
+
+impl Default for Leader {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Leader {
+    /// Create a leader; loads the artifact manifest when present so XLA
+    /// jobs can be served.
+    pub fn new() -> Self {
+        let dir = crate::runtime::default_artifacts_dir();
+        let manifest = Manifest::load(&dir).ok();
+        Leader { metrics: Arc::new(MetricsRegistry::new()), manifest }
+    }
+
+    pub fn has_artifacts(&self) -> bool {
+        self.manifest.is_some()
+    }
+
+    /// Build the objective for a job.
+    fn objective(&self, job: &SelectionJob) -> Result<Box<dyn Objective>, String> {
+        let ds = &job.dataset;
+        match (&job.objective, job.backend) {
+            (ObjectiveChoice::Lreg, Backend::Native) => {
+                Ok(Box::new(LinearRegressionObjective::new(ds)))
+            }
+            (ObjectiveChoice::R2, _) => Ok(Box::new(R2Objective::new(ds))),
+            (ObjectiveChoice::Logistic, Backend::Native) => {
+                Ok(Box::new(LogisticObjective::new(ds)))
+            }
+            (ObjectiveChoice::OvrSoftmax, _) => Ok(Box::new(OvrSoftmaxObjective::new(ds))),
+            (ObjectiveChoice::Aopt { beta_sq, sigma_sq }, Backend::Native) => {
+                Ok(Box::new(AOptimalityObjective::new(ds, *beta_sq, *sigma_sq)))
+            }
+            (choice, Backend::Xla) => {
+                let manifest = self
+                    .manifest
+                    .as_ref()
+                    .ok_or("XLA backend requested but artifacts/ not built")?;
+                match choice {
+                    ObjectiveChoice::Lreg => crate::oracle::XlaLregObjective::new(
+                        ds,
+                        manifest,
+                        job.k.max(1),
+                    )
+                    .map(|o| Box::new(o) as Box<dyn Objective>)
+                    .map_err(|e| e.to_string()),
+                    ObjectiveChoice::Logistic => {
+                        crate::oracle::XlaLogisticObjective::new(ds, manifest)
+                            .map(|o| Box::new(o) as Box<dyn Objective>)
+                            .map_err(|e| e.to_string())
+                    }
+                    ObjectiveChoice::Aopt { beta_sq, sigma_sq } => {
+                        crate::oracle::XlaAoptObjective::new(ds, manifest, *beta_sq, *sigma_sq)
+                            .map(|o| Box::new(o) as Box<dyn Objective>)
+                            .map_err(|e| e.to_string())
+                    }
+                    other => Err(format!("{other:?} has no XLA backend")),
+                }
+            }
+        }
+    }
+
+    /// Execute a job.
+    pub fn run(&self, job: &SelectionJob) -> Result<SelectionReport, String> {
+        let mut rng = Pcg64::seed_from(job.seed);
+        let obj = self.objective(job)?;
+        let result = match &job.algorithm {
+            AlgorithmChoice::Dash(cfg) => {
+                let mut c = cfg.clone();
+                c.k = job.k;
+                Dash::new(c).run(&*obj, &mut rng)
+            }
+            AlgorithmChoice::Greedy(cfg) => {
+                let mut c = cfg.clone();
+                c.k = job.k;
+                Greedy::new(c).run(&*obj)
+            }
+            AlgorithmChoice::ParallelGreedy { cfg, threads } => {
+                let mut c = cfg.clone();
+                c.k = job.k;
+                ParallelGreedy::new(c, *threads).run(&*obj)
+            }
+            AlgorithmChoice::TopK => TopK::new(job.k).run(&*obj),
+            AlgorithmChoice::Random { trials } => {
+                RandomSelect::new(job.k).run_mean(&*obj, &mut rng, *trials)
+            }
+            AlgorithmChoice::Lasso(cfg) => match job.dataset.task {
+                Task::BinaryClassification => LassoLogistic::new(cfg.clone()).run_for_k(
+                    &job.dataset.x,
+                    &job.dataset.y,
+                    job.k,
+                ),
+                _ => Lasso::new(cfg.clone()).run_for_k(&job.dataset.x, &job.dataset.y, job.k),
+            },
+            AlgorithmChoice::AdaptiveSampling(cfg) => {
+                let mut c = cfg.clone();
+                c.k = job.k;
+                AdaptiveSampling::new(c).run(&*obj, &mut rng)
+            }
+            AlgorithmChoice::AdaptiveSequencing(cfg) => {
+                let mut c = cfg.clone();
+                c.k = job.k;
+                AdaptiveSequencing::new(AdaptiveSequencingConfig { k: job.k, ..c }).run(&*obj, &mut rng)
+            }
+        };
+
+        // LASSO reports no objective value; evaluate its set. Recompute the
+        // native value for every algorithm so backends are comparable.
+        let native_obj: Box<dyn Objective> = match &job.objective {
+            ObjectiveChoice::Lreg => Box::new(LinearRegressionObjective::new(&job.dataset)),
+            ObjectiveChoice::R2 => Box::new(R2Objective::new(&job.dataset)),
+            ObjectiveChoice::Logistic => Box::new(LogisticObjective::new(&job.dataset)),
+            ObjectiveChoice::OvrSoftmax => Box::new(OvrSoftmaxObjective::new(&job.dataset)),
+            ObjectiveChoice::Aopt { beta_sq, sigma_sq } => {
+                Box::new(AOptimalityObjective::new(&job.dataset, *beta_sq, *sigma_sq))
+            }
+        };
+        let native_value = native_obj.eval(&result.set);
+        let mut result = result;
+        if matches!(job.algorithm, AlgorithmChoice::Lasso(_)) {
+            result.value = native_value;
+        }
+
+        self.metrics.inc("leader.jobs", 1);
+        self.metrics.inc("oracle.queries", result.queries as u64);
+        self.metrics.set_gauge("last.value", result.value);
+        self.metrics.set_gauge("last.rounds", result.rounds as f64);
+
+        Ok(SelectionReport {
+            algorithm: result.algorithm.clone(),
+            dataset: job.dataset.name.clone(),
+            objective: format!("{:?}", job.objective),
+            backend: match job.backend {
+                Backend::Native => "native",
+                Backend::Xla => "xla",
+            },
+            k: job.k,
+            native_value,
+            result,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn job(alg: AlgorithmChoice) -> SelectionJob {
+        let mut rng = Pcg64::seed_from(1);
+        let ds = synthetic::regression_d1(&mut rng, 80, 20, 8, 0.3);
+        SelectionJob {
+            dataset: Arc::new(ds),
+            objective: ObjectiveChoice::Lreg,
+            backend: Backend::Native,
+            algorithm: alg,
+            k: 5,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn leader_runs_every_algorithm() {
+        let leader = Leader::new();
+        for alg in [
+            AlgorithmChoice::Dash(DashConfig::default()),
+            AlgorithmChoice::Greedy(GreedyConfig::default()),
+            AlgorithmChoice::ParallelGreedy { cfg: GreedyConfig::default(), threads: 2 },
+            AlgorithmChoice::TopK,
+            AlgorithmChoice::Random { trials: 3 },
+            AlgorithmChoice::Lasso(LassoConfig::default()),
+            AlgorithmChoice::AdaptiveSequencing(AdaptiveSequencingConfig::default()),
+        ] {
+            let report = leader.run(&job(alg.clone())).unwrap();
+            assert!(report.result.set.len() <= 5, "{}: {:?}", report.algorithm, report.result.set);
+            assert!(report.native_value >= 0.0);
+            let j = report.to_json();
+            assert!(j.get("value").is_some());
+            assert!(j.get("rounds").is_some());
+        }
+        assert_eq!(leader.metrics.counter("leader.jobs"), 7);
+    }
+
+    #[test]
+    fn xla_backend_when_artifacts_present() {
+        let leader = Leader::new();
+        if !leader.has_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut j = job(AlgorithmChoice::Dash(DashConfig::default()));
+        j.backend = Backend::Xla;
+        let report = leader.run(&j).unwrap();
+        assert_eq!(report.backend, "xla");
+        assert!(report.result.value > 0.0);
+        // native re-evaluation close to the backend's own value
+        assert!((report.native_value - report.result.value).abs() < 1e-3);
+    }
+
+    #[test]
+    fn xla_backend_without_artifacts_is_clean_error() {
+        let mut leader = Leader::new();
+        leader.manifest = None;
+        let mut j = job(AlgorithmChoice::TopK);
+        j.backend = Backend::Xla;
+        let err = leader.run(&j).unwrap_err();
+        assert!(err.contains("artifacts"), "{err}");
+    }
+
+    #[test]
+    fn lasso_value_is_objective_eval() {
+        let leader = Leader::new();
+        let report = leader.run(&job(AlgorithmChoice::Lasso(LassoConfig::default()))).unwrap();
+        assert!((report.result.value - report.native_value).abs() < 1e-12);
+        assert!(report.result.value > 0.0);
+    }
+
+    #[test]
+    fn classification_job_uses_logistic_lasso() {
+        let mut rng = Pcg64::seed_from(2);
+        let ds = synthetic::classification_d3(&mut rng, 150, 15, 5, 0.2);
+        let leader = Leader::new();
+        let j = SelectionJob {
+            dataset: Arc::new(ds),
+            objective: ObjectiveChoice::Logistic,
+            backend: Backend::Native,
+            algorithm: AlgorithmChoice::Lasso(LassoConfig {
+                max_iters: 100,
+                ..Default::default()
+            }),
+            k: 4,
+            seed: 3,
+        };
+        let report = leader.run(&j).unwrap();
+        assert_eq!(report.algorithm, "lasso_logistic");
+        assert!(report.result.set.len() <= 4);
+    }
+}

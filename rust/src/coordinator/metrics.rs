@@ -1,0 +1,102 @@
+//! Process metrics registry: named counters and gauges with a text
+//! snapshot, fed by the leader and the experiment harness.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Named counters (monotonic) and gauges (last-write-wins, fixed-point
+/// micro units for fractional values).
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    gauges: Mutex<BTreeMap<String, AtomicI64>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Set a gauge to a float value (stored as micro-units).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        let mut map = self.gauges.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicI64::new(0))
+            .store((value * 1e6) as i64, Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|g| g.load(Ordering::Relaxed) as f64 / 1e6)
+            .unwrap_or(0.0)
+    }
+
+    /// Text snapshot, one `name value` per line, sorted.
+    pub fn snapshot(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{k} {}\n",
+                crate::util::fmt_f64(v.load(Ordering::Relaxed) as f64 / 1e6)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = MetricsRegistry::new();
+        m.inc("oracle.queries", 5);
+        m.inc("oracle.queries", 3);
+        assert_eq!(m.counter("oracle.queries"), 8);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = MetricsRegistry::new();
+        m.set_gauge("job.value", 0.75);
+        m.set_gauge("job.value", 0.875);
+        assert!((m.gauge("job.value") - 0.875).abs() < 1e-9);
+        assert_eq!(m.gauge("missing"), 0.0);
+    }
+
+    #[test]
+    fn snapshot_sorted_and_complete() {
+        let m = MetricsRegistry::new();
+        m.inc("b.count", 1);
+        m.inc("a.count", 2);
+        m.set_gauge("c.value", 1.5);
+        let snap = m.snapshot();
+        let lines: Vec<&str> = snap.lines().collect();
+        assert_eq!(lines, vec!["a.count 2", "b.count 1", "c.value 1.5"]);
+    }
+}

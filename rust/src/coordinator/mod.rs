@@ -1,0 +1,17 @@
+//! L3 coordinator: the serving-side orchestration around the selection
+//! algorithms — request batching, a leader that owns job lifecycle, worker
+//! fan-out for oracle sweeps, and a metrics registry.
+//!
+//! The paper's contribution is a *parallel query schedule*; this module is
+//! the machinery that realizes it as a deployable service: experiment
+//! drivers and the CLI submit [`SelectionJob`]s to the [`Leader`], which
+//! resolves datasets/objectives/backends, executes the algorithm, and
+//! returns a machine-readable [`SelectionReport`].
+
+mod batcher;
+mod leader;
+mod metrics;
+
+pub use batcher::{BatchQueue, BatchQueueConfig};
+pub use leader::{AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, SelectionReport};
+pub use metrics::MetricsRegistry;

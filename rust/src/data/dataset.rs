@@ -1,0 +1,265 @@
+//! The core dataset container shared by all objectives and experiments.
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+use crate::util::csvio::CsvTable;
+use std::path::Path;
+
+/// What the response variable means.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// continuous response; objective `ℓ_reg` / R²
+    Regression,
+    /// binary labels in {0,1}; objective `ℓ_class`
+    BinaryClassification,
+    /// labels in {0..classes-1}; softmax log-likelihood
+    MultiClassification { classes: usize },
+    /// no response; experimental design over sample columns
+    Design,
+}
+
+/// A dataset: feature matrix `x` of shape `d × n` (one *column per feature*
+/// for selection problems; one column per experimental stimulus for design
+/// problems) and an optional response `y` of length `d`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    pub task: Task,
+    /// indices of the true support when the data is synthetic (diagnostics)
+    pub true_support: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn new(name: &str, x: Matrix, y: Vec<f64>, task: Task) -> Self {
+        if !matches!(task, Task::Design) {
+            assert_eq!(y.len(), x.rows(), "response length must equal sample count");
+        }
+        Dataset { name: name.to_string(), x, y, task, true_support: Vec::new() }
+    }
+
+    /// Number of selectable elements (feature columns / stimuli).
+    pub fn n(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Number of samples (rows).
+    pub fn d(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Standardize every column to mean 0, variance 1 (paper's preprocessing
+    /// for D1/D2). Constant columns are left centered.
+    pub fn normalize_columns(&mut self) {
+        let d = self.d();
+        for j in 0..self.n() {
+            let col = self.x.col_mut(j);
+            let mean = col.iter().sum::<f64>() / d as f64;
+            for v in col.iter_mut() {
+                *v -= mean;
+            }
+            let var = col.iter().map(|v| v * v).sum::<f64>() / d as f64;
+            if var > 1e-12 {
+                let inv = 1.0 / var.sqrt();
+                for v in col.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+    }
+
+    /// Normalize every *row* to unit ℓ2 norm (paper's preprocessing for the
+    /// experimental-design datasets, where rows are stimuli dimensions).
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.d() {
+            let norm: f64 = (0..self.n()).map(|j| self.x.get(i, j).powi(2)).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                for j in 0..self.n() {
+                    let v = self.x.get(i, j) / norm;
+                    self.x.set(i, j, v);
+                }
+            }
+        }
+    }
+
+    /// Normalize every *column* to unit ℓ2 norm.
+    pub fn normalize_column_norms(&mut self) {
+        for j in 0..self.n() {
+            let col = self.x.col_mut(j);
+            let norm = crate::linalg::nrm2(col);
+            if norm > 1e-12 {
+                crate::linalg::scal(1.0 / norm, col);
+            }
+        }
+    }
+
+    /// Random row subsample (paper: "we sample 1000 rows from the dataset").
+    pub fn subsample_rows(&self, rng: &mut Pcg64, rows: usize) -> Dataset {
+        let rows = rows.min(self.d());
+        let idx = rng.sample_indices(self.d(), rows);
+        let x = self.x.select_rows(&idx);
+        let y = if self.y.is_empty() {
+            Vec::new()
+        } else {
+            idx.iter().map(|&i| self.y[i]).collect()
+        };
+        Dataset {
+            name: format!("{}-sub{rows}", self.name),
+            x,
+            y,
+            task: self.task,
+            true_support: self.true_support.clone(),
+        }
+    }
+
+    /// Train/test split by rows (for held-out classification accuracy).
+    pub fn split(&self, rng: &mut Pcg64, train_frac: f64) -> (Dataset, Dataset) {
+        let d = self.d();
+        let n_train = ((d as f64) * train_frac).round() as usize;
+        let mut idx: Vec<usize> = (0..d).collect();
+        rng.shuffle(&mut idx);
+        let (tr, te) = idx.split_at(n_train.clamp(1, d.saturating_sub(1).max(1)));
+        let mk = |rows: &[usize], tag: &str| Dataset {
+            name: format!("{}-{tag}", self.name),
+            x: self.x.select_rows(rows),
+            y: rows.iter().map(|&i| self.y[i]).collect(),
+            task: self.task,
+            true_support: self.true_support.clone(),
+        };
+        (mk(tr, "train"), mk(te, "test"))
+    }
+
+    /// Persist to CSV: columns `y, x0..x{n-1}` (regression/classification)
+    /// or just `x*` for design data.
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        let has_y = !self.y.is_empty();
+        let mut header: Vec<String> = Vec::new();
+        if has_y {
+            header.push("y".into());
+        }
+        for j in 0..self.n() {
+            header.push(format!("x{j}"));
+        }
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = CsvTable::new(&header_refs);
+        for i in 0..self.d() {
+            let mut row = Vec::with_capacity(header.len());
+            if has_y {
+                row.push(self.y[i]);
+            }
+            for j in 0..self.n() {
+                row.push(self.x.get(i, j));
+            }
+            t.push_f64(&row);
+        }
+        t.save(path)
+    }
+
+    /// Load from CSV written by [`Dataset::save_csv`].
+    pub fn load_csv(path: &Path, name: &str, task: Task) -> Result<Dataset, String> {
+        let t = CsvTable::load(path)?;
+        let has_y = t.header.first().map(|h| h == "y").unwrap_or(false);
+        let n = t.header.len() - usize::from(has_y);
+        let d = t.rows.len();
+        if d == 0 || n == 0 {
+            return Err("empty dataset".into());
+        }
+        let mut x = Matrix::zeros(d, n);
+        let mut y = Vec::new();
+        for (i, row) in t.rows.iter().enumerate() {
+            let mut cells = row.iter();
+            if has_y {
+                y.push(
+                    cells.next().unwrap().parse::<f64>().map_err(|e| e.to_string())?,
+                );
+            }
+            for (j, c) in cells.enumerate() {
+                x.set(i, j, c.parse::<f64>().map_err(|e| e.to_string())?);
+            }
+        }
+        Ok(Dataset::new(name, x, y, task))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = Matrix::from_rows(4, 2, &[1., 10., 2., 20., 3., 30., 4., 40.]);
+        Dataset::new("toy", x, vec![0.0, 1.0, 0.0, 1.0], Task::Regression)
+    }
+
+    #[test]
+    fn dims() {
+        let ds = toy();
+        assert_eq!(ds.d(), 4);
+        assert_eq!(ds.n(), 2);
+    }
+
+    #[test]
+    fn normalize_columns_stats() {
+        let mut ds = toy();
+        ds.normalize_columns();
+        for j in 0..ds.n() {
+            let col = ds.x.col(j);
+            let mean: f64 = col.iter().sum::<f64>() / 4.0;
+            let var: f64 = col.iter().map(|v| v * v).sum::<f64>() / 4.0;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalize_rows_unit() {
+        let mut ds = toy();
+        ds.normalize_rows();
+        for i in 0..ds.d() {
+            let norm: f64 = (0..ds.n()).map(|j| ds.x.get(i, j).powi(2)).sum();
+            assert!((norm - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalize_constant_column_safe() {
+        let x = Matrix::from_rows(3, 1, &[5.0, 5.0, 5.0]);
+        let mut ds = Dataset::new("c", x, vec![0.0; 3], Task::Regression);
+        ds.normalize_columns();
+        for i in 0..3 {
+            assert_eq!(ds.x.get(i, 0), 0.0); // centered, not divided
+        }
+    }
+
+    #[test]
+    fn subsample_and_split() {
+        let mut rng = Pcg64::seed_from(1);
+        let ds = toy();
+        let sub = ds.subsample_rows(&mut rng, 2);
+        assert_eq!(sub.d(), 2);
+        assert_eq!(sub.n(), 2);
+        let (tr, te) = ds.split(&mut rng, 0.5);
+        assert_eq!(tr.d() + te.d(), 4);
+        assert!(tr.d() >= 1 && te.d() >= 1);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let ds = toy();
+        let p = std::env::temp_dir().join("dash_ds_test.csv");
+        ds.save_csv(&p).unwrap();
+        let back = Dataset::load_csv(&p, "toy", Task::Regression).unwrap();
+        assert_eq!(back.d(), 4);
+        assert_eq!(back.n(), 2);
+        assert!(back.x.max_abs_diff(&ds.x) < 1e-9);
+        assert_eq!(back.y, ds.y);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    #[should_panic(expected = "response length")]
+    fn mismatched_response_panics() {
+        let x = Matrix::zeros(3, 2);
+        let _ = Dataset::new("bad", x, vec![1.0], Task::Regression);
+    }
+}

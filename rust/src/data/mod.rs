@@ -1,0 +1,11 @@
+//! Datasets: the in-memory [`Dataset`] type plus generators for the paper's
+//! four workloads (D1–D4, Appendix I.2). Where the paper used proprietary
+//! clinical/gene data (D2, D4) we generate synthetic analogs with matched
+//! dimensions and spectra — see DESIGN.md §3 for the substitution argument.
+
+mod dataset;
+pub mod synthetic;
+pub mod clinical_sim;
+pub mod gene_sim;
+
+pub use dataset::{Dataset, Task};

@@ -1,0 +1,223 @@
+//! Synthetic dataset generators (paper Appendix I.2, D1 and D3).
+//!
+//! Features are drawn from an equicorrelated multivariate normal: with
+//! correlation ρ, each feature column is `√ρ · z_common + √(1−ρ) · z_j`,
+//! which has exactly the paper's covariance structure (unit variance,
+//! pairwise covariance ρ) without requiring an n×n Cholesky.
+
+use super::{Dataset, Task};
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// Draw a `d × n` feature matrix with pairwise column correlation `rho`,
+/// then standardize columns to mean 0 / variance 1.
+pub fn correlated_features(rng: &mut Pcg64, d: usize, n: usize, rho: f64) -> Matrix {
+    assert!((0.0..1.0).contains(&rho), "rho must be in [0,1)");
+    let sr = rho.sqrt();
+    let si = (1.0 - rho).sqrt();
+    let common: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let mut x = Matrix::zeros(d, n);
+    for j in 0..n {
+        let col = x.col_mut(j);
+        for (i, c) in col.iter_mut().enumerate() {
+            *c = sr * common[i] + si * rng.next_gaussian();
+        }
+    }
+    standardize_columns(&mut x);
+    x
+}
+
+fn standardize_columns(x: &mut Matrix) {
+    let d = x.rows();
+    for j in 0..x.cols() {
+        let col = x.col_mut(j);
+        let mean = col.iter().sum::<f64>() / d as f64;
+        for v in col.iter_mut() {
+            *v -= mean;
+        }
+        let var = col.iter().map(|v| v * v).sum::<f64>() / d as f64;
+        if var > 1e-12 {
+            let inv = 1.0 / var.sqrt();
+            for v in col.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+}
+
+/// **D1** — synthetic regression (paper: 500 features, covariance 0.4,
+/// coefficients `β ~ U(−2,2)` on a support of 100, small noise).
+///
+/// `d` samples, `n` features, `support` true features, correlation `rho`.
+pub fn regression_d1(
+    rng: &mut Pcg64,
+    d: usize,
+    n: usize,
+    support: usize,
+    rho: f64,
+) -> Dataset {
+    let x = correlated_features(rng, d, n, rho);
+    let support_idx = rng.sample_indices(n, support.min(n));
+    let mut y = vec![0.0; d];
+    for &j in &support_idx {
+        let beta = rng.gen_range_f64(-2.0, 2.0);
+        crate::linalg::axpy(beta, x.col(j), &mut y);
+    }
+    // small noise term (paper: "after adding a small noise term")
+    let y_norm = crate::linalg::nrm2(&y) / (d as f64).sqrt();
+    let noise_scale = 0.05 * y_norm.max(1e-6);
+    for v in &mut y {
+        *v += noise_scale * rng.next_gaussian();
+    }
+    let mut ds = Dataset::new("D1-synthetic-regression", x, y, Task::Regression);
+    ds.true_support = support_idx;
+    ds
+}
+
+/// **D1-ed** — synthetic experimental design (paper: 256 features ×
+/// 1024 samples, covariance 0.8, rows ℓ2-normalized). Columns of the
+/// returned `d × n` matrix are the selectable stimuli.
+pub fn design_d1(rng: &mut Pcg64, d: usize, n_stimuli: usize, rho: f64) -> Dataset {
+    // generate stimuli as correlated gaussian vectors in R^d
+    let x = correlated_features(rng, d, n_stimuli, rho);
+    let mut ds = Dataset::new("D1-synthetic-design", x, Vec::new(), Task::Design);
+    // paper: "Each row is then normalized to have ℓ2 norm of 1"
+    ds.normalize_rows();
+    ds
+}
+
+/// **D3** — synthetic binary classification (paper: 200 features, 50 true
+/// support, coefficients U(−2,2), probabilities thresholded at 0.5).
+pub fn classification_d3(
+    rng: &mut Pcg64,
+    d: usize,
+    n: usize,
+    support: usize,
+    rho: f64,
+) -> Dataset {
+    let x = correlated_features(rng, d, n, rho);
+    let support_idx = rng.sample_indices(n, support.min(n));
+    let mut logits = vec![0.0; d];
+    for &j in &support_idx {
+        let beta = rng.gen_range_f64(-2.0, 2.0);
+        crate::linalg::axpy(beta, x.col(j), &mut logits);
+    }
+    // scale logits to a moderate range so classes are separable but not
+    // trivially (matches "map to probabilities ... threshold of 0.5")
+    let scale = 2.0 / (crate::linalg::nrm2(&logits) / (d as f64).sqrt()).max(1e-9);
+    let y: Vec<f64> = logits
+        .iter()
+        .map(|&l| {
+            let p = 1.0 / (1.0 + (-l * scale).exp());
+            // sample the label so the problem is stochastic, as in logistic
+            // regression data-generating processes
+            if rng.next_f64() < p {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut ds = Dataset::new("D3-synthetic-classification", x, y, Task::BinaryClassification);
+    ds.true_support = support_idx;
+    ds
+}
+
+/// Paper-default instantiations (sizes from Appendix I.2, sample counts
+/// chosen so single-core runs stay tractable; the shape of every figure is
+/// insensitive to d here).
+pub mod paper {
+    use super::*;
+
+    /// D1 for Fig. 2 top row: 500 features, cov 0.4, support 100.
+    pub fn d1(rng: &mut Pcg64) -> Dataset {
+        regression_d1(rng, 1000, 500, 100, 0.4)
+    }
+
+    /// D1 design variant for Fig. 4 top row: 256 dims × 1024 stimuli, cov 0.8.
+    pub fn d1_design(rng: &mut Pcg64) -> Dataset {
+        design_d1(rng, 256, 1024, 0.8)
+    }
+
+    /// D3 for Fig. 3 top row: 200 features, support 50.
+    pub fn d3(rng: &mut Pcg64) -> Dataset {
+        classification_d3(rng, 800, 200, 50, 0.3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correlation_structure() {
+        let mut rng = Pcg64::seed_from(1);
+        let x = correlated_features(&mut rng, 4000, 8, 0.4);
+        // empirical pairwise correlation should be near 0.4
+        let mut corrs = Vec::new();
+        for a in 0..8 {
+            for b in (a + 1)..8 {
+                let ca = x.col(a);
+                let cb = x.col(b);
+                let c: f64 = crate::linalg::dot(ca, cb) / 4000.0;
+                corrs.push(c);
+            }
+        }
+        let mean_corr = crate::util::mean(&corrs);
+        assert!((mean_corr - 0.4).abs() < 0.08, "mean corr {mean_corr}");
+    }
+
+    #[test]
+    fn d1_shapes_and_support() {
+        let mut rng = Pcg64::seed_from(2);
+        let ds = regression_d1(&mut rng, 200, 50, 10, 0.4);
+        assert_eq!(ds.d(), 200);
+        assert_eq!(ds.n(), 50);
+        assert_eq!(ds.true_support.len(), 10);
+        assert!(ds.true_support.iter().all(|&j| j < 50));
+        assert_eq!(ds.task, Task::Regression);
+        // response has signal: correlates with support features
+        let j = ds.true_support[0];
+        let c = crate::linalg::dot(ds.x.col(j), &ds.y).abs();
+        assert!(c > 0.0);
+    }
+
+    #[test]
+    fn d1_reproducible() {
+        let a = regression_d1(&mut Pcg64::seed_from(9), 50, 20, 5, 0.4);
+        let b = regression_d1(&mut Pcg64::seed_from(9), 50, 20, 5, 0.4);
+        assert!(a.x.max_abs_diff(&b.x) == 0.0);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.true_support, b.true_support);
+    }
+
+    #[test]
+    fn design_rows_normalized() {
+        let mut rng = Pcg64::seed_from(3);
+        let ds = design_d1(&mut rng, 16, 64, 0.8);
+        assert_eq!(ds.task, Task::Design);
+        assert!(ds.y.is_empty());
+        for i in 0..ds.d() {
+            let norm: f64 = (0..ds.n()).map(|j| ds.x.get(i, j).powi(2)).sum();
+            assert!((norm - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn d3_labels_binary_and_balanced_ish() {
+        let mut rng = Pcg64::seed_from(4);
+        let ds = classification_d3(&mut rng, 500, 40, 10, 0.3);
+        assert!(ds.y.iter().all(|&v| v == 0.0 || v == 1.0));
+        let pos = ds.y.iter().filter(|&&v| v == 1.0).count();
+        assert!(pos > 50 && pos < 450, "positives {pos}");
+        assert_eq!(ds.task, Task::BinaryClassification);
+    }
+
+    #[test]
+    fn paper_defaults_construct() {
+        let mut rng = Pcg64::seed_from(5);
+        let d3 = paper::d3(&mut rng);
+        assert_eq!(d3.n(), 200);
+        assert_eq!(d3.true_support.len(), 50);
+    }
+}

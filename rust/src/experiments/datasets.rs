@@ -1,0 +1,164 @@
+//! Named experiment datasets (Appendix I.2) at two scales:
+//!
+//! - `Quick` — minutes-scale single-core runs preserving every shape
+//!   (feature counts match the paper; sample counts and k are reduced
+//!   proportionally).
+//! - `Paper` — the paper's dimensions (D2/D4 per the DESIGN.md §3
+//!   substitutions).
+
+use crate::data::{clinical_sim, gene_sim, synthetic, Dataset};
+use crate::rng::Pcg64;
+
+/// Experiment scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s.to_ascii_lowercase().as_str() {
+            "quick" => Some(Scale::Quick),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+}
+
+/// The paper's datasets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetId {
+    /// D1 — synthetic regression (Fig. 2 top, Fig. 4 top via design variant)
+    D1,
+    /// D1 design variant (256×1024, cov 0.8)
+    D1Design,
+    /// D2 — clinical regression substitute (Fig. 2 bottom)
+    D2,
+    /// D2 design variant (1000 sampled stimuli)
+    D2Design,
+    /// D3 — synthetic classification (Fig. 3 top)
+    D3,
+    /// D4 — gene classification substitute, binary reduction (Fig. 3 bottom)
+    D4,
+}
+
+impl DatasetId {
+    pub fn parse(s: &str) -> Option<DatasetId> {
+        match s.to_ascii_lowercase().as_str() {
+            "d1" => Some(DatasetId::D1),
+            "d1-design" | "d1design" => Some(DatasetId::D1Design),
+            "d2" => Some(DatasetId::D2),
+            "d2-design" | "d2design" => Some(DatasetId::D2Design),
+            "d3" => Some(DatasetId::D3),
+            "d4" => Some(DatasetId::D4),
+            _ => None,
+        }
+    }
+
+    /// Build the dataset at the given scale.
+    pub fn build(self, scale: Scale, seed: u64) -> Dataset {
+        let mut rng = Pcg64::seed_from(seed);
+        match (self, scale) {
+            (DatasetId::D1, Scale::Quick) => synthetic::regression_d1(&mut rng, 400, 500, 100, 0.4),
+            (DatasetId::D1, Scale::Paper) => synthetic::regression_d1(&mut rng, 1000, 500, 100, 0.4),
+            (DatasetId::D1Design, Scale::Quick) => synthetic::design_d1(&mut rng, 96, 384, 0.8),
+            (DatasetId::D1Design, Scale::Paper) => synthetic::design_d1(&mut rng, 256, 1024, 0.8),
+            (DatasetId::D2, Scale::Quick) => clinical_sim::clinical_d2(
+                &mut rng,
+                &clinical_sim::ClinicalConfig { samples: 1200, ..Default::default() },
+            ),
+            (DatasetId::D2, Scale::Paper) => {
+                clinical_sim::clinical_d2(&mut rng, &clinical_sim::ClinicalConfig::default())
+            }
+            (DatasetId::D2Design, Scale::Quick) => clinical_sim::clinical_d2_design(
+                &mut rng,
+                &clinical_sim::ClinicalConfig { samples: 1200, features: 96, ..Default::default() },
+                300,
+            ),
+            (DatasetId::D2Design, Scale::Paper) => clinical_sim::clinical_d2_design(
+                &mut rng,
+                &clinical_sim::ClinicalConfig::default(),
+                1000,
+            ),
+            // d = 256 so the quick scale fits the "small" XLA artifact
+            // profile (score-test gains are the fast path for fig3)
+            (DatasetId::D3, Scale::Quick) => {
+                synthetic::classification_d3(&mut rng, 256, 200, 50, 0.3)
+            }
+            (DatasetId::D3, Scale::Paper) => {
+                synthetic::classification_d3(&mut rng, 800, 200, 50, 0.3)
+            }
+            (DatasetId::D4, Scale::Quick) => gene_sim::gene_d4_binary(
+                &mut rng,
+                &gene_sim::GeneConfig { samples: 256, genes: 400, ..Default::default() },
+            ),
+            (DatasetId::D4, Scale::Paper) => gene_sim::gene_d4_binary(
+                &mut rng,
+                &gene_sim::GeneConfig::default(),
+            ),
+        }
+    }
+
+    /// The paper's k grid for this dataset (accuracy/time panels).
+    pub fn k_grid(self, scale: Scale) -> Vec<usize> {
+        match (self, scale) {
+            (DatasetId::D4, Scale::Paper) => vec![25, 50, 100, 150, 200],
+            (DatasetId::D4, Scale::Quick) => vec![5, 10, 20, 40],
+            (_, Scale::Paper) => vec![10, 25, 50, 75, 100],
+            (_, Scale::Quick) => vec![5, 10, 20, 30],
+        }
+    }
+
+    /// k for the accuracy-vs-rounds panel (paper: 100, 200 for D4).
+    pub fn k_rounds(self, scale: Scale) -> usize {
+        match (self, scale) {
+            (DatasetId::D4, Scale::Paper) => 200,
+            (DatasetId::D4, Scale::Quick) => 30,
+            (_, Scale::Paper) => 100,
+            (_, Scale::Quick) => 25,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_quick_datasets_build() {
+        for id in [
+            DatasetId::D1,
+            DatasetId::D1Design,
+            DatasetId::D2,
+            DatasetId::D2Design,
+            DatasetId::D3,
+            DatasetId::D4,
+        ] {
+            let ds = id.build(Scale::Quick, 1);
+            assert!(ds.n() > 0 && ds.d() > 0, "{id:?}");
+            assert!(!id.k_grid(Scale::Quick).is_empty());
+            assert!(id.k_rounds(Scale::Quick) > 0);
+        }
+    }
+
+    #[test]
+    fn paper_dims_match_appendix() {
+        // feature counts are the paper's exactly
+        assert_eq!(DatasetId::D1.build(Scale::Paper, 1).n(), 500);
+        assert_eq!(DatasetId::D3.build(Scale::Paper, 1).n(), 200);
+        let d1d = DatasetId::D1Design.build(Scale::Paper, 1);
+        assert_eq!((d1d.d(), d1d.n()), (256, 1024));
+        assert_eq!(DatasetId::D2.build(Scale::Paper, 1).n(), 385);
+        assert_eq!(DatasetId::D4.build(Scale::Paper, 1).n(), 2500);
+    }
+
+    #[test]
+    fn parsing() {
+        assert_eq!(DatasetId::parse("d1"), Some(DatasetId::D1));
+        assert_eq!(DatasetId::parse("D2-design"), Some(DatasetId::D2Design));
+        assert_eq!(DatasetId::parse("nope"), None);
+        assert_eq!(Scale::parse("QUICK"), Some(Scale::Quick));
+        assert_eq!(Scale::parse("x"), None);
+    }
+}

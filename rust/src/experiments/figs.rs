@@ -1,0 +1,377 @@
+//! The generic figure driver: regenerates the paper's Figures 2, 3 and 4
+//! (each a 2×3 grid: accuracy-vs-rounds, accuracy-vs-k, time-vs-k for a
+//! synthetic and a real-data workload).
+//!
+//! Benchmarked algorithms mirror §5: DASH, SDS_MA, Parallel SDS_MA, TOP-k,
+//! RANDOM, and LASSO on the feature-selection figures. Sequential SDS_MA
+//! runs are wallclock-capped like the paper's manual termination (the "X"
+//! in Fig. 3f); capped cells are emitted as `terminated`.
+
+use super::datasets::{DatasetId, Scale};
+use super::results_dir;
+use crate::coordinator::{AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob};
+use crate::algorithms::{
+    AdaptiveSequencingConfig, DashConfig, GreedyConfig, LassoConfig,
+};
+use crate::data::{Dataset, Task};
+use crate::objectives::{LogisticObjective, Objective, OvrSoftmaxObjective, R2Objective};
+use crate::util::csvio::CsvTable;
+use std::sync::Arc;
+
+/// Which paper figure to regenerate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FigureId {
+    /// linear regression feature selection
+    Fig2,
+    /// logistic regression feature selection
+    Fig3,
+    /// Bayesian A-optimal experimental design
+    Fig4,
+}
+
+impl FigureId {
+    pub fn parse(s: &str) -> Option<FigureId> {
+        match s.to_ascii_lowercase().as_str() {
+            "fig2" | "2" => Some(FigureId::Fig2),
+            "fig3" | "3" => Some(FigureId::Fig3),
+            "fig4" | "4" => Some(FigureId::Fig4),
+            _ => None,
+        }
+    }
+
+    /// (synthetic dataset, real-data dataset) rows of the figure.
+    pub fn datasets(self) -> (DatasetId, DatasetId) {
+        match self {
+            FigureId::Fig2 => (DatasetId::D1, DatasetId::D2),
+            FigureId::Fig3 => (DatasetId::D3, DatasetId::D4),
+            FigureId::Fig4 => (DatasetId::D1Design, DatasetId::D2Design),
+        }
+    }
+
+    pub fn objective(self) -> ObjectiveChoice {
+        match self {
+            FigureId::Fig2 => ObjectiveChoice::Lreg,
+            FigureId::Fig3 => ObjectiveChoice::Logistic,
+            FigureId::Fig4 => ObjectiveChoice::Aopt { beta_sq: 1.0, sigma_sq: 1.0 },
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FigureId::Fig2 => "fig2",
+            FigureId::Fig3 => "fig3",
+            FigureId::Fig4 => "fig4",
+        }
+    }
+}
+
+/// Which panel column to produce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Panel {
+    Rounds,
+    Accuracy,
+    Time,
+    All,
+}
+
+impl Panel {
+    pub fn parse(s: &str) -> Option<Panel> {
+        match s.to_ascii_lowercase().as_str() {
+            "rounds" => Some(Panel::Rounds),
+            "accuracy" => Some(Panel::Accuracy),
+            "time" => Some(Panel::Time),
+            "all" => Some(Panel::All),
+            _ => None,
+        }
+    }
+}
+
+/// Figure run configuration.
+#[derive(Debug, Clone)]
+pub struct FigureConfig {
+    pub figure: FigureId,
+    pub scale: Scale,
+    pub panel: Panel,
+    pub seed: u64,
+    pub backend: Backend,
+    /// wallclock cap per algorithm run (the paper's manual termination)
+    pub algo_budget_s: f64,
+    /// write CSVs under results/
+    pub save: bool,
+}
+
+impl Default for FigureConfig {
+    fn default() -> Self {
+        FigureConfig {
+            figure: FigureId::Fig2,
+            scale: Scale::Quick,
+            panel: Panel::All,
+            seed: 1,
+            backend: Backend::Native,
+            algo_budget_s: 120.0,
+            save: true,
+        }
+    }
+}
+
+/// CSV outputs, one per produced panel (keyed by panel label).
+#[derive(Debug, Default)]
+pub struct FigureOutputs {
+    pub tables: Vec<(String, CsvTable)>,
+}
+
+impl FigureOutputs {
+    pub fn get(&self, label: &str) -> Option<&CsvTable> {
+        self.tables.iter().find(|(l, _)| l == label).map(|(_, t)| t)
+    }
+}
+
+/// Accuracy metric per figure: R² (Fig2), classification rate (Fig3),
+/// normalized A-optimality (Fig4).
+pub fn metric_for(figure: FigureId, ds: &Dataset, set: &[usize]) -> f64 {
+    match figure {
+        FigureId::Fig2 => R2Objective::new(ds).eval(set),
+        FigureId::Fig3 => match ds.task {
+            Task::MultiClassification { .. } => {
+                OvrSoftmaxObjective::new(ds).accuracy_on(set, &ds.x, &ds.y)
+            }
+            _ => LogisticObjective::new(ds).accuracy_on(set, &ds.x, &ds.y),
+        },
+        FigureId::Fig4 => {
+            crate::objectives::AOptimalityObjective::new(ds, 1.0, 1.0).eval(set)
+        }
+    }
+}
+
+fn algorithms(figure: FigureId, threads: usize) -> Vec<AlgorithmChoice> {
+    let mut algos = vec![
+        AlgorithmChoice::Dash(DashConfig::default()),
+        AlgorithmChoice::Greedy(GreedyConfig::default()),
+        AlgorithmChoice::ParallelGreedy { cfg: GreedyConfig::default(), threads },
+        AlgorithmChoice::TopK,
+        AlgorithmChoice::Random { trials: 5 },
+        AlgorithmChoice::AdaptiveSequencing(AdaptiveSequencingConfig::default()),
+    ];
+    if matches!(figure, FigureId::Fig2 | FigureId::Fig3) {
+        algos.push(AlgorithmChoice::Lasso(LassoConfig::default()));
+    }
+    algos
+}
+
+/// Run one figure; returns the CSV panels.
+pub fn run_figure(cfg: &FigureConfig) -> FigureOutputs {
+    let leader = Leader::new();
+    let (syn, real) = cfg.figure.datasets();
+    let mut out = FigureOutputs::default();
+    for (row, id) in [("synthetic", syn), ("real", real)] {
+        let ds = Arc::new(id.build(cfg.scale, cfg.seed));
+        crate::log_info!("{} {row}: dataset {} ({}×{})", cfg.figure.name(), ds.name, ds.d(), ds.n());
+        if matches!(cfg.panel, Panel::Rounds | Panel::All) {
+            let t = rounds_panel(&leader, cfg, &ds, id);
+            out.tables.push((format!("{}_{}_rounds", cfg.figure.name(), row), t));
+        }
+        if matches!(cfg.panel, Panel::Accuracy | Panel::Time | Panel::All) {
+            let (acc, time) = sweep_panels(&leader, cfg, &ds, id);
+            if matches!(cfg.panel, Panel::Accuracy | Panel::All) {
+                out.tables.push((format!("{}_{}_accuracy", cfg.figure.name(), row), acc));
+            }
+            if matches!(cfg.panel, Panel::Time | Panel::All) {
+                out.tables.push((format!("{}_{}_time", cfg.figure.name(), row), time));
+            }
+        }
+    }
+    if cfg.save {
+        let dir = results_dir();
+        for (label, t) in &out.tables {
+            let path = dir.join(format!("{label}.csv"));
+            if let Err(e) = t.save(&path) {
+                crate::log_warn!("saving {path:?}: {e}");
+            } else {
+                crate::log_info!("wrote {path:?}");
+            }
+        }
+    }
+    out
+}
+
+/// Panel (a)/(d): metric after each adaptive round at fixed k.
+fn rounds_panel(
+    leader: &Leader,
+    cfg: &FigureConfig,
+    ds: &Arc<Dataset>,
+    id: DatasetId,
+) -> CsvTable {
+    let k = id.k_rounds(cfg.scale);
+    let mut t = CsvTable::new(&["algorithm", "round", "value", "set_size", "queries"]);
+    for alg in algorithms(cfg.figure, 4) {
+        if matches!(alg, AlgorithmChoice::Lasso(_)) {
+            continue; // LASSO has no round structure; appears in (b)/(e)
+        }
+        let label = alg.label();
+        let job = SelectionJob {
+            dataset: Arc::clone(ds),
+            objective: cfg.figure.objective(),
+            backend: cfg.backend,
+            algorithm: alg,
+            k,
+            seed: cfg.seed,
+        };
+        match leader.run(&job) {
+            Ok(report) => {
+                for rec in &report.result.history {
+                    t.push(vec![
+                        label.to_string(),
+                        rec.round.to_string(),
+                        crate::util::fmt_f64(rec.value),
+                        rec.set_size.to_string(),
+                        rec.queries.to_string(),
+                    ]);
+                }
+            }
+            Err(e) => crate::log_warn!("{label} failed: {e}"),
+        }
+    }
+    t
+}
+
+/// Panels (b)/(e) and (c)/(f): metric and time across the k grid.
+fn sweep_panels(
+    leader: &Leader,
+    cfg: &FigureConfig,
+    ds: &Arc<Dataset>,
+    id: DatasetId,
+) -> (CsvTable, CsvTable) {
+    let ks = id.k_grid(cfg.scale);
+    let mut acc = CsvTable::new(&["algorithm", "k", "metric", "objective_value"]);
+    let mut time = CsvTable::new(&[
+        "algorithm",
+        "k",
+        "wall_s",
+        "modeled_parallel_s",
+        "modeled_parallel_inf_s",
+        "rounds",
+        "queries",
+        "terminated",
+    ]);
+    for alg in algorithms(cfg.figure, 4) {
+        let label = alg.label();
+        let mut over_budget = false;
+        for &k in &ks {
+            if over_budget {
+                // the paper's "X": manual termination once runs blow the
+                // budget — larger k can only be slower
+                time.push(vec![
+                    label.into(),
+                    k.to_string(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    "X".into(),
+                ]);
+                continue;
+            }
+            let job = SelectionJob {
+                dataset: Arc::clone(ds),
+                objective: cfg.figure.objective(),
+                backend: cfg.backend,
+                algorithm: alg.clone(),
+                k,
+                seed: cfg.seed.wrapping_add(k as u64),
+            };
+            match leader.run(&job) {
+                Ok(report) => {
+                    let metric = metric_for(cfg.figure, ds, &report.result.set);
+                    acc.push(vec![
+                        label.into(),
+                        k.to_string(),
+                        crate::util::fmt_f64(metric),
+                        crate::util::fmt_f64(report.native_value),
+                    ]);
+                    time.push(vec![
+                        label.into(),
+                        k.to_string(),
+                        crate::util::fmt_f64(report.result.wall_s),
+                        crate::util::fmt_f64(report.result.modeled_parallel_s(Some(64))),
+                        crate::util::fmt_f64(report.result.modeled_parallel_s(None)),
+                        report.result.rounds.to_string(),
+                        report.result.queries.to_string(),
+                        String::new(),
+                    ]);
+                    if report.result.wall_s > cfg.algo_budget_s {
+                        over_budget = true;
+                    }
+                }
+                Err(e) => crate::log_warn!("{label} k={k} failed: {e}"),
+            }
+        }
+    }
+    (acc, time)
+}
+
+/// Speedup summary (the paper's headline 2–8×): **adaptivity speedup** —
+/// greedy rounds over DASH rounds at the largest k. This matches the
+/// paper's accounting, where every oracle query costs roughly the same
+/// (each is a model refit) so parallel runtime ∝ sequential rounds. Our
+/// incremental-state oracles make greedy's per-query cost artificially
+/// cheap, so the wallclock-derived modeled columns (kept in the CSV for
+/// sensitivity analysis) under-credit DASH relative to the paper's setup.
+pub fn speedup_summary(time_table: &CsvTable) -> Option<f64> {
+    let k_col = time_table.col("k")?;
+    let algo_col = time_table.col("algorithm")?;
+    let rounds_col = time_table.col("rounds")?;
+    let max_k: usize = time_table
+        .rows
+        .iter()
+        .filter_map(|r| r[k_col].parse::<usize>().ok())
+        .max()?;
+    let at = |name: &str| -> Option<f64> {
+        time_table
+            .rows
+            .iter()
+            .find(|r| r[algo_col] == name && r[k_col] == max_k.to_string())
+            .and_then(|r| r[rounds_col].parse::<f64>().ok())
+    };
+    let dash = at("dash")?;
+    let greedy = at("parallel_sds_ma").or_else(|| at("sds_ma"))?;
+    if dash > 0.0 {
+        Some(greedy / dash)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_helpers() {
+        assert_eq!(FigureId::parse("fig3"), Some(FigureId::Fig3));
+        assert_eq!(FigureId::parse("4"), Some(FigureId::Fig4));
+        assert_eq!(FigureId::parse("x"), None);
+        assert_eq!(Panel::parse("TIME"), Some(Panel::Time));
+    }
+
+    #[test]
+    fn metric_for_regression_is_r2() {
+        let mut rng = crate::rng::Pcg64::seed_from(1);
+        let ds = crate::data::synthetic::regression_d1(&mut rng, 80, 10, 5, 0.2);
+        let m = metric_for(FigureId::Fig2, &ds, &[0, 1, 2]);
+        assert!((0.0..=1.0).contains(&m));
+        assert_eq!(metric_for(FigureId::Fig2, &ds, &[]), 0.0);
+    }
+
+    #[test]
+    fn speedup_summary_reads_table() {
+        let csv = "algorithm,k,wall_s,modeled_parallel_s,rounds,queries,terminated\n\
+                   dash,10,1,0.5,5,100,\n\
+                   parallel_sds_ma,10,4,2.0,20,200,\n";
+        let t = CsvTable::parse(csv).unwrap();
+        assert_eq!(speedup_summary(&t), Some(4.0)); // 20 rounds / 5 rounds
+    }
+
+    // a tiny end-to-end figure run (quick scale, rounds panel only, small
+    // synthetic row) lives in tests/integration.rs to keep unit runtime low
+}

@@ -1,0 +1,30 @@
+//! Experiment harness: regenerates every figure of the paper's §5 plus the
+//! appendix demonstrations. Each driver emits CSV series (one per panel)
+//! under `results/` and prints aligned tables; EXPERIMENTS.md records the
+//! paper-vs-measured comparison.
+//!
+//! | driver | paper artifact |
+//! |--------|----------------|
+//! | [`fig1`] | Fig. 1 marginal-contribution sandwich scatter |
+//! | [`figs`] with [`FigureId::Fig2`] | Fig. 2 linear regression (a–f) |
+//! | [`figs`] with [`FigureId::Fig3`] | Fig. 3 logistic regression (a–f) |
+//! | [`figs`] with [`FigureId::Fig4`] | Fig. 4 Bayesian A-optimality (a–f) |
+//! | [`appendix`] | App. A.1/A.2 counterexamples, App. J TOP-k bound |
+
+pub mod appendix;
+pub mod datasets;
+pub mod fig1;
+pub mod figs;
+
+pub use datasets::{DatasetId, Scale};
+pub use figs::{run_figure, FigureConfig, FigureId, FigureOutputs, Panel};
+
+use std::path::PathBuf;
+
+/// Where experiment CSVs land.
+pub fn results_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("DASH_RESULTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results")
+}

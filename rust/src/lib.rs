@@ -1,0 +1,64 @@
+//! # dash-select
+//!
+//! Reproduction of *"Fast Parallel Algorithms for Statistical Subset
+//! Selection Problems"* (Qian & Singer, NeurIPS 2019): the **DASH**
+//! adaptive-sampling algorithm for maximizing *differentially submodular*
+//! objectives (feature selection for regression/classification, Bayesian
+//! A-optimal experimental design) in `O(log n)` adaptive rounds, plus every
+//! baseline the paper evaluates against and the full benchmark harness that
+//! regenerates the paper's figures.
+//!
+//! ## Architecture
+//!
+//! Three layers, Python never on the request path:
+//!
+//! - **L3 (this crate)**: the coordinator — DASH round loop, baselines,
+//!   oracle batching, datasets, experiments, CLI.
+//! - **L2/L1 (python/compile)**: JAX oracle graphs wrapping Pallas gain
+//!   kernels, AOT-lowered to HLO text under `artifacts/`.
+//! - **runtime**: loads the HLO artifacts via the PJRT CPU client
+//!   ([`runtime`]) and serves batched gain queries ([`oracle`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dash_select::prelude::*;
+//!
+//! let mut rng = Pcg64::seed_from(7);
+//! let data = synthetic::regression_d1(&mut rng, 1000, 500, 100, 0.4);
+//! let obj = LinearRegressionObjective::new(&data);
+//! let result = Dash::new(DashConfig { k: 25, ..Default::default() })
+//!     .run(&obj, &mut rng);
+//! println!("f(S) = {:.4} in {} rounds", result.value, result.rounds);
+//! ```
+
+pub mod util;
+pub mod cli;
+pub mod rng;
+pub mod linalg;
+pub mod data;
+pub mod objectives;
+pub mod algorithms;
+pub mod oracle;
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;
+pub mod bench;
+
+/// Convenience re-exports covering the common public API surface.
+pub mod prelude {
+    pub use crate::algorithms::{
+        AdaptiveSequencing, AdaptiveSequencingConfig, Dash, DashConfig, Greedy, GreedyConfig,
+        Lasso, LassoConfig, ParallelGreedy, RandomSelect, SelectionResult, TopK,
+    };
+    pub use crate::coordinator::{
+        AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob,
+    };
+    pub use crate::data::{synthetic, Dataset, Task};
+    pub use crate::linalg::Matrix;
+    pub use crate::objectives::{
+        AOptimalityObjective, LinearRegressionObjective, LogisticObjective, Objective,
+        ObjectiveState, R2Objective,
+    };
+    pub use crate::rng::Pcg64;
+}

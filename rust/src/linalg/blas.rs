@@ -1,0 +1,234 @@
+//! BLAS-like kernels: dot/axpy/norm (level 1), gemv (level 2), blocked
+//! gemm/syrk (level 3). Plain safe Rust, written so the autovectorizer can
+//! do its job (contiguous column access, 4-way unrolled dot).
+
+use super::Matrix;
+
+/// `xᵀy`; 8-way unrolled over slice chunks so the autovectorizer emits
+/// wide FMA sequences without bounds checks (perf iteration 3, see
+/// EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; 8];
+    let xc = x.chunks_exact(8);
+    let yc = y.chunks_exact(8);
+    let rx = xc.remainder();
+    let ry = yc.remainder();
+    for (a, b) in xc.zip(yc) {
+        for l in 0..8 {
+            acc[l] += a[l] * b[l];
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (a, b) in rx.iter().zip(ry) {
+        s += a * b;
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scal(alpha: f64, x: &mut [f64]) {
+    for xi in x {
+        *xi *= alpha;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// `y = A x` for column-major `A` (`rows × cols`), accumulating per column
+/// (axpy formulation keeps memory access contiguous).
+pub fn gemv(a: &Matrix, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), a.cols());
+    assert_eq!(y.len(), a.rows());
+    y.fill(0.0);
+    for j in 0..a.cols() {
+        let xj = x[j];
+        if xj != 0.0 {
+            axpy(xj, a.col(j), y);
+        }
+    }
+}
+
+/// `y = Aᵀ x` (each output element is a contiguous column dot).
+pub fn gemv_t(a: &Matrix, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), a.rows());
+    assert_eq!(y.len(), a.cols());
+    for j in 0..a.cols() {
+        y[j] = dot(a.col(j), x);
+    }
+}
+
+/// `C = A · B`, blocked over K for cache reuse. Column-major everywhere:
+/// for each column of B we accumulate a linear combination of A's columns.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "gemm inner dim");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    // process B in column panels; accumulate axpy over A's columns
+    const KB: usize = 64;
+    for j in 0..n {
+        let bcol = b.col(j);
+        let ccol = c.col_mut(j);
+        let mut p = 0;
+        while p < k {
+            let pe = (p + KB).min(k);
+            for l in p..pe {
+                let w = bcol[l];
+                if w != 0.0 {
+                    axpy(w, a.col(l), ccol);
+                }
+            }
+            p = pe;
+        }
+    }
+    c
+}
+
+/// `C = Aᵀ · B` (`a: m×p`, `b: m×q` → `p×q`); every entry is a contiguous
+/// column-column dot, which is the fastest pattern for tall-skinny factors.
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "gemm_tn inner dim");
+    let (p, q) = (a.cols(), b.cols());
+    let mut c = Matrix::zeros(p, q);
+    for j in 0..q {
+        let bj = b.col(j);
+        let cj = c.col_mut(j);
+        for i in 0..p {
+            cj[i] = dot(a.col(i), bj);
+        }
+    }
+    c
+}
+
+/// Symmetric rank-k: `C = Aᵀ A` (`a: m×n` → `n×n`), computing only the upper
+/// triangle and mirroring.
+pub fn syrk(a: &Matrix) -> Matrix {
+    let n = a.cols();
+    let mut c = Matrix::zeros(n, n);
+    for j in 0..n {
+        let aj = a.col(j);
+        for i in 0..=j {
+            let v = dot(a.col(i), aj);
+            c.set(i, j, v);
+            c.set(j, i, v);
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f64> = (0..13).map(|i| i as f64).collect();
+        let y: Vec<f64> = (0..13).map(|i| (i * 2) as f64).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-12);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn axpy_scal_nrm2() {
+        let mut y = vec![1.0, 2.0];
+        axpy(3.0, &[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![4.0, 5.0]);
+        scal(2.0, &mut y);
+        assert_eq!(y, vec![8.0, 10.0]);
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gemv_both_orientations() {
+        let a = Matrix::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let mut y = vec![0.0; 2];
+        gemv(&a, &[1.0, 0.0, -1.0], &mut y);
+        assert_eq!(y, vec![-2.0, -2.0]);
+        let mut z = vec![0.0; 3];
+        gemv_t(&a, &[1.0, 1.0], &mut z);
+        assert_eq!(z, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn gemm_small_known() {
+        let a = Matrix::from_rows(2, 2, &[1., 2., 3., 4.]);
+        let b = Matrix::from_rows(2, 2, &[5., 6., 7., 8.]);
+        let c = gemm(&a, &b);
+        assert_eq!(c, Matrix::from_rows(2, 2, &[19., 22., 43., 50.]));
+    }
+
+    #[test]
+    fn gemm_identity() {
+        let a = Matrix::from_rows(3, 2, &[1., 2., 3., 4., 5., 6.]);
+        let c = gemm(&Matrix::identity(3), &a);
+        assert!(c.max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn gemm_tn_matches_explicit_transpose() {
+        let mut rng = crate::rng::Pcg64::seed_from(1);
+        let a = random(&mut rng, 7, 4);
+        let b = random(&mut rng, 7, 5);
+        let c1 = gemm_tn(&a, &b);
+        let c2 = gemm(&a.transpose(), &b);
+        assert!(c1.max_abs_diff(&c2) < 1e-12);
+    }
+
+    #[test]
+    fn syrk_matches_gemm() {
+        let mut rng = crate::rng::Pcg64::seed_from(2);
+        let a = random(&mut rng, 6, 4);
+        let c1 = syrk(&a);
+        let c2 = gemm(&a.transpose(), &a);
+        assert!(c1.max_abs_diff(&c2) < 1e-12);
+        assert!(c1.is_symmetric(1e-14));
+    }
+
+    #[test]
+    fn gemm_blocked_matches_naive_larger() {
+        let mut rng = crate::rng::Pcg64::seed_from(3);
+        // k > KB exercises the blocking loop
+        let a = random(&mut rng, 9, 130);
+        let b = random(&mut rng, 130, 8);
+        let c = gemm(&a, &b);
+        // naive reference
+        let mut r = Matrix::zeros(9, 8);
+        for i in 0..9 {
+            for j in 0..8 {
+                let mut s = 0.0;
+                for l in 0..130 {
+                    s += a.get(i, l) * b.get(l, j);
+                }
+                r.set(i, j, s);
+            }
+        }
+        assert!(c.max_abs_diff(&r) < 1e-10);
+    }
+
+    fn random(rng: &mut crate::rng::Pcg64, r: usize, c: usize) -> Matrix {
+        let mut m = Matrix::zeros(r, c);
+        for j in 0..c {
+            for i in 0..r {
+                m.set(i, j, rng.next_gaussian());
+            }
+        }
+        m
+    }
+}

@@ -1,0 +1,238 @@
+//! Cholesky factorization of SPD matrices with rank-1 updates.
+//!
+//! The A-optimality objective maintains the posterior precision
+//! `Λ + σ⁻² X_S X_Sᵀ` whose Cholesky factor is updated in O(d²) per added
+//! experiment via [`chol_rank1_update`] instead of refactorizing in O(d³).
+
+use super::{Matrix, solve::{solve_lower, solve_lower_t}};
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+#[derive(Debug, Clone)]
+pub struct CholeskyFactor {
+    /// lower triangular, stored as a full column-major matrix (upper = 0)
+    pub l: Matrix,
+}
+
+/// Factor an SPD matrix; returns `None` if a non-positive pivot appears
+/// (matrix not positive definite to working precision).
+pub fn cholesky(a: &Matrix) -> Option<CholeskyFactor> {
+    let mut l = a.clone();
+    if cholesky_in_place(&mut l) {
+        Some(CholeskyFactor { l })
+    } else {
+        None
+    }
+}
+
+/// In-place lower Cholesky on a full square matrix; zeroes the strict upper
+/// triangle. Returns false on non-SPD input.
+pub fn cholesky_in_place(a: &mut Matrix) -> bool {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky of non-square");
+    for j in 0..n {
+        // diagonal
+        let mut d = a.get(j, j);
+        for k in 0..j {
+            let ljk = a.get(j, k);
+            d -= ljk * ljk;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return false;
+        }
+        let djj = d.sqrt();
+        a.set(j, j, djj);
+        // column below diagonal
+        for i in (j + 1)..n {
+            let mut s = a.get(i, j);
+            for k in 0..j {
+                s -= a.get(i, k) * a.get(j, k);
+            }
+            a.set(i, j, s / djj);
+        }
+        // zero upper
+        for i in 0..j {
+            a.set(i, j, 0.0);
+        }
+    }
+    true
+}
+
+impl CholeskyFactor {
+    pub fn dim(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// Solve `A x = b` via the factor (forward + back substitution).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let y = solve_lower(&self.l, b);
+        solve_lower_t(&self.l, &y)
+    }
+
+    /// `log det A = 2 Σ log L_ii`.
+    pub fn log_det(&self) -> f64 {
+        (0..self.dim()).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+
+    /// Reconstruct `A = L Lᵀ` (tests / diagnostics).
+    pub fn reconstruct(&self) -> Matrix {
+        let n = self.dim();
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..=i.min(j) {
+                    s += self.l.get(i, k) * self.l.get(j, k);
+                }
+                a.set(i, j, s);
+            }
+        }
+        a
+    }
+
+    /// Trace of `A⁻¹` computed column-by-column: `tr(A⁻¹) = Σ_i ‖L⁻¹ e_i‖²`.
+    /// O(d³) — used for exact A-optimality evaluation (the incremental path
+    /// in `objectives::aopt` avoids this per query).
+    pub fn inv_trace(&self) -> f64 {
+        let n = self.dim();
+        let mut tr = 0.0;
+        let mut e = vec![0.0; n];
+        for i in 0..n {
+            e.fill(0.0);
+            e[i] = 1.0;
+            let y = solve_lower(&self.l, &e);
+            tr += y.iter().map(|v| v * v).sum::<f64>();
+        }
+        tr
+    }
+}
+
+/// Rank-1 update: given `L` with `A = L Lᵀ`, transform `L` in place so
+/// `L Lᵀ = A + x xᵀ`. Classic Givens-based O(d²) algorithm; consumes `x`
+/// as scratch.
+pub fn chol_rank1_update(l: &mut Matrix, x: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(x.len(), n);
+    for k in 0..n {
+        let lkk = l.get(k, k);
+        let xk = x[k];
+        let r = (lkk * lkk + xk * xk).sqrt();
+        let c = r / lkk;
+        let s = xk / lkk;
+        l.set(k, k, r);
+        for i in (k + 1)..n {
+            let lik = l.get(i, k);
+            let v = (lik + s * x[i]) / c;
+            x[i] = c * x[i] - s * v;
+            l.set(i, k, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_spd(rng: &mut Pcg64, n: usize) -> Matrix {
+        let mut b = Matrix::zeros(n, n);
+        for j in 0..n {
+            for i in 0..n {
+                b.set(i, j, rng.next_gaussian());
+            }
+        }
+        let mut a = super::super::blas::syrk(&b);
+        for i in 0..n {
+            a.add_at(i, i, n as f64); // well conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Pcg64::seed_from(1);
+        for n in [1, 2, 5, 12] {
+            let a = random_spd(&mut rng, n);
+            let f = cholesky(&a).expect("spd");
+            assert!(f.reconstruct().max_abs_diff(&a) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        let a = Matrix::from_rows(2, 2, &[4.0, 2.0, 2.0, 5.0]);
+        let f = cholesky(&a).unwrap();
+        assert!((f.l.get(0, 0) - 2.0).abs() < 1e-14);
+        assert!((f.l.get(1, 0) - 1.0).abs() < 1e-14);
+        assert!((f.l.get(1, 1) - 2.0).abs() < 1e-14);
+        assert_eq!(f.l.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let a = Matrix::from_rows(2, 2, &[1.0, 2.0, 2.0, 1.0]); // eig -1
+        assert!(cholesky(&a).is_none());
+        let zero = Matrix::zeros(2, 2);
+        assert!(cholesky(&zero).is_none());
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut rng = Pcg64::seed_from(3);
+        let a = random_spd(&mut rng, 8);
+        let f = cholesky(&a).unwrap();
+        let x_true: Vec<f64> = (0..8).map(|i| i as f64 - 3.0).collect();
+        let mut b = vec![0.0; 8];
+        super::super::blas::gemv(&a, &x_true, &mut b);
+        let x = f.solve(&b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn log_det_and_inv_trace() {
+        // diag(2, 8): logdet = ln 16, tr(inv) = 0.5 + 0.125
+        let a = Matrix::from_rows(2, 2, &[2.0, 0.0, 0.0, 8.0]);
+        let f = cholesky(&a).unwrap();
+        assert!((f.log_det() - 16f64.ln()).abs() < 1e-12);
+        assert!((f.inv_trace() - 0.625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank1_update_matches_refactor() {
+        let mut rng = Pcg64::seed_from(5);
+        let a = random_spd(&mut rng, 10);
+        let mut f = cholesky(&a).unwrap();
+        let x: Vec<f64> = (0..10).map(|_| rng.next_gaussian()).collect();
+        // updated A
+        let mut a2 = a.clone();
+        for i in 0..10 {
+            for j in 0..10 {
+                a2.add_at(i, j, x[i] * x[j]);
+            }
+        }
+        let mut xs = x.clone();
+        chol_rank1_update(&mut f.l, &mut xs);
+        let f2 = cholesky(&a2).unwrap();
+        assert!(f.l.max_abs_diff(&f2.l) < 1e-8);
+    }
+
+    #[test]
+    fn repeated_rank1_updates_stay_accurate() {
+        let mut rng = Pcg64::seed_from(7);
+        let n = 6;
+        let mut a = Matrix::identity(n);
+        let mut f = cholesky(&a).unwrap();
+        for _ in 0..25 {
+            let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian() * 0.7).collect();
+            for i in 0..n {
+                for j in 0..n {
+                    a.add_at(i, j, x[i] * x[j]);
+                }
+            }
+            let mut xs = x.clone();
+            chol_rank1_update(&mut f.l, &mut xs);
+        }
+        assert!(f.reconstruct().max_abs_diff(&a) < 1e-7);
+    }
+}

@@ -1,0 +1,164 @@
+//! Symmetric eigensolver (cyclic Jacobi) and extreme-eigenvalue helpers.
+//!
+//! Used to estimate the paper's spectral quantities: λmin/λmax of k-sparse
+//! feature covariance matrices (Cor. 7), ‖X‖² for the A-optimality γ
+//! (Cor. 9), and the differential-submodularity ratio α = γ² reported in
+//! experiment metadata.
+
+use super::Matrix;
+
+/// Eigendecomposition of a symmetric matrix via cyclic Jacobi rotations.
+/// Returns `(eigenvalues_ascending, eigenvectors)` with eigenvector `i`
+/// in column `i`.
+pub fn jacobi_eigh(a: &Matrix) -> (Vec<f64>, Matrix) {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigh of non-square");
+    let mut m = a.clone();
+    let mut v = Matrix::identity(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + m.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p,q of m
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    let mut eig: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
+    eig.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let vals: Vec<f64> = eig.iter().map(|e| e.0).collect();
+    let mut vecs = Matrix::zeros(n, n);
+    for (new_j, (_, old_j)) in eig.iter().enumerate() {
+        vecs.col_mut(new_j).copy_from_slice(v.col(*old_j));
+    }
+    (vals, vecs)
+}
+
+/// (λmin, λmax) of a symmetric matrix. Uses Jacobi for small `n`; power /
+/// inverse-free Rayleigh bounds would be overkill here — covariance blocks
+/// in the experiments stay ≤ a few hundred.
+pub fn sym_extreme_eigs(a: &Matrix) -> (f64, f64) {
+    let (vals, _) = jacobi_eigh(a);
+    (*vals.first().unwrap(), *vals.last().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{gemm, gemm_tn};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::from_rows(3, 3, &[3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let (vals, _) = jacobi_eigh(&a);
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 2.0).abs() < 1e-12);
+        assert!((vals[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigs 1, 3
+        let a = Matrix::from_rows(2, 2, &[2.0, 1.0, 1.0, 2.0]);
+        let (vals, vecs) = jacobi_eigh(&a);
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+        // eigenvector check: A v = λ v
+        for j in 0..2 {
+            let v: Vec<f64> = vecs.col(j).to_vec();
+            let mut av = vec![0.0; 2];
+            crate::linalg::blas::gemv(&a, &v, &mut av);
+            for i in 0..2 {
+                assert!((av[i] - vals[j] * v[i]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn reconstruction_random_spd() {
+        let mut rng = Pcg64::seed_from(1);
+        let n = 12;
+        let mut b = Matrix::zeros(n, n);
+        for j in 0..n {
+            for i in 0..n {
+                b.set(i, j, rng.next_gaussian());
+            }
+        }
+        let a = crate::linalg::blas::syrk(&b);
+        let (vals, vecs) = jacobi_eigh(&a);
+        // A = V diag(vals) V^T
+        let mut vd = vecs.clone();
+        for j in 0..n {
+            crate::linalg::blas::scal(vals[j], vd.col_mut(j));
+        }
+        let recon = gemm(&vd, &vecs.transpose());
+        assert!(recon.max_abs_diff(&a) < 1e-8);
+        // eigenvalues of A = BᵀB are ≥ 0
+        assert!(vals[0] > -1e-10);
+        // orthonormal eigenvectors
+        let vtv = gemm_tn(&vecs, &vecs);
+        assert!(vtv.max_abs_diff(&Matrix::identity(n)) < 1e-10);
+    }
+
+    #[test]
+    fn extreme_eigs() {
+        let a = Matrix::from_rows(2, 2, &[2.0, 1.0, 1.0, 2.0]);
+        let (lo, hi) = sym_extreme_eigs(&a);
+        assert!((lo - 1.0).abs() < 1e-12);
+        assert!((hi - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Pcg64::seed_from(2);
+        let n = 8;
+        let mut b = Matrix::zeros(n, n);
+        for j in 0..n {
+            for i in 0..n {
+                b.set(i, j, rng.next_gaussian());
+            }
+        }
+        let a = crate::linalg::blas::syrk(&b);
+        let (vals, _) = jacobi_eigh(&a);
+        assert!((vals.iter().sum::<f64>() - a.trace()).abs() < 1e-8);
+    }
+}

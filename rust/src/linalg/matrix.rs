@@ -1,0 +1,286 @@
+//! Column-major dense matrix.
+
+use std::fmt;
+
+/// Dense `rows × cols` matrix of f64, column-major: element `(i, j)` lives
+/// at `data[j * rows + i]`; column `j` is the contiguous slice
+/// `data[j*rows .. (j+1)*rows]`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// Build from a column-major data vec.
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from row-major data (e.g. literals in tests).
+    pub fn from_rows(rows: usize, cols: usize, row_major: &[f64]) -> Self {
+        assert_eq!(row_major.len(), rows * cols, "data length mismatch");
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.set(i, j, row_major[i * cols + j]);
+            }
+        }
+        m
+    }
+
+    /// Build from a list of columns (each of length `rows`).
+    pub fn from_cols(rows: usize, cols: &[&[f64]]) -> Self {
+        let mut m = Self::zeros(rows, cols.len());
+        for (j, c) in cols.iter().enumerate() {
+            assert_eq!(c.len(), rows);
+            m.col_mut(j).copy_from_slice(c);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i] += v;
+    }
+
+    /// Contiguous column slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.cols);
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.cols);
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Copy of row `i` (non-contiguous).
+    pub fn row(&self, i: usize) -> Vec<f64> {
+        (0..self.cols).map(|j| self.get(i, j)).collect()
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for j in 0..self.cols {
+            let c = self.col(j);
+            for i in 0..self.rows {
+                t.set(j, i, c[i]);
+            }
+        }
+        t
+    }
+
+    /// Submatrix of the given columns (in the given order).
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, idx.len());
+        for (jj, &j) in idx.iter().enumerate() {
+            m.col_mut(jj).copy_from_slice(self.col(j));
+        }
+        m
+    }
+
+    /// Submatrix of the given rows (in the given order).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(idx.len(), self.cols);
+        for j in 0..self.cols {
+            let c = self.col(j);
+            for (ii, &i) in idx.iter().enumerate() {
+                m.set(ii, j, c[i]);
+            }
+        }
+        m
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Trace (square matrices).
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols, "trace of non-square");
+        (0..self.rows).map(|i| self.get(i, i)).sum()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// `self += alpha * other`.
+    pub fn axpy_mat(&mut self, alpha: f64, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale all entries.
+    pub fn scale(&mut self, alpha: f64) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// Check symmetry to tolerance.
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                if (self.get(i, j) - self.get(j, i)).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(8);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self.get(i, j))?;
+            }
+            if show_c < self.cols {
+                write!(f, "…")?;
+            }
+            writeln!(f)?;
+        }
+        if show_r < self.rows {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Matrix::from_rows(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 2), 6.0);
+        assert_eq!(m.col(1), &[2.0, 5.0]);
+        assert_eq!(m.row(0), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn col_major_layout() {
+        let m = Matrix::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.data(), &[1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = Matrix::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.get(2, 1), 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn select_cols_rows() {
+        let m = Matrix::from_rows(3, 3, &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let c = m.select_cols(&[2, 0]);
+        assert_eq!(c.col(0), &[3.0, 6.0, 9.0]);
+        assert_eq!(c.col(1), &[1.0, 4.0, 7.0]);
+        let r = m.select_rows(&[1]);
+        assert_eq!(r.row(0), vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn identity_trace_fro() {
+        let i3 = Matrix::identity(3);
+        assert_eq!(i3.trace(), 3.0);
+        assert!((i3.fro_norm() - 3f64.sqrt()).abs() < 1e-15);
+        assert!(i3.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn axpy_scale_diff() {
+        let mut a = Matrix::identity(2);
+        let b = Matrix::identity(2);
+        a.axpy_mat(2.0, &b);
+        assert_eq!(a.get(0, 0), 3.0);
+        a.scale(0.5);
+        assert_eq!(a.get(1, 1), 1.5);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn from_cols_builder() {
+        let m = Matrix::from_cols(2, &[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m.get(0, 1), 3.0);
+        assert_eq!(m.cols(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_data_length_panics() {
+        let _ = Matrix::from_col_major(2, 2, vec![1.0; 3]);
+    }
+}

@@ -1,0 +1,22 @@
+//! Dense linear algebra substrate (no external BLAS/LAPACK available):
+//! column-major [`Matrix`], blocked GEMM/GEMV, Cholesky with rank-1
+//! updates, Householder QR with incremental column appends, triangular
+//! solves, and a Jacobi symmetric eigensolver.
+//!
+//! Feature matrices are stored **column-major** (`d × n`, one contiguous
+//! slice per feature column) because every objective in the paper sweeps
+//! candidate *columns*.
+
+mod matrix;
+mod blas;
+mod cholesky;
+mod qr;
+mod solve;
+mod eigen;
+
+pub use matrix::Matrix;
+pub use blas::{dot, axpy, scal, nrm2, gemv, gemv_t, gemm, gemm_tn, syrk};
+pub use cholesky::{cholesky, cholesky_in_place, chol_rank1_update, CholeskyFactor};
+pub use qr::{qr_thin, IncrementalQr};
+pub use solve::{solve_lower, solve_upper, solve_lower_t, solve_spd, solve_lstsq};
+pub use eigen::{jacobi_eigh, sym_extreme_eigs};

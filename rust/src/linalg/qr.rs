@@ -1,0 +1,253 @@
+//! QR factorizations.
+//!
+//! [`IncrementalQr`] is the workhorse state of the regression objective: it
+//! maintains an orthonormal basis `Q` of the selected feature columns with
+//! O(d·|S|) per appended column (modified Gram–Schmidt with one
+//! reorthogonalization pass — numerically safe for the condition numbers the
+//! datasets here produce). [`qr_thin`] is a one-shot Householder-free thin QR
+//! built on the same primitive.
+
+use super::blas::{axpy, dot, nrm2};
+use super::Matrix;
+
+/// Incrementally grown thin QR of a column set.
+#[derive(Debug, Clone)]
+pub struct IncrementalQr {
+    d: usize,
+    /// orthonormal columns, d × s, grown by `push_col`
+    q: Vec<Vec<f64>>,
+    /// threshold below which a column counts as linearly dependent
+    dep_tol: f64,
+}
+
+impl IncrementalQr {
+    pub fn new(d: usize) -> Self {
+        IncrementalQr { d, q: Vec::new(), dep_tol: 1e-10 }
+    }
+
+    /// Number of basis vectors (rank of the pushed set).
+    pub fn rank(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn basis(&self) -> &[Vec<f64>] {
+        &self.q
+    }
+
+    /// Orthogonalize `x` against the current basis (in place, two MGS
+    /// passes); returns the residual norm.
+    pub fn orthogonalize(&self, x: &mut [f64]) -> f64 {
+        assert_eq!(x.len(), self.d);
+        for _pass in 0..2 {
+            for q in &self.q {
+                let c = dot(q, x);
+                axpy(-c, q, x);
+            }
+        }
+        nrm2(x)
+    }
+
+    /// Append a column to the factorization. Returns `true` if it added a
+    /// new basis direction, `false` if (numerically) dependent.
+    pub fn push_col(&mut self, x: &[f64]) -> bool {
+        let scale = nrm2(x).max(1e-300);
+        let mut v = x.to_vec();
+        let r = self.orthogonalize(&mut v);
+        if r <= self.dep_tol * scale {
+            return false;
+        }
+        let inv = 1.0 / r;
+        for vi in &mut v {
+            *vi *= inv;
+        }
+        self.q.push(v);
+        true
+    }
+
+    /// `‖Qᵀ y‖²` — the squared norm of the projection of `y` onto the span.
+    /// For the regression objective this *is* `f(S)` (variance reduction).
+    pub fn proj_sq_norm(&self, y: &[f64]) -> f64 {
+        self.q.iter().map(|q| { let c = dot(q, y); c * c }).sum()
+    }
+
+    /// Residual `y − Q Qᵀ y`.
+    pub fn residual(&self, y: &[f64]) -> Vec<f64> {
+        let mut r = y.to_vec();
+        for q in &self.q {
+            let c = dot(q, &r);
+            axpy(-c, q, &mut r);
+        }
+        r
+    }
+
+    /// Squared residual component of `x` outside the span:
+    /// `‖x‖² − ‖Qᵀx‖²`, clamped at 0.
+    pub fn residual_sq(&self, x: &[f64]) -> f64 {
+        let total = dot(x, x);
+        (total - self.proj_sq_norm(x)).max(0.0)
+    }
+}
+
+/// One-shot thin QR: returns `(q, r)` with `a = q · r`, `q: d×rank`
+/// orthonormal, `r: rank×n` upper trapezoidal. Rank-revealing in the weak
+/// sense that dependent columns contribute no q-column (their r column is
+/// still filled with projection coefficients).
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let d = a.rows();
+    let n = a.cols();
+    let mut inc = IncrementalQr::new(d);
+    let mut coeffs: Vec<Vec<f64>> = Vec::with_capacity(n); // per column, len rank_at_time+1
+    for j in 0..n {
+        let x = a.col(j);
+        // compute projection coefficients against current basis
+        let mut v = x.to_vec();
+        let mut cs = Vec::with_capacity(inc.rank() + 1);
+        for q in inc.basis() {
+            let c = dot(q, &v);
+            axpy(-c, q, &mut v);
+            cs.push(c);
+        }
+        // second pass for stability, folding corrections into cs
+        for (qi, q) in inc.basis().iter().enumerate() {
+            let c = dot(q, &v);
+            axpy(-c, q, &mut v);
+            cs[qi] += c;
+        }
+        let r = nrm2(&v);
+        let scale = nrm2(x).max(1e-300);
+        if r > 1e-10 * scale {
+            let inv = 1.0 / r;
+            let q_new: Vec<f64> = v.iter().map(|vi| vi * inv).collect();
+            inc.q.push(q_new);
+            cs.push(r);
+        }
+        coeffs.push(cs);
+    }
+    let rank = inc.rank();
+    let mut q = Matrix::zeros(d, rank);
+    for (j, qc) in inc.q.iter().enumerate() {
+        q.col_mut(j).copy_from_slice(qc);
+    }
+    let mut r = Matrix::zeros(rank, n);
+    for (j, cs) in coeffs.iter().enumerate() {
+        for (i, c) in cs.iter().enumerate() {
+            if i < rank {
+                r.set(i, j, *c);
+            }
+        }
+    }
+    (q, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::gemm;
+    use crate::rng::Pcg64;
+
+    fn random(rng: &mut Pcg64, r: usize, c: usize) -> Matrix {
+        let mut m = Matrix::zeros(r, c);
+        for j in 0..c {
+            for i in 0..r {
+                m.set(i, j, rng.next_gaussian());
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg64::seed_from(1);
+        let a = random(&mut rng, 10, 6);
+        let (q, r) = qr_thin(&a);
+        assert_eq!(q.cols(), 6);
+        let qr = gemm(&q, &r);
+        assert!(qr.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Pcg64::seed_from(2);
+        let a = random(&mut rng, 15, 7);
+        let (q, _) = qr_thin(&a);
+        let qtq = crate::linalg::blas::gemm_tn(&q, &q);
+        assert!(qtq.max_abs_diff(&Matrix::identity(7)) < 1e-12);
+    }
+
+    #[test]
+    fn rank_deficient_detected() {
+        let mut rng = Pcg64::seed_from(3);
+        let mut a = random(&mut rng, 8, 3);
+        // add a duplicate column
+        let dup: Vec<f64> = a.col(0).to_vec();
+        let mut cols: Vec<&[f64]> = (0..3).map(|j| a.col(j)).collect();
+        cols.push(&dup);
+        let a2 = Matrix::from_cols(8, &cols);
+        let (q, r) = qr_thin(&a2);
+        assert_eq!(q.cols(), 3); // rank 3
+        let qr = gemm(&q, &r);
+        assert!(qr.max_abs_diff(&a2) < 1e-10);
+        let _ = &mut a;
+    }
+
+    #[test]
+    fn incremental_matches_batch() {
+        let mut rng = Pcg64::seed_from(4);
+        let a = random(&mut rng, 12, 5);
+        let mut inc = IncrementalQr::new(12);
+        for j in 0..5 {
+            assert!(inc.push_col(a.col(j)));
+        }
+        assert_eq!(inc.rank(), 5);
+        // projection of a random vector must equal batch-Q projection
+        let y: Vec<f64> = (0..12).map(|_| rng.next_gaussian()).collect();
+        let (q, _) = qr_thin(&a);
+        let mut qty = vec![0.0; q.cols()];
+        crate::linalg::blas::gemv_t(&q, &y, &mut qty);
+        let batch: f64 = qty.iter().map(|c| c * c).sum();
+        assert!((inc.proj_sq_norm(&y) - batch).abs() < 1e-10);
+    }
+
+    #[test]
+    fn dependent_push_rejected() {
+        let mut inc = IncrementalQr::new(3);
+        assert!(inc.push_col(&[1.0, 0.0, 0.0]));
+        assert!(!inc.push_col(&[2.0, 0.0, 0.0]));
+        assert_eq!(inc.rank(), 1);
+        assert!(inc.push_col(&[1.0, 1.0, 0.0]));
+        assert_eq!(inc.rank(), 2);
+    }
+
+    #[test]
+    fn residual_orthogonal_to_span() {
+        let mut rng = Pcg64::seed_from(5);
+        let a = random(&mut rng, 10, 4);
+        let mut inc = IncrementalQr::new(10);
+        for j in 0..4 {
+            inc.push_col(a.col(j));
+        }
+        let y: Vec<f64> = (0..10).map(|_| rng.next_gaussian()).collect();
+        let r = inc.residual(&y);
+        for j in 0..4 {
+            assert!(dot(&r, a.col(j)).abs() < 1e-10);
+        }
+        // pythagoras: ||y||² = ||proj||² + ||res||²
+        let total = dot(&y, &y);
+        let split = inc.proj_sq_norm(&y) + dot(&r, &r);
+        assert!((total - split).abs() < 1e-10);
+    }
+
+    #[test]
+    fn residual_sq_clamps() {
+        let mut inc = IncrementalQr::new(2);
+        inc.push_col(&[1.0, 0.0]);
+        inc.push_col(&[0.0, 1.0]);
+        // any vector is fully in span; residual_sq must be ~0, never negative
+        let v = inc.residual_sq(&[0.3, -0.7]);
+        assert!(v >= 0.0 && v < 1e-12);
+    }
+}

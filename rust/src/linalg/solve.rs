@@ -1,0 +1,158 @@
+//! Triangular, SPD and least-squares solves.
+
+use super::{cholesky, Matrix};
+
+/// Solve `L y = b` with `L` lower triangular (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = b.to_vec();
+    for j in 0..n {
+        y[j] /= l.get(j, j);
+        let yj = y[j];
+        let col = l.col(j);
+        for i in (j + 1)..n {
+            y[i] -= col[i] * yj;
+        }
+    }
+    y
+}
+
+/// Solve `Lᵀ x = b` with `L` lower triangular (back substitution on the
+/// transpose, reading L's columns contiguously).
+pub fn solve_lower_t(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for j in (0..n).rev() {
+        let col = l.col(j);
+        let mut s = x[j];
+        for i in (j + 1)..n {
+            s -= col[i] * x[i];
+        }
+        x[j] = s / col[j];
+    }
+    x
+}
+
+/// Solve `U x = b` with `U` upper triangular.
+pub fn solve_upper(u: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = u.rows();
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for j in (i + 1)..n {
+            s -= u.get(i, j) * x[j];
+        }
+        x[i] = s / u.get(i, i);
+    }
+    x
+}
+
+/// Solve SPD system `A x = b` via Cholesky. Returns `None` if not SPD.
+pub fn solve_spd(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
+    cholesky(a).map(|f| f.solve(b))
+}
+
+/// Least squares `min_w ‖y − A w‖₂` via normal equations with a tiny ridge
+/// fallback for rank deficiency. `a: d × n` (d ≥ n typical).
+pub fn solve_lstsq(a: &Matrix, y: &[f64]) -> Vec<f64> {
+    assert_eq!(y.len(), a.rows());
+    let n = a.cols();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut g = super::blas::syrk(a); // AᵀA
+    let mut rhs = vec![0.0; n];
+    super::blas::gemv_t(a, y, &mut rhs); // Aᵀy
+    // try plain, then escalating ridge
+    let mut ridge = 0.0;
+    for _ in 0..6 {
+        let mut g2 = g.clone();
+        if ridge > 0.0 {
+            for i in 0..n {
+                g2.add_at(i, i, ridge);
+            }
+        }
+        if let Some(w) = solve_spd(&g2, &rhs) {
+            if w.iter().all(|v| v.is_finite()) {
+                return w;
+            }
+        }
+        ridge = if ridge == 0.0 { 1e-10 * (g.trace() / n as f64).max(1.0) } else { ridge * 100.0 };
+        // keep g unchanged; ridge added on the copy
+        let _ = &mut g;
+    }
+    vec![0.0; n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::gemv;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn lower_solves() {
+        let l = Matrix::from_rows(2, 2, &[2.0, 0.0, 1.0, 3.0]);
+        let y = solve_lower(&l, &[4.0, 11.0]);
+        assert_eq!(y, vec![2.0, 3.0]); // 2*2=4; 1*2+3*3=11
+        let x = solve_lower_t(&l, &[7.0, 6.0]); // L^T = [[2,1],[0,3]]
+        assert_eq!(x, vec![2.5, 2.0]);
+    }
+
+    #[test]
+    fn upper_solve() {
+        let u = Matrix::from_rows(2, 2, &[2.0, 1.0, 0.0, 4.0]);
+        let x = solve_upper(&u, &[5.0, 8.0]);
+        assert_eq!(x, vec![1.5, 2.0]);
+    }
+
+    #[test]
+    fn spd_solve_round_trip() {
+        let a = Matrix::from_rows(2, 2, &[4.0, 1.0, 1.0, 3.0]);
+        let x = solve_spd(&a, &[1.0, 2.0]).unwrap();
+        let mut b = vec![0.0; 2];
+        gemv(&a, &x, &mut b);
+        assert!((b[0] - 1.0).abs() < 1e-12 && (b[1] - 2.0).abs() < 1e-12);
+        assert!(solve_spd(&Matrix::zeros(2, 2), &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn lstsq_recovers_exact_solution() {
+        let mut rng = Pcg64::seed_from(1);
+        let d = 30;
+        let n = 5;
+        let mut a = Matrix::zeros(d, n);
+        for j in 0..n {
+            for i in 0..d {
+                a.set(i, j, rng.next_gaussian());
+            }
+        }
+        let w_true = [1.0, -2.0, 0.5, 3.0, -0.25];
+        let mut y = vec![0.0; d];
+        gemv(&a, &w_true, &mut y);
+        let w = solve_lstsq(&a, &y);
+        for (wi, ti) in w.iter().zip(&w_true) {
+            assert!((wi - ti).abs() < 1e-8, "{wi} vs {ti}");
+        }
+    }
+
+    #[test]
+    fn lstsq_rank_deficient_does_not_blow_up() {
+        // duplicate column -> singular normal equations; ridge fallback
+        let a = Matrix::from_cols(3, &[&[1.0, 0.0, 0.0], &[1.0, 0.0, 0.0]]);
+        let w = solve_lstsq(&a, &[2.0, 0.0, 0.0]);
+        assert!(w.iter().all(|v| v.is_finite()));
+        // fitted value should reproduce y on the span
+        let fit = w[0] + w[1];
+        assert!((fit - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn lstsq_empty() {
+        let a = Matrix::zeros(3, 0);
+        assert!(solve_lstsq(&a, &[1.0, 2.0, 3.0]).is_empty());
+    }
+}

@@ -1,0 +1,268 @@
+//! `dash` — the leader CLI.
+//!
+//! ```text
+//! dash run        --algo dash --dataset d1 --k 25 [--backend xla] [--seed N]
+//! dash experiment fig1|fig2|fig3|fig4|appendix-a|topk-bound [--scale quick|paper]
+//! dash artifacts                     # show the AOT artifact inventory
+//! dash spectra    --dataset d1 --k 25   # γ / α estimates for a workload
+//! ```
+
+use dash_select::algorithms::{
+    AdaptiveSamplingConfig, AdaptiveSequencingConfig, DashConfig, GreedyConfig, LassoConfig,
+};
+use dash_select::cli::Args;
+use dash_select::coordinator::{AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob};
+use dash_select::experiments::{self, fig1, figs, appendix, DatasetId, Scale};
+use dash_select::objectives::spectra;
+use dash_select::rng::Pcg64;
+use dash_select::runtime::{default_artifacts_dir, Manifest};
+use dash_select::util::logging::{set_level, Level};
+use std::sync::Arc;
+
+const USAGE: &str = "\
+dash — Fast Parallel Algorithms for Statistical Subset Selection (DASH)
+
+USAGE:
+  dash run --algo <A> --dataset <D> --k <K> [options]
+      A: dash | greedy | lazy-greedy | parallel-greedy | topk | random |
+         lasso | adaptive-sampling | adaptive-seq
+      D: d1 | d1-design | d2 | d2-design | d3 | d4
+      options: --backend native|xla  --seed N  --scale quick|paper
+               --alpha F --epsilon F --r N --samples N  --json
+
+  dash experiment <E> [--scale quick|paper] [--panel rounds|accuracy|time|all]
+      E: fig1 | fig2 | fig3 | fig4 | appendix-a | topk-bound
+
+  dash artifacts          show the AOT artifact inventory
+  dash spectra --dataset <D> --k <K>   sampled γ / α = γ² estimates
+
+  global: --log error|warn|info|debug
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(lvl) = args.get("log").and_then(Level::parse) {
+        set_level(lvl);
+    } else {
+        set_level(Level::Info);
+    }
+    let code = match args.subcommand() {
+        Some("run") => cmd_run(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("artifacts") => cmd_artifacts(),
+        Some("spectra") => cmd_spectra(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown subcommand '{other}'\n{USAGE}")),
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dataset_for(args: &Args) -> Result<(DatasetId, Scale), String> {
+    let id = DatasetId::parse(args.get_or("dataset", "d1"))
+        .ok_or_else(|| format!("unknown dataset '{}'", args.get_or("dataset", "d1")))?;
+    let scale = Scale::parse(args.get_or("scale", "quick"))
+        .ok_or_else(|| format!("unknown scale '{}'", args.get_or("scale", "quick")))?;
+    Ok((id, scale))
+}
+
+fn objective_for(id: DatasetId) -> ObjectiveChoice {
+    match id {
+        DatasetId::D1 | DatasetId::D2 => ObjectiveChoice::Lreg,
+        DatasetId::D3 | DatasetId::D4 => ObjectiveChoice::Logistic,
+        DatasetId::D1Design | DatasetId::D2Design => {
+            ObjectiveChoice::Aopt { beta_sq: 1.0, sigma_sq: 1.0 }
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let (id, scale) = dataset_for(args)?;
+    let seed = args.get_u64("seed", 1)?;
+    let k = args.get_usize("k", 25)?;
+    let alpha = args.get_f64("alpha", 0.75)?;
+    let epsilon = args.get_f64("epsilon", 0.1)?;
+    let r = args.get_usize("r", 0)?;
+    let samples = args.get_usize("samples", 5)?;
+    let backend = match args.get_or("backend", "native") {
+        "native" => Backend::Native,
+        "xla" => Backend::Xla,
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+    let dash_cfg = DashConfig { k, r, epsilon, alpha, samples, ..Default::default() };
+    let algorithm = match args.get_or("algo", "dash") {
+        "dash" => AlgorithmChoice::Dash(dash_cfg),
+        "greedy" => AlgorithmChoice::Greedy(GreedyConfig { k, ..Default::default() }),
+        "lazy-greedy" => {
+            AlgorithmChoice::Greedy(GreedyConfig { k, lazy: true, ..Default::default() })
+        }
+        "parallel-greedy" => AlgorithmChoice::ParallelGreedy {
+            cfg: GreedyConfig { k, ..Default::default() },
+            threads: args.get_usize("threads", 4)?,
+        },
+        "topk" => AlgorithmChoice::TopK,
+        "random" => AlgorithmChoice::Random { trials: args.get_usize("trials", 5)? },
+        "lasso" => AlgorithmChoice::Lasso(LassoConfig::default()),
+        "adaptive-sampling" => AlgorithmChoice::AdaptiveSampling(AdaptiveSamplingConfig {
+            k,
+            epsilon,
+            samples,
+            ..Default::default()
+        }),
+        "adaptive-seq" => AlgorithmChoice::AdaptiveSequencing(AdaptiveSequencingConfig {
+            k,
+            epsilon,
+            alpha,
+            ..Default::default()
+        }),
+        other => return Err(format!("unknown algorithm '{other}'")),
+    };
+
+    let ds = Arc::new(id.build(scale, seed));
+    eprintln!("dataset {} ({} samples × {} selectable)", ds.name, ds.d(), ds.n());
+    let leader = Leader::new();
+    let job = SelectionJob { dataset: ds, objective: objective_for(id), backend, algorithm, k, seed };
+    let report = leader.run(&job)?;
+    if args.get_flag("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!(
+            "{}: f(S) = {:.5}  |S| = {}  rounds = {}  queries = {}  wall = {:.3}s  modeled-parallel(64) = {:.4}s",
+            report.algorithm,
+            report.result.value,
+            report.result.set.len(),
+            report.result.rounds,
+            report.result.queries,
+            report.result.wall_s,
+            report.result.modeled_parallel_s(Some(64)),
+        );
+        println!("set: {:?}", report.result.set);
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<(), String> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or("experiment name required (fig1|fig2|fig3|fig4|appendix-a|topk-bound)")?;
+    let scale = Scale::parse(args.get_or("scale", "quick"))
+        .ok_or_else(|| format!("unknown scale '{}'", args.get_or("scale", "quick")))?;
+    let seed = args.get_u64("seed", 1)?;
+    match which {
+        "fig1" => {
+            let out = fig1::run_fig1(&fig1::Fig1Config { seed, ..Default::default() });
+            println!(
+                "fig1: {} scatter points; sampled γ = {:.4}, α = γ² = {:.4}; \
+                 Σ-singles/set-gain ratio observed in [{:.3}, {:.3}]",
+                out.scatter.rows.len(),
+                out.gamma,
+                out.alpha,
+                out.ratio_lo,
+                out.ratio_hi
+            );
+        }
+        "fig2" | "fig3" | "fig4" => {
+            let figure = figs::FigureId::parse(which).unwrap();
+            let panel = figs::Panel::parse(args.get_or("panel", "all"))
+                .ok_or_else(|| format!("unknown panel '{}'", args.get_or("panel", "all")))?;
+            let backend = match args.get_or("backend", "native") {
+                "native" => Backend::Native,
+                "xla" => Backend::Xla,
+                other => return Err(format!("unknown backend '{other}'")),
+            };
+            let cfg = figs::FigureConfig {
+                figure,
+                scale,
+                panel,
+                seed,
+                backend,
+                algo_budget_s: args.get_f64("budget", 120.0)?,
+                save: true,
+            };
+            let outputs = figs::run_figure(&cfg);
+            for (label, table) in &outputs.tables {
+                println!("\n=== {label} ===");
+                println!("{}", table.to_pretty());
+                if label.ends_with("_time") {
+                    if let Some(s) = figs::speedup_summary(table) {
+                        println!("adaptivity speedup (greedy rounds / dash rounds @ max k): {s:.2}×");
+                    }
+                }
+            }
+        }
+        "appendix-a" => {
+            let r = appendix::run_appendix_a2(args.get_usize("k", 2)?, seed);
+            println!(
+                "appendix A.2 (k={}, OPT={}): plain adaptive sampling failed={} (value {:.2}); \
+                 DASH failed={} (value {:.2}, rounds {})",
+                args.get_usize("k", 2)?,
+                r.opt,
+                r.plain_failed,
+                r.plain_value,
+                r.dash_failed,
+                r.dash_value,
+                r.dash_rounds
+            );
+        }
+        "topk-bound" => {
+            let (table, violations) = appendix::run_topk_bound(args.get_usize("trials", 10)?, seed);
+            println!("{}", table.to_pretty());
+            println!("bound violations: {violations}");
+        }
+        other => return Err(format!("unknown experiment '{other}'")),
+    }
+    let _ = experiments::results_dir();
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<(), String> {
+    let dir = default_artifacts_dir();
+    let manifest = Manifest::load(&dir).map_err(|e| format!("{e} (run `make artifacts`)"))?;
+    println!("artifacts in {:?}:", manifest.dir);
+    for a in &manifest.artifacts {
+        println!(
+            "  {:<32} kind={:<8} d={:<5} s={:<4} nc={:<5} {:?}",
+            a.name,
+            a.kind.as_str(),
+            a.d,
+            a.s,
+            a.nc,
+            a.file.file_name().unwrap_or_default()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_spectra(args: &Args) -> Result<(), String> {
+    let (id, scale) = dataset_for(args)?;
+    let k = args.get_usize("k", 25)?;
+    let seed = args.get_u64("seed", 1)?;
+    let ds = id.build(scale, seed);
+    let mut rng = Pcg64::seed_from(seed + 7);
+    let gamma = spectra::regression_gamma(&ds.x, k, 8, &mut rng);
+    println!(
+        "dataset {} (d={}, n={}): sampled γ(2k={}) = {:.4}, α = γ² = {:.4}; \
+         DASH guarantee (ε=0.1): f(S) ≥ {:.4}·OPT",
+        ds.name,
+        ds.d(),
+        ds.n(),
+        2 * k,
+        gamma,
+        gamma * gamma,
+        (1.0 - (-gamma * gamma * gamma * gamma).exp() - 0.1).max(0.0)
+    );
+    Ok(())
+}

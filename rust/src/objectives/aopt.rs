@@ -1,0 +1,355 @@
+//! Bayesian A-optimal experimental design (paper §3.1 + Appendix D,
+//! Cor. 9).
+//!
+//! Objective: expected posterior-variance reduction under the linear model
+//! `y_S = X_Sᵀθ + noise`, `θ ~ N(0, Λ⁻¹)`, `Λ = β² I`:
+//!
+//! ```text
+//! f_A-opt(S) = Tr(Λ⁻¹) − Tr((Λ + σ⁻² X_S X_Sᵀ)⁻¹)
+//! ```
+//!
+//! State: the posterior covariance `M = (Λ + σ⁻² X_S X_Sᵀ)⁻¹` maintained
+//! explicitly via the Sherman–Morrison identity — adding stimulus `x`
+//! updates `M` in O(d²) and gives the exact marginal gain in closed form:
+//!
+//! ```text
+//! f_S(a) = σ⁻² ‖M x_a‖² / (1 + σ⁻² x_aᵀ M x_a)
+//! ```
+//!
+//! This is the math the L1 Pallas kernel `aopt_gains` batches over
+//! candidate tiles (`M · X_C` is a single d×d×|C| matmul).
+
+use super::{Objective, ObjectiveState};
+use crate::data::Dataset;
+use crate::linalg::{dot, Matrix};
+use std::sync::Arc;
+
+struct AoptProblem {
+    /// stimuli, d × n (one column per selectable experiment)
+    x: Matrix,
+    beta_sq: f64,
+    sigma_sq_inv: f64,
+    /// Tr(Λ⁻¹) = d / β², the normalization constant
+    prior_trace: f64,
+    name: String,
+}
+
+/// Bayesian A-optimality objective for experimental design.
+#[derive(Clone)]
+pub struct AOptimalityObjective {
+    p: Arc<AoptProblem>,
+}
+
+impl AOptimalityObjective {
+    /// `beta_sq` is the prior precision β² (Λ = β²I); `sigma_sq` the
+    /// observation noise variance σ².
+    pub fn new(ds: &Dataset, beta_sq: f64, sigma_sq: f64) -> Self {
+        Self::from_parts(ds.x.clone(), beta_sq, sigma_sq, &format!("aopt[{}]", ds.name))
+    }
+
+    pub fn from_parts(x: Matrix, beta_sq: f64, sigma_sq: f64, name: &str) -> Self {
+        assert!(beta_sq > 0.0 && sigma_sq > 0.0);
+        let d = x.rows();
+        AOptimalityObjective {
+            p: Arc::new(AoptProblem {
+                x,
+                beta_sq,
+                sigma_sq_inv: 1.0 / sigma_sq,
+                prior_trace: d as f64 / beta_sq,
+                name: name.to_string(),
+            }),
+        }
+    }
+
+    pub fn stimuli(&self) -> &Matrix {
+        &self.p.x
+    }
+
+    pub fn params(&self) -> (f64, f64) {
+        (self.p.beta_sq, 1.0 / self.p.sigma_sq_inv)
+    }
+
+    /// The paper's γ lower bound for this instance (Cor. 9):
+    /// `β² / (‖X‖² (β² + σ⁻²‖X‖²))` with ‖X‖ the spectral norm.
+    pub fn gamma_bound(&self) -> f64 {
+        let g = crate::linalg::syrk(&self.p.x); // XᵀX, n×n — spectral norm via λmax
+        // for large n this is heavy; sample-based power iteration instead
+        let x_sq = if g.rows() <= 256 {
+            crate::linalg::sym_extreme_eigs(&g).1
+        } else {
+            power_iter_sym(&g, 100)
+        };
+        self.p.beta_sq / (x_sq * (self.p.beta_sq + self.p.sigma_sq_inv * x_sq)).max(1e-300)
+    }
+}
+
+/// Largest eigenvalue of a symmetric PSD matrix by power iteration.
+fn power_iter_sym(a: &Matrix, iters: usize) -> f64 {
+    let n = a.rows();
+    let mut v = vec![1.0 / (n as f64).sqrt(); n];
+    let mut lambda = 0.0;
+    let mut av = vec![0.0; n];
+    for _ in 0..iters {
+        crate::linalg::gemv(a, &v, &mut av);
+        let norm = crate::linalg::nrm2(&av);
+        if norm < 1e-300 {
+            return 0.0;
+        }
+        lambda = norm;
+        for (vi, avi) in v.iter_mut().zip(&av) {
+            *vi = avi / norm;
+        }
+    }
+    lambda
+}
+
+struct AoptState {
+    p: Arc<AoptProblem>,
+    /// posterior covariance M (d × d), starts at Λ⁻¹ = I/β²
+    m: Matrix,
+    /// Tr(M)
+    trace: f64,
+    set: Vec<usize>,
+    in_set: Vec<bool>,
+}
+
+impl AoptState {
+    fn new(p: Arc<AoptProblem>) -> Self {
+        let d = p.x.rows();
+        let n = p.x.cols();
+        let mut m = Matrix::zeros(d, d);
+        let inv_beta = 1.0 / p.beta_sq;
+        for i in 0..d {
+            m.set(i, i, inv_beta);
+        }
+        AoptState { trace: p.prior_trace, m, set: Vec::new(), in_set: vec![false; n], p }
+    }
+
+    /// (M x, xᵀ M x) for a stimulus column.
+    fn mx(&self, a: usize) -> (Vec<f64>, f64) {
+        let x = self.p.x.col(a);
+        let mut mx = vec![0.0; x.len()];
+        crate::linalg::gemv(&self.m, x, &mut mx);
+        let xmx = dot(x, &mx);
+        (mx, xmx)
+    }
+}
+
+impl ObjectiveState for AoptState {
+    fn value(&self) -> f64 {
+        // normalized: (Tr(Λ⁻¹) − Tr(M)) / Tr(Λ⁻¹) ∈ [0, 1)
+        ((self.p.prior_trace - self.trace) / self.p.prior_trace).max(0.0)
+    }
+
+    fn set(&self) -> &[usize] {
+        &self.set
+    }
+
+    fn insert(&mut self, a: usize) {
+        assert!(a < self.p.x.cols(), "element out of range");
+        if self.in_set[a] {
+            return;
+        }
+        self.in_set[a] = true;
+        self.set.push(a);
+        let s2 = self.p.sigma_sq_inv;
+        let (mx, xmx) = self.mx(a);
+        let denom = 1.0 + s2 * xmx;
+        // M ← M − σ⁻² (Mx)(Mx)ᵀ / (1 + σ⁻² xᵀMx)
+        let scale = s2 / denom;
+        let d = self.m.rows();
+        for j in 0..d {
+            let mxj = mx[j];
+            if mxj == 0.0 {
+                continue;
+            }
+            let col = self.m.col_mut(j);
+            let c = scale * mxj;
+            for (i, cell) in col.iter_mut().enumerate() {
+                *cell -= c * mx[i];
+            }
+        }
+        self.trace -= scale * dot(&mx, &mx);
+    }
+
+    fn gain(&self, a: usize) -> f64 {
+        if self.in_set[a] {
+            return 0.0;
+        }
+        let s2 = self.p.sigma_sq_inv;
+        let (mx, xmx) = self.mx(a);
+        let raw = s2 * dot(&mx, &mx) / (1.0 + s2 * xmx);
+        (raw / self.p.prior_trace).max(0.0)
+    }
+
+    fn gains(&self, candidates: &[usize]) -> Vec<f64> {
+        // batched: one gemm M · X_C, then columnwise reductions — the
+        // pattern mirrored by the Pallas kernel
+        let d = self.m.rows();
+        let s2 = self.p.sigma_sq_inv;
+        let mut out = Vec::with_capacity(candidates.len());
+        let mut mx = vec![0.0; d];
+        for &a in candidates {
+            if self.in_set[a] {
+                out.push(0.0);
+                continue;
+            }
+            let x = self.p.x.col(a);
+            crate::linalg::gemv(&self.m, x, &mut mx);
+            let xmx = dot(x, &mx);
+            let raw = s2 * dot(&mx, &mx) / (1.0 + s2 * xmx);
+            out.push((raw / self.p.prior_trace).max(0.0));
+        }
+        out
+    }
+
+    fn clone_box(&self) -> Box<dyn ObjectiveState> {
+        Box::new(AoptState {
+            p: Arc::clone(&self.p),
+            m: self.m.clone(),
+            trace: self.trace,
+            set: self.set.clone(),
+            in_set: self.in_set.clone(),
+        })
+    }
+}
+
+impl Objective for AOptimalityObjective {
+    fn n(&self) -> usize {
+        self.p.x.cols()
+    }
+
+    fn upper_bound(&self) -> Option<f64> {
+        Some(1.0)
+    }
+
+    fn name(&self) -> &str {
+        &self.p.name
+    }
+
+    fn empty_state(&self) -> Box<dyn ObjectiveState> {
+        Box::new(AoptState::new(Arc::clone(&self.p)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::linalg::cholesky;
+    use crate::rng::Pcg64;
+
+    fn toy(rng: &mut Pcg64, d: usize, n: usize) -> AOptimalityObjective {
+        let ds = synthetic::design_d1(rng, d, n, 0.5);
+        AOptimalityObjective::new(&ds, 1.0, 1.0)
+    }
+
+    /// reference: exact Tr((Λ + σ⁻²X_S X_Sᵀ)⁻¹) via Cholesky
+    fn eval_ref(obj: &AOptimalityObjective, set: &[usize]) -> f64 {
+        let x = obj.stimuli();
+        let d = x.rows();
+        let (beta_sq, sigma_sq) = obj.params();
+        let mut a = Matrix::zeros(d, d);
+        for i in 0..d {
+            a.set(i, i, beta_sq);
+        }
+        for &j in set {
+            let col = x.col(j);
+            for p in 0..d {
+                for q in 0..d {
+                    a.add_at(p, q, col[p] * col[q] / sigma_sq);
+                }
+            }
+        }
+        let f = cholesky(&a).unwrap();
+        let prior = d as f64 / beta_sq;
+        (prior - f.inv_trace()) / prior
+    }
+
+    #[test]
+    fn matches_direct_inverse() {
+        let mut rng = Pcg64::seed_from(1);
+        let obj = toy(&mut rng, 8, 20);
+        for set in [vec![], vec![3], vec![0, 5, 9], (0..15).collect::<Vec<_>>()] {
+            let inc = obj.eval(&set);
+            let reference = eval_ref(&obj, &set);
+            assert!((inc - reference).abs() < 1e-9, "set {set:?}: {inc} vs {reference}");
+        }
+    }
+
+    #[test]
+    fn gain_equals_eval_delta() {
+        let mut rng = Pcg64::seed_from(2);
+        let obj = toy(&mut rng, 10, 30);
+        let st = obj.state_for(&[1, 7, 20]);
+        for a in [0usize, 5, 29] {
+            let g = st.gain(a);
+            let delta = obj.eval(&[1, 7, 20, a]) - obj.eval(&[1, 7, 20]);
+            assert!((g - delta).abs() < 1e-10, "a={a}: {g} vs {delta}");
+        }
+    }
+
+    #[test]
+    fn monotone_bounded_and_submodular_ratio_positive() {
+        let mut rng = Pcg64::seed_from(3);
+        let obj = toy(&mut rng, 6, 25);
+        let mut st = obj.empty_state();
+        let mut prev = 0.0;
+        for a in 0..25 {
+            st.insert(a);
+            let v = st.value();
+            assert!(v >= prev - 1e-12);
+            assert!(v < 1.0);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn batch_gains_match_singletons() {
+        let mut rng = Pcg64::seed_from(4);
+        let obj = toy(&mut rng, 8, 20);
+        let st = obj.state_for(&[2, 11]);
+        let cands: Vec<usize> = vec![0, 2, 6, 19];
+        let batch = st.gains(&cands);
+        for (i, &a) in cands.iter().enumerate() {
+            assert!((batch[i] - st.gain(a)).abs() < 1e-14);
+        }
+        assert_eq!(batch[1], 0.0); // already in set
+    }
+
+    #[test]
+    fn duplicate_insert_noop() {
+        let mut rng = Pcg64::seed_from(5);
+        let obj = toy(&mut rng, 6, 10);
+        let mut st = obj.empty_state();
+        st.insert(4);
+        let v = st.value();
+        let tr_before = obj.eval(&[4]);
+        st.insert(4);
+        assert_eq!(st.value(), v);
+        assert!((v - tr_before).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_bound_in_unit_interval() {
+        let mut rng = Pcg64::seed_from(6);
+        let obj = toy(&mut rng, 8, 30);
+        let g = obj.gamma_bound();
+        assert!(g > 0.0 && g <= 1.0, "gamma {g}");
+    }
+
+    #[test]
+    fn power_iteration_matches_jacobi() {
+        let mut rng = Pcg64::seed_from(7);
+        let mut b = Matrix::zeros(12, 12);
+        for j in 0..12 {
+            for i in 0..12 {
+                b.set(i, j, rng.next_gaussian());
+            }
+        }
+        let a = crate::linalg::syrk(&b);
+        let exact = crate::linalg::sym_extreme_eigs(&a).1;
+        let approx = power_iter_sym(&a, 300);
+        assert!((exact - approx).abs() / exact < 1e-6, "{exact} vs {approx}");
+    }
+}

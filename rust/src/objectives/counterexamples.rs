@@ -1,0 +1,182 @@
+//! The Appendix A constructions: instances where submodular adaptive
+//! sampling provably fails but DASH's α-scaled thresholds succeed. Used by
+//! integration tests and the `appendix-a` experiment.
+
+use super::{Objective, ObjectiveState};
+
+/// Appendix A.1/A.2: `f(S) = min{2·u(S) + 1, 2·v(S)}` over ground set
+/// `U ∪ V` (`u(S) = |S ∩ U|`, `v(S) = |S ∩ V|`); elements `0..k` are `U`,
+/// `k..2k` are `V`. Nonnegative, monotone, 0.5-weakly submodular
+/// (Lemma 11); *not* differentially submodular globally, but its
+/// restriction to small sets is 0.25-differentially submodular (Lemma 12).
+///
+/// Plain adaptive sampling filters out all of `U` (singleton value 0) and
+/// then can never assemble a set of V-elements whose joint marginal meets
+/// the α=1 threshold — the infinite-while-loop example.
+pub struct MinCounterexample {
+    pub k: usize,
+}
+
+impl MinCounterexample {
+    pub fn new(k: usize) -> Self {
+        MinCounterexample { k }
+    }
+
+    /// Optimal value under cardinality k: alternate U/V elements.
+    pub fn opt(&self) -> f64 {
+        // choose ⌈k/2⌉ from V and ⌊k/2⌋ from U:
+        // min(2⌊k/2⌋+1, 2⌈k/2⌉) = k for even k, k for odd k
+        self.k as f64
+    }
+}
+
+struct MinState {
+    k: usize,
+    set: Vec<usize>,
+    value: f64,
+}
+
+impl MinState {
+    fn f_of(&self, set: &[usize]) -> f64 {
+        let u = set.iter().filter(|&&a| a < self.k).count() as f64;
+        let v = set.iter().filter(|&&a| a >= self.k && a < 2 * self.k).count() as f64;
+        (2.0 * u + 1.0).min(2.0 * v)
+    }
+}
+
+impl ObjectiveState for MinState {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    fn set(&self) -> &[usize] {
+        &self.set
+    }
+
+    fn insert(&mut self, a: usize) {
+        if self.set.contains(&a) {
+            return;
+        }
+        self.set.push(a);
+        self.value = self.f_of(&self.set);
+    }
+
+    fn gain(&self, a: usize) -> f64 {
+        if self.set.contains(&a) {
+            return 0.0;
+        }
+        let mut s2 = self.set.clone();
+        s2.push(a);
+        self.f_of(&s2) - self.value
+    }
+
+    fn clone_box(&self) -> Box<dyn ObjectiveState> {
+        Box::new(MinState { k: self.k, set: self.set.clone(), value: self.value })
+    }
+}
+
+impl Objective for MinCounterexample {
+    fn n(&self) -> usize {
+        2 * self.k
+    }
+
+    fn name(&self) -> &str {
+        "appendix-a-min"
+    }
+
+    fn empty_state(&self) -> Box<dyn ObjectiveState> {
+        Box::new(MinState { k: self.k, set: Vec::new(), value: 0.0 })
+    }
+}
+
+/// Appendix A.2's concrete 6-feature R² instance: `y = e₁`,
+/// `x₁..x₃ = e₂..e₄`, `x₄..x₆ = (e₁+e_j)/√2`. Optimal 2-subsets pair an
+/// `x_{4..6}` with its matching `x_{1..3}` for R² = 1; any 2-subset of
+/// `{x₄,x₅,x₆}` reaches only 2/3.
+pub fn r2_instance() -> crate::objectives::LinearRegressionObjective {
+    use crate::linalg::Matrix;
+    let s = (0.5f64).sqrt();
+    let cols: Vec<Vec<f64>> = vec![
+        vec![0.0, 1.0, 0.0, 0.0],
+        vec![0.0, 0.0, 1.0, 0.0],
+        vec![0.0, 0.0, 0.0, 1.0],
+        vec![s, s, 0.0, 0.0],
+        vec![s, 0.0, s, 0.0],
+        vec![s, 0.0, 0.0, s],
+    ];
+    let col_refs: Vec<&[f64]> = cols.iter().map(|c| c.as_slice()).collect();
+    let x = Matrix::from_cols(4, &col_refs);
+    let y = vec![1.0, 0.0, 0.0, 0.0];
+    crate::objectives::LinearRegressionObjective::from_parts(x, y, "appendix-a2-r2")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectives::Objective;
+
+    #[test]
+    fn min_construction_values() {
+        let f = MinCounterexample::new(4);
+        assert_eq!(f.n(), 8);
+        // singletons: u elements worth 0, v elements worth 1
+        assert_eq!(f.eval(&[0]), 0.0);
+        assert_eq!(f.eval(&[4]), 1.0);
+        // all-V subsets stuck at 1
+        assert_eq!(f.eval(&[4, 5, 6, 7]), 1.0);
+        // balanced set achieves k
+        assert_eq!(f.eval(&[0, 1, 4, 5]), 4.0);
+        assert_eq!(f.opt(), 4.0);
+    }
+
+    #[test]
+    fn min_is_monotone() {
+        let f = MinCounterexample::new(3);
+        let mut st = f.empty_state();
+        let mut prev = 0.0;
+        for a in [3usize, 0, 4, 1, 5, 2] {
+            st.insert(a);
+            assert!(st.value() >= prev);
+            prev = st.value();
+        }
+        // full ground set: u = v = 3 → min(2·3+1, 2·3) = 6
+        assert_eq!(prev, 6.0);
+    }
+
+    #[test]
+    fn min_weak_submodularity_ratio_half() {
+        // Lemma 11: γ = 0.5 witnessed by S={u₁}, A=V:
+        // Σ_a f_S(a) grows while f_S(A) = ... check the specific ratio
+        let f = MinCounterexample::new(3);
+        let st = f.state_for(&[0]); // S = {u_0}, f(S)=0... f({u0}) = min(3,0)=0
+        let a_set: Vec<usize> = vec![3, 4, 5];
+        let sum_singles: f64 = a_set.iter().map(|&a| st.gain(a)).sum();
+        let set_gain = f.eval(&[0, 3, 4, 5]) - f.eval(&[0]);
+        // f({u0,v*3}) = min(3, 6) = 3; singles: each v adds min(3, 2·1)=...
+        // f_S(v) = min(3,2)-0 = 2 each -> sum 6, set gain 3 => ratio 2
+        assert_eq!(set_gain, 3.0);
+        assert_eq!(sum_singles, 6.0);
+    }
+
+    #[test]
+    fn r2_instance_matches_appendix() {
+        let obj = r2_instance();
+        // optimal pairs achieve 1
+        for pair in [[0usize, 3], [1, 4], [2, 5]] {
+            let v = obj.eval(&pair);
+            assert!((v - 1.0).abs() < 1e-10, "pair {pair:?} -> {v}");
+        }
+        // singletons: e-vectors 0, mixed vectors 1/2
+        for a in 0..3 {
+            assert!(obj.eval(&[a]).abs() < 1e-12);
+        }
+        for a in 3..6 {
+            assert!((obj.eval(&[a]) - 0.5).abs() < 1e-12);
+        }
+        // any 2-subset of the mixed vectors: 2/3
+        for pair in [[3usize, 4], [3, 5], [4, 5]] {
+            let v = obj.eval(&pair);
+            assert!((v - 2.0 / 3.0).abs() < 1e-10, "pair {pair:?} -> {v}");
+        }
+    }
+}

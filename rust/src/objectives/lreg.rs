@@ -1,0 +1,363 @@
+//! Feature selection for linear regression (paper §3.1, Cor. 7) and the
+//! Appendix F `R²` variant.
+//!
+//! Objective: `ℓ_reg(y, w^(S)) = ‖y‖² − ‖y − X_S w‖²` at the least-squares
+//! optimum — i.e. the squared norm of the projection of `y` onto
+//! `span(X_S)`. We report it normalized by `‖y‖²` so `f ∈ [0, 1]` (for
+//! column-standardized data this equals R²).
+//!
+//! State: an incremental thin QR of the selected columns plus the residual
+//! `r = y − Q Qᵀ y`. With `Q` orthonormal the exact marginal gain of a
+//! candidate column `x` is
+//!
+//! ```text
+//! f_S(a) = (xᵀ r)² / (‖x‖² − ‖Qᵀ x‖²)
+//! ```
+//!
+//! (projection of `y` onto the component of `x` orthogonal to `span(X_S)`),
+//! computed in O(d·|S|) per candidate and O(d) once `Qᵀx` is formed — this
+//! is exactly the math the L1 Pallas kernel `lreg_gains` batches on the
+//! XLA path.
+
+use super::{Objective, ObjectiveState};
+use crate::data::Dataset;
+use crate::linalg::{dot, IncrementalQr, Matrix};
+use std::sync::Arc;
+
+/// Shared immutable problem data.
+struct LregProblem {
+    x: Matrix,
+    y: Vec<f64>,
+    y_sq: f64,
+    /// precomputed ‖x_j‖² per column (perf: saves a d-length dot in every
+    /// gain query — see EXPERIMENTS.md §Perf)
+    col_sq: Vec<f64>,
+    name: String,
+}
+
+/// Feature selection objective for linear regression.
+#[derive(Clone)]
+pub struct LinearRegressionObjective {
+    p: Arc<LregProblem>,
+}
+
+impl LinearRegressionObjective {
+    /// Build from a dataset (uses `ds.x` as `d × n` feature matrix and
+    /// `ds.y` as response). Columns should be standardized; see
+    /// [`Dataset::normalize_columns`].
+    pub fn new(ds: &Dataset) -> Self {
+        Self::from_parts(ds.x.clone(), ds.y.clone(), &format!("lreg[{}]", ds.name))
+    }
+
+    /// Build directly from a feature matrix and response.
+    pub fn from_parts(x: Matrix, y: Vec<f64>, name: &str) -> Self {
+        assert_eq!(x.rows(), y.len(), "response/sample mismatch");
+        let y_sq = dot(&y, &y).max(1e-300);
+        let col_sq = (0..x.cols()).map(|j| dot(x.col(j), x.col(j))).collect();
+        LinearRegressionObjective {
+            p: Arc::new(LregProblem { x, y, y_sq, col_sq, name: name.to_string() }),
+        }
+    }
+
+    /// The underlying feature matrix (used by the XLA batcher).
+    pub fn features(&self) -> &Matrix {
+        &self.p.x
+    }
+
+    pub fn response(&self) -> &[f64] {
+        &self.p.y
+    }
+}
+
+struct LregState {
+    p: Arc<LregProblem>,
+    qr: IncrementalQr,
+    /// residual y − Q Qᵀ y
+    r: Vec<f64>,
+    /// f(S) (normalized)
+    value: f64,
+    set: Vec<usize>,
+    in_set: Vec<bool>,
+}
+
+impl LregState {
+    fn new(p: Arc<LregProblem>) -> Self {
+        let n = p.x.cols();
+        let d = p.x.rows();
+        LregState {
+            r: p.y.clone(),
+            qr: IncrementalQr::new(d),
+            value: 0.0,
+            set: Vec::new(),
+            in_set: vec![false; n],
+            p,
+        }
+    }
+
+    /// Unnormalized gain of candidate column.
+    fn raw_gain(&self, a: usize) -> f64 {
+        if self.in_set[a] {
+            return 0.0;
+        }
+        let x = self.p.x.col(a);
+        let num = dot(x, &self.r);
+        let norm_sq = self.p.col_sq[a];
+        let den = (norm_sq - self.qr.proj_sq_norm(x)).max(0.0);
+        if den <= 1e-12 * norm_sq.max(1e-300) {
+            return 0.0; // numerically in span: no new direction
+        }
+        (num * num / den).max(0.0)
+    }
+}
+
+impl ObjectiveState for LregState {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    fn set(&self) -> &[usize] {
+        &self.set
+    }
+
+    fn insert(&mut self, a: usize) {
+        assert!(a < self.p.x.cols(), "element out of range");
+        if self.in_set[a] {
+            return;
+        }
+        self.in_set[a] = true;
+        self.set.push(a);
+        let x = self.p.x.col(a);
+        // orthogonalize and, if independent, update residual + value
+        let before_rank = self.qr.rank();
+        if self.qr.push_col(x) {
+            debug_assert_eq!(self.qr.rank(), before_rank + 1);
+            let q = &self.qr.basis()[before_rank];
+            let c = dot(q, &self.r);
+            crate::linalg::axpy(-c, q, &mut self.r);
+            self.value += c * c / self.p.y_sq;
+        }
+    }
+
+    fn gain(&self, a: usize) -> f64 {
+        self.raw_gain(a) / self.p.y_sq
+    }
+
+    fn gains(&self, candidates: &[usize]) -> Vec<f64> {
+        // batched: reuse of r and the basis; per candidate O(d·|S|)
+        candidates.iter().map(|&a| self.gain(a)).collect()
+    }
+
+    fn clone_box(&self) -> Box<dyn ObjectiveState> {
+        Box::new(LregState {
+            p: Arc::clone(&self.p),
+            qr: self.qr.clone(),
+            r: self.r.clone(),
+            value: self.value,
+            set: self.set.clone(),
+            in_set: self.in_set.clone(),
+        })
+    }
+}
+
+impl Objective for LinearRegressionObjective {
+    fn n(&self) -> usize {
+        self.p.x.cols()
+    }
+
+    fn upper_bound(&self) -> Option<f64> {
+        Some(1.0)
+    }
+
+    fn name(&self) -> &str {
+        &self.p.name
+    }
+
+    fn empty_state(&self) -> Box<dyn ObjectiveState> {
+        Box::new(LregState::new(Arc::clone(&self.p)))
+    }
+}
+
+/// The Appendix F objective: `R²(S)` — identical machinery with the
+/// response standardized to mean 0 / variance 1, so the value *is* the
+/// squared multiple correlation.
+#[derive(Clone)]
+pub struct R2Objective {
+    inner: LinearRegressionObjective,
+}
+
+impl R2Objective {
+    pub fn new(ds: &Dataset) -> Self {
+        let mut y = ds.y.clone();
+        let d = y.len().max(1);
+        let mean = y.iter().sum::<f64>() / d as f64;
+        for v in &mut y {
+            *v -= mean;
+        }
+        let var = (dot(&y, &y) / d as f64).max(1e-300);
+        let inv = 1.0 / var.sqrt();
+        for v in &mut y {
+            *v *= inv;
+        }
+        R2Objective {
+            inner: LinearRegressionObjective::from_parts(
+                ds.x.clone(),
+                y,
+                &format!("r2[{}]", ds.name),
+            ),
+        }
+    }
+}
+
+impl Objective for R2Objective {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+    fn upper_bound(&self) -> Option<f64> {
+        Some(1.0)
+    }
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn empty_state(&self) -> Box<dyn ObjectiveState> {
+        self.inner.empty_state()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, Task};
+    use crate::linalg::solve_lstsq;
+    use crate::rng::Pcg64;
+
+    fn toy_ds(rng: &mut Pcg64, d: usize, n: usize) -> Dataset {
+        synthetic::regression_d1(rng, d, n, n / 2, 0.3)
+    }
+
+    /// reference: f(S) via explicit least squares
+    fn eval_ref(ds: &Dataset, set: &[usize]) -> f64 {
+        let y_sq = dot(&ds.y, &ds.y);
+        if set.is_empty() {
+            return 0.0;
+        }
+        let xs = ds.x.select_cols(set);
+        let w = solve_lstsq(&xs, &ds.y);
+        let mut fit = vec![0.0; ds.d()];
+        crate::linalg::gemv(&xs, &w, &mut fit);
+        let resid_sq: f64 = ds.y.iter().zip(&fit).map(|(a, b)| (a - b) * (a - b)).sum();
+        (y_sq - resid_sq) / y_sq
+    }
+
+    #[test]
+    fn matches_least_squares_reference() {
+        let mut rng = Pcg64::seed_from(1);
+        let ds = toy_ds(&mut rng, 60, 12);
+        let obj = LinearRegressionObjective::new(&ds);
+        for set in [vec![0], vec![1, 5], vec![0, 3, 7, 11], (0..12).collect::<Vec<_>>()] {
+            let inc = obj.eval(&set);
+            let reference = eval_ref(&ds, &set);
+            assert!((inc - reference).abs() < 1e-8, "set {set:?}: {inc} vs {reference}");
+        }
+    }
+
+    #[test]
+    fn gain_equals_eval_delta() {
+        let mut rng = Pcg64::seed_from(2);
+        let ds = toy_ds(&mut rng, 50, 10);
+        let obj = LinearRegressionObjective::new(&ds);
+        let st = obj.state_for(&[2, 4]);
+        for a in [0usize, 1, 7, 9] {
+            let g = st.gain(a);
+            let delta = obj.eval(&[2, 4, a]) - obj.eval(&[2, 4]);
+            assert!((g - delta).abs() < 1e-8, "a={a}: gain {g} vs delta {delta}");
+        }
+    }
+
+    #[test]
+    fn monotone_and_bounded() {
+        let mut rng = Pcg64::seed_from(3);
+        let ds = toy_ds(&mut rng, 40, 8);
+        let obj = LinearRegressionObjective::new(&ds);
+        let mut st = obj.empty_state();
+        let mut prev = 0.0;
+        for a in 0..8 {
+            st.insert(a);
+            let v = st.value();
+            assert!(v >= prev - 1e-12, "monotone violated at {a}");
+            assert!(v <= 1.0 + 1e-9);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn duplicate_and_dependent_inserts() {
+        let mut rng = Pcg64::seed_from(4);
+        let ds = toy_ds(&mut rng, 30, 6);
+        let obj = LinearRegressionObjective::new(&ds);
+        let mut st = obj.empty_state();
+        st.insert(0);
+        let v1 = st.value();
+        st.insert(0); // duplicate: no-op
+        assert_eq!(st.value(), v1);
+        assert_eq!(st.set(), &[0]);
+        // gain of an element already in S is 0
+        assert_eq!(st.gain(0), 0.0);
+    }
+
+    #[test]
+    fn full_set_explains_signal() {
+        let mut rng = Pcg64::seed_from(5);
+        // low noise: selecting everything should give f near 1
+        let ds = synthetic::regression_d1(&mut rng, 200, 10, 10, 0.2);
+        let obj = LinearRegressionObjective::new(&ds);
+        let v = obj.eval(&(0..10).collect::<Vec<_>>());
+        assert!(v > 0.95, "full-set value {v}");
+    }
+
+    #[test]
+    fn r2_objective_in_unit_range() {
+        let mut rng = Pcg64::seed_from(6);
+        let mut ds = toy_ds(&mut rng, 50, 8);
+        // shift y so centering matters
+        for v in &mut ds.y {
+            *v += 10.0;
+        }
+        let obj = R2Objective::new(&ds);
+        let v = obj.eval(&(0..8).collect::<Vec<_>>());
+        assert!((0.0..=1.0 + 1e-9).contains(&v), "r2 {v}");
+        // R² of empty set is 0
+        assert_eq!(obj.eval(&[]), 0.0);
+    }
+
+    #[test]
+    fn batch_gains_match_singletons() {
+        let mut rng = Pcg64::seed_from(7);
+        let ds = toy_ds(&mut rng, 40, 10);
+        let obj = LinearRegressionObjective::new(&ds);
+        let st = obj.state_for(&[1, 3]);
+        let cands = vec![0, 2, 5, 9];
+        let batch = st.gains(&cands);
+        for (i, &a) in cands.iter().enumerate() {
+            assert!((batch[i] - st.gain(a)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn out_of_range_panics() {
+        let mut rng = Pcg64::seed_from(8);
+        let ds = toy_ds(&mut rng, 20, 4);
+        let obj = LinearRegressionObjective::new(&ds);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut st = obj.empty_state();
+            st.insert(4);
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn state_task_is_regression() {
+        let mut rng = Pcg64::seed_from(9);
+        let ds = toy_ds(&mut rng, 20, 4);
+        assert_eq!(ds.task, Task::Regression);
+    }
+}

@@ -1,0 +1,125 @@
+//! The paper's objective functions and their incremental oracle states.
+//!
+//! Each objective `f : 2^N → ℝ₊` is normalized, monotone and
+//! γ²-differentially submodular (paper §3):
+//!
+//! - [`LinearRegressionObjective`] — `ℓ_reg`, variance reduction (Cor. 7)
+//! - [`R2Objective`] — the Appendix F goodness-of-fit variant
+//! - [`LogisticObjective`] — `ℓ_class`, logistic log-likelihood (Cor. 8)
+//! - [`OvrSoftmaxObjective`] — one-vs-rest multiclass reduction (D4)
+//! - [`AOptimalityObjective`] — Bayesian A-optimality (Cor. 9)
+//! - [`DiverseObjective`] — any of the above plus a submodular `d(S)`
+//! - [`counterexamples`] — the Appendix A constructions used in tests
+//!
+//! Design: an [`Objective`] spawns a cheap-to-clone [`ObjectiveState`] that
+//! supports `insert` (grow S by one element) and batched marginal gains on
+//! top of the current S. Algorithms never recompute `f(S)` from scratch in
+//! their inner loops.
+
+mod lreg;
+mod logistic;
+mod softmax;
+mod aopt;
+mod diversity;
+pub mod counterexamples;
+pub mod spectra;
+
+pub use aopt::AOptimalityObjective;
+pub use diversity::{DiverseObjective, DiversityTerm, GroupSqrtDiversity};
+pub use logistic::LogisticObjective;
+pub use lreg::{LinearRegressionObjective, R2Objective};
+pub use softmax::OvrSoftmaxObjective;
+
+/// Incremental evaluation state for one solution set `S`.
+///
+/// States are snapshots: cloning (`clone_box`) forks the state so DASH can
+/// evaluate speculative sets `S ∪ R` without disturbing `S`.
+pub trait ObjectiveState: Send + Sync {
+    /// Current `f(S)`.
+    fn value(&self) -> f64;
+
+    /// Elements currently in `S` (insertion order).
+    fn set(&self) -> &[usize];
+
+    /// Grow `S ← S ∪ {a}`. Inserting an element already in `S` is a no-op.
+    fn insert(&mut self, a: usize);
+
+    /// Marginal gain `f_S(a)` of a single candidate.
+    fn gain(&self, a: usize) -> f64;
+
+    /// Batched marginal gains `f_S(a)` for each candidate. Default loops
+    /// over [`ObjectiveState::gain`]; objectives override with vectorized
+    /// math where profitable.
+    fn gains(&self, candidates: &[usize]) -> Vec<f64> {
+        candidates.iter().map(|&a| self.gain(a)).collect()
+    }
+
+    /// Fork the state.
+    fn clone_box(&self) -> Box<dyn ObjectiveState>;
+
+    /// Fitted logistic weights aligned with `set()`, if this state belongs
+    /// to a logistic-family objective (used for accuracy reporting).
+    fn as_logistic_weights(&self) -> Option<Vec<f64>> {
+        None
+    }
+}
+
+/// A normalized monotone set function over ground set `0..n`.
+pub trait Objective: Sync {
+    /// Ground-set size.
+    fn n(&self) -> usize;
+
+    /// Short identifier (used in reports).
+    fn name(&self) -> &str;
+
+    /// State for `S = ∅`.
+    fn empty_state(&self) -> Box<dyn ObjectiveState>;
+
+    /// A known upper bound on `f` (normalized objectives return 1.0); used
+    /// to seed DASH's OPT guess. `None` = unbounded/unknown.
+    fn upper_bound(&self) -> Option<f64> {
+        None
+    }
+
+    /// State for an arbitrary `S` (default: inserts one by one).
+    fn state_for(&self, set: &[usize]) -> Box<dyn ObjectiveState> {
+        let mut st = self.empty_state();
+        for &a in set {
+            st.insert(a);
+        }
+        st
+    }
+
+    /// `f(S)` evaluated from scratch.
+    fn eval(&self, set: &[usize]) -> f64 {
+        self.state_for(set).value()
+    }
+
+    /// `f_S(A)` — marginal contribution of a *set* `A` on top of `S`
+    /// (needed by DASH's round-acceptance test).
+    fn set_gain(&self, state: &dyn ObjectiveState, add: &[usize]) -> f64 {
+        let mut st = state.clone_box();
+        let before = st.value();
+        for &a in add {
+            st.insert(a);
+        }
+        st.value() - before
+    }
+}
+
+/// Dedup helper: returns `set` with duplicates removed, preserving order.
+pub fn dedup_set(set: &[usize]) -> Vec<usize> {
+    let mut seen = std::collections::HashSet::new();
+    set.iter().copied().filter(|a| seen.insert(*a)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_preserves_order() {
+        assert_eq!(dedup_set(&[3, 1, 3, 2, 1]), vec![3, 1, 2]);
+        assert!(dedup_set(&[]).is_empty());
+    }
+}

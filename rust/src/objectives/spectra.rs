@@ -1,0 +1,187 @@
+//! Spectral diagnostics: estimates of the paper's weak-submodularity ratio
+//! γ and differential-submodularity ratio α = γ², plus the Figure 1
+//! marginal-contribution "sandwich" data.
+//!
+//! - For regression (Cor. 7): `γ = λmin(2k)/λmax(2k)` over k-sparse
+//!   covariance submatrices — estimated by sampling random 2k-subsets and
+//!   taking extreme eigenvalues of the induced covariance blocks.
+//! - Empirical sandwich (Fig. 1): fix an element `a`, sample many random
+//!   sets `S`, record `f_S(a)` — differential submodularity predicts the
+//!   cloud lies between two submodular envelopes proportional to each
+//!   other by α.
+
+use super::Objective;
+use crate::linalg::{gemm_tn, sym_extreme_eigs, Matrix};
+use crate::rng::Pcg64;
+
+/// Estimate `(λmin(s), λmax(s))` of the feature covariance restricted to
+/// random s-subsets (columns assumed standardized; covariance = XᵀX/d).
+/// Returns the worst case over `trials` random subsets (min of mins, max of
+/// maxes) — a sampled surrogate for the paper's restricted spectra.
+pub fn sparse_spectrum(
+    x: &Matrix,
+    s: usize,
+    trials: usize,
+    rng: &mut Pcg64,
+) -> (f64, f64) {
+    let n = x.cols();
+    let d = x.rows() as f64;
+    let s = s.min(n).max(1);
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for _ in 0..trials.max(1) {
+        let idx = rng.sample_indices(n, s);
+        let xs = x.select_cols(&idx);
+        let mut cov = gemm_tn(&xs, &xs);
+        cov.scale(1.0 / d);
+        let (l, h) = sym_extreme_eigs(&cov);
+        lo = lo.min(l);
+        hi = hi.max(h);
+    }
+    (lo.max(0.0), hi)
+}
+
+/// Sampled estimate of the regression γ = λmin(2k)/λmax(2k) (Cor. 7).
+pub fn regression_gamma(x: &Matrix, k: usize, trials: usize, rng: &mut Pcg64) -> f64 {
+    let (lo, hi) = sparse_spectrum(x, 2 * k, trials, rng);
+    if hi <= 0.0 {
+        return 0.0;
+    }
+    (lo / hi).clamp(0.0, 1.0)
+}
+
+/// α = γ² — the differential-submodularity ratio the paper's guarantees
+/// are stated in.
+pub fn regression_alpha(x: &Matrix, k: usize, trials: usize, rng: &mut Pcg64) -> f64 {
+    let g = regression_gamma(x, k, trials, rng);
+    g * g
+}
+
+/// One Figure-1 scatter point: for a fixed element `a` and random set size
+/// `|S|`, the marginal `f_S(a)` together with `|S|`.
+#[derive(Debug, Clone, Copy)]
+pub struct SandwichPoint {
+    pub set_size: usize,
+    pub marginal: f64,
+}
+
+/// Generate Fig. 1 data: marginal contribution of `a` onto `trials` random
+/// sets of each size in `sizes`.
+pub fn sandwich_scatter(
+    obj: &dyn Objective,
+    a: usize,
+    sizes: &[usize],
+    trials: usize,
+    rng: &mut Pcg64,
+) -> Vec<SandwichPoint> {
+    let n = obj.n();
+    let mut out = Vec::with_capacity(sizes.len() * trials);
+    for &s in sizes {
+        for _ in 0..trials {
+            let mut set: Vec<usize> = rng
+                .sample_indices(n, (s + 1).min(n))
+                .into_iter()
+                .filter(|&b| b != a)
+                .collect();
+            set.truncate(s.min(n.saturating_sub(1)));
+            let st = obj.state_for(&set);
+            out.push(SandwichPoint { set_size: set.len(), marginal: st.gain(a) });
+        }
+    }
+    out
+}
+
+/// Empirical differential-submodularity check over random (S, A) pairs:
+/// returns the observed min and max of `Σ_{a∈A} f_S(a) / f_S(A)` — Thm. 6
+/// predicts this ratio is sandwiched within `[γ, 1/γ]`-style bounds.
+pub fn marginal_ratio_range(
+    obj: &dyn Objective,
+    set_size: usize,
+    a_size: usize,
+    trials: usize,
+    rng: &mut Pcg64,
+) -> (f64, f64) {
+    let n = obj.n();
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for _ in 0..trials {
+        let all = rng.sample_indices(n, (set_size + a_size).min(n));
+        let (s_part, a_part) = all.split_at(set_size.min(all.len()));
+        if a_part.is_empty() {
+            continue;
+        }
+        let st = obj.state_for(s_part);
+        let sum_singles: f64 = a_part.iter().map(|&a| st.gain(a)).sum();
+        let set_gain = obj.set_gain(&*st, a_part);
+        if set_gain > 1e-12 {
+            let r = sum_singles / set_gain;
+            lo = lo.min(r);
+            hi = hi.max(r);
+        }
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::objectives::LinearRegressionObjective;
+
+    #[test]
+    fn spectrum_of_orthogonal_features_is_unit() {
+        // identity-like: uncorrelated standardized features have cov ≈ I
+        let mut rng = Pcg64::seed_from(1);
+        let x = synthetic::correlated_features(&mut rng, 5000, 10, 0.0);
+        let (lo, hi) = sparse_spectrum(&x, 4, 8, &mut rng);
+        assert!(lo > 0.7 && hi < 1.3, "({lo}, {hi})");
+    }
+
+    #[test]
+    fn correlation_shrinks_gamma() {
+        let mut rng = Pcg64::seed_from(2);
+        let x0 = synthetic::correlated_features(&mut rng, 3000, 20, 0.0);
+        let x8 = synthetic::correlated_features(&mut rng, 3000, 20, 0.8);
+        let g0 = regression_gamma(&x0, 4, 6, &mut rng);
+        let g8 = regression_gamma(&x8, 4, 6, &mut rng);
+        assert!(g0 > g8, "gamma should fall with correlation: {g0} vs {g8}");
+        assert!(g0 <= 1.0 && g8 > 0.0);
+    }
+
+    #[test]
+    fn alpha_is_gamma_squared() {
+        let mut data_rng = Pcg64::seed_from(3);
+        let x = synthetic::correlated_features(&mut data_rng, 1000, 12, 0.4);
+        let g = regression_gamma(&x, 3, 5, &mut Pcg64::seed_from(7));
+        let a = regression_alpha(&x, 3, 5, &mut Pcg64::seed_from(7));
+        assert!((a - g * g).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sandwich_scatter_shapes() {
+        let mut rng = Pcg64::seed_from(4);
+        let ds = synthetic::regression_d1(&mut rng, 100, 15, 8, 0.4);
+        let obj = LinearRegressionObjective::new(&ds);
+        let pts = sandwich_scatter(&obj, 0, &[0, 2, 5], 4, &mut rng);
+        assert_eq!(pts.len(), 12);
+        assert!(pts.iter().all(|p| p.marginal >= -1e-12 && p.marginal.is_finite()));
+        // set sizes recorded correctly (a excluded from S)
+        assert!(pts.iter().all(|p| p.set_size <= 5));
+        // at |S| = 0 the marginal equals the singleton value exactly
+        let singleton = obj.eval(&[0]);
+        for p in pts.iter().filter(|p| p.set_size == 0) {
+            assert!((p.marginal - singleton).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn ratio_range_is_finite_and_ordered() {
+        let mut rng = Pcg64::seed_from(5);
+        let ds = synthetic::regression_d1(&mut rng, 120, 12, 6, 0.3);
+        let obj = LinearRegressionObjective::new(&ds);
+        let (lo, hi) = marginal_ratio_range(&obj, 3, 3, 20, &mut rng);
+        assert!(lo.is_finite() && hi.is_finite());
+        assert!(lo <= hi);
+        assert!(lo > 0.0, "ratios positive for this objective: {lo}");
+    }
+}

@@ -1,0 +1,298 @@
+//! PCG64 (two PCG-XSH-RR 64/32 halves) with distribution helpers.
+
+/// A 64-bit PCG generator: two independent 64->32 PCG streams combined.
+/// Deterministic, seedable, `Clone` (replayable).
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: [u64; 2],
+    inc: [u64; 2],
+    /// cached second gaussian from Box–Muller
+    spare_gauss: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// Seed via splitmix so nearby seeds give unrelated streams.
+    pub fn seed_from(seed: u64) -> Self {
+        fn splitmix(z: &mut u64) -> u64 {
+            *z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut x = *z;
+            x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            x ^ (x >> 31)
+        }
+        let mut z = seed;
+        let mut rng = Pcg64 {
+            state: [splitmix(&mut z), splitmix(&mut z)],
+            inc: [splitmix(&mut z) | 1, splitmix(&mut z) | 1],
+            spare_gauss: None,
+        };
+        // warm up
+        rng.next_u64();
+        rng
+    }
+
+    #[inline]
+    fn step(&mut self, i: usize) -> u32 {
+        let old = self.state[i];
+        self.state[i] = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc[i]);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        self.step(0)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let hi = self.step(0) as u64;
+        let lo = self.step(1) as u64;
+        (hi << 32) | lo
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn gen_range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive; unbiased via rejection.
+    pub fn gen_range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi, "gen_range_usize: lo > hi");
+        let span = (hi - lo) as u64 + 1;
+        if span == 0 {
+            // full u64 range
+            return self.next_u64() as usize;
+        }
+        // rejection sampling to remove modulo bias
+        let zone = u64::MAX - (u64::MAX % span);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return lo + (v % span) as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(g) = self.spare_gauss.take() {
+            return g;
+        }
+        // avoid log(0)
+        let mut u1 = self.next_f64();
+        while u1 <= f64::MIN_POSITIVE {
+            u1 = self.next_f64();
+        }
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare_gauss = Some(r * s);
+        r * c
+    }
+
+    /// Normal with given mean/stddev.
+    pub fn gaussian(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.next_gaussian()
+    }
+
+    /// Bernoulli(p).
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range_usize(0, i);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices uniformly from `0..n` (Floyd's algorithm
+    /// for small k, partial shuffle otherwise). Result order is random.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k > n");
+        if k == 0 {
+            return Vec::new();
+        }
+        if k * 4 >= n {
+            // partial Fisher–Yates
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = self.gen_range_usize(i, n - 1);
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        } else {
+            // Floyd's: O(k) expected
+            let mut chosen = std::collections::HashSet::with_capacity(k);
+            let mut out = Vec::with_capacity(k);
+            for j in (n - k)..n {
+                let t = self.gen_range_usize(0, j);
+                let v = if chosen.contains(&t) { j } else { t };
+                chosen.insert(v);
+                out.push(v);
+            }
+            self.shuffle(&mut out);
+            out
+        }
+    }
+
+    /// Sample `k` distinct elements from a slice.
+    pub fn sample_from<'a, T>(&mut self, xs: &'a [T], k: usize) -> Vec<&'a T> {
+        self.sample_indices(xs.len(), k).into_iter().map(|i| &xs[i]).collect()
+    }
+
+    /// Choose one element uniformly.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> Option<&'a T> {
+        if xs.is_empty() {
+            None
+        } else {
+            Some(&xs[self.gen_range_usize(0, xs.len() - 1)])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::seed_from(1);
+        let mut b = Pcg64::seed_from(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seed_from(1);
+        let mut b = Pcg64::seed_from(2);
+        let same = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = Pcg64::seed_from(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn range_usize_inclusive_and_unbiased_ends() {
+        let mut r = Pcg64::seed_from(3);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..1000 {
+            let v = r.gen_range_usize(10, 12);
+            assert!((10..=12).contains(&v));
+            seen_lo |= v == 10;
+            seen_hi |= v == 12;
+        }
+        assert!(seen_lo && seen_hi);
+        assert_eq!(r.gen_range_usize(5, 5), 5);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::seed_from(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed_from(5);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct_both_branches() {
+        let mut r = Pcg64::seed_from(9);
+        // Floyd branch (k small)
+        let s = r.sample_indices(1000, 10);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 10);
+        // partial-shuffle branch (k large)
+        let s = r.sample_indices(20, 15);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 15);
+        assert!(d.iter().all(|&i| i < 20));
+        // edges
+        assert!(r.sample_indices(5, 0).is_empty());
+        let all = {
+            let mut v = r.sample_indices(5, 5);
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn sample_uniformity_rough() {
+        // each index of 0..10 should appear ~equally often in samples of 5
+        let mut r = Pcg64::seed_from(13);
+        let mut counts = [0usize; 10];
+        for _ in 0..2000 {
+            for i in r.sample_indices(10, 5) {
+                counts[i] += 1;
+            }
+        }
+        for &c in &counts {
+            let expected = 1000.0;
+            assert!((c as f64 - expected).abs() < 120.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Pcg64::seed_from(17);
+        let hits = (0..10_000).filter(|_| r.bernoulli(0.3)).count();
+        assert!((hits as f64 / 10_000.0 - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    fn choose_and_sample_from() {
+        let mut r = Pcg64::seed_from(19);
+        let xs = [1, 2, 3];
+        assert!(xs.contains(r.choose(&xs).unwrap()));
+        assert!(r.choose::<usize>(&[]).is_none());
+        let picked = r.sample_from(&xs, 2);
+        assert_eq!(picked.len(), 2);
+    }
+}

@@ -1,0 +1,200 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed with the in-repo JSON substrate.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Which oracle a module implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// regression gains: inputs (q[d,s], r[d], xc[d,nc]) → gains[nc]
+    Lreg,
+    /// A-optimality gains: inputs (m[d,d], xc[d,nc], sig[1]) → gains[nc]
+    Aopt,
+    /// logistic score-test gains: inputs (xc[d,nc], resid[d], w[d]) → gains[nc]
+    Logistic,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "lreg" => Some(ArtifactKind::Lreg),
+            "aopt" => Some(ArtifactKind::Aopt),
+            "logistic" => Some(ArtifactKind::Logistic),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArtifactKind::Lreg => "lreg",
+            ArtifactKind::Aopt => "aopt",
+            ArtifactKind::Logistic => "logistic",
+        }
+    }
+}
+
+/// One AOT-compiled module.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// path to the HLO text file (absolute once loaded)
+    pub file: PathBuf,
+    /// sample dimension d
+    pub d: usize,
+    /// padded basis columns s (lreg only; 0 otherwise)
+    pub s: usize,
+    /// padded candidate batch nc
+    pub nc: usize,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("reading manifest: {e}"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        let version = v.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let arr = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing 'artifacts'")?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for e in arr {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("artifact missing name")?
+                .to_string();
+            let kind = e
+                .get("kind")
+                .and_then(Json::as_str)
+                .and_then(ArtifactKind::parse)
+                .ok_or_else(|| format!("artifact {name}: bad kind"))?;
+            let file = dir.join(
+                e.get("file").and_then(Json::as_str).ok_or("artifact missing file")?,
+            );
+            let dims: &BTreeMap<String, Json> = e
+                .get("dims")
+                .and_then(Json::as_obj)
+                .ok_or("artifact missing dims")?;
+            let dim = |k: &str| dims.get(k).and_then(Json::as_usize).unwrap_or(0);
+            artifacts.push(Artifact {
+                name,
+                kind,
+                file,
+                d: dim("d"),
+                s: dim("s"),
+                nc: dim("nc"),
+            });
+        }
+        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Best artifact of a kind for a problem with `d` samples and basis
+    /// requirement `s`: the smallest artifact that fits (d_art ≥ d,
+    /// s_art ≥ s), or `None`.
+    pub fn select(&self, kind: ArtifactKind, d: usize, s: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.d >= d && (kind != ArtifactKind::Lreg || a.s >= s))
+            .min_by_key(|a| (a.d, a.s, a.nc))
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "lreg_d256_nc256_s64", "kind": "lreg", "file": "lreg.hlo.txt",
+         "dims": {"d": 256, "nc": 256, "s": 64}, "dtype": "f32",
+         "inputs": [[256,64],[256],[256,256]], "outputs": 1},
+        {"name": "aopt_d64_nc256", "kind": "aopt", "file": "aopt.hlo.txt",
+         "dims": {"d": 64, "nc": 256}, "dtype": "f32",
+         "inputs": [[64,64],[64,256],[1]], "outputs": 1}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = &m.artifacts[0];
+        assert_eq!(a.kind, ArtifactKind::Lreg);
+        assert_eq!((a.d, a.s, a.nc), (256, 64, 256));
+        assert_eq!(a.file, Path::new("/tmp/a/lreg.hlo.txt"));
+    }
+
+    #[test]
+    fn select_fitting_artifact() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let a = m.select(ArtifactKind::Lreg, 100, 10).unwrap();
+        assert_eq!(a.name, "lreg_d256_nc256_s64");
+        // too big d: nothing fits
+        assert!(m.select(ArtifactKind::Lreg, 1000, 10).is_none());
+        // s too large for the lreg artifact
+        assert!(m.select(ArtifactKind::Lreg, 100, 100).is_none());
+        // aopt ignores s
+        assert!(m.select(ArtifactKind::Aopt, 64, 999).is_some());
+        assert!(m.select(ArtifactKind::Logistic, 1, 0).is_none());
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.by_name("aopt_d64_nc256").is_some());
+        assert!(m.by_name("missing").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_kinds() {
+        assert!(Manifest::parse(r#"{"version": 2, "artifacts": []}"#, Path::new("/")).is_err());
+        let bad_kind = r#"{"version": 1, "artifacts": [
+            {"name": "x", "kind": "bogus", "file": "f", "dims": {}}]}"#;
+        assert!(Manifest::parse(bad_kind, Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn kind_round_trip() {
+        for k in [ArtifactKind::Lreg, ArtifactKind::Aopt, ArtifactKind::Logistic] {
+            assert_eq!(ArtifactKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(ArtifactKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // integration: parse the artifacts/ manifest when built
+        let dir = crate::runtime::default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            for a in &m.artifacts {
+                assert!(a.file.exists(), "missing {:?}", a.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! PJRT runtime service: a dedicated thread owns the (non-`Send`) PJRT CPU
+//! client and every compiled executable; the rest of the system talks to it
+//! through a cloneable, thread-safe [`RuntimeClient`] handle over channels.
+//!
+//! This actor design is forced by FFI (`xla::PjRtClient` holds `Rc`s and
+//! raw pointers) but is also the right coordinator shape: one owner for
+//! device state, all callers funneling batched requests through a queue.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Opaque id of a compiled module inside the service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModuleId(usize);
+
+enum Req {
+    Compile { path: PathBuf, reply: Sender<Result<ModuleId, String>> },
+    Run {
+        module: ModuleId,
+        inputs: Vec<(Vec<f32>, Vec<i64>)>,
+        reply: Sender<Result<Vec<f32>, String>>,
+    },
+    Platform { reply: Sender<Result<String, String>> },
+}
+
+/// Thread-safe handle to the runtime service thread.
+#[derive(Clone)]
+pub struct RuntimeClient {
+    tx: Arc<Mutex<Sender<Req>>>,
+}
+
+static GLOBAL: OnceLock<RuntimeClient> = OnceLock::new();
+
+impl RuntimeClient {
+    /// The process-wide runtime handle (service thread spawned on first
+    /// use; PJRT client creation errors surface on the first request).
+    pub fn global() -> Result<RuntimeClient> {
+        Ok(GLOBAL
+            .get_or_init(|| {
+                let (tx, rx) = channel::<Req>();
+                std::thread::Builder::new()
+                    .name("dash-pjrt".into())
+                    .spawn(move || service_loop(rx))
+                    .expect("spawn pjrt service");
+                RuntimeClient { tx: Arc::new(Mutex::new(tx)) }
+            })
+            .clone())
+    }
+
+    fn send(&self, req: Req) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| anyhow!("pjrt service thread terminated"))
+    }
+
+    /// Backend platform name (e.g. "cpu"); also validates the client came
+    /// up successfully.
+    pub fn platform(&self) -> Result<String> {
+        let (reply, rx) = channel();
+        self.send(Req::Platform { reply })?;
+        rx.recv().context("pjrt service reply")?.map_err(|e| anyhow!(e))
+    }
+
+    /// Load an HLO **text** file and compile it, returning a module handle.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<ModuleId> {
+        let (reply, rx) = channel();
+        self.send(Req::Compile { path: path.to_path_buf(), reply })?;
+        rx.recv().context("pjrt service reply")?.map_err(|e| anyhow!(e))
+    }
+
+    /// Execute a compiled module with f32 inputs (row-major shapes);
+    /// returns the first tuple element flattened.
+    pub fn run_f32(
+        &self,
+        module: ModuleId,
+        inputs: Vec<(Vec<f32>, Vec<i64>)>,
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.send(Req::Run { module, inputs, reply })?;
+        rx.recv().context("pjrt service reply")?.map_err(|e| anyhow!(e))
+    }
+}
+
+fn service_loop(rx: std::sync::mpsc::Receiver<Req>) {
+    // the client is created lazily so construction errors can be reported
+    // through a request's reply channel instead of killing the thread
+    let mut client: Option<std::result::Result<xla::PjRtClient, String>> = None;
+    let mut modules: Vec<xla::PjRtLoadedExecutable> = Vec::new();
+
+    let ensure_client = |slot: &mut Option<std::result::Result<xla::PjRtClient, String>>| {
+        if slot.is_none() {
+            *slot = Some(xla::PjRtClient::cpu().map_err(|e| e.to_string()));
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Platform { reply } => {
+                ensure_client(&mut client);
+                let r = match client.as_ref().unwrap() {
+                    Ok(c) => Ok(c.platform_name()),
+                    Err(e) => Err(e.clone()),
+                };
+                let _ = reply.send(r);
+            }
+            Req::Compile { path, reply } => {
+                ensure_client(&mut client);
+                let r = (|| -> std::result::Result<ModuleId, String> {
+                    let c = client.as_ref().unwrap().as_ref().map_err(|e| e.clone())?;
+                    let proto = xla::HloModuleProto::from_text_file(&path)
+                        .map_err(|e| format!("parsing HLO text {path:?}: {e}"))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = c
+                        .compile(&comp)
+                        .map_err(|e| format!("compiling {path:?}: {e}"))?;
+                    modules.push(exe);
+                    Ok(ModuleId(modules.len() - 1))
+                })();
+                let _ = reply.send(r);
+            }
+            Req::Run { module, inputs, reply } => {
+                let r = (|| -> std::result::Result<Vec<f32>, String> {
+                    let exe = modules
+                        .get(module.0)
+                        .ok_or_else(|| format!("unknown module {module:?}"))?;
+                    let mut literals = Vec::with_capacity(inputs.len());
+                    for (data, dims) in &inputs {
+                        let numel: i64 = dims.iter().product();
+                        if numel as usize != data.len() {
+                            return Err(format!(
+                                "input length {} != shape {:?}",
+                                data.len(),
+                                dims
+                            ));
+                        }
+                        let lit = xla::Literal::vec1(data);
+                        let lit = if dims.len() == 1 {
+                            lit
+                        } else {
+                            lit.reshape(dims).map_err(|e| e.to_string())?
+                        };
+                        literals.push(lit);
+                    }
+                    let result = exe
+                        .execute::<xla::Literal>(&literals)
+                        .map_err(|e| e.to_string())?;
+                    let out = result[0][0].to_literal_sync().map_err(|e| e.to_string())?;
+                    // aot.py lowers with return_tuple=True → unwrap 1-tuple
+                    let first = out.to_tuple1().map_err(|e| e.to_string())?;
+                    first.to_vec::<f32>().map_err(|e| e.to_string())
+                })();
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        crate::runtime::default_artifacts_dir()
+    }
+
+    #[test]
+    fn client_and_compile_round_trip() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let manifest = crate::runtime::Manifest::load(&dir).unwrap();
+        let client = RuntimeClient::global().unwrap();
+        let platform = client.platform().unwrap().to_lowercase();
+        assert!(platform.contains("cpu") || platform.contains("host"), "{platform}");
+        // compile the smallest aopt artifact and execute it on identity M
+        let art = manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == crate::runtime::ArtifactKind::Aopt)
+            .min_by_key(|a| a.d)
+            .expect("aopt artifact");
+        let module = client.compile_hlo_text(&art.file).unwrap();
+        let d = art.d;
+        let nc = art.nc;
+        // M = I, candidate 0 = 2·e_0, rest zero
+        let mut m = vec![0.0f32; d * d];
+        for i in 0..d {
+            m[i * d + i] = 1.0;
+        }
+        let mut xc = vec![0.0f32; d * nc];
+        xc[0] = 2.0; // row-major (d, nc): element (0, 0)
+        let gains = client
+            .run_f32(
+                module,
+                vec![
+                    (m, vec![d as i64, d as i64]),
+                    (xc, vec![d as i64, nc as i64]),
+                    (vec![1.0f32], vec![1]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(gains.len(), nc);
+        // gain for x = 2e_0 with M=I, σ=1: ‖Mx‖²/(1+xᵀMx) = 4/5
+        assert!((gains[0] - 0.8).abs() < 1e-5, "gain {}", gains[0]);
+        assert!(gains[1..].iter().all(|&g| g.abs() < 1e-6));
+    }
+
+    #[test]
+    fn handle_is_send_sync_and_clone() {
+        fn assert_send_sync<T: Send + Sync + Clone>() {}
+        assert_send_sync::<RuntimeClient>();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let manifest = crate::runtime::Manifest::load(&dir).unwrap();
+        let client = RuntimeClient::global().unwrap();
+        let module = client.compile_hlo_text(&manifest.artifacts[0].file).unwrap();
+        assert!(client.run_f32(module, vec![(vec![0.0; 3], vec![2])]).is_err());
+    }
+
+    #[test]
+    fn unknown_module_rejected() {
+        let client = RuntimeClient::global().unwrap();
+        // skip if PJRT unavailable
+        if client.platform().is_err() {
+            return;
+        }
+        assert!(client.run_f32(ModuleId(9999), vec![]).is_err());
+    }
+}

@@ -1,0 +1,329 @@
+//! High-level gain executor: pads rust-side f64 state into the fixed f32
+//! shapes of an AOT artifact, runs the module, and unpads the results.
+//!
+//! Padding contract (validated by the python kernel tests):
+//! - extra *rows* (samples) are zero — they contribute nothing to any dot;
+//! - extra *basis columns* (lreg) are zero — no projection contribution;
+//! - extra *candidate columns* are zero — their gain comes back 0 and is
+//!   discarded;
+//! - candidate batches larger than the artifact's `nc` are chunked.
+
+use super::artifact::{Artifact, ArtifactKind, Manifest};
+use super::client::{ModuleId, RuntimeClient};
+use crate::linalg::Matrix;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Artifacts directory: `DASH_ARTIFACTS` env var, falling back to
+/// `<crate root>/artifacts` (works from `cargo test`/`cargo run`), falling
+/// back to `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("DASH_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let crate_rel = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if crate_rel.exists() {
+        return crate_rel;
+    }
+    PathBuf::from("artifacts")
+}
+
+/// A compiled gain oracle bound to one artifact. Cheap to clone; all
+/// clones share the service-resident executable.
+#[derive(Clone)]
+pub struct GainExecutor {
+    artifact: Artifact,
+    client: RuntimeClient,
+    module: ModuleId,
+}
+
+impl GainExecutor {
+    /// Select (smallest fitting) and compile an artifact of `kind` for a
+    /// problem with `d` samples and up to `s` basis columns.
+    pub fn for_kind(manifest: &Manifest, kind: ArtifactKind, d: usize, s: usize) -> Result<Self> {
+        let artifact = manifest
+            .select(kind, d, s)
+            .with_context(|| {
+                format!(
+                    "no {} artifact fits d={d}, s={s}; re-run `make artifacts` \
+                     with a larger profile (PROFILE=paper)",
+                    kind.as_str()
+                )
+            })?
+            .clone();
+        let client = RuntimeClient::global()?;
+        let module = client.compile_hlo_text(&artifact.file)?;
+        Ok(GainExecutor { artifact, client, module })
+    }
+
+    pub fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+
+    /// Regression gains for `cand` columns of `x` given basis `q` (list of
+    /// d-vectors) and residual `r`. Returns one gain per candidate.
+    pub fn lreg_gains(
+        &self,
+        q: &[Vec<f64>],
+        r: &[f64],
+        x: &Matrix,
+        cand: &[usize],
+    ) -> Result<Vec<f64>> {
+        let a = &self.artifact;
+        anyhow::ensure!(a.kind == ArtifactKind::Lreg, "not an lreg artifact");
+        let d = r.len();
+        anyhow::ensure!(d <= a.d, "d {} exceeds artifact d {}", d, a.d);
+        anyhow::ensure!(q.len() <= a.s, "basis {} exceeds artifact s {}", q.len(), a.s);
+
+        // q: row-major (a.d, a.s), zero-padded
+        let mut q_rm = vec![0.0f32; a.d * a.s];
+        for (j, col) in q.iter().enumerate() {
+            for (i, &v) in col.iter().enumerate() {
+                q_rm[i * a.s + j] = v as f32;
+            }
+        }
+        let mut r_pad = vec![0.0f32; a.d];
+        for (i, &v) in r.iter().enumerate() {
+            r_pad[i] = v as f32;
+        }
+
+        let mut out = Vec::with_capacity(cand.len());
+        for chunk in cand.chunks(a.nc) {
+            let mut xc = vec![0.0f32; a.d * a.nc];
+            for (j, &c) in chunk.iter().enumerate() {
+                let col = x.col(c);
+                for (i, &v) in col.iter().enumerate() {
+                    xc[i * a.nc + j] = v as f32;
+                }
+            }
+            let gains = self.client.run_f32(
+                self.module,
+                vec![
+                    (q_rm.clone(), vec![a.d as i64, a.s as i64]),
+                    (r_pad.clone(), vec![a.d as i64]),
+                    (xc, vec![a.d as i64, a.nc as i64]),
+                ],
+            )?;
+            out.extend(gains[..chunk.len()].iter().map(|&g| g as f64));
+        }
+        Ok(out)
+    }
+
+    /// A-optimality gains for `cand` columns of `x` given posterior `m`.
+    pub fn aopt_gains(
+        &self,
+        m: &Matrix,
+        x: &Matrix,
+        cand: &[usize],
+        sigma_sq_inv: f64,
+    ) -> Result<Vec<f64>> {
+        let a = &self.artifact;
+        anyhow::ensure!(a.kind == ArtifactKind::Aopt, "not an aopt artifact");
+        let d = m.rows();
+        anyhow::ensure!(d <= a.d, "d {} exceeds artifact d {}", d, a.d);
+
+        let mut m_rm = vec![0.0f32; a.d * a.d];
+        for j in 0..d {
+            let col = m.col(j);
+            for i in 0..d {
+                m_rm[i * a.d + j] = col[i] as f32;
+            }
+        }
+        let sig = vec![sigma_sq_inv as f32];
+
+        let mut out = Vec::with_capacity(cand.len());
+        for chunk in cand.chunks(a.nc) {
+            let mut xc = vec![0.0f32; a.d * a.nc];
+            for (j, &c) in chunk.iter().enumerate() {
+                let col = x.col(c);
+                for (i, &v) in col.iter().enumerate() {
+                    xc[i * a.nc + j] = v as f32;
+                }
+            }
+            let gains = self.client.run_f32(
+                self.module,
+                vec![
+                    (m_rm.clone(), vec![a.d as i64, a.d as i64]),
+                    (xc, vec![a.d as i64, a.nc as i64]),
+                    (sig.clone(), vec![1]),
+                ],
+            )?;
+            out.extend(gains[..chunk.len()].iter().map(|&g| g as f64));
+        }
+        Ok(out)
+    }
+
+    /// Score-test logistic gains for `cand` columns of `x` given working
+    /// residual `resid = y − p` and IRLS weights `w = p(1−p)`.
+    pub fn logistic_gains(
+        &self,
+        x: &Matrix,
+        cand: &[usize],
+        resid: &[f64],
+        w: &[f64],
+    ) -> Result<Vec<f64>> {
+        let a = &self.artifact;
+        anyhow::ensure!(a.kind == ArtifactKind::Logistic, "not a logistic artifact");
+        let d = resid.len();
+        anyhow::ensure!(d <= a.d, "d {} exceeds artifact d {}", d, a.d);
+
+        let mut r_pad = vec![0.0f32; a.d];
+        let mut w_pad = vec![0.0f32; a.d];
+        for i in 0..d {
+            r_pad[i] = resid[i] as f32;
+            w_pad[i] = w[i] as f32;
+        }
+
+        let mut out = Vec::with_capacity(cand.len());
+        for chunk in cand.chunks(a.nc) {
+            let mut xc = vec![0.0f32; a.d * a.nc];
+            for (j, &c) in chunk.iter().enumerate() {
+                let col = x.col(c);
+                for (i, &v) in col.iter().enumerate() {
+                    xc[i * a.nc + j] = v as f32;
+                }
+            }
+            let gains = self.client.run_f32(
+                self.module,
+                vec![
+                    (xc, vec![a.d as i64, a.nc as i64]),
+                    (r_pad.clone(), vec![a.d as i64]),
+                    (w_pad.clone(), vec![a.d as i64]),
+                ],
+            )?;
+            out.extend(gains[..chunk.len()].iter().map(|&g| g as f64));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::objectives::Objective;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn lreg_executor_matches_native_state() {
+        let Some(m) = manifest() else { return };
+        let mut rng = Pcg64::seed_from(1);
+        let ds = crate::data::synthetic::regression_d1(&mut rng, 100, 20, 8, 0.3);
+        let obj = crate::objectives::LinearRegressionObjective::new(&ds);
+        let exe = GainExecutor::for_kind(&m, ArtifactKind::Lreg, 100, 16).unwrap();
+
+        // state after selecting a few features
+        let set = vec![3usize, 7, 12];
+        let st = obj.state_for(&set);
+        // reconstruct basis + residual from a fresh incremental QR
+        let mut qr = crate::linalg::IncrementalQr::new(100);
+        for &a in &set {
+            qr.push_col(ds.x.col(a));
+        }
+        let r = qr.residual(&ds.y);
+        let cand: Vec<usize> = (0..20).filter(|a| !set.contains(a)).collect();
+        let xla_gains = exe
+            .lreg_gains(qr.basis(), &r, &ds.x, &cand)
+            .unwrap();
+        let native = st.gains(&cand);
+        let y_sq = crate::linalg::dot(&ds.y, &ds.y);
+        for (i, &a) in cand.iter().enumerate() {
+            let xla_norm = xla_gains[i] / y_sq;
+            assert!(
+                (xla_norm - native[i]).abs() < 1e-4 * (1.0 + native[i].abs()),
+                "cand {a}: xla {xla_norm} vs native {}",
+                native[i]
+            );
+        }
+    }
+
+    #[test]
+    fn aopt_executor_matches_native_state() {
+        let Some(m) = manifest() else { return };
+        let mut rng = Pcg64::seed_from(2);
+        let ds = crate::data::synthetic::design_d1(&mut rng, 32, 50, 0.4);
+        let obj = crate::objectives::AOptimalityObjective::new(&ds, 1.0, 1.0);
+        let exe = GainExecutor::for_kind(&m, ArtifactKind::Aopt, 32, 0).unwrap();
+
+        let set = vec![1usize, 9, 33];
+        let st = obj.state_for(&set);
+        // rebuild M via Sherman–Morrison like the objective does
+        let mut mat = Matrix::identity(32);
+        for &a in &set {
+            let x = ds.x.col(a);
+            let mut mx = vec![0.0; 32];
+            crate::linalg::gemv(&mat, x, &mut mx);
+            let xmx = crate::linalg::dot(x, &mx);
+            let scale = 1.0 / (1.0 + xmx);
+            for j in 0..32 {
+                let c = scale * mx[j];
+                for i in 0..32 {
+                    let v = mat.get(i, j) - c * mx[i];
+                    mat.set(i, j, v);
+                }
+            }
+        }
+        let cand: Vec<usize> = (0..50).filter(|a| !set.contains(a)).collect();
+        let xla_gains = exe.aopt_gains(&mat, &ds.x, &cand, 1.0).unwrap();
+        let native = st.gains(&cand);
+        let prior_trace = 32.0;
+        for (i, &a) in cand.iter().enumerate() {
+            let xla_norm = xla_gains[i] / prior_trace;
+            assert!(
+                (xla_norm - native[i]).abs() < 1e-5 * (1.0 + native[i].abs()),
+                "cand {a}: xla {xla_norm} vs native {}",
+                native[i]
+            );
+        }
+    }
+
+    #[test]
+    fn chunking_handles_large_batches() {
+        let Some(m) = manifest() else { return };
+        let mut rng = Pcg64::seed_from(3);
+        // more candidates than the artifact's nc forces chunked execution
+        let art = m.select(ArtifactKind::Logistic, 64, 0).unwrap().clone();
+        let n = art.nc + 17;
+        let ds = crate::data::synthetic::classification_d3(&mut rng, 64, n, 10, 0.2);
+        let exe = GainExecutor::for_kind(&m, ArtifactKind::Logistic, 64, 0).unwrap();
+        let p0 = vec![0.5; 64];
+        let resid: Vec<f64> = ds.y.iter().zip(&p0).map(|(y, p)| y - p).collect();
+        let w: Vec<f64> = p0.iter().map(|p| p * (1.0 - p)).collect();
+        let cand: Vec<usize> = (0..n).collect();
+        let gains = exe.logistic_gains(&ds.x, &cand, &resid, &w).unwrap();
+        assert_eq!(gains.len(), n);
+        assert!(gains.iter().all(|g| g.is_finite() && *g >= 0.0));
+    }
+
+    #[test]
+    fn kind_mismatch_rejected() {
+        let Some(m) = manifest() else { return };
+        let exe = GainExecutor::for_kind(&m, ArtifactKind::Aopt, 16, 0).unwrap();
+        let mat = Matrix::identity(16);
+        let x = Matrix::zeros(16, 4);
+        assert!(exe.lreg_gains(&[], &vec![0.0; 16], &x, &[0]).is_err());
+        assert!(exe.aopt_gains(&mat, &x, &[0], 1.0).is_ok());
+    }
+
+    #[test]
+    fn oversize_problem_rejected() {
+        let Some(m) = manifest() else { return };
+        let biggest = m
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Lreg)
+            .map(|a| a.d)
+            .max()
+            .unwrap();
+        assert!(GainExecutor::for_kind(&m, ArtifactKind::Lreg, biggest + 1, 1).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! Python never runs at serving time: `make artifacts` is the only step
+//! that touches JAX, and the rust binary is self-contained afterwards.
+//!
+//! - [`artifact`] — `manifest.json` parsing and artifact discovery
+//! - [`client`] — thin wrapper over `xla::PjRtClient` (CPU)
+//! - [`executor`] — compile-once executable cache + padded execution
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{Artifact, ArtifactKind, Manifest};
+pub use client::RuntimeClient;
+pub use executor::{default_artifacts_dir, GainExecutor};

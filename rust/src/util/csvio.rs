@@ -1,0 +1,246 @@
+//! Tiny CSV reader/writer for experiment output and dataset persistence.
+//!
+//! Handles quoting (RFC-4180 style: fields containing `,`, `"` or newlines
+//! are wrapped in double quotes, embedded quotes doubled).
+
+use std::fs;
+use std::io::{self, Write as _};
+use std::path::Path;
+
+/// An in-memory CSV table: a header row plus data rows of equal width.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        CsvTable { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; panics if the width disagrees with the header (a
+    /// programming error in the experiment drivers).
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "csv row width mismatch");
+        self.rows.push(row);
+    }
+
+    /// Append a row of floats formatted via [`crate::util::fmt_f64`].
+    pub fn push_f64(&mut self, row: &[f64]) {
+        self.push(row.iter().map(|v| crate::util::fmt_f64(*v)).collect());
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// All values of a named column parsed as f64 (NaN on parse failure).
+    pub fn col_f64(&self, name: &str) -> Vec<f64> {
+        let Some(i) = self.col(name) else { return Vec::new() };
+        self.rows.iter().map(|r| r[i].parse::<f64>().unwrap_or(f64::NAN)).collect()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+
+    pub fn parse(text: &str) -> Result<CsvTable, String> {
+        let mut rows = parse_rows(text)?;
+        if rows.is_empty() {
+            return Err("empty csv".into());
+        }
+        let header = rows.remove(0);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != header.len() {
+                return Err(format!(
+                    "row {} has {} fields, header has {}",
+                    i + 1,
+                    r.len(),
+                    header.len()
+                ));
+            }
+        }
+        Ok(CsvTable { header, rows })
+    }
+
+    pub fn load(path: &Path) -> Result<CsvTable, String> {
+        let text = fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::parse(&text)
+    }
+
+    /// Render as an aligned plain-text table (for terminal reports).
+    pub fn to_pretty(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{:>w$}", c, w = widths[i]));
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len().saturating_sub(1));
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+fn needs_quoting(s: &str) -> bool {
+    s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r')
+}
+
+fn write_row(out: &mut String, row: &[String]) {
+    for (i, field) in row.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if needs_quoting(field) {
+            out.push('"');
+            out.push_str(&field.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(field);
+        }
+    }
+    out.push('\n');
+}
+
+fn parse_rows(text: &str) -> Result<Vec<Vec<String>>, String> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\r' => {}
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quote".into());
+    }
+    if any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_simple() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.push(vec!["1".into(), "x".into()]);
+        t.push(vec!["2".into(), "y".into()]);
+        let s = t.to_string();
+        assert_eq!(CsvTable::parse(&s).unwrap(), t);
+    }
+
+    #[test]
+    fn round_trip_quoted() {
+        let mut t = CsvTable::new(&["name", "val"]);
+        t.push(vec!["has,comma".into(), "has\"quote".into()]);
+        t.push(vec!["has\nnewline".into(), "plain".into()]);
+        let s = t.to_string();
+        assert_eq!(CsvTable::parse(&s).unwrap(), t);
+    }
+
+    #[test]
+    fn width_mismatch_rejected() {
+        assert!(CsvTable::parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn col_accessors() {
+        let t = CsvTable::parse("k,val\n1,0.5\n2,0.75\n").unwrap();
+        assert_eq!(t.col("val"), Some(1));
+        assert_eq!(t.col_f64("val"), vec![0.5, 0.75]);
+        assert!(t.col("nope").is_none());
+        assert!(t.col_f64("nope").is_empty());
+    }
+
+    #[test]
+    fn no_trailing_newline_ok() {
+        let t = CsvTable::parse("a,b\n1,2").unwrap();
+        assert_eq!(t.rows, vec![vec!["1".to_string(), "2".to_string()]]);
+    }
+
+    #[test]
+    fn crlf_ok() {
+        let t = CsvTable::parse("a,b\r\n1,2\r\n").unwrap();
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn pretty_renders() {
+        let t = CsvTable::parse("algo,value\ndash,0.9\ngreedy,0.91\n").unwrap();
+        let p = t.to_pretty();
+        assert!(p.contains("dash"));
+        assert!(p.lines().count() >= 4);
+    }
+
+    #[test]
+    fn save_load(){
+        let mut t = CsvTable::new(&["x"]);
+        t.push_f64(&[1.25]);
+        let p = std::env::temp_dir().join("dash_select_csv_test.csv");
+        t.save(&p).unwrap();
+        assert_eq!(CsvTable::load(&p).unwrap(), t);
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,104 @@
+//! General-purpose substrates built from scratch (the image is offline and
+//! ships no general crates): JSON, CSV, timing, logging, a thread pool with
+//! parallel-map, a progress meter, and a miniature property-testing harness.
+
+pub mod json;
+pub mod csvio;
+pub mod timer;
+pub mod logging;
+pub mod threadpool;
+pub mod progress;
+pub mod proptest;
+
+pub use json::Json;
+pub use timer::Timer;
+pub use threadpool::ThreadPool;
+
+/// Format a float compactly for tables (trims trailing zeros, 4 sig decimals).
+pub fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        return "nan".into();
+    }
+    if v == 0.0 {
+        return "0".into();
+    }
+    let a = v.abs();
+    if a >= 1e6 || a < 1e-4 {
+        format!("{v:.3e}")
+    } else {
+        let s = format!("{v:.4}");
+        let s = s.trim_end_matches('0').trim_end_matches('.');
+        s.to_string()
+    }
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (0 for fewer than 2 entries).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// `p`-quantile (linear interpolation) of an unsorted slice.
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (idx - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_trims() {
+        assert_eq!(fmt_f64(1.5), "1.5");
+        assert_eq!(fmt_f64(0.0), "0");
+        assert_eq!(fmt_f64(2.0), "2");
+    }
+
+    #[test]
+    fn fmt_extremes_scientific() {
+        assert!(fmt_f64(1.23e9).contains('e'));
+        assert!(fmt_f64(1.23e-9).contains('e'));
+        assert_eq!(fmt_f64(f64::NAN), "nan");
+    }
+
+    #[test]
+    fn mean_stddev_quantile() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.2909944487358056).abs() < 1e-12);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[]), 0.0);
+        assert!(quantile(&[], 0.5).is_nan());
+    }
+}

@@ -1,0 +1,95 @@
+//! Terminal progress meter for long experiment sweeps (stderr, no deps).
+//!
+//! Quiet unless logging level is at least Info and stderr is not captured.
+
+use crate::util::logging::{enabled, Level};
+use crate::util::timer::fmt_duration_s;
+use std::time::Instant;
+
+/// A counting progress meter: `Progress::new("fig2 sweep", 40)`.
+pub struct Progress {
+    label: String,
+    total: usize,
+    done: usize,
+    start: Instant,
+    last_render: f64,
+    active: bool,
+}
+
+impl Progress {
+    pub fn new(label: &str, total: usize) -> Self {
+        Progress {
+            label: label.to_string(),
+            total,
+            done: 0,
+            start: Instant::now(),
+            last_render: -1.0,
+            active: enabled(Level::Info),
+        }
+    }
+
+    /// Advance by one step and maybe re-render (throttled to 10 Hz).
+    pub fn tick(&mut self) {
+        self.done += 1;
+        let t = self.start.elapsed().as_secs_f64();
+        if self.active && (t - self.last_render > 0.1 || self.done == self.total) {
+            self.last_render = t;
+            let pct = if self.total == 0 {
+                100.0
+            } else {
+                100.0 * self.done as f64 / self.total as f64
+            };
+            let eta = if self.done > 0 && self.total > self.done {
+                let rate = t / self.done as f64;
+                format!(" eta {}", fmt_duration_s(rate * (self.total - self.done) as f64))
+            } else {
+                String::new()
+            };
+            eprint!(
+                "\r[dash] {}: {}/{} ({:.0}%) {}{}   ",
+                self.label,
+                self.done,
+                self.total,
+                pct,
+                fmt_duration_s(t),
+                eta
+            );
+            if self.done >= self.total {
+                eprintln!();
+            }
+        }
+    }
+
+    pub fn done(&self) -> usize {
+        self.done
+    }
+
+    pub fn finish(&mut self) {
+        if self.active && self.done < self.total {
+            self.done = self.total.saturating_sub(1);
+            self.tick();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticks_count() {
+        let mut p = Progress::new("test", 3);
+        p.tick();
+        p.tick();
+        assert_eq!(p.done(), 2);
+        p.finish();
+        assert!(p.done() >= 2);
+    }
+
+    #[test]
+    fn zero_total_does_not_divide_by_zero() {
+        let mut p = Progress::new("zero", 0);
+        p.tick(); // should not panic
+        assert_eq!(p.done(), 1);
+    }
+}

@@ -1,0 +1,186 @@
+//! Miniature property-based testing harness (the `proptest` crate is not
+//! available offline).
+//!
+//! A property is a closure `Fn(&mut Gen) -> Result<(), String>`; the runner
+//! executes it for `cases` deterministic seeds with a growing size budget.
+//! On failure it re-runs at smaller sizes to report the smallest failing
+//! size, then panics with the seed so the case can be replayed exactly:
+//!
+//! ```no_run
+//! use dash_select::util::proptest::{check, Gen};
+//! check("sort idempotent", 64, |g| {
+//!     let mut v = g.vec_f64(0.0, 1.0, g.size());
+//!     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     let w = { let mut w = v.clone(); w.sort_by(|a, b| a.partial_cmp(b).unwrap()); w };
+//!     if v == w { Ok(()) } else { Err("not idempotent".into()) }
+//! });
+//! ```
+
+use crate::rng::Pcg64;
+
+/// Randomness + size budget handed to properties.
+pub struct Gen {
+    rng: Pcg64,
+    size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen { rng: Pcg64::seed_from(seed), size: size.max(1) }
+    }
+
+    /// Current size budget (grows over cases; properties should scale their
+    /// instances by it so small cases run first).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.gen_range_usize(lo, hi)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f64(&mut self, lo: f64, hi: f64, len: usize) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// A standard-normal vector.
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f64> {
+        (0..len).map(|_| self.rng.next_gaussian()).collect()
+    }
+
+    /// A random subset of `0..n` of the given size (uniform, no repeats).
+    pub fn subset(&mut self, n: usize, size: usize) -> Vec<usize> {
+        self.rng.sample_indices(n, size.min(n))
+    }
+}
+
+/// Run `prop` for `cases` seeds. Panics with a replayable seed on failure.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(name, cases, 0xDA5E_0001, prop)
+}
+
+/// [`check`] with an explicit base seed (replays: pass the reported seed
+/// with `cases = 1`).
+pub fn check_seeded<F>(name: &str, cases: usize, base_seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // size ramps from 2 to ~66 over the run
+        let size = 2 + (case * 64) / cases.max(1);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // try to find a smaller failing size for readability
+            let mut min_fail = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut g2 = Gen::new(seed, s);
+                match prop(&mut g2) {
+                    Err(m) => {
+                        min_fail = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {}): {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+/// Assert two floats agree to a relative-or-absolute tolerance; formats a
+/// useful error for property bodies.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol}, diff {})", (a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("sum symmetric", 32, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            close(a + b, b + a, 1e-12)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn subset_is_valid() {
+        check("subset bounds", 32, |g| {
+            let n = g.usize_in(1, 50);
+            let k = g.usize_in(0, n);
+            let s = g.subset(n, k);
+            if s.len() != k {
+                return Err(format!("len {} != {}", s.len(), k));
+            }
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != k {
+                return Err("duplicates".into());
+            }
+            if s.iter().any(|&i| i >= n) {
+                return Err("out of range".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-13, 1e-12).is_ok());
+        assert!(close(1.0, 1.1, 1e-12).is_err());
+        // relative scaling: large numbers allowed proportional slack
+        assert!(close(1e9, 1e9 + 1.0, 1e-8).is_ok());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut g1 = Gen::new(42, 10);
+        let mut g2 = Gen::new(42, 10);
+        assert_eq!(g1.u64(), g2.u64());
+        assert_eq!(g1.vec_f64(0.0, 1.0, 5), g2.vec_f64(0.0, 1.0, 5));
+    }
+}

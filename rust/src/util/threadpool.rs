@@ -1,0 +1,225 @@
+//! A small fixed-size thread pool with a scoped `parallel_map`, built on
+//! `std::thread` and channels (tokio is unavailable offline).
+//!
+//! The oracle layer uses this to evaluate independent marginal-gain queries
+//! concurrently — the "polynomially many queries per adaptive round" of the
+//! paper's adaptivity model. On a single-core testbed the pool degrades to
+//! near-sequential execution; round/query accounting (what the paper
+//! actually measures) is unaffected.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Dropping the pool joins all workers.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("dash-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped -> shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, size }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`), or `DASH_THREADS`.
+    pub fn default_size() -> usize {
+        if let Ok(v) = std::env::var("DASH_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("worker channel closed");
+    }
+
+    /// Apply `f` to `0..n`, writing results in index order. Blocks until all
+    /// chunks complete. `f` must be `Sync` (shared across workers).
+    ///
+    /// Work is split into `size * 4` contiguous chunks for load balancing.
+    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + Default + Clone + 'static,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out = vec![T::default(); n];
+        let chunks = (self.size * 4).min(n).max(1);
+        let chunk_len = n.div_ceil(chunks);
+        let pending = AtomicUsize::new(0);
+        let (done_tx, done_rx) = channel::<()>();
+
+        // SAFETY-free scoped execution: we use std::thread::scope so borrows
+        // of `f` and `out` are statically guaranteed to outlive the workers.
+        // The pool's own threads are used only through `execute`, which
+        // requires 'static; for borrowed closures we spawn scoped threads
+        // directly, bounded by pool size.
+        std::thread::scope(|scope| {
+            let out_ptr = SendPtr(out.as_mut_ptr());
+            let f = &f;
+            let mut spawned = 0usize;
+            for c in 0..chunks {
+                let start = c * chunk_len;
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk_len).min(n);
+                pending.fetch_add(1, Ordering::SeqCst);
+                let done_tx = done_tx.clone();
+                let pending_ref = &pending;
+                let out_ptr = out_ptr;
+                if spawned < self.size.saturating_sub(1) {
+                    spawned += 1;
+                    scope.spawn(move || {
+                        // rebind the wrapper: edition-2021 disjoint capture
+                        // would otherwise capture the raw-pointer field
+                        // directly, which is !Send
+                        let out_ptr = out_ptr;
+                        for i in start..end {
+                            let v = f(i);
+                            // SAFETY: each index i is written by exactly one
+                            // chunk; chunks are disjoint; `out` outlives scope.
+                            unsafe { *out_ptr.0.add(i) = v };
+                        }
+                        pending_ref.fetch_sub(1, Ordering::SeqCst);
+                        let _ = done_tx.send(());
+                    });
+                } else {
+                    // run remaining chunks inline to avoid oversubscription
+                    for i in start..end {
+                        let v = f(i);
+                        unsafe { *out_ptr.0.add(i) = v };
+                    }
+                    pending.fetch_sub(1, Ordering::SeqCst);
+                    let _ = done_tx.send(());
+                }
+            }
+            drop(done_tx);
+            while pending.load(Ordering::SeqCst) > 0 {
+                if done_rx.recv().is_err() {
+                    break;
+                }
+            }
+        });
+        out
+    }
+}
+
+struct SendPtr<T>(*mut T);
+// manual impls: derive would add a spurious `T: Copy` bound
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+// SAFETY: used only for disjoint index writes inside thread::scope.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Convenience: one-shot parallel map with a temporary default-size pool.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone + 'static,
+    F: Fn(usize) -> T + Sync,
+{
+    ThreadPool::new(ThreadPool::default_size()).parallel_map(n, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn execute_runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_order_and_values() {
+        let pool = ThreadPool::new(3);
+        let out = pool.parallel_map(257, |i| i * i);
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        let pool = ThreadPool::new(2);
+        assert!(pool.parallel_map(0, |i| i).is_empty());
+        assert_eq!(pool.parallel_map(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn parallel_map_borrowed_state() {
+        let data: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let pool = ThreadPool::new(4);
+        let out = pool.parallel_map(1000, |i| data[i] * 2.0);
+        assert_eq!(out[999], 1998.0);
+    }
+
+    #[test]
+    fn pool_size_floor() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        assert_eq!(pool.parallel_map(5, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+}

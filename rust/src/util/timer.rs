@@ -1,0 +1,100 @@
+//! Wall-clock timing helpers used by the experiment harness and benches.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch with split support.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+    last_split: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Timer { start: now, last_split: now }
+    }
+
+    /// Seconds since construction.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Seconds since the previous `split()` (or construction), and resets
+    /// the split point.
+    pub fn split_s(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last_split).as_secs_f64();
+        self.last_split = now;
+        dt
+    }
+
+    pub fn reset(&mut self) {
+        let now = Instant::now();
+        self.start = now;
+        self.last_split = now;
+    }
+}
+
+/// Time a closure; returns (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Human-readable duration: "532ms", "2.41s", "3m12s".
+pub fn fmt_duration_s(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.0}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.0}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        let m = (s / 60.0).floor();
+        format!("{}m{:02.0}s", m as u64, s - m * 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let mut t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let a = t.split_s();
+        assert!(a > 0.0);
+        let b = t.elapsed_s();
+        assert!(b >= a);
+        t.reset();
+        assert!(t.elapsed_s() < b);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration_s(0.0000005), "0us");
+        assert_eq!(fmt_duration_s(0.5), "500ms");
+        assert_eq!(fmt_duration_s(2.5), "2.50s");
+        assert_eq!(fmt_duration_s(200.0), "3m20s");
+    }
+}
