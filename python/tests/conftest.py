@@ -1,0 +1,96 @@
+"""Test-harness bootstrap for the python/ tree.
+
+Two jobs:
+
+1. Put ``python/`` on ``sys.path`` so ``from compile import ...`` works no
+   matter where pytest is invoked from (repo root, python/, CI).
+2. Provide a deterministic fallback for ``hypothesis`` when it is not
+   installed (the offline build image ships no dev extras). The shim
+   implements the tiny slice the kernel tests use — ``given``,
+   ``settings``, and ``strategies.integers/floats`` — by sampling a fixed
+   number of seeded examples, so the property tests still sweep shapes
+   offline while CI (which installs real hypothesis) gets full shrinking.
+"""
+
+import random
+import sys
+import types
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def _install_hypothesis_fallback():
+    try:
+        import hypothesis  # noqa: F401
+
+        return
+    except ImportError:
+        pass
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+    _DEFAULT_MAX_EXAMPLES = 15
+
+    def given(**strategies):
+        def decorate(fn):
+            def wrapper(*args, **kwargs):
+                max_examples = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for case in range(max_examples):
+                    rng = random.Random(0xDA5E + 7919 * case)
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as e:  # annotate with the failing draw
+                        raise AssertionError(
+                            f"property failed on fallback case {case}: {drawn}"
+                        ) from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return decorate
+
+    st_module = types.ModuleType("hypothesis.strategies")
+    st_module.integers = integers
+    st_module.floats = floats
+    st_module.booleans = booleans
+    st_module.sampled_from = sampled_from
+
+    hyp_module = types.ModuleType("hypothesis")
+    hyp_module.given = given
+    hyp_module.settings = settings
+    hyp_module.strategies = st_module
+    hyp_module.__offline_fallback__ = True
+
+    sys.modules["hypothesis"] = hyp_module
+    sys.modules["hypothesis.strategies"] = st_module
+
+
+_install_hypothesis_fallback()

@@ -1,0 +1,114 @@
+//! BatchExecutor micro-benchmarks: sequential vs pool-sharded gain sweeps
+//! on the regression and A-optimality oracles, plus the GainCache memo
+//! path. Records the sweep throughput comparison to `BENCH_executor.json`
+//! at the repository root so the speedup is tracked across PRs.
+//!
+//! Run: `cargo bench --offline --bench executor` (DASH_BENCH_FAST=1 for a
+//! quick pass; DASH_THREADS=N to pin the pool size).
+
+use dash_select::bench::Bench;
+use dash_select::data::synthetic;
+use dash_select::objectives::{AOptimalityObjective, LinearRegressionObjective, Objective};
+use dash_select::oracle::{BatchExecutor, GainCache};
+use dash_select::rng::Pcg64;
+use dash_select::util::json::Json;
+use dash_select::util::threadpool::ThreadPool;
+use std::path::PathBuf;
+
+fn main() {
+    let mut bench = Bench::new("executor");
+    let mut rng = Pcg64::seed_from(1);
+    let threads = ThreadPool::default_size();
+    println!("executor bench: {threads} worker threads (DASH_THREADS to override)\n");
+
+    let seq = BatchExecutor::sequential();
+    let par = BatchExecutor::new(threads).with_min_parallel(2);
+
+    // ---- regression oracle sweeps (QR-projection gains) ----
+    let ds = synthetic::regression_d1(&mut rng, 250, 500, 80, 0.4);
+    let lreg = LinearRegressionObjective::new(&ds);
+    let cand: Vec<usize> = (0..500).collect();
+    let mut pairs: Vec<(String, f64, f64)> = Vec::new();
+    for s in [0usize, 16, 48] {
+        let set: Vec<usize> = (0..s).collect();
+        let st = lreg.state_for(&set);
+        let a = bench
+            .run(&format!("lreg sweep n=500 |S|={s} sequential"), || seq.gains(&*st, &cand))
+            .mean_s;
+        let b = bench
+            .run(&format!("lreg sweep n=500 |S|={s} parallel x{threads}"), || {
+                par.gains(&*st, &cand)
+            })
+            .mean_s;
+        pairs.push((format!("lreg_s{s}"), a, b));
+    }
+
+    // ---- A-optimality oracle sweeps (M·x gains) ----
+    let dsd = synthetic::design_d1(&mut rng, 64, 256, 0.6);
+    let aopt = AOptimalityObjective::new(&dsd, 1.0, 1.0);
+    let candd: Vec<usize> = (0..256).collect();
+    let sta = aopt.state_for(&[1, 5, 9, 100]);
+    let a = bench
+        .run("aopt sweep n=256 d=64 sequential", || seq.gains(&*sta, &candd))
+        .mean_s;
+    let b = bench
+        .run(&format!("aopt sweep n=256 d=64 parallel x{threads}"), || {
+            par.gains(&*sta, &candd)
+        })
+        .mean_s;
+    pairs.push(("aopt".to_string(), a, b));
+
+    // ---- memoized repeat sweep (DASH filter-iteration shape) ----
+    let st = lreg.state_for(&[0, 1, 2, 3]);
+    bench.run("lreg repeat sweep uncached", || seq.gains(&*st, &cand));
+    bench.run("lreg repeat sweep via GainCache", || {
+        // fresh cache each iteration, two sweeps: the second is all hits —
+        // this is one filter iteration followed by a re-sweep of survivors
+        let mut cache = GainCache::new(lreg.n());
+        let (first, _) = seq.cached_gains(&mut cache, &*st, &cand);
+        let (second, fresh) = seq.cached_gains(&mut cache, &*st, &cand);
+        assert_eq!(fresh, 0);
+        (first, second)
+    });
+
+    // ---- report ----
+    println!();
+    let mut entries = Vec::new();
+    for (name, s, p) in &pairs {
+        let speedup = if *p > 0.0 { s / p } else { 0.0 };
+        println!("{name}: sequential {s:.6}s, parallel {p:.6}s, speedup {speedup:.2}x");
+        entries.push(Json::obj(vec![
+            ("name", name.as_str().into()),
+            ("sequential_s", (*s).into()),
+            ("parallel_s", (*p).into()),
+            ("speedup", speedup.into()),
+        ]));
+    }
+    let reports: Vec<Json> = bench
+        .reports
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", r.name.as_str().into()),
+                ("iters", r.iters.into()),
+                ("mean_s", r.mean_s.into()),
+                ("p50_s", r.p50_s.into()),
+                ("p95_s", r.p95_s.into()),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("suite", "executor".into()),
+        ("threads", threads.into()),
+        ("sweeps", Json::Arr(entries)),
+        ("reports", Json::Arr(reports)),
+    ]);
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_executor.json"))
+        .unwrap_or_else(|| PathBuf::from("BENCH_executor.json"));
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {path:?}"),
+        Err(e) => eprintln!("\ncould not write {path:?}: {e}"),
+    }
+}

@@ -11,6 +11,7 @@
 use super::dash::{Dash, DashConfig, OptEstimate};
 use super::SelectionResult;
 use crate::objectives::Objective;
+use crate::oracle::BatchExecutor;
 use crate::rng::Pcg64;
 
 /// Configuration for [`AdaptiveSampling`].
@@ -42,11 +43,18 @@ impl Default for AdaptiveSamplingConfig {
 /// The α = 1 adaptive sampling algorithm.
 pub struct AdaptiveSampling {
     cfg: AdaptiveSamplingConfig,
+    exec: BatchExecutor,
 }
 
 impl AdaptiveSampling {
     pub fn new(cfg: AdaptiveSamplingConfig) -> Self {
-        AdaptiveSampling { cfg }
+        AdaptiveSampling { cfg, exec: BatchExecutor::sequential() }
+    }
+
+    /// Route gain queries through a shared batched-gain engine.
+    pub fn with_executor(mut self, exec: BatchExecutor) -> Self {
+        self.exec = exec;
+        self
     }
 
     pub fn run(&self, obj: &dyn Objective, rng: &mut Pcg64) -> SelectionResult {
@@ -61,6 +69,7 @@ impl AdaptiveSampling {
             max_rounds: self.cfg.max_rounds,
             max_filter_iters: 0,
         })
+        .with_executor(self.exec.clone())
         .run(obj, rng);
         result.algorithm = "adaptive_sampling".into();
         result

@@ -13,6 +13,7 @@
 
 use super::{RunTracker, SelectionResult};
 use crate::objectives::Objective;
+use crate::oracle::BatchExecutor;
 use crate::rng::Pcg64;
 
 /// Configuration for [`AdaptiveSequencing`].
@@ -33,12 +34,19 @@ impl Default for AdaptiveSequencingConfig {
 /// Adaptive sequencing with α-scaled thresholds.
 pub struct AdaptiveSequencing {
     cfg: AdaptiveSequencingConfig,
+    exec: BatchExecutor,
 }
 
 impl AdaptiveSequencing {
     pub fn new(cfg: AdaptiveSequencingConfig) -> Self {
         assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0);
-        AdaptiveSequencing { cfg }
+        AdaptiveSequencing { cfg, exec: BatchExecutor::sequential() }
+    }
+
+    /// Route the round-1 filter sweep through a shared batched-gain engine.
+    pub fn with_executor(mut self, exec: BatchExecutor) -> Self {
+        self.exec = exec;
+        self
     }
 
     pub fn run(&self, obj: &dyn Objective, rng: &mut Pcg64) -> SelectionResult {
@@ -67,7 +75,7 @@ impl AdaptiveSequencing {
             if candidates.is_empty() {
                 break;
             }
-            let gains = st.gains(&candidates);
+            let gains = self.exec.gains(&*st, &candidates);
             tracker.add_queries(candidates.len());
             let gmax = gains.iter().cloned().fold(0.0, f64::max);
             if gmax <= 1e-14 {

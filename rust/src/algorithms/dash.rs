@@ -28,6 +28,7 @@
 use super::dash_core::{run_guess, GuessParams};
 use super::SelectionResult;
 use crate::objectives::Objective;
+use crate::oracle::BatchExecutor;
 use crate::rng::Pcg64;
 
 /// How the algorithm obtains OPT for its thresholds.
@@ -84,13 +85,22 @@ impl Default for DashConfig {
 /// The DASH algorithm.
 pub struct Dash {
     cfg: DashConfig,
+    exec: BatchExecutor,
 }
 
 impl Dash {
     pub fn new(cfg: DashConfig) -> Self {
         assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0, "alpha in (0,1]");
         assert!(cfg.epsilon >= 0.0 && cfg.epsilon < 1.0, "epsilon in [0,1)");
-        Dash { cfg }
+        Dash { cfg, exec: BatchExecutor::sequential() }
+    }
+
+    /// Route this run's gain queries through a shared batched-gain engine.
+    /// Results and accounting are identical to the sequential default; only
+    /// wallclock changes.
+    pub fn with_executor(mut self, exec: BatchExecutor) -> Self {
+        self.exec = exec;
+        self
     }
 
     pub fn run(&self, obj: &dyn Objective, rng: &mut Pcg64) -> SelectionResult {
@@ -118,7 +128,7 @@ impl Dash {
         // --- singleton pass: seeds the guess ladder (1 round, n queries) ---
         let st0 = obj.empty_state();
         let all: Vec<usize> = (0..n).collect();
-        let singles = st0.gains(&all);
+        let singles = self.exec.gains(&*st0, &all);
         let vmax = singles.iter().cloned().fold(0.0, f64::max);
         let singleton_round_queries = n;
 
@@ -173,7 +183,7 @@ impl Dash {
                 }
             }
             let mut guess_rng = Pcg64::seed_from(crate::rng::split_seed(rng.next_u64(), gi as u64));
-            let res = run_guess(obj, &params_for(opt), &mut guess_rng, "dash");
+            let res = run_guess(obj, &params_for(opt), &mut guess_rng, "dash", &self.exec);
             total_queries += res.queries;
             max_rounds = max_rounds.max(res.rounds + 1);
             let better = match &best {

@@ -1,8 +1,27 @@
 //! Core of the DASH run loop, split from `dash.rs` for readability:
 //! a single fixed-OPT-guess execution of Algorithm 1.
+//!
+//! Every oracle interaction routes through the [`BatchExecutor`]:
+//!
+//! - the per-round sample estimates `f_S(R)` go through
+//!   [`BatchExecutor::sample_blocks`] (one whole-set query per sample,
+//!   fanned out over the pool and observable by `CountingObjective`); the
+//!   constructed `S ∪ R` states come back with the gains and are reused —
+//!   adopted on acceptance, swept by the filter step otherwise;
+//! - the filter step's per-candidate sweeps `f_{S∪R}(a)` go through
+//!   [`BatchExecutor::gains`] on those same states;
+//! - the rare "every sample contained a" fallback queries `f_S(a)` through
+//!   a [`GainCache`] keyed on the current solution state, so repeated
+//!   filter iterations over surviving candidates skip unchanged work (the
+//!   cache is invalidated whenever `S` grows).
+//!
+//! Reported queries equal oracle-observed queries exactly: `m` set queries
+//! per sample round, `|X|` per filter sweep, and only cache *misses* for
+//! the fallback singles.
 
 use super::{RunTracker, SelectionResult};
-use crate::objectives::{Objective, ObjectiveState};
+use crate::objectives::Objective;
+use crate::oracle::{BatchExecutor, GainCache};
 use crate::rng::Pcg64;
 
 pub(crate) struct GuessParams {
@@ -25,11 +44,15 @@ pub(crate) fn run_guess(
     p: &GuessParams,
     rng: &mut Pcg64,
     label: &str,
+    exec: &BatchExecutor,
 ) -> SelectionResult {
     let n = obj.n();
     let mut tracker = RunTracker::new(label);
     let mut st = obj.empty_state();
     let mut hit_cap = false;
+    // memoized f_S(a) fallback singles for the *current* S; invalidated on
+    // every accepted block
+    let mut single_cache = GainCache::new(n);
 
     let mut x: Vec<usize> = Vec::with_capacity(n);
     'outer: while st.set().len() < p.k && tracker.rounds() < p.max_rounds {
@@ -68,29 +91,27 @@ pub(crate) fn run_guess(
             // the loop would spin to the filter cap
             let accept_thresh = p.alpha * p.alpha * t * take as f64 / p.k as f64;
 
-            // --- draw m sample blocks R ~ U(X), build their states ---
-            let mut sample_sets: Vec<Vec<usize>> = Vec::with_capacity(p.m);
-            let mut sample_states: Vec<Box<dyn ObjectiveState>> = Vec::with_capacity(p.m);
-            let mut set_gains = Vec::with_capacity(p.m);
-            for _ in 0..p.m {
-                let idx = rng.sample_indices(x.len(), take);
-                let r_set: Vec<usize> = idx.into_iter().map(|i| x[i]).collect();
-                let mut s2 = st.clone_box();
-                for &a in &r_set {
-                    s2.insert(a);
-                }
-                set_gains.push(s2.value() - st.value());
-                sample_sets.push(r_set);
-                sample_states.push(s2);
-            }
+            // --- draw m sample blocks R ~ U(X); estimate E[f_S(R)] ---
+            // one counted oracle query per block; the constructed S ∪ R
+            // states come back with the gains and are reused below, so no
+            // state is ever built twice
+            let blocks: Vec<Vec<usize>> = (0..p.m)
+                .map(|_| {
+                    let idx = rng.sample_indices(x.len(), take);
+                    idx.into_iter().map(|i| x[i]).collect()
+                })
+                .collect();
+            let mut samples = exec.sample_blocks(obj, &*st, &blocks);
             tracker.add_queries(p.m);
+            let set_gains: Vec<f64> = samples.iter().map(|(g, _)| *g).collect();
             let e_hat = crate::util::mean(&set_gains);
 
             if e_hat >= accept_thresh {
                 // accept a uniformly drawn block (one of the i.i.d. samples
-                // — same distribution as a fresh draw)
+                // — same distribution as a fresh draw); adopt its state
                 let pick = rng.gen_range_usize(0, p.m - 1);
-                st = sample_states.swap_remove(pick);
+                st = samples.swap_remove(pick).1;
+                single_cache.invalidate();
                 tracker.end_round(st.value(), st.set().len());
                 continue 'outer;
             }
@@ -98,8 +119,8 @@ pub(crate) fn run_guess(
             // --- filter step: expected marginals from the same samples ---
             let mut sums = vec![0.0; x.len()];
             let mut counts = vec![0u32; x.len()];
-            for (r_set, s2) in sample_sets.iter().zip(&sample_states) {
-                let gains = s2.gains(&x);
+            for (r_set, (_, s2)) in blocks.iter().zip(&samples) {
+                let gains = exec.gains(&**s2, &x);
                 tracker.add_queries(x.len());
                 for (j, &a) in x.iter().enumerate() {
                     // skip samples containing a: the estimator targets
@@ -110,15 +131,27 @@ pub(crate) fn run_guess(
                     }
                 }
             }
+            // fallback for candidates contained in every sample: the
+            // marginal on top of S alone, served through the memo cache
+            // (S is unchanged across filter iterations, so repeats are free)
+            let fallback: Vec<usize> = x
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| counts[*j] == 0)
+                .map(|(_, &a)| a)
+                .collect();
+            let (fallback_gains, fresh) =
+                exec.cached_gains(&mut single_cache, &*st, &fallback);
+            tracker.add_queries(fresh);
+            let mut fb = fallback.iter().zip(&fallback_gains);
+
             let mut survivors = Vec::with_capacity(x.len());
             for (j, &a) in x.iter().enumerate() {
                 let est = if counts[j] > 0 {
                     sums[j] / counts[j] as f64
                 } else {
-                    // every sample contained a — fall back to the marginal
-                    // on top of S alone
-                    let g = st.gain(a);
-                    tracker.add_queries(1);
+                    let (&fa, &g) = fb.next().expect("fallback entry");
+                    debug_assert_eq!(fa, a);
                     g
                 };
                 if est >= filter_thresh {

@@ -9,12 +9,18 @@
 //!   bounds may not be valid bounds), so it is off by default and clearly
 //!   labeled.
 //! - **parallel** ([`ParallelGreedy`]): the paper's "Parallel SDS_MA" —
-//!   per-iteration gain queries fan out over a thread pool. Round/query
-//!   accounting is identical to sequential; wallclock differs.
+//!   per-iteration gain queries fan out over the shared
+//!   [`BatchExecutor`]. Round/query accounting is identical to sequential;
+//!   wallclock differs.
+//!
+//! Every gain sweep routes through a [`BatchExecutor`]; the default is the
+//! sequential engine, so `Greedy::new(..).run(..)` behaves exactly as
+//! before, and a coordinator can inject its shared parallel engine with
+//! [`Greedy::with_executor`].
 
 use super::{RunTracker, SelectionResult};
 use crate::objectives::Objective;
-use crate::util::threadpool::ThreadPool;
+use crate::oracle::BatchExecutor;
 
 /// Configuration for [`Greedy`].
 #[derive(Debug, Clone)]
@@ -36,11 +42,18 @@ impl Default for GreedyConfig {
 /// Sequential SDS_MA.
 pub struct Greedy {
     cfg: GreedyConfig,
+    exec: BatchExecutor,
 }
 
 impl Greedy {
     pub fn new(cfg: GreedyConfig) -> Self {
-        Greedy { cfg }
+        Greedy { cfg, exec: BatchExecutor::sequential() }
+    }
+
+    /// Route this run's gain sweeps through a shared engine.
+    pub fn with_executor(mut self, exec: BatchExecutor) -> Self {
+        self.exec = exec;
+        self
     }
 
     pub fn run(&self, obj: &dyn Objective) -> SelectionResult {
@@ -58,7 +71,7 @@ impl Greedy {
         let mut st = obj.empty_state();
         let mut remaining: Vec<usize> = (0..n).collect();
         for _ in 0..k {
-            let gains = st.gains(&remaining);
+            let gains = self.exec.gains(&*st, &remaining);
             tracker.add_queries(remaining.len());
             let Some((best_i, best_g)) = argmax(&gains) else { break };
             if best_g < self.cfg.min_gain {
@@ -102,7 +115,7 @@ impl Greedy {
 
         // initial pass: all singleton gains (1 round)
         let all: Vec<usize> = (0..n).collect();
-        let gains = st.gains(&all);
+        let gains = self.exec.gains(&*st, &all);
         tracker.add_queries(n);
         let mut heap: BinaryHeap<Entry> = gains
             .iter()
@@ -134,29 +147,38 @@ impl Greedy {
     }
 }
 
-/// Parallel SDS_MA: gain queries within an iteration fan out over a thread
-/// pool (paper benchmark "Parallel SDS_MA").
+/// Parallel SDS_MA: gain queries within an iteration fan out over the
+/// batched-gain engine (paper benchmark "Parallel SDS_MA").
 pub struct ParallelGreedy {
     cfg: GreedyConfig,
     threads: usize,
+    exec: Option<BatchExecutor>,
 }
 
 impl ParallelGreedy {
+    /// Standalone constructor: `run` builds an engine with its own pool of
+    /// `threads` workers (lazily — no threads spawn until a run, and none
+    /// at all when a shared engine is injected). Coordinators should prefer
+    /// [`ParallelGreedy::with_executor`] to share one pool across jobs.
     pub fn new(cfg: GreedyConfig, threads: usize) -> Self {
-        ParallelGreedy { cfg, threads: threads.max(1) }
+        ParallelGreedy { cfg, threads: threads.max(1), exec: None }
+    }
+
+    pub fn with_executor(mut self, exec: BatchExecutor) -> Self {
+        self.exec = Some(exec);
+        self
     }
 
     pub fn run(&self, obj: &dyn Objective) -> SelectionResult {
+        let exec =
+            self.exec.clone().unwrap_or_else(|| BatchExecutor::new(self.threads));
         let n = obj.n();
         let k = self.cfg.k.min(n);
-        let pool = ThreadPool::new(self.threads);
         let mut tracker = RunTracker::new("parallel_sds_ma");
         let mut st = obj.empty_state();
         let mut remaining: Vec<usize> = (0..n).collect();
         for _ in 0..k {
-            let st_ref = &*st;
-            let rem = &remaining;
-            let gains = pool.parallel_map(rem.len(), |i| st_ref.gain(rem[i]));
+            let gains = exec.gains(&*st, &remaining);
             tracker.add_queries(remaining.len());
             let Some((best_i, best_g)) = argmax(&gains) else { break };
             if best_g < self.cfg.min_gain {
@@ -242,6 +264,21 @@ mod tests {
         assert!((seq.value - par.value).abs() < 1e-12);
         assert_eq!(seq.rounds, par.rounds);
         assert_eq!(seq.queries, par.queries);
+    }
+
+    #[test]
+    fn shared_executor_matches_owned_pool() {
+        let mut rng = Pcg64::seed_from(8);
+        let ds = synthetic::regression_d1(&mut rng, 80, 40, 8, 0.3);
+        let obj = LinearRegressionObjective::new(&ds);
+        let exec = crate::oracle::BatchExecutor::new(3).with_min_parallel(2);
+        let a = Greedy::new(GreedyConfig { k: 5, ..Default::default() })
+            .with_executor(exec.clone())
+            .run(&obj);
+        let b = Greedy::new(GreedyConfig { k: 5, ..Default::default() }).run(&obj);
+        assert_eq!(a.set, b.set);
+        assert_eq!(a.queries, b.queries);
+        assert!((a.value - b.value).abs() < 1e-15);
     }
 
     #[test]

@@ -3,16 +3,25 @@
 
 use super::{RunTracker, SelectionResult};
 use crate::objectives::Objective;
+use crate::oracle::BatchExecutor;
 use crate::rng::Pcg64;
 
 /// TOP-k: one round of all singleton queries, keep the k largest.
 pub struct TopK {
     pub k: usize,
+    exec: BatchExecutor,
 }
 
 impl TopK {
     pub fn new(k: usize) -> Self {
-        TopK { k }
+        TopK { k, exec: BatchExecutor::sequential() }
+    }
+
+    /// Route the singleton sweep through a shared batched-gain engine —
+    /// TOP-k is one perfectly parallel round, the engine's best case.
+    pub fn with_executor(mut self, exec: BatchExecutor) -> Self {
+        self.exec = exec;
+        self
     }
 
     pub fn run(&self, obj: &dyn Objective) -> SelectionResult {
@@ -21,7 +30,7 @@ impl TopK {
         let mut tracker = RunTracker::new("top_k");
         let st = obj.empty_state();
         let all: Vec<usize> = (0..n).collect();
-        let gains = st.gains(&all);
+        let gains = self.exec.gains(&*st, &all);
         tracker.add_queries(n);
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by(|&a, &b| gains[b].partial_cmp(&gains[a]).unwrap_or(std::cmp::Ordering::Equal));

@@ -4,6 +4,8 @@
 //! the same size-or-timeout discipline a serving router applies to
 //! incoming requests.
 
+use crate::objectives::ObjectiveState;
+use crate::oracle::{BatchExecutor, GainCache};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -38,6 +40,8 @@ pub struct BatchQueue {
     last_flush: Arc<Mutex<Instant>>,
     /// total batches flushed (telemetry)
     flushes: Arc<Mutex<usize>>,
+    /// memo layer when built with [`BatchQueue::for_state`]
+    cache: Option<Arc<Mutex<GainCache>>>,
 }
 
 impl BatchQueue {
@@ -51,7 +55,43 @@ impl BatchQueue {
             flush_fn: Arc::new(flush_fn),
             last_flush: Arc::new(Mutex::new(Instant::now())),
             flushes: Arc::new(Mutex::new(0)),
+            cache: None,
         }
+    }
+
+    /// Serving-side constructor: a queue whose flushes evaluate batched
+    /// marginal gains for one frozen solution state through the shared
+    /// [`BatchExecutor`], with a [`GainCache`] memo in front so repeated
+    /// requests for the same candidate are answered without touching the
+    /// oracle. One queue serves one state generation; build a fresh queue
+    /// when the solution set changes. `n` is the objective's ground-set
+    /// size.
+    pub fn for_state(
+        cfg: BatchQueueConfig,
+        exec: BatchExecutor,
+        state: Box<dyn ObjectiveState>,
+        n: usize,
+    ) -> Self {
+        let cache = Arc::new(Mutex::new(GainCache::new(n)));
+        let cache_for_flush = Arc::clone(&cache);
+        let mut queue = Self::new(cfg, move |items: &[usize]| {
+            let mut memo = cache_for_flush.lock().unwrap();
+            let (vals, _fresh) = exec.cached_gains(&mut memo, &*state, items);
+            vals
+        });
+        queue.cache = Some(cache);
+        queue
+    }
+
+    /// `(hits, misses)` of the memo layer (0,0 for plain queues).
+    pub fn cache_stats(&self) -> (usize, usize) {
+        self.cache
+            .as_ref()
+            .map(|c| {
+                let c = c.lock().unwrap();
+                (c.hits, c.misses)
+            })
+            .unwrap_or((0, 0))
     }
 
     /// Submit one candidate; blocks until its batch is evaluated and
@@ -172,6 +212,36 @@ mod tests {
             assert_eq!(*v, (i * i) as f64, "item {i}");
         }
         assert_eq!(evaluated.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn for_state_serves_cached_gains() {
+        let mut rng = crate::rng::Pcg64::seed_from(5);
+        let ds = crate::data::synthetic::regression_d1(&mut rng, 60, 20, 6, 0.2);
+        let obj = crate::objectives::LinearRegressionObjective::new(&ds);
+        use crate::objectives::Objective;
+        let st = obj.state_for(&[2, 9]);
+        let expected = st.gains(&(0..20).collect::<Vec<_>>());
+        let q = BatchQueue::for_state(
+            BatchQueueConfig { max_batch: 8, max_wait: Duration::from_millis(0) },
+            crate::oracle::BatchExecutor::sequential(),
+            obj.state_for(&[2, 9]),
+            obj.n(),
+        );
+        // first wave: every candidate is a miss
+        let out = q.submit_many(&(0..20).collect::<Vec<_>>());
+        for (o, e) in out.iter().zip(&expected) {
+            assert!((o - e).abs() < 1e-14);
+        }
+        let (_, misses_after_first) = q.cache_stats();
+        assert_eq!(misses_after_first, 20);
+        // second wave over the same state generation: all hits, no new
+        // oracle work
+        let again = q.submit_many(&[3, 7, 11]);
+        assert!((again[0] - expected[3]).abs() < 1e-14);
+        let (hits, misses) = q.cache_stats();
+        assert_eq!(misses, 20, "repeat requests must not re-query");
+        assert!(hits >= 3);
     }
 
     #[test]

@@ -13,9 +13,12 @@ use crate::objectives::{
     AOptimalityObjective, LinearRegressionObjective, LogisticObjective, Objective,
     OvrSoftmaxObjective, R2Objective,
 };
+use crate::oracle::BatchExecutor;
 use crate::rng::Pcg64;
 use crate::runtime::Manifest;
 use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 /// Which objective to optimize.
@@ -117,9 +120,16 @@ impl SelectionReport {
 }
 
 /// Job executor.
+///
+/// Owns one machine-sized [`ThreadPool`] and one [`BatchExecutor`] backed
+/// by it; every served job's gain sweeps fan out over this shared pool
+/// instead of each algorithm spawning its own threads.
 pub struct Leader {
     pub metrics: Arc<MetricsRegistry>,
     manifest: Option<Manifest>,
+    /// `None` when serving sequentially (no worker threads at all)
+    pool: Option<Arc<ThreadPool>>,
+    exec: BatchExecutor,
 }
 
 impl Default for Leader {
@@ -130,15 +140,38 @@ impl Default for Leader {
 
 impl Leader {
     /// Create a leader; loads the artifact manifest when present so XLA
-    /// jobs can be served.
+    /// jobs can be served, and brings up the shared oracle pool.
     pub fn new() -> Self {
+        Self::with_threads(ThreadPool::default_size())
+    }
+
+    /// Leader with an explicit oracle-pool size (1 = sequential sweeps,
+    /// no worker threads spawned).
+    pub fn with_threads(threads: usize) -> Self {
         let dir = crate::runtime::default_artifacts_dir();
         let manifest = Manifest::load(&dir).ok();
-        Leader { metrics: Arc::new(MetricsRegistry::new()), manifest }
+        let (pool, exec) = if threads > 1 {
+            let pool = Arc::new(ThreadPool::new(threads));
+            let exec = BatchExecutor::with_pool(Arc::clone(&pool));
+            (Some(pool), exec)
+        } else {
+            (None, BatchExecutor::sequential())
+        };
+        Leader { metrics: Arc::new(MetricsRegistry::new()), manifest, pool, exec }
     }
 
     pub fn has_artifacts(&self) -> bool {
         self.manifest.is_some()
+    }
+
+    /// The shared batched-gain engine served jobs run on.
+    pub fn executor(&self) -> &BatchExecutor {
+        &self.exec
+    }
+
+    /// The shared worker pool (`None` when serving sequentially).
+    pub fn pool(&self) -> Option<&Arc<ThreadPool>> {
+        self.pool.as_ref()
     }
 
     /// Build the objective for a job.
@@ -185,27 +218,36 @@ impl Leader {
         }
     }
 
-    /// Execute a job.
+    /// Execute a job. Every gain sweep runs on the leader's shared engine —
+    /// the job-level `threads` knob of `ParallelGreedy` is superseded by
+    /// the shared pool when served here (standalone use still honors it).
     pub fn run(&self, job: &SelectionJob) -> Result<SelectionReport, String> {
         let mut rng = Pcg64::seed_from(job.seed);
         let obj = self.objective(job)?;
+        let sweeps_before = self.exec.stats().sweeps.load(Ordering::Relaxed);
+        let sharded_before = self.exec.stats().sharded_sweeps.load(Ordering::Relaxed);
         let result = match &job.algorithm {
             AlgorithmChoice::Dash(cfg) => {
                 let mut c = cfg.clone();
                 c.k = job.k;
-                Dash::new(c).run(&*obj, &mut rng)
+                Dash::new(c).with_executor(self.exec.clone()).run(&*obj, &mut rng)
             }
             AlgorithmChoice::Greedy(cfg) => {
                 let mut c = cfg.clone();
                 c.k = job.k;
-                Greedy::new(c).run(&*obj)
+                Greedy::new(c).with_executor(self.exec.clone()).run(&*obj)
             }
             AlgorithmChoice::ParallelGreedy { cfg, threads } => {
                 let mut c = cfg.clone();
                 c.k = job.k;
-                ParallelGreedy::new(c, *threads).run(&*obj)
+                // the shared engine supersedes the job's own threads knob
+                ParallelGreedy::new(c, *threads)
+                    .with_executor(self.exec.clone())
+                    .run(&*obj)
             }
-            AlgorithmChoice::TopK => TopK::new(job.k).run(&*obj),
+            AlgorithmChoice::TopK => {
+                TopK::new(job.k).with_executor(self.exec.clone()).run(&*obj)
+            }
             AlgorithmChoice::Random { trials } => {
                 RandomSelect::new(job.k).run_mean(&*obj, &mut rng, *trials)
             }
@@ -220,12 +262,16 @@ impl Leader {
             AlgorithmChoice::AdaptiveSampling(cfg) => {
                 let mut c = cfg.clone();
                 c.k = job.k;
-                AdaptiveSampling::new(c).run(&*obj, &mut rng)
+                AdaptiveSampling::new(c)
+                    .with_executor(self.exec.clone())
+                    .run(&*obj, &mut rng)
             }
             AlgorithmChoice::AdaptiveSequencing(cfg) => {
                 let mut c = cfg.clone();
                 c.k = job.k;
-                AdaptiveSequencing::new(AdaptiveSequencingConfig { k: job.k, ..c }).run(&*obj, &mut rng)
+                AdaptiveSequencing::new(AdaptiveSequencingConfig { k: job.k, ..c })
+                    .with_executor(self.exec.clone())
+                    .run(&*obj, &mut rng)
             }
         };
 
@@ -248,6 +294,14 @@ impl Leader {
 
         self.metrics.inc("leader.jobs", 1);
         self.metrics.inc("oracle.queries", result.queries as u64);
+        let sweeps_after = self.exec.stats().sweeps.load(Ordering::Relaxed);
+        let sharded_after = self.exec.stats().sharded_sweeps.load(Ordering::Relaxed);
+        self.metrics
+            .inc("oracle.sweeps", sweeps_after.saturating_sub(sweeps_before) as u64);
+        self.metrics.inc(
+            "oracle.sharded_sweeps",
+            sharded_after.saturating_sub(sharded_before) as u64,
+        );
         self.metrics.set_gauge("last.value", result.value);
         self.metrics.set_gauge("last.rounds", result.rounds as f64);
 
@@ -330,6 +384,27 @@ mod tests {
         j.backend = Backend::Xla;
         let err = leader.run(&j).unwrap_err();
         assert!(err.contains("artifacts"), "{err}");
+    }
+
+    #[test]
+    fn jobs_share_the_leader_pool() {
+        let leader = Leader::with_threads(3);
+        assert_eq!(leader.executor().threads(), 3);
+        assert_eq!(leader.pool().map(|p| p.size()), Some(3));
+        let parallel_job =
+            job(AlgorithmChoice::ParallelGreedy { cfg: GreedyConfig::default(), threads: 7 });
+        let report = leader.run(&parallel_job).unwrap();
+        // sweeps were recorded against the shared engine, and the served
+        // job ran on the leader pool (not its own 7 threads)
+        assert!(leader.metrics.counter("oracle.sweeps") > 0);
+        assert!(report.result.set.len() <= 5);
+        // a sequential leader produces identical results and accounting
+        let seq = Leader::with_threads(1);
+        assert!(!seq.executor().is_parallel());
+        let r2 = seq.run(&parallel_job).unwrap();
+        assert_eq!(report.result.set, r2.result.set);
+        assert_eq!(report.result.queries, r2.result.queries);
+        assert_eq!(report.result.rounds, r2.result.rounds);
     }
 
     #[test]

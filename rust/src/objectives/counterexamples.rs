@@ -159,6 +159,77 @@ mod tests {
     }
 
     #[test]
+    fn dash_terminates_and_meets_alpha_bound() {
+        // DASH with α-scaled thresholds (α = 0.5 per Lemma 12) and known
+        // OPT must terminate on the min-construction and, averaged over
+        // seeds, clear the Theorem 10 bound (1 − 1/e^{α²})·OPT (ε = 0).
+        use crate::algorithms::{Dash, DashConfig, OptEstimate};
+        use crate::rng::Pcg64;
+        for k in [2usize, 4] {
+            let f = MinCounterexample::new(k);
+            let opt = f.opt();
+            let alpha = 0.5f64;
+            let bound = (1.0 - (-alpha * alpha).exp()) * opt;
+            let seeds = [1u64, 2, 3, 4, 5];
+            let mut values = Vec::new();
+            for &seed in &seeds {
+                let mut rng = Pcg64::seed_from(seed);
+                let r = Dash::new(DashConfig {
+                    k,
+                    r: 0, // auto: ⌈log₂ n⌉ blocks
+                    epsilon: 0.0,
+                    alpha,
+                    samples: 32,
+                    opt: OptEstimate::Known(opt),
+                    opt_guesses: 1,
+                    max_rounds: 120,
+                    max_filter_iters: 0,
+                })
+                .run(&f, &mut rng);
+                assert!(
+                    !r.hit_iteration_cap,
+                    "k={k} seed={seed}: DASH must terminate (rounds {})",
+                    r.rounds
+                );
+                values.push(r.value);
+            }
+            let mean = crate::util::mean(&values);
+            assert!(
+                mean >= bound,
+                "k={k}: mean value {mean} below α-bound {bound} (values {values:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn plain_submodular_thresholds_hit_round_cap() {
+        // α = 1 (plain submodular thresholds) exercised under an explicit
+        // round cap: the Appendix A.2 failure mode must be flagged via
+        // hit_iteration_cap, never an endless loop
+        use crate::algorithms::{Dash, DashConfig, OptEstimate};
+        use crate::rng::Pcg64;
+        for k in [2usize, 4] {
+            let f = MinCounterexample::new(k);
+            let mut rng = Pcg64::seed_from(3);
+            let r = Dash::new(DashConfig {
+                k,
+                r: 1,
+                epsilon: 0.0,
+                alpha: 1.0,
+                samples: 32,
+                opt: OptEstimate::Known(f.opt()),
+                opt_guesses: 1,
+                max_rounds: 60,
+                max_filter_iters: 0,
+            })
+            .run(&f, &mut rng);
+            assert!(r.hit_iteration_cap, "k={k}: α=1 must hit the cap");
+            assert!(r.value < f.opt(), "k={k}: α=1 must not reach OPT");
+            assert!(r.rounds <= 60, "k={k}: cap must bound the rounds");
+        }
+    }
+
+    #[test]
     fn r2_instance_matches_appendix() {
         let obj = r2_instance();
         // optimal pairs achieve 1

@@ -98,12 +98,25 @@ pub trait Objective: Sync {
     /// `f_S(A)` — marginal contribution of a *set* `A` on top of `S`
     /// (needed by DASH's round-acceptance test).
     fn set_gain(&self, state: &dyn ObjectiveState, add: &[usize]) -> f64 {
+        self.set_gain_state(state, add).0
+    }
+
+    /// [`Objective::set_gain`] plus the constructed `S ∪ A` state, for
+    /// callers that need both (DASH evaluates `f_S(R)` for sample blocks
+    /// and, on acceptance or filtering, reuses the very same states — one
+    /// construction, one counted oracle query).
+    fn set_gain_state(
+        &self,
+        state: &dyn ObjectiveState,
+        add: &[usize],
+    ) -> (f64, Box<dyn ObjectiveState>) {
         let mut st = state.clone_box();
         let before = st.value();
         for &a in add {
             st.insert(a);
         }
-        st.value() - before
+        let gain = st.value() - before;
+        (gain, st)
     }
 }
 

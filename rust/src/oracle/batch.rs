@@ -1,0 +1,361 @@
+//! The batched-gain execution engine.
+//!
+//! DASH's adaptivity model (paper Definition 3) is "polynomially many
+//! independent gain queries per round"; this module is the machinery that
+//! actually executes such a round in parallel. A [`BatchExecutor`] takes a
+//! candidate set and an [`ObjectiveState`], shards the gain sweep across a
+//! shared [`ThreadPool`] (forking the state via `clone_box` per shard so
+//! states with interior scratch stay isolated), and merges the per-shard
+//! results back in candidate order, so the output is **bit-identical** to
+//! the sequential `state.gains(candidates)` sweep.
+//!
+//! On top sits a lazy [`GainCache`]: sweeps over a *fixed* state memoize
+//! per-element gains, so repeated passes over surviving candidates (DASH's
+//! filter iterations, the serving batcher's request stream) skip unchanged
+//! work. Cache misses are the only queries actually issued, and the miss
+//! count is returned so algorithm-side query accounting stays equal to the
+//! oracle-side observed count ([`CountingObjective`](super::CountingObjective)
+//! audits exactly this in the test suite).
+//!
+//! Accounting invariant: for a sweep of `n` distinct candidates the engine
+//! issues per-element gain work totalling exactly `n` oracle queries
+//! whether it runs sequentially (one `gains` call) or sharded (one `gains`
+//! call per shard) — `QueryStats::total_gain_queries()` is identical in
+//! both modes, which is what the paper's query counts measure.
+
+use crate::objectives::{Objective, ObjectiveState};
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Sweeps smaller than this run sequentially — sharding overhead beats the
+/// win on tiny batches.
+const DEFAULT_MIN_PARALLEL: usize = 32;
+
+/// Telemetry counters shared by all clones of an executor.
+#[derive(Debug, Default)]
+pub struct ExecutorStats {
+    /// total gain sweeps served
+    pub sweeps: AtomicUsize,
+    /// sweeps that were sharded across the pool
+    pub sharded_sweeps: AtomicUsize,
+    /// total per-element gain queries issued through the engine
+    pub elements: AtomicUsize,
+    /// whole-set f(S ∪ R) evaluations issued through the engine
+    pub set_evals: AtomicUsize,
+}
+
+impl ExecutorStats {
+    fn bump(counter: &AtomicUsize, by: usize) {
+        counter.fetch_add(by, Ordering::Relaxed);
+    }
+}
+
+/// Shared batched-gain engine. Cheap to clone: clones share the pool and
+/// the telemetry, so one executor can be threaded through every algorithm
+/// a coordinator serves.
+#[derive(Clone)]
+pub struct BatchExecutor {
+    pool: Option<Arc<ThreadPool>>,
+    min_parallel: usize,
+    stats: Arc<ExecutorStats>,
+}
+
+impl Default for BatchExecutor {
+    fn default() -> Self {
+        Self::sequential()
+    }
+}
+
+impl BatchExecutor {
+    /// Sequential engine: every sweep is one `state.gains` call. This is
+    /// the default every algorithm starts with, so standalone use is
+    /// byte-identical to the pre-engine code path.
+    pub fn sequential() -> Self {
+        BatchExecutor {
+            pool: None,
+            min_parallel: DEFAULT_MIN_PARALLEL,
+            stats: Arc::new(ExecutorStats::default()),
+        }
+    }
+
+    /// Engine with its own pool of `threads` workers (`<= 1` degrades to
+    /// sequential).
+    pub fn new(threads: usize) -> Self {
+        if threads <= 1 {
+            Self::sequential()
+        } else {
+            Self::with_pool(Arc::new(ThreadPool::new(threads)))
+        }
+    }
+
+    /// Engine backed by an existing shared pool (the coordinator's).
+    pub fn with_pool(pool: Arc<ThreadPool>) -> Self {
+        BatchExecutor {
+            pool: Some(pool),
+            min_parallel: DEFAULT_MIN_PARALLEL,
+            stats: Arc::new(ExecutorStats::default()),
+        }
+    }
+
+    /// Override the sequential-fallback threshold (mainly for tests).
+    pub fn with_min_parallel(mut self, min_parallel: usize) -> Self {
+        self.min_parallel = min_parallel.max(2);
+        self
+    }
+
+    /// Worker count backing this engine (1 = sequential).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.size()).unwrap_or(1)
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.threads() > 1
+    }
+
+    pub fn stats(&self) -> &ExecutorStats {
+        &self.stats
+    }
+
+    /// Batched marginal gains `f_S(a)` for every candidate, in candidate
+    /// order. Sharded across the pool when profitable; results are
+    /// identical to `st.gains(candidates)` either way (each element's gain
+    /// is computed by the same per-element math, and shards concatenate in
+    /// index order).
+    pub fn gains(&self, st: &dyn ObjectiveState, candidates: &[usize]) -> Vec<f64> {
+        ExecutorStats::bump(&self.stats.sweeps, 1);
+        ExecutorStats::bump(&self.stats.elements, candidates.len());
+        let n = candidates.len();
+        let pool = match &self.pool {
+            Some(p) if p.size() > 1 && n >= self.min_parallel => p,
+            _ => return st.gains(candidates),
+        };
+        ExecutorStats::bump(&self.stats.sharded_sweeps, 1);
+        let shards = pool.size().min(n);
+        let chunk_len = n.div_ceil(shards);
+        let parts: Vec<Vec<f64>> = pool.scoped_map(shards, |s| {
+            let lo = s * chunk_len;
+            let hi = ((s + 1) * chunk_len).min(n);
+            if lo >= hi {
+                return Vec::new();
+            }
+            // fork per shard: states stay isolated even if a gains()
+            // implementation uses interior scratch
+            let fork = st.clone_box();
+            fork.gains(&candidates[lo..hi])
+        });
+        let mut out = Vec::with_capacity(n);
+        for p in parts {
+            out.extend(p);
+        }
+        debug_assert_eq!(out.len(), n);
+        out
+    }
+
+    /// Memoized sweep: serve each candidate from `cache` when its gain for
+    /// the cache's current state generation is known, and issue one (possibly
+    /// sharded) sweep for the misses. Returns `(gains, fresh_queries)` where
+    /// `fresh_queries` is the number of oracle queries actually issued —
+    /// callers must report exactly this to their round tracker so
+    /// self-reported counts match the oracle-observed counts.
+    ///
+    /// Candidates are assumed distinct (all algorithm sweeps are).
+    pub fn cached_gains(
+        &self,
+        cache: &mut GainCache,
+        st: &dyn ObjectiveState,
+        candidates: &[usize],
+    ) -> (Vec<f64>, usize) {
+        let misses: Vec<usize> =
+            candidates.iter().copied().filter(|&a| !cache.is_known(a)).collect();
+        if !misses.is_empty() {
+            let vals = self.gains(st, &misses);
+            for (&a, &v) in misses.iter().zip(&vals) {
+                cache.put(a, v);
+            }
+        }
+        cache.hits += candidates.len() - misses.len();
+        cache.misses += misses.len();
+        let out = candidates.iter().map(|&a| cache.get(a)).collect();
+        (out, misses.len())
+    }
+
+    /// Whole-set gains `f_S(R)` for a batch of candidate blocks (DASH's
+    /// per-round sample estimates), fanned out over the pool, each paired
+    /// with the constructed `S ∪ R` state so callers can adopt or sweep
+    /// them without rebuilding. Routed through
+    /// [`Objective::set_gain_state`] so oracle-call auditors observe
+    /// exactly one set query per block.
+    pub fn sample_blocks(
+        &self,
+        obj: &dyn Objective,
+        st: &dyn ObjectiveState,
+        blocks: &[Vec<usize>],
+    ) -> Vec<(f64, Box<dyn ObjectiveState>)> {
+        ExecutorStats::bump(&self.stats.set_evals, blocks.len());
+        match &self.pool {
+            Some(pool) if pool.size() > 1 && blocks.len() > 1 => {
+                pool.scoped_map(blocks.len(), |i| obj.set_gain_state(st, &blocks[i]))
+            }
+            _ => blocks.iter().map(|b| obj.set_gain_state(st, b)).collect(),
+        }
+    }
+
+}
+
+/// Per-element gain memo for one state generation. The owner must call
+/// [`GainCache::invalidate`] whenever the underlying solution set changes;
+/// between invalidations, repeated sweeps over surviving candidates are
+/// served without re-querying the oracle.
+#[derive(Debug, Clone)]
+pub struct GainCache {
+    vals: Vec<f64>,
+    known: Vec<bool>,
+    /// served-from-memo element count (telemetry)
+    pub hits: usize,
+    /// freshly evaluated element count (telemetry)
+    pub misses: usize,
+}
+
+impl GainCache {
+    /// Cache over ground set `0..n`.
+    pub fn new(n: usize) -> Self {
+        GainCache { vals: vec![0.0; n], known: vec![false; n], hits: 0, misses: 0 }
+    }
+
+    /// Forget every memoized gain (the state changed).
+    pub fn invalidate(&mut self) {
+        self.known.fill(false);
+    }
+
+    pub fn is_known(&self, a: usize) -> bool {
+        self.known.get(a).copied().unwrap_or(false)
+    }
+
+    /// Memoized value (0.0 when unknown; check [`GainCache::is_known`]).
+    pub fn get(&self, a: usize) -> f64 {
+        self.vals[a]
+    }
+
+    pub fn put(&mut self, a: usize, v: f64) {
+        self.vals[a] = v;
+        self.known[a] = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::objectives::LinearRegressionObjective;
+    use crate::rng::Pcg64;
+
+    fn setup() -> (LinearRegressionObjective, Vec<usize>) {
+        let mut rng = Pcg64::seed_from(1);
+        let ds = synthetic::regression_d1(&mut rng, 80, 60, 12, 0.3);
+        (LinearRegressionObjective::new(&ds), (0..60).collect())
+    }
+
+    #[test]
+    fn sharded_matches_sequential_exactly() {
+        let (obj, cand) = setup();
+        let st = obj.state_for(&[3, 17, 42]);
+        let seq = BatchExecutor::sequential();
+        let par = BatchExecutor::new(4).with_min_parallel(2);
+        assert!(par.is_parallel());
+        let a = seq.gains(&*st, &cand);
+        let b = par.gains(&*st, &cand);
+        assert_eq!(a, b, "sharded sweep must be bit-identical");
+        assert_eq!(par.stats().sharded_sweeps.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn small_sweeps_stay_sequential() {
+        let (obj, _) = setup();
+        let st = obj.empty_state();
+        let par = BatchExecutor::new(4); // default min_parallel = 32
+        let out = par.gains(&*st, &[1, 2, 3]);
+        assert_eq!(out.len(), 3);
+        assert_eq!(par.stats().sharded_sweeps.load(Ordering::Relaxed), 0);
+        assert_eq!(par.stats().sweeps.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn cache_serves_repeat_sweeps_without_queries() {
+        let (obj, cand) = setup();
+        let st = obj.empty_state();
+        let exec = BatchExecutor::sequential();
+        let mut cache = GainCache::new(obj.n());
+        let (first, fresh1) = exec.cached_gains(&mut cache, &*st, &cand);
+        assert_eq!(fresh1, cand.len());
+        let (second, fresh2) = exec.cached_gains(&mut cache, &*st, &cand);
+        assert_eq!(fresh2, 0, "repeat sweep must be free");
+        assert_eq!(first, second);
+        assert_eq!(cache.hits, cand.len());
+        // partial overlap: only the new element is queried
+        let mut subset = vec![0usize, 5, 59];
+        let (_, fresh3) = exec.cached_gains(&mut cache, &*st, &subset);
+        assert_eq!(fresh3, 0);
+        cache.invalidate();
+        subset.truncate(2);
+        let (_, fresh4) = exec.cached_gains(&mut cache, &*st, &subset);
+        assert_eq!(fresh4, 2, "invalidation forgets everything");
+    }
+
+    #[test]
+    fn cached_values_match_direct() {
+        let (obj, cand) = setup();
+        let st = obj.state_for(&[7]);
+        let exec = BatchExecutor::new(3).with_min_parallel(2);
+        let mut cache = GainCache::new(obj.n());
+        let (cached, _) = exec.cached_gains(&mut cache, &*st, &cand);
+        assert_eq!(cached, st.gains(&cand));
+    }
+
+    #[test]
+    fn sample_blocks_match_manual_evaluation() {
+        let (obj, _) = setup();
+        let st = obj.state_for(&[1, 2]);
+        let blocks = vec![vec![10, 11], vec![20], vec![30, 31, 32]];
+        for exec in [BatchExecutor::sequential(), BatchExecutor::new(3)] {
+            let got = exec.sample_blocks(&obj, &*st, &blocks);
+            for (b, (g, s_new)) in blocks.iter().zip(&got) {
+                let mut s2 = st.clone_box();
+                let before = s2.value();
+                for &a in b {
+                    s2.insert(a);
+                }
+                assert!((g - (s2.value() - before)).abs() < 1e-12);
+                // the returned state is the constructed S ∪ R
+                assert_eq!(s_new.set(), s2.set());
+                assert_eq!(s_new.value(), s2.value());
+            }
+        }
+    }
+
+    #[test]
+    fn sample_blocks_leave_base_state_untouched() {
+        let (obj, _) = setup();
+        let st = obj.state_for(&[4]);
+        let blocks = vec![vec![9, 10], vec![25]];
+        for exec in [BatchExecutor::sequential(), BatchExecutor::new(2)] {
+            let samples = exec.sample_blocks(&obj, &*st, &blocks);
+            assert_eq!(samples.len(), 2);
+            assert_eq!(samples[0].1.set(), &[4, 9, 10]);
+            assert_eq!(samples[1].1.set(), &[4, 25]);
+            // original untouched
+            assert_eq!(st.set(), &[4]);
+        }
+    }
+
+    #[test]
+    fn clones_share_stats_and_pool() {
+        let exec = BatchExecutor::new(2).with_min_parallel(2);
+        let clone = exec.clone();
+        let (obj, cand) = setup();
+        let st = obj.empty_state();
+        let _ = clone.gains(&*st, &cand);
+        assert_eq!(exec.stats().sweeps.load(Ordering::Relaxed), 1);
+        assert_eq!(exec.threads(), clone.threads());
+    }
+}

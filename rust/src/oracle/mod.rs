@@ -1,15 +1,24 @@
 //! Oracle layer: how algorithms obtain objective values.
 //!
 //! Algorithms consume [`Objective`](crate::objectives::Objective) directly;
-//! this module supplies the two production backends plus accounting:
+//! this module supplies the execution engine, the production backends, and
+//! accounting:
 //!
+//! - [`batch`] — the [`BatchExecutor`]: shards batched gain sweeps across a
+//!   shared thread pool and layers a memoized [`GainCache`] on top. Every
+//!   algorithm's inner loop issues its gain queries through this engine.
 //! - [`xla`] — objectives whose batched gain sweeps execute on the PJRT
 //!   runtime (the AOT-compiled Pallas kernels); state updates stay native.
-//! - [`CountingObjective`] — transparent wrapper that counts oracle calls
-//!   (used by tests to audit the algorithms' self-reported query counts).
+//! - [`CountingObjective`] — transparent wrapper that counts every oracle
+//!   interaction (used by tests to audit the algorithms' self-reported
+//!   query counts: for greedy, DASH and TOP-k the observed
+//!   [`QueryStats::total_oracle_queries`] must equal the algorithm's
+//!   reported `SelectionResult::queries`, sequential or parallel).
 
+pub mod batch;
 pub mod xla;
 
+pub use batch::{BatchExecutor, ExecutorStats, GainCache};
 pub use xla::{XlaAoptObjective, XlaLogisticObjective, XlaLregObjective};
 
 use crate::objectives::{Objective, ObjectiveState};
@@ -24,13 +33,22 @@ pub struct QueryStats {
     pub batched_gains: AtomicUsize,
     pub batched_elements: AtomicUsize,
     pub inserts: AtomicUsize,
+    /// whole-set oracle evaluations: `Objective::eval` + `Objective::set_gain`
+    pub set_evals: AtomicUsize,
 }
 
 impl QueryStats {
-    /// All gain evaluations (singles + batched elements).
+    /// All per-element gain evaluations (singles + batched elements).
     pub fn total_gain_queries(&self) -> usize {
         self.single_gains.load(Ordering::Relaxed)
             + self.batched_elements.load(Ordering::Relaxed)
+    }
+
+    /// Every oracle query in the paper's accounting: per-element gains plus
+    /// whole-set evaluations. Algorithms' self-reported
+    /// `SelectionResult::queries` must equal exactly this.
+    pub fn total_oracle_queries(&self) -> usize {
+        self.total_gain_queries() + self.set_evals.load(Ordering::Relaxed)
     }
 }
 
@@ -108,6 +126,32 @@ impl<O: Objective> Objective for CountingObjective<O> {
             stats: Arc::clone(&self.stats),
         })
     }
+
+    fn eval(&self, set: &[usize]) -> f64 {
+        self.stats.set_evals.fetch_add(1, Ordering::Relaxed);
+        self.inner.eval(set)
+    }
+
+    // `set_gain` inherits the trait default, which delegates here — so both
+    // entry points count exactly one whole-set query.
+    fn set_gain_state(
+        &self,
+        state: &dyn ObjectiveState,
+        add: &[usize],
+    ) -> (f64, Box<dyn ObjectiveState>) {
+        self.stats.set_evals.fetch_add(1, Ordering::Relaxed);
+        // replicate the default implementation rather than delegating: the
+        // incoming `state` is a CountingState, and forking it keeps the
+        // insert accounting attached (no inner objective overrides this,
+        // so semantics are identical)
+        let mut st = state.clone_box();
+        let before = st.value();
+        for &a in add {
+            st.insert(a);
+        }
+        let gain = st.value() - before;
+        (gain, st)
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +170,7 @@ mod tests {
         let res = Greedy::new(GreedyConfig { k: 3, ..Default::default() }).run(&counting);
         // greedy's self-reported queries must equal observed gain queries
         assert_eq!(res.queries, counting.stats.total_gain_queries());
+        assert_eq!(res.queries, counting.stats.total_oracle_queries());
         assert_eq!(counting.stats.inserts.load(Ordering::Relaxed), 3);
     }
 
@@ -140,5 +185,21 @@ mod tests {
         }
         assert_eq!(base.n(), counting.n());
         assert_eq!(base.upper_bound(), counting.upper_bound());
+        assert_eq!(counting.stats.set_evals.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn set_gain_counted_and_exact() {
+        let mut rng = Pcg64::seed_from(3);
+        let ds = synthetic::regression_d1(&mut rng, 50, 10, 4, 0.2);
+        let base = LinearRegressionObjective::new(&ds);
+        let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+        let st_base = base.state_for(&[1]);
+        let st_count = counting.state_for(&[1]);
+        let add = vec![3usize, 7];
+        let g_base = base.set_gain(&*st_base, &add);
+        let g_count = counting.set_gain(&*st_count, &add);
+        assert!((g_base - g_count).abs() < 1e-14);
+        assert_eq!(counting.stats.set_evals.load(Ordering::Relaxed), 1);
     }
 }

@@ -1,22 +1,38 @@
-//! A small fixed-size thread pool with a scoped `parallel_map`, built on
+//! A small fixed-size thread pool with scoped parallel maps, built on
 //! `std::thread` and channels (tokio is unavailable offline).
 //!
-//! The oracle layer uses this to evaluate independent marginal-gain queries
-//! concurrently — the "polynomially many queries per adaptive round" of the
-//! paper's adaptivity model. On a single-core testbed the pool degrades to
-//! near-sequential execution; round/query accounting (what the paper
-//! actually measures) is unaffected.
+//! The oracle layer's [`BatchExecutor`](crate::oracle::BatchExecutor) uses
+//! this to evaluate independent marginal-gain queries concurrently — the
+//! "polynomially many queries per adaptive round" of the paper's adaptivity
+//! model. Two dispatch primitives:
+//!
+//! - [`ThreadPool::scoped_map`] — runs a *borrowed* closure over `0..n` on
+//!   the pool's **persistent workers** (no thread spawn per call). The
+//!   caller participates by draining queued jobs while it waits, so a
+//!   saturated — or even nested — pool still makes progress.
+//! - [`ThreadPool::parallel_map`] — the original convenience wrapper,
+//!   now a thin delegation to `scoped_map`.
+//!
+//! On a single-core testbed both degrade to sequential execution;
+//! round/query accounting (what the paper actually measures) is unaffected.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// Fixed-size worker pool. Dropping the pool joins all workers.
+///
+/// `Sync`: the job sender is mutex-wrapped so one pool instance can be
+/// shared (e.g. `Arc<ThreadPool>` owned by the coordinator's leader and
+/// used by every served job) instead of each call site spawning threads.
 pub struct ThreadPool {
-    tx: Option<Sender<Job>>,
+    tx: Option<Mutex<Sender<Job>>>,
+    /// shared with workers; `scoped_map` callers drain it while waiting
+    rx: Arc<Mutex<Receiver<Job>>>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
 }
@@ -35,14 +51,14 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            Ok(job) => run_job(job),
                             Err(_) => break, // sender dropped -> shut down
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, size }
+        ThreadPool { tx: Some(Mutex::new(tx)), rx, workers, size }
     }
 
     /// Pool sized to the machine (`available_parallelism`), or `DASH_THREADS`.
@@ -64,81 +80,133 @@ impl ThreadPool {
         self.tx
             .as_ref()
             .expect("pool shut down")
+            .lock()
+            .unwrap()
             .send(Box::new(job))
             .expect("worker channel closed");
     }
 
-    /// Apply `f` to `0..n`, writing results in index order. Blocks until all
-    /// chunks complete. `f` must be `Sync` (shared across workers).
+    /// Apply `f` to `0..n` on the persistent workers, writing results in
+    /// index order. Blocks until all chunks complete; panics if any chunk
+    /// panicked. `f` may borrow caller state (`Sync` suffices) — the
+    /// completion barrier guarantees no borrow outlives this call.
     ///
     /// Work is split into `size * 4` contiguous chunks for load balancing.
-    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    /// While waiting, the caller drains the job queue itself, so calling
+    /// `scoped_map` from inside a pool job cannot deadlock.
+    pub fn scoped_map<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
-        T: Send + Default + Clone + 'static,
+        T: Send + 'static,
         F: Fn(usize) -> T + Sync,
     {
         if n == 0 {
             return Vec::new();
         }
-        let mut out = vec![T::default(); n];
+        if self.size <= 1 || n == 1 {
+            return (0..n).map(&f).collect();
+        }
+
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
         let chunks = (self.size * 4).min(n).max(1);
         let chunk_len = n.div_ceil(chunks);
-        let pending = AtomicUsize::new(0);
-        let (done_tx, done_rx) = channel::<()>();
 
-        // SAFETY-free scoped execution: we use std::thread::scope so borrows
-        // of `f` and `out` are statically guaranteed to outlive the workers.
-        // The pool's own threads are used only through `execute`, which
-        // requires 'static; for borrowed closures we spawn scoped threads
-        // directly, bounded by pool size.
-        std::thread::scope(|scope| {
-            let out_ptr = SendPtr(out.as_mut_ptr());
-            let f = &f;
-            let mut spawned = 0usize;
-            for c in 0..chunks {
-                let start = c * chunk_len;
-                if start >= n {
-                    break;
-                }
-                let end = (start + chunk_len).min(n);
-                pending.fetch_add(1, Ordering::SeqCst);
-                let done_tx = done_tx.clone();
-                let pending_ref = &pending;
+        // (completed chunk count, wakeup) + sticky panic flag
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let panicked = Arc::new(AtomicBool::new(false));
+
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        // SAFETY: lifetime erasure to ship the borrowed closure through the
+        // 'static job channel. Sound because the barrier below does not
+        // return until every dispatched chunk has run (or recorded a
+        // panic), so the erased borrows of `f` and `out` never dangle.
+        let f_obj: &(dyn Fn(usize) -> T + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize) -> T + Sync) =
+            unsafe { std::mem::transmute(f_obj) };
+
+        let mut dispatched = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk_len).min(n);
+            dispatched += 1;
+            let done = Arc::clone(&done);
+            let panicked = Arc::clone(&panicked);
+            let out_ptr = out_ptr;
+            self.execute(move || {
+                // rebind the wrapper: edition-2021 disjoint capture would
+                // otherwise capture the raw-pointer field directly (!Send)
                 let out_ptr = out_ptr;
-                if spawned < self.size.saturating_sub(1) {
-                    spawned += 1;
-                    scope.spawn(move || {
-                        // rebind the wrapper: edition-2021 disjoint capture
-                        // would otherwise capture the raw-pointer field
-                        // directly, which is !Send
-                        let out_ptr = out_ptr;
-                        for i in start..end {
-                            let v = f(i);
-                            // SAFETY: each index i is written by exactly one
-                            // chunk; chunks are disjoint; `out` outlives scope.
-                            unsafe { *out_ptr.0.add(i) = v };
-                        }
-                        pending_ref.fetch_sub(1, Ordering::SeqCst);
-                        let _ = done_tx.send(());
-                    });
-                } else {
-                    // run remaining chunks inline to avoid oversubscription
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     for i in start..end {
-                        let v = f(i);
-                        unsafe { *out_ptr.0.add(i) = v };
+                        let v = f_static(i);
+                        // SAFETY: each index i is written by exactly one
+                        // chunk; chunks are disjoint; `out` outlives the
+                        // barrier.
+                        unsafe { *out_ptr.0.add(i) = Some(v) };
                     }
-                    pending.fetch_sub(1, Ordering::SeqCst);
-                    let _ = done_tx.send(());
+                }));
+                if r.is_err() {
+                    panicked.store(true, Ordering::SeqCst);
+                }
+                let (lock, cvar) = &*done;
+                *lock.lock().unwrap() += 1;
+                cvar.notify_all();
+            });
+            start = end;
+        }
+
+        // Barrier with queue-draining: run pending jobs (ours or other
+        // callers') instead of idling, then sleep briefly when none are
+        // grabbable. `try_lock` (not `lock`): an *idle* worker parks inside
+        // `recv()` while holding the rx mutex, and blocking on it here
+        // would trade the condvar wait for a mutex wait — an idle worker
+        // also means the queue will drain without our help.
+        loop {
+            if *done.0.lock().unwrap() >= dispatched {
+                break;
+            }
+            let job = match self.rx.try_lock() {
+                Ok(rx) => rx.try_recv().ok(),
+                Err(_) => None,
+            };
+            match job {
+                Some(job) => run_job(job),
+                None => {
+                    let (lock, cvar) = &*done;
+                    let completed = lock.lock().unwrap();
+                    if *completed >= dispatched {
+                        break;
+                    }
+                    let _ = cvar.wait_timeout(completed, Duration::from_millis(1)).unwrap();
                 }
             }
-            drop(done_tx);
-            while pending.load(Ordering::SeqCst) > 0 {
-                if done_rx.recv().is_err() {
-                    break;
-                }
-            }
-        });
-        out
+        }
+
+        if panicked.load(Ordering::SeqCst) {
+            panic!("scoped_map: worker job panicked");
+        }
+        out.into_iter()
+            .map(|v| v.expect("scoped_map chunk completed"))
+            .collect()
+    }
+
+    /// Alias of [`ThreadPool::scoped_map`] kept for the original call
+    /// sites' naming.
+    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.scoped_map(n, f)
+    }
+}
+
+/// Run one job, containing any panic to this job (a panicking job must not
+/// kill a worker — later scoped_map barriers depend on every worker
+/// surviving).
+fn run_job(job: Job) {
+    if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+        crate::log_warn!("thread-pool job panicked");
     }
 }
 
@@ -150,7 +218,8 @@ impl<T> Clone for SendPtr<T> {
     }
 }
 impl<T> Copy for SendPtr<T> {}
-// SAFETY: used only for disjoint index writes inside thread::scope.
+// SAFETY: used only for disjoint index writes guarded by scoped_map's
+// completion barrier.
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
@@ -166,7 +235,7 @@ impl Drop for ThreadPool {
 /// Convenience: one-shot parallel map with a temporary default-size pool.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone + 'static,
+    T: Send + 'static,
     F: Fn(usize) -> T + Sync,
 {
     ThreadPool::new(ThreadPool::default_size()).parallel_map(n, f)
@@ -221,5 +290,80 @@ mod tests {
         let pool = ThreadPool::new(0);
         assert_eq!(pool.size(), 1);
         assert_eq!(pool.parallel_map(5, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scoped_map_non_default_type() {
+        // Box<usize> is neither Default-returning-useful nor Clone-cheap;
+        // scoped_map must not require either
+        let pool = ThreadPool::new(3);
+        let out = pool.scoped_map(64, |i| Box::new(i * 3));
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(**v, i * 3);
+        }
+    }
+
+    #[test]
+    fn scoped_map_reuses_pool_across_calls() {
+        let pool = ThreadPool::new(4);
+        for round in 0..20 {
+            let out = pool.scoped_map(100, |i| i + round);
+            assert_eq!(out[99], 99 + round);
+        }
+    }
+
+    #[test]
+    fn scoped_map_is_sync_shareable() {
+        fn assert_sync<T: Sync + Send>() {}
+        assert_sync::<ThreadPool>();
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let p = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                let out = p.scoped_map(200, |i| i * t);
+                assert_eq!(out[199], 199 * t);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn nested_scoped_map_makes_progress() {
+        // a job on the pool dispatches another scoped_map onto the same
+        // pool; the caller-drains-queue barrier must prevent deadlock
+        let pool = Arc::new(ThreadPool::new(2));
+        let p2 = Arc::clone(&pool);
+        let outer = pool.scoped_map(4, move |i| {
+            let inner = p2.scoped_map(8, |j| j + i);
+            inner.iter().sum::<usize>()
+        });
+        for (i, v) in outer.iter().enumerate() {
+            assert_eq!(*v, 28 + 8 * i);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped_map: worker job panicked")]
+    fn scoped_map_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.scoped_map(16, |i| {
+            if i == 7 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn pool_survives_job_panic() {
+        let pool = ThreadPool::new(2);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = pool.scoped_map(4, |_| -> usize { panic!("x") });
+        }));
+        // workers must still serve new work
+        assert_eq!(pool.scoped_map(3, |i| i), vec![0, 1, 2]);
     }
 }

@@ -1,0 +1,198 @@
+//! BatchExecutor audit: every algorithm's self-reported query count must
+//! equal the oracle-observed count (`CountingObjective`), and running a
+//! sweep through the parallel engine must be **byte-identical** to the
+//! sequential path — same set, same value bits, same rounds, same queries.
+//!
+//! This is the acceptance gate for the batched-gain engine: the paper's
+//! measurements are query/round counts, so the engine may change wallclock
+//! but must never change accounting.
+
+use dash_select::algorithms::{
+    AdaptiveSampling, AdaptiveSamplingConfig, Dash, DashConfig, Greedy, GreedyConfig,
+    OptEstimate, ParallelGreedy, RandomSelect, SelectionResult, TopK,
+};
+use dash_select::data::synthetic;
+use dash_select::data::Dataset;
+use dash_select::objectives::LinearRegressionObjective;
+use dash_select::oracle::{BatchExecutor, CountingObjective};
+use dash_select::rng::Pcg64;
+
+fn dataset(seed: u64) -> Dataset {
+    let mut rng = Pcg64::seed_from(seed);
+    synthetic::regression_d1(&mut rng, 100, 40, 10, 0.3)
+}
+
+/// The two execution modes every audit runs under. `min_parallel = 2`
+/// forces real sharding even on small sweeps.
+fn executors() -> Vec<(&'static str, BatchExecutor)> {
+    vec![
+        ("sequential", BatchExecutor::sequential()),
+        ("parallel", BatchExecutor::new(4).with_min_parallel(2)),
+    ]
+}
+
+fn assert_same(mode: &str, reference: &SelectionResult, res: &SelectionResult) {
+    assert_eq!(reference.set, res.set, "{mode}: selected set diverged");
+    assert_eq!(
+        reference.value.to_bits(),
+        res.value.to_bits(),
+        "{mode}: value not byte-identical ({} vs {})",
+        reference.value,
+        res.value
+    );
+    assert_eq!(reference.rounds, res.rounds, "{mode}: rounds diverged");
+    assert_eq!(reference.queries, res.queries, "{mode}: queries diverged");
+}
+
+#[test]
+fn greedy_audit_sequential_and_parallel() {
+    let ds = dataset(1);
+    let mut reference: Option<SelectionResult> = None;
+    for (mode, exec) in executors() {
+        let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+        let res = Greedy::new(GreedyConfig { k: 6, ..Default::default() })
+            .with_executor(exec)
+            .run(&counting);
+        assert_eq!(
+            res.queries,
+            counting.stats.total_oracle_queries(),
+            "{mode}: reported vs observed"
+        );
+        // greedy issues only per-element gain queries
+        assert_eq!(res.queries, counting.stats.total_gain_queries(), "{mode}");
+        if let Some(r) = &reference {
+            assert_same(mode, r, &res);
+        }
+        reference = Some(res);
+    }
+}
+
+#[test]
+fn lazy_greedy_audit() {
+    let ds = dataset(2);
+    for (mode, exec) in executors() {
+        let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+        let res = Greedy::new(GreedyConfig { k: 6, lazy: true, ..Default::default() })
+            .with_executor(exec)
+            .run(&counting);
+        assert_eq!(res.queries, counting.stats.total_oracle_queries(), "{mode}");
+    }
+}
+
+#[test]
+fn parallel_greedy_audit() {
+    let ds = dataset(3);
+    let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+    let res = ParallelGreedy::new(GreedyConfig { k: 5, ..Default::default() }, 4)
+        .run(&counting);
+    assert_eq!(res.queries, counting.stats.total_oracle_queries());
+    // and identical to sequential greedy
+    let seq = Greedy::new(GreedyConfig { k: 5, ..Default::default() })
+        .run(&LinearRegressionObjective::new(&ds));
+    assert_eq!(seq.set, res.set);
+    assert_eq!(seq.queries, res.queries);
+}
+
+#[test]
+fn dash_auto_opt_audit_sequential_and_parallel() {
+    let ds = dataset(4);
+    let mut reference: Option<SelectionResult> = None;
+    for (mode, exec) in executors() {
+        let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+        let mut rng = Pcg64::seed_from(42);
+        let res = Dash::new(DashConfig { k: 8, ..Default::default() })
+            .with_executor(exec)
+            .run(&counting, &mut rng);
+        assert_eq!(
+            res.queries,
+            counting.stats.total_oracle_queries(),
+            "{mode}: DASH reported queries must equal observed \
+             (gains {} + set evals {})",
+            counting.stats.total_gain_queries(),
+            counting.stats.set_evals.load(std::sync::atomic::Ordering::Relaxed),
+        );
+        // DASH issues both kinds: per-element sweeps and whole-set samples
+        assert!(counting.stats.set_evals.load(std::sync::atomic::Ordering::Relaxed) > 0);
+        if let Some(r) = &reference {
+            assert_same(mode, r, &res);
+        }
+        reference = Some(res);
+    }
+}
+
+#[test]
+fn dash_known_opt_audit() {
+    let ds = dataset(5);
+    let obj = LinearRegressionObjective::new(&ds);
+    let opt = Greedy::new(GreedyConfig { k: 6, ..Default::default() }).run(&obj).value;
+    for (mode, exec) in executors() {
+        let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+        let mut rng = Pcg64::seed_from(9);
+        let res = Dash::new(DashConfig {
+            k: 6,
+            opt: OptEstimate::Known(opt),
+            ..Default::default()
+        })
+        .with_executor(exec)
+        .run(&counting, &mut rng);
+        assert_eq!(res.queries, counting.stats.total_oracle_queries(), "{mode}");
+    }
+}
+
+#[test]
+fn topk_audit_sequential_and_parallel() {
+    let ds = dataset(6);
+    let mut reference: Option<SelectionResult> = None;
+    for (mode, exec) in executors() {
+        let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+        let res = TopK::new(7).with_executor(exec).run(&counting);
+        // n singleton queries + 1 final whole-set evaluation
+        assert_eq!(res.queries, counting.stats.total_oracle_queries(), "{mode}");
+        assert_eq!(res.queries, ds.n() + 1, "{mode}");
+        assert_eq!(
+            counting.stats.set_evals.load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "{mode}"
+        );
+        if let Some(r) = &reference {
+            assert_same(mode, r, &res);
+        }
+        reference = Some(res);
+    }
+}
+
+#[test]
+fn random_select_audit() {
+    let ds = dataset(7);
+    let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+    let mut rng = Pcg64::seed_from(3);
+    let res = RandomSelect::new(5).run(&counting, &mut rng);
+    assert_eq!(res.queries, 1);
+    assert_eq!(res.queries, counting.stats.total_oracle_queries());
+}
+
+#[test]
+fn adaptive_sampling_audit_on_counterexample() {
+    // the α=1 baseline shares DASH's core, so its accounting must audit
+    // identically — including when it hits the Appendix A.2 iteration cap
+    use dash_select::objectives::counterexamples::MinCounterexample;
+    let k = 3;
+    for (mode, exec) in executors() {
+        let f = CountingObjective::new(MinCounterexample::new(k));
+        let mut rng = Pcg64::seed_from(11);
+        let res = AdaptiveSampling::new(AdaptiveSamplingConfig {
+            k,
+            r: 1,
+            epsilon: 0.0,
+            // tight expectation estimates so the α=1 threshold comparison
+            // matches the paper's exact-expectation argument
+            samples: 32,
+            opt: OptEstimate::Known(k as f64),
+            max_rounds: 40,
+        })
+        .with_executor(exec)
+        .run(&f, &mut rng);
+        assert!(res.hit_iteration_cap, "{mode}: α=1 must fail on the counterexample");
+        assert_eq!(res.queries, f.stats.total_oracle_queries(), "{mode}");
+    }
+}

@@ -102,12 +102,35 @@ fn dash_query_accounting_matches_observed() {
     let ds = synthetic::regression_d1(&mut rng, 80, 20, 8, 0.3);
     let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
     let res = Dash::new(DashConfig { k: 6, ..Default::default() }).run(&counting, &mut rng);
-    let observed = counting.stats.total_gain_queries();
-    // DASH counts set-samples as single queries while the observed count
-    // tallies per-element gains; the self-reported number must not exceed
-    // what was actually issued, and must be within a small factor
-    assert!(res.queries <= observed + res.queries / 2, "{} vs {observed}", res.queries);
-    assert!(observed > 0);
+    // exact audit: self-reported queries equal oracle-observed queries —
+    // per-element gains plus whole-set sample evaluations (the engine
+    // routes DASH's f_S(R) estimates through Objective::set_gain, which
+    // CountingObjective observes). The deeper per-mode audits live in
+    // tests/executor_audit.rs.
+    assert_eq!(res.queries, counting.stats.total_oracle_queries());
+    assert!(counting.stats.total_gain_queries() > 0);
+}
+
+#[test]
+fn leader_parallel_and_sequential_agree() {
+    // one DASH job served by a parallel leader (shared pool) and a
+    // sequential leader must produce identical results and accounting
+    let mut rng = Pcg64::seed_from(6);
+    let ds = Arc::new(synthetic::regression_d1(&mut rng, 100, 40, 12, 0.3));
+    let job = SelectionJob {
+        dataset: Arc::clone(&ds),
+        objective: ObjectiveChoice::Lreg,
+        backend: Backend::Native,
+        algorithm: AlgorithmChoice::Dash(DashConfig::default()),
+        k: 8,
+        seed: 13,
+    };
+    let par = Leader::with_threads(4).run(&job).unwrap();
+    let seq = Leader::with_threads(1).run(&job).unwrap();
+    assert_eq!(par.result.set, seq.result.set);
+    assert_eq!(par.result.queries, seq.result.queries);
+    assert_eq!(par.result.rounds, seq.result.rounds);
+    assert_eq!(par.result.value.to_bits(), seq.result.value.to_bits());
 }
 
 // ------------------------------------------------------- properties -----

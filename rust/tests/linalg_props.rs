@@ -1,0 +1,157 @@
+//! Property tests for the linalg substrate the gain engine leans on
+//! (incremental QR backs the regression oracle; Cholesky + rank-1 updates
+//! back A-optimality), using the in-repo `util::proptest` harness.
+
+use dash_select::linalg::{
+    chol_rank1_update, cholesky, dot, gemm, gemm_tn, gemv, qr_thin, syrk, IncrementalQr,
+    Matrix,
+};
+use dash_select::util::proptest::{check, close, Gen};
+
+fn random_matrix(g: &mut Gen, rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for j in 0..cols {
+        let col = g.vec_normal(rows);
+        m.col_mut(j).copy_from_slice(&col);
+    }
+    m
+}
+
+/// Well-conditioned random SPD matrix `BᵀB + n·I`.
+fn random_spd(g: &mut Gen, n: usize) -> Matrix {
+    let b = random_matrix(g, n, n);
+    let mut a = syrk(&b);
+    for i in 0..n {
+        a.add_at(i, i, n as f64);
+    }
+    a
+}
+
+#[test]
+fn prop_cholesky_round_trip() {
+    check("cholesky reconstructs A = L·Lᵀ", 24, |g| {
+        let n = 1 + g.size() % 24;
+        let a = random_spd(g, n);
+        let f = cholesky(&a).ok_or("SPD matrix rejected")?;
+        let diff = f.reconstruct().max_abs_diff(&a);
+        if diff > 1e-8 * (n as f64) {
+            return Err(format!("n={n}: reconstruction error {diff}"));
+        }
+        // and the factor solves: A·x = b round-trips
+        let x_true = g.vec_normal(n);
+        let mut b = vec![0.0; n];
+        gemv(&a, &x_true, &mut b);
+        let x = f.solve(&b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            close(*xi, *ti, 1e-6)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rank1_update_matches_refactorization() {
+    check("chol_rank1_update == refactor(A + xxᵀ)", 24, |g| {
+        let n = 2 + g.size() % 16;
+        let a = random_spd(g, n);
+        let mut f = cholesky(&a).ok_or("SPD matrix rejected")?;
+        // a chain of rank-1 updates must track fresh factorizations
+        let mut a2 = a.clone();
+        for _ in 0..3 {
+            let x = g.vec_normal(n);
+            for i in 0..n {
+                for j in 0..n {
+                    a2.add_at(i, j, x[i] * x[j]);
+                }
+            }
+            let mut scratch = x.clone();
+            chol_rank1_update(&mut f.l, &mut scratch);
+        }
+        let fresh = cholesky(&a2).ok_or("updated matrix rejected")?;
+        let diff = f.l.max_abs_diff(&fresh.l);
+        if diff > 1e-7 * (n as f64) {
+            return Err(format!("n={n}: factor drift {diff}"));
+        }
+        close(f.log_det(), fresh.log_det(), 1e-8)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qr_round_trip_and_orthonormality() {
+    check("qr_thin: A = Q·R with orthonormal Q", 24, |g| {
+        let d = 4 + g.size() % 28;
+        let cols = 1 + g.size() % d.min(10);
+        let a = random_matrix(g, d, cols);
+        let (q, r) = qr_thin(&a);
+        if q.cols() != cols {
+            return Err(format!("rank {} != {cols} for generic input", q.cols()));
+        }
+        let qr = gemm(&q, &r);
+        let diff = qr.max_abs_diff(&a);
+        if diff > 1e-9 * (d as f64) {
+            return Err(format!("d={d} cols={cols}: reconstruction error {diff}"));
+        }
+        let qtq = gemm_tn(&q, &q);
+        let diff_i = qtq.max_abs_diff(&Matrix::identity(cols));
+        if diff_i > 1e-10 * (cols as f64).max(1.0) {
+            return Err(format!("QᵀQ deviates from I by {diff_i}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incremental_qr_matches_batch_projection() {
+    check("IncrementalQr projection == batch qr_thin projection", 24, |g| {
+        let d = 6 + g.size() % 20;
+        let cols = 1 + g.size() % d.min(8);
+        let a = random_matrix(g, d, cols);
+        let mut inc = IncrementalQr::new(d);
+        for j in 0..cols {
+            if !inc.push_col(a.col(j)) {
+                return Err(format!("generic column {j} flagged dependent"));
+            }
+        }
+        let y = g.vec_normal(d);
+        // pythagoras: projection + residual must account for all of ‖y‖²
+        let res = inc.residual(&y);
+        close(dot(&y, &y), inc.proj_sq_norm(&y) + dot(&res, &res), 1e-9)?;
+        // residual orthogonal to every pushed column
+        for j in 0..cols {
+            let c = dot(&res, a.col(j));
+            if c.abs() > 1e-8 {
+                return Err(format!("residual·col{j} = {c}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rank1_update_keeps_solves_consistent() {
+    // the A-optimality oracle interleaves updates and solves; a factor that
+    // drifts would corrupt every subsequent gain
+    check("updated factor solves the updated system", 16, |g| {
+        let n = 2 + g.size() % 12;
+        let a = random_spd(g, n);
+        let mut f = cholesky(&a).ok_or("SPD matrix rejected")?;
+        let x = g.vec_normal(n);
+        let mut a2 = a.clone();
+        for i in 0..n {
+            for j in 0..n {
+                a2.add_at(i, j, x[i] * x[j]);
+            }
+        }
+        let mut scratch = x.clone();
+        chol_rank1_update(&mut f.l, &mut scratch);
+        let rhs = g.vec_normal(n);
+        let sol = f.solve(&rhs);
+        let mut back = vec![0.0; n];
+        gemv(&a2, &sol, &mut back);
+        for (bi, ri) in back.iter().zip(&rhs) {
+            close(*bi, *ri, 1e-6)?;
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,145 @@
+//! Offline vendored subset of the `anyhow` API.
+//!
+//! The build image has no crates.io access, so this crate provides exactly
+//! the surface the repository uses: a string-backed [`Error`], the
+//! [`Result`] alias, the [`anyhow!`] and [`ensure!`] macros, and the
+//! [`Context`] extension for `Result` and `Option`. Swapping in the real
+//! `anyhow` is a one-line change in `rust/Cargo.toml`.
+
+use std::fmt;
+
+/// String-backed error type with an optional context chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context line, mirroring anyhow's `context` chaining.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait: attach context to failures.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string or a displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(&$err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $msg:literal $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!($msg));
+        }
+    };
+    ($cond:expr, $fmt:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($fmt, $($arg)*));
+        }
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_and_context() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+        let e = e.context("outer");
+        assert_eq!(e.to_string(), "outer: boom");
+    }
+
+    #[test]
+    fn result_and_option_context() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(e.to_string(), "ctx: inner");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+        assert_eq!(Some(3u32).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("literal {}", 1);
+        assert_eq!(e.to_string(), "literal 1");
+        let s = String::from("from expr");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "from expr");
+        fn guard(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {}", x);
+            Ok(x)
+        }
+        assert!(guard(1).is_ok());
+        assert_eq!(guard(-1).unwrap_err().to_string(), "x must be positive, got -1");
+    }
+}
