@@ -1,19 +1,106 @@
-//! BatchExecutor micro-benchmarks: sequential vs pool-sharded gain sweeps
-//! on the regression and A-optimality oracles, plus the GainCache memo
-//! path. Records the sweep throughput comparison to `BENCH_executor.json`
-//! at the repository root so the speedup is tracked across PRs.
+//! BatchExecutor micro-benchmarks: blocked-vs-scalar sweep kernels,
+//! zero-clone vs clone-per-shard sharding, sequential vs pool-sharded
+//! sweeps, and the GainCache memo path. Records everything to
+//! `BENCH_executor.json` at the repository root (uploaded as a CI artifact
+//! per run) so sweep throughput is tracked across PRs.
+//!
+//! The `objectives` entries are the acceptance record for the level-3
+//! sweep kernels: blocked throughput vs the scalar per-candidate path at
+//! the reference shape d=512, n=2048, |S|=32 for lreg and A-opt.
 //!
 //! Run: `cargo bench --offline --bench executor` (DASH_BENCH_FAST=1 for a
 //! quick pass; DASH_THREADS=N to pin the pool size).
 
 use dash_select::bench::Bench;
 use dash_select::data::synthetic;
-use dash_select::objectives::{AOptimalityObjective, LinearRegressionObjective, Objective};
+use dash_select::objectives::{
+    AOptimalityObjective, LinearRegressionObjective, Objective, ObjectiveState,
+};
 use dash_select::oracle::{BatchExecutor, GainCache};
 use dash_select::rng::Pcg64;
 use dash_select::util::json::Json;
 use dash_select::util::threadpool::ThreadPool;
 use std::path::PathBuf;
+use std::sync::Arc;
+
+/// The pre-refactor sharding shape: fork the state per shard via
+/// `clone_box`, then run scalar per-candidate gains. Kept here (only) as
+/// the baseline the zero-clone engine is measured against.
+fn clone_shard_gains(pool: &ThreadPool, st: &dyn ObjectiveState, cand: &[usize]) -> Vec<f64> {
+    let n = cand.len();
+    let shards = pool.size().min(n).max(1);
+    let chunk = n.div_ceil(shards);
+    let parts: Vec<Vec<f64>> = pool.scoped_map(shards, |s| {
+        let lo = s * chunk;
+        let hi = ((s + 1) * chunk).min(n);
+        if lo >= hi {
+            return Vec::new();
+        }
+        let fork = st.clone_box();
+        cand[lo..hi].iter().map(|&a| fork.gain(a)).collect()
+    });
+    let mut out = Vec::with_capacity(n);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+struct SweepCase {
+    objective: &'static str,
+    d: usize,
+    n: usize,
+    set_size: usize,
+    scalar_s: f64,
+    blocked_s: f64,
+    clone_shard_s: f64,
+    zero_clone_shard_s: f64,
+}
+
+/// Measure one objective at the acceptance shape: scalar per-candidate vs
+/// blocked sequential sweep, and clone-per-shard vs zero-clone sharding.
+fn sweep_case(
+    bench: &mut Bench,
+    objective: &'static str,
+    st: &dyn ObjectiveState,
+    d: usize,
+    n: usize,
+    set_size: usize,
+    pool: &Arc<ThreadPool>,
+) -> SweepCase {
+    let cand: Vec<usize> = (0..n).collect();
+    let seq = BatchExecutor::sequential();
+    let par = BatchExecutor::with_pool(Arc::clone(pool)).with_min_parallel(2);
+    let label = format!("{objective} d={d} n={n} |S|={set_size}");
+    let scalar_s = bench
+        .run(&format!("{label} scalar per-candidate"), || {
+            cand.iter().map(|&a| st.gain(a)).collect::<Vec<f64>>()
+        })
+        .mean_s;
+    let blocked_s = bench
+        .run(&format!("{label} blocked sequential"), || seq.gains(st, &cand))
+        .mean_s;
+    let clone_shard_s = bench
+        .run(&format!("{label} clone-per-shard x{}", pool.size()), || {
+            clone_shard_gains(pool, st, &cand)
+        })
+        .mean_s;
+    let zero_clone_shard_s = bench
+        .run(&format!("{label} zero-clone sharded x{}", pool.size()), || {
+            par.gains(st, &cand)
+        })
+        .mean_s;
+    SweepCase {
+        objective,
+        d,
+        n,
+        set_size,
+        scalar_s,
+        blocked_s,
+        clone_shard_s,
+        zero_clone_shard_s,
+    }
+}
 
 fn main() {
     let mut bench = Bench::new("executor");
@@ -21,8 +108,25 @@ fn main() {
     let threads = ThreadPool::default_size();
     println!("executor bench: {threads} worker threads (DASH_THREADS to override)\n");
 
+    let pool = Arc::new(ThreadPool::new(threads));
     let seq = BatchExecutor::sequential();
-    let par = BatchExecutor::new(threads).with_min_parallel(2);
+    let par = BatchExecutor::with_pool(Arc::clone(&pool)).with_min_parallel(2);
+
+    // ---- acceptance shape: blocked vs scalar, clone vs zero-clone ----
+    // lreg: d samples, n candidate features, |S| = 32 selected
+    let (d, n, s) = (512usize, 2048usize, 32usize);
+    let ds_big = synthetic::regression_d1(&mut rng, d, n, 128, 0.4);
+    let lreg_big = LinearRegressionObjective::new(&ds_big);
+    let lreg_set: Vec<usize> = (0..s).collect();
+    let lreg_st = lreg_big.state_for(&lreg_set);
+    let mut cases = Vec::new();
+    cases.push(sweep_case(&mut bench, "lreg", &*lreg_st, d, n, s, &pool));
+
+    // aopt: d×d posterior covariance, n candidate stimuli
+    let ds_aopt = synthetic::design_d1(&mut rng, d, n, 0.5);
+    let aopt_big = AOptimalityObjective::new(&ds_aopt, 1.0, 1.0);
+    let aopt_st = aopt_big.state_for(&lreg_set);
+    cases.push(sweep_case(&mut bench, "aopt", &*aopt_st, d, n, s, &pool));
 
     // ---- regression oracle sweeps (QR-projection gains) ----
     let ds = synthetic::regression_d1(&mut rng, 250, 500, 80, 0.4);
@@ -43,7 +147,7 @@ fn main() {
         pairs.push((format!("lreg_s{s}"), a, b));
     }
 
-    // ---- A-optimality oracle sweeps (M·x gains) ----
+    // ---- A-optimality oracle sweeps (M·X_C gains) ----
     let dsd = synthetic::design_d1(&mut rng, 64, 256, 0.6);
     let aopt = AOptimalityObjective::new(&dsd, 1.0, 1.0);
     let candd: Vec<usize> = (0..256).collect();
@@ -73,6 +177,33 @@ fn main() {
 
     // ---- report ----
     println!();
+    let mut obj_entries = Vec::new();
+    for c in &cases {
+        let blocked_speedup = if c.blocked_s > 0.0 { c.scalar_s / c.blocked_s } else { 0.0 };
+        let shard_speedup = if c.zero_clone_shard_s > 0.0 {
+            c.clone_shard_s / c.zero_clone_shard_s
+        } else {
+            0.0
+        };
+        println!(
+            "{} d={} n={} |S|={}: scalar {:.6}s, blocked {:.6}s ({blocked_speedup:.2}x); \
+             clone-shard {:.6}s, zero-clone-shard {:.6}s ({shard_speedup:.2}x)",
+            c.objective, c.d, c.n, c.set_size, c.scalar_s, c.blocked_s, c.clone_shard_s,
+            c.zero_clone_shard_s,
+        );
+        obj_entries.push(Json::obj(vec![
+            ("objective", c.objective.into()),
+            ("d", c.d.into()),
+            ("n", c.n.into()),
+            ("set_size", c.set_size.into()),
+            ("scalar_s", c.scalar_s.into()),
+            ("blocked_s", c.blocked_s.into()),
+            ("blocked_speedup", blocked_speedup.into()),
+            ("clone_shard_s", c.clone_shard_s.into()),
+            ("zero_clone_shard_s", c.zero_clone_shard_s.into()),
+            ("shard_speedup", shard_speedup.into()),
+        ]));
+    }
     let mut entries = Vec::new();
     for (name, s, p) in &pairs {
         let speedup = if *p > 0.0 { s / p } else { 0.0 };
@@ -100,6 +231,7 @@ fn main() {
     let doc = Json::obj(vec![
         ("suite", "executor".into()),
         ("threads", threads.into()),
+        ("objectives", Json::Arr(obj_entries)),
         ("sweeps", Json::Arr(entries)),
         ("reports", Json::Arr(reports)),
     ]);

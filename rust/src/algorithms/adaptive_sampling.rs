@@ -51,7 +51,8 @@ impl AdaptiveSampling {
         AdaptiveSampling { cfg, exec: BatchExecutor::sequential() }
     }
 
-    /// Route gain queries through a shared batched-gain engine.
+    /// Route gain queries through a shared batched-gain engine (shared
+    /// with the DASH core: blocked zero-clone sweeps, pooled set-queries).
     pub fn with_executor(mut self, exec: BatchExecutor) -> Self {
         self.exec = exec;
         self

@@ -43,7 +43,9 @@ impl AdaptiveSequencing {
         AdaptiveSequencing { cfg, exec: BatchExecutor::sequential() }
     }
 
-    /// Route the round-1 filter sweep through a shared batched-gain engine.
+    /// Route the round-1 filter sweep through a shared batched-gain engine
+    /// (the blocked zero-clone sweep path; only the round-2 prefix walk
+    /// forks the state, once per iteration).
     pub fn with_executor(mut self, exec: BatchExecutor) -> Self {
         self.exec = exec;
         self

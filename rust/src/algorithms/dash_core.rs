@@ -9,7 +9,10 @@
 //!   constructed `S ∪ R` states come back with the gains and are reused —
 //!   adopted on acceptance, swept by the filter step otherwise;
 //! - the filter step's per-candidate sweeps `f_{S∪R}(a)` go through
-//!   [`BatchExecutor::gains`] on those same states;
+//!   [`BatchExecutor::gains`] on those same states — the blocked
+//!   zero-clone sweep path, which shards each sweep over borrowed state
+//!   (the `S ∪ R` fork from the sample step is the only state
+//!   construction; the sweep itself never clones it again);
 //! - the rare "every sample contained a" fallback queries `f_S(a)` through
 //!   a [`GainCache`] keyed on the current solution state, so repeated
 //!   filter iterations over surviving candidates skip unchanged work (the

@@ -13,10 +13,12 @@
 //!   [`BatchExecutor`]. Round/query accounting is identical to sequential;
 //!   wallclock differs.
 //!
-//! Every gain sweep routes through a [`BatchExecutor`]; the default is the
-//! sequential engine, so `Greedy::new(..).run(..)` behaves exactly as
-//! before, and a coordinator can inject its shared parallel engine with
-//! [`Greedy::with_executor`].
+//! Every gain sweep routes through a [`BatchExecutor`] — the blocked
+//! zero-clone `gains_into` path, so a parallel engine shards the per-round
+//! sweep across borrowed state with no `clone_box` of the QR basis or
+//! posterior covariance. The default is the sequential engine, so
+//! `Greedy::new(..).run(..)` behaves exactly as before, and a coordinator
+//! can inject its shared parallel engine with [`Greedy::with_executor`].
 
 use super::{RunTracker, SelectionResult};
 use crate::objectives::Objective;

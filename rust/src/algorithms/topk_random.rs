@@ -18,7 +18,8 @@ impl TopK {
     }
 
     /// Route the singleton sweep through a shared batched-gain engine —
-    /// TOP-k is one perfectly parallel round, the engine's best case.
+    /// TOP-k is one perfectly parallel round, the engine's best case: one
+    /// n-candidate blocked sweep over the empty state, zero clones.
     pub fn with_executor(mut self, exec: BatchExecutor) -> Self {
         self.exec = exec;
         self

@@ -74,17 +74,62 @@ pub fn gemv_t(a: &Matrix, x: &[f64], y: &mut [f64]) {
     }
 }
 
-/// `C = A · B`, blocked over K for cache reuse. Column-major everywhere:
-/// for each column of B we accumulate a linear combination of A's columns.
+/// `C = A · B` (allocating wrapper over [`gemm_into`]).
 pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · B` written into a caller-owned `c` (zeroed first — scratch
+/// arenas hand in reused, stale buffers).
+///
+/// Register-tiled micro-kernel: B/C are processed in panels of 4 columns
+/// with 4 unrolled accumulator columns, so each streamed column of A is
+/// loaded once per *four* outputs instead of once per output — the memory
+/// traffic that dominates `M·X_C`-shaped products (d×d posterior times a
+/// candidate block) drops ~4×. K is additionally blocked for cache reuse.
+pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols(), b.rows(), "gemm inner dim");
+    assert_eq!(c.rows(), a.rows(), "gemm output rows");
+    assert_eq!(c.cols(), b.cols(), "gemm output cols");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Matrix::zeros(m, n);
-    // process B in column panels; accumulate axpy over A's columns
+    c.data_mut().fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
     const KB: usize = 64;
-    for j in 0..n {
+    let cdata = c.data_mut();
+    let mut j = 0;
+    // 4-column panels: one pass over A updates four accumulating C columns
+    while j + 4 <= n {
+        let panel = &mut cdata[j * m..(j + 4) * m];
+        let (c0, rest) = panel.split_at_mut(m);
+        let (c1, rest) = rest.split_at_mut(m);
+        let (c2, c3) = rest.split_at_mut(m);
+        let (b0, b1, b2, b3) = (b.col(j), b.col(j + 1), b.col(j + 2), b.col(j + 3));
+        let mut p = 0;
+        while p < k {
+            let pe = (p + KB).min(k);
+            for l in p..pe {
+                let al = a.col(l);
+                let (w0, w1, w2, w3) = (b0[l], b1[l], b2[l], b3[l]);
+                for i in 0..m {
+                    let ai = al[i];
+                    c0[i] += ai * w0;
+                    c1[i] += ai * w1;
+                    c2[i] += ai * w2;
+                    c3[i] += ai * w3;
+                }
+            }
+            p = pe;
+        }
+        j += 4;
+    }
+    // remainder columns: the original axpy accumulation
+    while j < n {
         let bcol = b.col(j);
-        let ccol = c.col_mut(j);
+        let ccol = &mut cdata[j * m..(j + 1) * m];
         let mut p = 0;
         while p < k {
             let pe = (p + KB).min(k);
@@ -96,24 +141,70 @@ pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
             }
             p = pe;
         }
+        j += 1;
     }
+}
+
+/// `C = Aᵀ · B` (allocating wrapper over [`gemm_tn_into`]).
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols(), b.cols());
+    gemm_tn_into(a, b, &mut c);
     c
 }
 
-/// `C = Aᵀ · B` (`a: m×p`, `b: m×q` → `p×q`); every entry is a contiguous
-/// column-column dot, which is the fastest pattern for tall-skinny factors.
-pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+/// `C = Aᵀ · B` (`a: m×p`, `b: m×q` → `p×q`) written into a caller-owned
+/// `c` (fully overwritten).
+///
+/// 4×4 register tiles: sixteen accumulators share each streamed row chunk,
+/// so every A and B column is loaded once per four outputs instead of once
+/// per output — the `Qᵀ·X_C` product of the regression sweep kernel is
+/// exactly this tall-skinny shape. Remainder rows/columns fall back to
+/// contiguous column dots.
+pub fn gemm_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.rows(), b.rows(), "gemm_tn inner dim");
-    let (p, q) = (a.cols(), b.cols());
-    let mut c = Matrix::zeros(p, q);
-    for j in 0..q {
-        let bj = b.col(j);
-        let cj = c.col_mut(j);
-        for i in 0..p {
-            cj[i] = dot(a.col(i), bj);
+    assert_eq!(c.rows(), a.cols(), "gemm_tn output rows");
+    assert_eq!(c.cols(), b.cols(), "gemm_tn output cols");
+    let (m, p, q) = (a.rows(), a.cols(), b.cols());
+    let mut i = 0;
+    while i + 4 <= p {
+        let (a0, a1, a2, a3) = (a.col(i), a.col(i + 1), a.col(i + 2), a.col(i + 3));
+        let mut j = 0;
+        while j + 4 <= q {
+            let (b0, b1, b2, b3) = (b.col(j), b.col(j + 1), b.col(j + 2), b.col(j + 3));
+            let mut acc = [[0.0f64; 4]; 4];
+            for r in 0..m {
+                let av = [a0[r], a1[r], a2[r], a3[r]];
+                let bv = [b0[r], b1[r], b2[r], b3[r]];
+                for (ci, &avi) in av.iter().enumerate() {
+                    for (cj, &bvj) in bv.iter().enumerate() {
+                        acc[ci][cj] += avi * bvj;
+                    }
+                }
+            }
+            for (ci, row) in acc.iter().enumerate() {
+                for (cj, &v) in row.iter().enumerate() {
+                    c.set(i + ci, j + cj, v);
+                }
+            }
+            j += 4;
         }
+        while j < q {
+            let bj = b.col(j);
+            c.set(i, j, dot(a0, bj));
+            c.set(i + 1, j, dot(a1, bj));
+            c.set(i + 2, j, dot(a2, bj));
+            c.set(i + 3, j, dot(a3, bj));
+            j += 1;
+        }
+        i += 4;
     }
-    c
+    while i < p {
+        let ai = a.col(i);
+        for j in 0..q {
+            c.set(i, j, dot(ai, b.col(j)));
+        }
+        i += 1;
+    }
 }
 
 /// Symmetric rank-k: `C = Aᵀ A` (`a: m×n` → `n×n`), computing only the upper
@@ -220,6 +311,71 @@ mod tests {
             }
         }
         assert!(c.max_abs_diff(&r) < 1e-10);
+    }
+
+    fn naive_gemm(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut r = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for l in 0..a.cols() {
+                    s += a.get(i, l) * b.get(l, j);
+                }
+                r.set(i, j, s);
+            }
+        }
+        r
+    }
+
+    #[test]
+    fn tiled_paths_match_naive_all_remainder_shapes() {
+        let mut rng = crate::rng::Pcg64::seed_from(7);
+        // exercise full tiles plus every remainder combination
+        for (m, k, n) in [(5, 9, 11), (8, 12, 8), (3, 3, 3), (16, 70, 13), (1, 1, 1)] {
+            let a = random(&mut rng, m, k);
+            let b = random(&mut rng, k, n);
+            assert!(gemm(&a, &b).max_abs_diff(&naive_gemm(&a, &b)) < 1e-10, "gemm {m}x{k}x{n}");
+            let at = random(&mut rng, k, m);
+            let bt = random(&mut rng, k, n);
+            let tn = gemm_tn(&at, &bt);
+            assert!(
+                tn.max_abs_diff(&naive_gemm(&at.transpose(), &bt)) < 1e-10,
+                "gemm_tn {k}x{m}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn into_variants_overwrite_stale_buffers() {
+        let mut rng = crate::rng::Pcg64::seed_from(8);
+        let a = random(&mut rng, 6, 7);
+        let b = random(&mut rng, 7, 9);
+        let mut c = Matrix::zeros(6, 9);
+        for cell in c.data_mut() {
+            *cell = 123.0; // stale scratch contents must not leak
+        }
+        gemm_into(&a, &b, &mut c);
+        assert!(c.max_abs_diff(&naive_gemm(&a, &b)) < 1e-10);
+        let mut t = Matrix::zeros(6, 9);
+        for cell in t.data_mut() {
+            *cell = -55.0;
+        }
+        gemm_tn_into(&a.transpose(), &b, &mut t);
+        assert!(t.max_abs_diff(&naive_gemm(&a, &b)) < 1e-10);
+    }
+
+    #[test]
+    fn gemm_into_zero_dims() {
+        let a = Matrix::zeros(0, 3);
+        let b = Matrix::zeros(3, 2);
+        let mut c = Matrix::zeros(0, 2);
+        gemm_into(&a, &b, &mut c); // must not panic
+        let a2 = Matrix::zeros(2, 0);
+        let b2 = Matrix::zeros(0, 2);
+        let mut c2 = Matrix::zeros(2, 2);
+        c2.set(0, 0, 4.0);
+        gemm_into(&a2, &b2, &mut c2);
+        assert_eq!(c2.get(0, 0), 0.0, "k=0 product is the zero matrix");
     }
 
     fn random(rng: &mut crate::rng::Pcg64, r: usize, c: usize) -> Matrix {

@@ -107,6 +107,23 @@ impl Matrix {
         &mut self.data
     }
 
+    /// Reshape to `rows × cols` in place, reusing the allocation (the
+    /// sweep-scratch arenas resize every block). Prior contents are
+    /// unspecified afterwards; callers must overwrite whatever they read.
+    pub fn resize_uninit(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Append a column (column-major ⇒ amortized O(rows)). Grows `cols`
+    /// by 1; the incremental QR basis is built this way.
+    pub fn push_col(&mut self, col: &[f64]) {
+        assert_eq!(col.len(), self.rows, "column length mismatch");
+        self.data.extend_from_slice(col);
+        self.cols += 1;
+    }
+
     /// Transposed copy.
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
@@ -282,5 +299,35 @@ mod tests {
     #[should_panic]
     fn bad_data_length_panics() {
         let _ = Matrix::from_col_major(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn resize_uninit_reuses_and_reshapes() {
+        let mut m = Matrix::zeros(3, 2);
+        m.set(2, 1, 9.0);
+        m.resize_uninit(2, 4);
+        assert_eq!((m.rows(), m.cols()), (2, 4));
+        assert_eq!(m.data().len(), 8);
+        m.col_mut(3).copy_from_slice(&[1.0, 2.0]);
+        assert_eq!(m.col(3), &[1.0, 2.0]);
+        m.resize_uninit(1, 1);
+        assert_eq!(m.data().len(), 1);
+    }
+
+    #[test]
+    fn push_col_grows() {
+        let mut m = Matrix::zeros(2, 0);
+        m.push_col(&[1.0, 2.0]);
+        m.push_col(&[3.0, 4.0]);
+        assert_eq!((m.rows(), m.cols()), (2, 2));
+        assert_eq!(m.col(0), &[1.0, 2.0]);
+        assert_eq!(m.col(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "column length mismatch")]
+    fn push_col_wrong_length_panics() {
+        let mut m = Matrix::zeros(2, 0);
+        m.push_col(&[1.0]);
     }
 }

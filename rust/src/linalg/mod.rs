@@ -15,7 +15,7 @@ mod solve;
 mod eigen;
 
 pub use matrix::Matrix;
-pub use blas::{dot, axpy, scal, nrm2, gemv, gemv_t, gemm, gemm_tn, syrk};
+pub use blas::{dot, axpy, scal, nrm2, gemv, gemv_t, gemm, gemm_into, gemm_tn, gemm_tn_into, syrk};
 pub use cholesky::{cholesky, cholesky_in_place, chol_rank1_update, CholeskyFactor};
 pub use qr::{qr_thin, IncrementalQr};
 pub use solve::{solve_lower, solve_upper, solve_lower_t, solve_spd, solve_lstsq};

@@ -11,31 +11,42 @@ use super::blas::{axpy, dot, nrm2};
 use super::Matrix;
 
 /// Incrementally grown thin QR of a column set.
+///
+/// The basis is stored as one dense column-major `d × rank` [`Matrix`]
+/// (appending a column is an O(d) `Vec` extend), so blocked sweep kernels
+/// can hand it straight to the level-3 `gemm_tn` path — the `Qᵀ·X_C`
+/// product of the regression oracle — without gathering a `Vec<Vec<f64>>`.
 #[derive(Debug, Clone)]
 pub struct IncrementalQr {
     d: usize,
-    /// orthonormal columns, d × s, grown by `push_col`
-    q: Vec<Vec<f64>>,
+    /// orthonormal basis, d × rank, grown by `push_col`
+    q: Matrix,
     /// threshold below which a column counts as linearly dependent
     dep_tol: f64,
 }
 
 impl IncrementalQr {
     pub fn new(d: usize) -> Self {
-        IncrementalQr { d, q: Vec::new(), dep_tol: 1e-10 }
+        IncrementalQr { d, q: Matrix::zeros(d, 0), dep_tol: 1e-10 }
     }
 
     /// Number of basis vectors (rank of the pushed set).
     pub fn rank(&self) -> usize {
-        self.q.len()
+        self.q.cols()
     }
 
     pub fn dim(&self) -> usize {
         self.d
     }
 
-    pub fn basis(&self) -> &[Vec<f64>] {
+    /// The orthonormal basis as a dense `d × rank` matrix.
+    pub fn basis(&self) -> &Matrix {
         &self.q
+    }
+
+    /// One basis vector (contiguous column slice).
+    pub fn basis_col(&self, j: usize) -> &[f64] {
+        self.q.col(j)
     }
 
     /// Orthogonalize `x` against the current basis (in place, two MGS
@@ -43,7 +54,8 @@ impl IncrementalQr {
     pub fn orthogonalize(&self, x: &mut [f64]) -> f64 {
         assert_eq!(x.len(), self.d);
         for _pass in 0..2 {
-            for q in &self.q {
+            for j in 0..self.q.cols() {
+                let q = self.q.col(j);
                 let c = dot(q, x);
                 axpy(-c, q, x);
             }
@@ -64,20 +76,26 @@ impl IncrementalQr {
         for vi in &mut v {
             *vi *= inv;
         }
-        self.q.push(v);
+        self.q.push_col(&v);
         true
     }
 
     /// `‖Qᵀ y‖²` — the squared norm of the projection of `y` onto the span.
     /// For the regression objective this *is* `f(S)` (variance reduction).
     pub fn proj_sq_norm(&self, y: &[f64]) -> f64 {
-        self.q.iter().map(|q| { let c = dot(q, y); c * c }).sum()
+        (0..self.q.cols())
+            .map(|j| {
+                let c = dot(self.q.col(j), y);
+                c * c
+            })
+            .sum()
     }
 
     /// Residual `y − Q Qᵀ y`.
     pub fn residual(&self, y: &[f64]) -> Vec<f64> {
         let mut r = y.to_vec();
-        for q in &self.q {
+        for j in 0..self.q.cols() {
+            let q = self.q.col(j);
             let c = dot(q, &r);
             axpy(-c, q, &mut r);
         }
@@ -106,13 +124,15 @@ pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
         // compute projection coefficients against current basis
         let mut v = x.to_vec();
         let mut cs = Vec::with_capacity(inc.rank() + 1);
-        for q in inc.basis() {
+        for qi in 0..inc.rank() {
+            let q = inc.basis_col(qi);
             let c = dot(q, &v);
             axpy(-c, q, &mut v);
             cs.push(c);
         }
         // second pass for stability, folding corrections into cs
-        for (qi, q) in inc.basis().iter().enumerate() {
+        for qi in 0..inc.rank() {
+            let q = inc.basis_col(qi);
             let c = dot(q, &v);
             axpy(-c, q, &mut v);
             cs[qi] += c;
@@ -122,16 +142,13 @@ pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
         if r > 1e-10 * scale {
             let inv = 1.0 / r;
             let q_new: Vec<f64> = v.iter().map(|vi| vi * inv).collect();
-            inc.q.push(q_new);
+            inc.q.push_col(&q_new);
             cs.push(r);
         }
         coeffs.push(cs);
     }
     let rank = inc.rank();
-    let mut q = Matrix::zeros(d, rank);
-    for (j, qc) in inc.q.iter().enumerate() {
-        q.col_mut(j).copy_from_slice(qc);
-    }
+    let q = inc.q; // move: `inc` is done growing
     let mut r = Matrix::zeros(rank, n);
     for (j, cs) in coeffs.iter().enumerate() {
         for (i, c) in cs.iter().enumerate() {

@@ -6,7 +6,7 @@
 //! classic *group-coverage* diversity `d(S) = Σ_g w_g·√|S ∩ g|`, which
 //! rewards spreading the selection across feature groups.
 
-use super::{Objective, ObjectiveState};
+use super::{Objective, ObjectiveState, SweepScratch};
 use std::sync::Arc;
 
 /// A monotone submodular diversity term.
@@ -113,12 +113,18 @@ impl ObjectiveState for DiverseState {
         self.inner.gain(a) + self.div.gain(self.inner.set(), a)
     }
 
-    fn gains(&self, candidates: &[usize]) -> Vec<f64> {
-        let mut out = self.inner.gains(candidates);
+    fn gains_into(&self, candidates: &[usize], scratch: &mut SweepScratch, out: &mut [f64]) {
+        // the inner objective's blocked kernel does the heavy lifting; the
+        // diversity term is an additive per-candidate correction, so block
+        // determinism is inherited unchanged
+        self.inner.gains_into(candidates, scratch, out);
         for (o, &a) in out.iter_mut().zip(candidates) {
             *o += self.div.gain(self.inner.set(), a);
         }
-        out
+    }
+
+    fn sweep_block(&self) -> usize {
+        self.inner.sweep_block()
     }
 
     fn clone_box(&self) -> Box<dyn ObjectiveState> {

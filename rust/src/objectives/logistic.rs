@@ -16,6 +16,14 @@
 //! state keeps the current fit and warm-starts each refit, running a small
 //! fixed number of Newton iterations (enough for the gain to stabilize to
 //! well below the filtering thresholds' resolution).
+//!
+//! **Sweep engine note:** each gain is a full Newton refit, which has no
+//! shared level-3 structure across candidates, so this objective
+//! deliberately keeps the trait's scalar `gains_into` fallback (per-element
+//! `gain`). The fallback is read-only like every refit here, so the
+//! engine's zero-clone sharding still applies — the parallel win comes
+//! from sharding the refits, not from blocking them. The XLA oracle's
+//! score-test approximation is the blocked alternative.
 
 use super::{Objective, ObjectiveState};
 use crate::data::Dataset;

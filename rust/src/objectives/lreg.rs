@@ -18,10 +18,15 @@
 //! computed in O(d·|S|) per candidate and O(d) once `Qᵀx` is formed — this
 //! is exactly the math the L1 Pallas kernel `lreg_gains` batches on the
 //! XLA path.
+//!
+//! The native batched path is the blocked `gains_into` kernel: per
+//! [`SWEEP_BLOCK`]-sized candidate block, one level-3 `gemm_tn(Q, X_C)`
+//! for all the `Qᵀx` projections plus one `gemv_t(X_C, r)` for all the
+//! numerators, replacing per-candidate level-1 dots.
 
-use super::{Objective, ObjectiveState};
+use super::{Objective, ObjectiveState, SweepScratch, SWEEP_BLOCK};
 use crate::data::Dataset;
-use crate::linalg::{dot, IncrementalQr, Matrix};
+use crate::linalg::{dot, gemm_tn_into, gemv_t, IncrementalQr, Matrix};
 use std::sync::Arc;
 
 /// Shared immutable problem data.
@@ -131,7 +136,7 @@ impl ObjectiveState for LregState {
         let before_rank = self.qr.rank();
         if self.qr.push_col(x) {
             debug_assert_eq!(self.qr.rank(), before_rank + 1);
-            let q = &self.qr.basis()[before_rank];
+            let q = self.qr.basis_col(before_rank);
             let c = dot(q, &self.r);
             crate::linalg::axpy(-c, q, &mut self.r);
             self.value += c * c / self.p.y_sq;
@@ -142,9 +147,42 @@ impl ObjectiveState for LregState {
         self.raw_gain(a) / self.p.y_sq
     }
 
-    fn gains(&self, candidates: &[usize]) -> Vec<f64> {
-        // batched: reuse of r and the basis; per candidate O(d·|S|)
-        candidates.iter().map(|&a| self.gain(a)).collect()
+    fn gains_into(&self, candidates: &[usize], scratch: &mut SweepScratch, out: &mut [f64]) {
+        // blocked kernel: per SWEEP_BLOCK candidates, gather X_C once, then
+        // Qᵀ·X_C as one level-3 gemm_tn (all projections) and X_Cᵀ·r as one
+        // gemv_t (all numerators); the per-candidate tail is O(|S|)
+        debug_assert_eq!(candidates.len(), out.len());
+        let d = self.p.x.rows();
+        let q = self.qr.basis(); // d × s
+        let s = q.cols();
+        for (blk, out_blk) in
+            candidates.chunks(SWEEP_BLOCK).zip(out.chunks_mut(SWEEP_BLOCK))
+        {
+            let b = blk.len();
+            scratch.xc.resize_uninit(d, b);
+            for (jj, &a) in blk.iter().enumerate() {
+                scratch.xc.col_mut(jj).copy_from_slice(self.p.x.col(a));
+            }
+            scratch.prod.resize_uninit(s, b);
+            gemm_tn_into(q, &scratch.xc, &mut scratch.prod);
+            scratch.r1.resize(b, 0.0);
+            gemv_t(&scratch.xc, &self.r, &mut scratch.r1);
+            for (jj, (&a, o)) in blk.iter().zip(out_blk.iter_mut()).enumerate() {
+                if self.in_set[a] {
+                    *o = 0.0;
+                    continue;
+                }
+                let proj: f64 = scratch.prod.col(jj).iter().map(|c| c * c).sum();
+                let num = scratch.r1[jj];
+                let norm_sq = self.p.col_sq[a];
+                let den = (norm_sq - proj).max(0.0);
+                *o = if den <= 1e-12 * norm_sq.max(1e-300) {
+                    0.0 // numerically in span: no new direction
+                } else {
+                    (num * num / den).max(0.0) / self.p.y_sq
+                };
+            }
+        }
     }
 
     fn clone_box(&self) -> Box<dyn ObjectiveState> {
@@ -338,8 +376,32 @@ mod tests {
         let cands = vec![0, 2, 5, 9];
         let batch = st.gains(&cands);
         for (i, &a) in cands.iter().enumerate() {
-            assert!((batch[i] - st.gain(a)).abs() < 1e-14);
+            // blocked kernel accumulates Qᵀx in tiled order; agreement is
+            // to rounding, not to the bit
+            assert!((batch[i] - st.gain(a)).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn blocked_kernel_spans_multiple_blocks() {
+        let mut rng = Pcg64::seed_from(10);
+        // n > SWEEP_BLOCK forces the per-block loop; include in-set
+        // candidates to hit the zero path inside a block
+        let ds = toy_ds(&mut rng, 60, 80);
+        let obj = LinearRegressionObjective::new(&ds);
+        let st = obj.state_for(&[5, 40, 77]);
+        let cands: Vec<usize> = (0..80).collect();
+        let batch = st.gains(&cands);
+        for (i, &a) in cands.iter().enumerate() {
+            assert!(
+                (batch[i] - st.gain(a)).abs() < 1e-12,
+                "a={a}: {} vs {}",
+                batch[i],
+                st.gain(a)
+            );
+        }
+        assert_eq!(batch[5], 0.0);
+        assert_eq!(batch[77], 0.0);
     }
 
     #[test]

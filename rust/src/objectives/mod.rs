@@ -15,6 +15,11 @@
 //! supports `insert` (grow S by one element) and batched marginal gains on
 //! top of the current S. Algorithms never recompute `f(S)` from scratch in
 //! their inner loops.
+//!
+//! Batched sweeps go through [`ObjectiveState::gains_into`]: a *read-only*
+//! blocked kernel (`&self`, caller-owned [`SweepScratch`]) so the engine in
+//! [`oracle::batch`](crate::oracle::batch) can shard one state across a
+//! thread pool without forking it. See the contract on the method.
 
 mod lreg;
 mod logistic;
@@ -29,6 +34,49 @@ pub use diversity::{DiverseObjective, DiversityTerm, GroupSqrtDiversity};
 pub use logistic::LogisticObjective;
 pub use lreg::{LinearRegressionObjective, R2Objective};
 pub use softmax::OvrSoftmaxObjective;
+
+use crate::linalg::Matrix;
+
+/// Candidate-block width of every blocked gain kernel. Block boundaries are
+/// fixed by candidate *index* (multiples of this constant from the start of
+/// the sweep), never by shard count, so a sharded sweep decomposes into
+/// exactly the blocks the sequential sweep would process — the basis of the
+/// engine's bit-identical-under-sharding guarantee.
+pub const SWEEP_BLOCK: usize = 32;
+
+/// Reusable per-shard scratch arena for blocked gain sweeps.
+///
+/// [`ObjectiveState::gains_into`] implementations draw every temporary from
+/// here instead of allocating (or worse, mutating interior state): the
+/// engine hands each shard its own arena, which is what makes the sweep
+/// path safe to run on one shared `&ObjectiveState` with zero `clone_box`.
+/// Buffers are resized on demand and their prior contents are unspecified;
+/// kernels must fully overwrite whatever they read.
+#[derive(Debug)]
+pub struct SweepScratch {
+    /// gathered candidate block `X_C` (d × B, column-major)
+    pub xc: Matrix,
+    /// kernel product block (`Qᵀ·X_C`, `M·X_C`, …)
+    pub prod: Matrix,
+    /// per-candidate reduction buffer (length B)
+    pub r1: Vec<f64>,
+}
+
+impl Default for SweepScratch {
+    fn default() -> Self {
+        SweepScratch {
+            xc: Matrix::zeros(0, 0),
+            prod: Matrix::zeros(0, 0),
+            r1: Vec::new(),
+        }
+    }
+}
+
+impl SweepScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// Incremental evaluation state for one solution set `S`.
 ///
@@ -47,11 +95,49 @@ pub trait ObjectiveState: Send + Sync {
     /// Marginal gain `f_S(a)` of a single candidate.
     fn gain(&self, a: usize) -> f64;
 
-    /// Batched marginal gains `f_S(a)` for each candidate. Default loops
-    /// over [`ObjectiveState::gain`]; objectives override with vectorized
-    /// math where profitable.
+    /// Blocked batched gains: write `f_S(candidates[i])` to `out[i]`,
+    /// drawing temporaries from `scratch`. This is the sweep-engine entry
+    /// point; implementations must obey the contract:
+    ///
+    /// - **read-only** — `&self`, no interior mutation: the engine runs
+    ///   many shards against one shared state with zero `clone_box`;
+    /// - **block-determinism** — candidates are processed in
+    ///   [`SWEEP_BLOCK`]-sized blocks counted from the start of the slice,
+    ///   and each candidate's gain depends only on its own block, so a
+    ///   sweep sharded at block boundaries is bit-identical to the
+    ///   sequential sweep regardless of shard count;
+    /// - `out.len() == candidates.len()` and every element is written.
+    ///
+    /// Default: the scalar per-element path over [`ObjectiveState::gain`]
+    /// (trivially block-deterministic). Objectives override with level-3
+    /// blocked kernels where profitable.
+    fn gains_into(&self, candidates: &[usize], scratch: &mut SweepScratch, out: &mut [f64]) {
+        let _ = scratch;
+        debug_assert_eq!(candidates.len(), out.len());
+        for (o, &a) in out.iter_mut().zip(candidates) {
+            *o = self.gain(a);
+        }
+    }
+
+    /// Sharding granularity for this state's sweeps: the engine cuts a
+    /// sweep at multiples of this many candidates, counted from the start
+    /// of the sweep. Defaults to [`SWEEP_BLOCK`]. States whose batched
+    /// path is an external dispatch with its own batch shape (the XLA
+    /// oracles' padded `nc`) return that shape so sharding does not
+    /// fragment one dispatch into many. Must be ≥ 1, constant for the
+    /// life of the state, and independent of shard count — it is part of
+    /// the block-determinism contract above.
+    fn sweep_block(&self) -> usize {
+        SWEEP_BLOCK
+    }
+
+    /// Batched marginal gains `f_S(a)` for each candidate. Routed through
+    /// [`ObjectiveState::gains_into`] with a throwaway scratch so there is
+    /// exactly one batched-gain implementation per objective.
     fn gains(&self, candidates: &[usize]) -> Vec<f64> {
-        candidates.iter().map(|&a| self.gain(a)).collect()
+        let mut out = vec![0.0; candidates.len()];
+        self.gains_into(candidates, &mut SweepScratch::default(), &mut out);
+        out
     }
 
     /// Fork the state.

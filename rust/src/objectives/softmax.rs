@@ -10,7 +10,7 @@
 //! the guarantee with α = min_c α_c. The substitution is recorded in
 //! DESIGN.md §3.
 
-use super::{LogisticObjective, Objective, ObjectiveState};
+use super::{LogisticObjective, Objective, ObjectiveState, SweepScratch};
 use crate::data::{Dataset, Task};
 use crate::linalg::Matrix;
 use std::sync::Arc;
@@ -124,18 +124,23 @@ impl ObjectiveState for OvrState {
         self.states.iter().map(|s| s.gain(a)).sum::<f64>() / self.classes as f64
     }
 
-    fn gains(&self, candidates: &[usize]) -> Vec<f64> {
-        let mut out = vec![0.0; candidates.len()];
+    fn gains_into(&self, candidates: &[usize], scratch: &mut SweepScratch, out: &mut [f64]) {
+        // per-class sweeps share this shard's scratch; a local buffer
+        // collects each class's partial before averaging (the per-class
+        // logistic states use the documented scalar-refit fallback, so the
+        // allocation is noise next to the Newton refits)
+        let mut tmp = vec![0.0; candidates.len()];
+        out.fill(0.0);
         for s in &self.states {
-            for (o, g) in out.iter_mut().zip(s.gains(candidates)) {
-                *o += g;
+            s.gains_into(candidates, scratch, &mut tmp);
+            for (o, g) in out.iter_mut().zip(&tmp) {
+                *o += *g;
             }
         }
         let inv = 1.0 / self.classes as f64;
-        for o in &mut out {
+        for o in out.iter_mut() {
             *o *= inv;
         }
-        out
     }
 
     fn clone_box(&self) -> Box<dyn ObjectiveState> {

@@ -4,10 +4,26 @@
 //! independent gain queries per round"; this module is the machinery that
 //! actually executes such a round in parallel. A [`BatchExecutor`] takes a
 //! candidate set and an [`ObjectiveState`], shards the gain sweep across a
-//! shared [`ThreadPool`] (forking the state via `clone_box` per shard so
-//! states with interior scratch stay isolated), and merges the per-shard
-//! results back in candidate order, so the output is **bit-identical** to
-//! the sequential `state.gains(candidates)` sweep.
+//! shared [`ThreadPool`], and merges the per-shard results back in
+//! candidate order, so the output is **bit-identical** to the sequential
+//! blocked sweep.
+//!
+//! The sweep path is **zero-clone**: gain kernels are the read-only
+//! [`ObjectiveState::gains_into`] contract, so every shard borrows the
+//! *same* state (no `clone_box` of a d×d posterior covariance or an
+//! incremental-QR basis per shard) and draws temporaries from its own
+//! [`SweepScratch`] arena, handed out by the pool's scratch-carrying
+//! `scoped_map_with`.
+//!
+//! Block-boundary determinism: sweeps are cut at multiples of the state's
+//! [`ObjectiveState::sweep_block`] (default
+//! [`SWEEP_BLOCK`](crate::objectives::SWEEP_BLOCK); XLA states report
+//! their artifact's padded dispatch width), counted from the start of the
+//! candidate slice — a function of candidate *index only*, never of shard
+//! count. Shards own whole blocks, and `gains_into` implementations block
+//! their input the same way, so the sharded sweep decomposes into exactly
+//! the block evaluations of the sequential sweep and the merged output is
+//! identical to the bit.
 //!
 //! On top sits a lazy [`GainCache`]: sweeps over a *fixed* state memoize
 //! per-element gains, so repeated passes over surviving candidates (DASH's
@@ -23,7 +39,7 @@
 //! call per shard) — `QueryStats::total_gain_queries()` is identical in
 //! both modes, which is what the paper's query counts measure.
 
-use crate::objectives::{Objective, ObjectiveState};
+use crate::objectives::{Objective, ObjectiveState, SweepScratch};
 use crate::util::threadpool::ThreadPool;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -68,9 +84,10 @@ impl Default for BatchExecutor {
 }
 
 impl BatchExecutor {
-    /// Sequential engine: every sweep is one `state.gains` call. This is
-    /// the default every algorithm starts with, so standalone use is
-    /// byte-identical to the pre-engine code path.
+    /// Sequential engine: every sweep is one full-slice `gains_into` call
+    /// with a single scratch arena. This is the default every algorithm
+    /// starts with, so standalone use runs the same blocked kernels as the
+    /// sharded engine — just on one thread.
     pub fn sequential() -> Self {
         BatchExecutor {
             pool: None,
@@ -118,32 +135,39 @@ impl BatchExecutor {
     }
 
     /// Batched marginal gains `f_S(a)` for every candidate, in candidate
-    /// order. Sharded across the pool when profitable; results are
-    /// identical to `st.gains(candidates)` either way (each element's gain
-    /// is computed by the same per-element math, and shards concatenate in
-    /// index order).
+    /// order, via the blocked [`ObjectiveState::gains_into`] kernels.
+    /// Sharded across the pool when profitable — shards borrow the *same*
+    /// state (zero `clone_box` on this path) and own whole
+    /// `SWEEP_BLOCK`-aligned candidate blocks, so the merged output is
+    /// bit-identical to the sequential blocked sweep.
     pub fn gains(&self, st: &dyn ObjectiveState, candidates: &[usize]) -> Vec<f64> {
         ExecutorStats::bump(&self.stats.sweeps, 1);
         ExecutorStats::bump(&self.stats.elements, candidates.len());
         let n = candidates.len();
         let pool = match &self.pool {
             Some(p) if p.size() > 1 && n >= self.min_parallel => p,
-            _ => return st.gains(candidates),
+            _ => {
+                // sequential path: the same blocked kernels, one arena
+                let mut out = vec![0.0; n];
+                st.gains_into(candidates, &mut SweepScratch::default(), &mut out);
+                return out;
+            }
         };
         ExecutorStats::bump(&self.stats.sharded_sweeps, 1);
-        let shards = pool.size().min(n);
-        let chunk_len = n.div_ceil(shards);
-        let parts: Vec<Vec<f64>> = pool.scoped_map(shards, |s| {
-            let lo = s * chunk_len;
-            let hi = ((s + 1) * chunk_len).min(n);
-            if lo >= hi {
-                return Vec::new();
-            }
-            // fork per shard: states stay isolated even if a gains()
-            // implementation uses interior scratch
-            let fork = st.clone_box();
-            fork.gains(&candidates[lo..hi])
-        });
+        // one task per candidate block; boundaries are multiples of the
+        // state's sweep block (default SWEEP_BLOCK; XLA states report
+        // their dispatch shape) from the sweep start, independent of pool
+        // size
+        let block = st.sweep_block().max(1);
+        let nblocks = n.div_ceil(block);
+        let parts: Vec<Vec<f64>> =
+            pool.scoped_map_with(nblocks, SweepScratch::default, |b, scratch| {
+                let lo = b * block;
+                let hi = ((b + 1) * block).min(n);
+                let mut out = vec![0.0; hi - lo];
+                st.gains_into(&candidates[lo..hi], scratch, &mut out);
+                out
+            });
         let mut out = Vec::with_capacity(n);
         for p in parts {
             out.extend(p);
@@ -207,6 +231,12 @@ impl BatchExecutor {
 /// [`GainCache::invalidate`] whenever the underlying solution set changes;
 /// between invalidations, repeated sweeps over surviving candidates are
 /// served without re-querying the oracle.
+///
+/// The cache grows on demand: a [`BatchQueue`](crate::coordinator::BatchQueue)
+/// or algorithm reused across datasets may submit indices beyond the ground
+/// set it was sized for, and [`GainCache::put`] resizes instead of
+/// panicking with an opaque slice-index error (out-of-range reads report
+/// unknown / 0.0, matching the documented `get` contract).
 #[derive(Debug, Clone)]
 pub struct GainCache {
     vals: Vec<f64>,
@@ -234,10 +264,17 @@ impl GainCache {
 
     /// Memoized value (0.0 when unknown; check [`GainCache::is_known`]).
     pub fn get(&self, a: usize) -> f64 {
-        self.vals[a]
+        self.vals.get(a).copied().unwrap_or(0.0)
     }
 
     pub fn put(&mut self, a: usize, v: f64) {
+        if a >= self.vals.len() {
+            // grow: `is_known` already reported out-of-range indices as
+            // unknown, so a silent panic here would only surface deep in a
+            // flush; resizing keeps the unknown-⇒-miss contract coherent
+            self.vals.resize(a + 1, 0.0);
+            self.known.resize(a + 1, false);
+        }
         self.vals[a] = v;
         self.known[a] = true;
     }
@@ -310,6 +347,34 @@ mod tests {
         let mut cache = GainCache::new(obj.n());
         let (cached, _) = exec.cached_gains(&mut cache, &*st, &cand);
         assert_eq!(cached, st.gains(&cand));
+    }
+
+    #[test]
+    fn cache_grows_past_initial_ground_set() {
+        // regression: a cache sized for one dataset, reused on a larger
+        // one, must serve out-of-range indices instead of panicking
+        let mut cache = GainCache::new(4);
+        assert!(!cache.is_known(10));
+        assert_eq!(cache.get(10), 0.0);
+        cache.put(10, 2.5);
+        assert!(cache.is_known(10));
+        assert_eq!(cache.get(10), 2.5);
+        // in-range entries unaffected; invalidate covers the grown range
+        cache.put(1, 1.0);
+        cache.invalidate();
+        assert!(!cache.is_known(10) && !cache.is_known(1));
+
+        // end-to-end: cached_gains over candidates beyond the cache's size
+        let (obj, _) = setup();
+        let st = obj.empty_state();
+        let exec = BatchExecutor::sequential();
+        let mut small = GainCache::new(3);
+        let cand = vec![0usize, 30, 59];
+        let (vals, fresh) = exec.cached_gains(&mut small, &*st, &cand);
+        assert_eq!(fresh, 3);
+        assert_eq!(vals, st.gains(&cand));
+        let (_, fresh2) = exec.cached_gains(&mut small, &*st, &cand);
+        assert_eq!(fresh2, 0, "grown entries must memoize");
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod xla;
 pub use batch::{BatchExecutor, ExecutorStats, GainCache};
 pub use xla::{XlaAoptObjective, XlaLogisticObjective, XlaLregObjective};
 
-use crate::objectives::{Objective, ObjectiveState};
+use crate::objectives::{Objective, ObjectiveState, SweepScratch};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -88,7 +88,24 @@ impl ObjectiveState for CountingState {
         self.inner.gain(a)
     }
 
+    fn gains_into(&self, candidates: &[usize], scratch: &mut SweepScratch, out: &mut [f64]) {
+        // the engine's sweep path: one call per candidate block when
+        // sharded, one per sweep otherwise — `batched_elements` totals the
+        // same `n` either way, which is what the audits compare
+        self.stats.batched_gains.fetch_add(1, Ordering::Relaxed);
+        self.stats.batched_elements.fetch_add(candidates.len(), Ordering::Relaxed);
+        self.inner.gains_into(candidates, scratch, out);
+    }
+
+    fn sweep_block(&self) -> usize {
+        // transparent: the counted state must shard exactly like the inner
+        // one, or counting would change the block decomposition
+        self.inner.sweep_block()
+    }
+
     fn gains(&self, candidates: &[usize]) -> Vec<f64> {
+        // direct (non-engine) batched calls: count here, once, and hand the
+        // sweep to the inner state's own blocked path uncounted
         self.stats.batched_gains.fetch_add(1, Ordering::Relaxed);
         self.stats.batched_elements.fetch_add(candidates.len(), Ordering::Relaxed);
         self.inner.gains(candidates)

@@ -20,7 +20,7 @@
 
 use crate::data::Dataset;
 use crate::linalg::{dot, IncrementalQr, Matrix};
-use crate::objectives::{Objective, ObjectiveState};
+use crate::objectives::{Objective, ObjectiveState, SweepScratch, SWEEP_BLOCK};
 use crate::runtime::{ArtifactKind, GainExecutor, Manifest};
 use anyhow::Result;
 use std::sync::Arc;
@@ -85,7 +85,7 @@ impl ObjectiveState for XlaLregState {
         self.set.push(a);
         let before = self.qr.rank();
         if self.qr.push_col(self.p.x.col(a)) {
-            let q = &self.qr.basis()[before];
+            let q = self.qr.basis_col(before);
             let c = dot(q, &self.r);
             crate::linalg::axpy(-c, q, &mut self.r);
             self.value += c * c / self.p.y_sq;
@@ -123,6 +123,19 @@ impl ObjectiveState for XlaLregState {
                 candidates.iter().map(|&a| self.gain(a)).collect()
             }
         }
+    }
+
+    fn gains_into(&self, candidates: &[usize], _scratch: &mut SweepScratch, out: &mut [f64]) {
+        // the XLA dispatch is already a blocked batch (read-only over the
+        // padded artifact shapes); route the engine's blocked sweep
+        // straight through it
+        out.copy_from_slice(&self.gains(candidates));
+    }
+
+    fn sweep_block(&self) -> usize {
+        // shard at the artifact's padded candidate shape: smaller blocks
+        // would fragment one padded dispatch into many
+        self.p.exec.artifact().nc.max(SWEEP_BLOCK)
     }
 
     fn clone_box(&self) -> Box<dyn ObjectiveState> {
@@ -270,6 +283,14 @@ impl ObjectiveState for XlaAoptState {
         }
     }
 
+    fn gains_into(&self, candidates: &[usize], _scratch: &mut SweepScratch, out: &mut [f64]) {
+        out.copy_from_slice(&self.gains(candidates));
+    }
+
+    fn sweep_block(&self) -> usize {
+        self.p.exec.artifact().nc.max(SWEEP_BLOCK)
+    }
+
     fn clone_box(&self) -> Box<dyn ObjectiveState> {
         Box::new(XlaAoptState {
             p: Arc::clone(&self.p),
@@ -401,6 +422,14 @@ impl ObjectiveState for XlaLogisticState {
                 candidates.iter().map(|&a| self.inner.gain(a)).collect()
             }
         }
+    }
+
+    fn gains_into(&self, candidates: &[usize], _scratch: &mut SweepScratch, out: &mut [f64]) {
+        out.copy_from_slice(&self.gains(candidates));
+    }
+
+    fn sweep_block(&self) -> usize {
+        self.p.exec.artifact().nc.max(SWEEP_BLOCK)
     }
 
     fn clone_box(&self) -> Box<dyn ObjectiveState> {

@@ -60,11 +60,12 @@ impl GainExecutor {
         &self.artifact
     }
 
-    /// Regression gains for `cand` columns of `x` given basis `q` (list of
-    /// d-vectors) and residual `r`. Returns one gain per candidate.
+    /// Regression gains for `cand` columns of `x` given the dense `d × s`
+    /// orthonormal basis `q` (an [`IncrementalQr`](crate::linalg::IncrementalQr)
+    /// basis) and residual `r`. Returns one gain per candidate.
     pub fn lreg_gains(
         &self,
-        q: &[Vec<f64>],
+        q: &Matrix,
         r: &[f64],
         x: &Matrix,
         cand: &[usize],
@@ -73,12 +74,12 @@ impl GainExecutor {
         anyhow::ensure!(a.kind == ArtifactKind::Lreg, "not an lreg artifact");
         let d = r.len();
         anyhow::ensure!(d <= a.d, "d {} exceeds artifact d {}", d, a.d);
-        anyhow::ensure!(q.len() <= a.s, "basis {} exceeds artifact s {}", q.len(), a.s);
+        anyhow::ensure!(q.cols() <= a.s, "basis {} exceeds artifact s {}", q.cols(), a.s);
 
         // q: row-major (a.d, a.s), zero-padded
         let mut q_rm = vec![0.0f32; a.d * a.s];
-        for (j, col) in q.iter().enumerate() {
-            for (i, &v) in col.iter().enumerate() {
+        for j in 0..q.cols() {
+            for (i, &v) in q.col(j).iter().enumerate() {
                 q_rm[i * a.s + j] = v as f32;
             }
         }
@@ -310,7 +311,7 @@ mod tests {
         let exe = GainExecutor::for_kind(&m, ArtifactKind::Aopt, 16, 0).unwrap();
         let mat = Matrix::identity(16);
         let x = Matrix::zeros(16, 4);
-        assert!(exe.lreg_gains(&[], &vec![0.0; 16], &x, &[0]).is_err());
+        assert!(exe.lreg_gains(&Matrix::zeros(16, 0), &vec![0.0; 16], &x, &[0]).is_err());
         assert!(exe.aopt_gains(&mat, &x, &[0], 1.0).is_ok());
     }
 

@@ -190,6 +190,46 @@ impl ThreadPool {
             .collect()
     }
 
+    /// Scratch-carrying variant of [`ThreadPool::scoped_map`]: `init`
+    /// builds one scratch value per dispatched chunk (on the worker that
+    /// runs it), and `f` receives it mutably alongside each index, so a
+    /// chunk's iterations reuse one arena instead of allocating per call.
+    /// Results are returned in index order, exactly as `scoped_map`.
+    ///
+    /// The oracle engine's zero-clone sweep path is the primary caller:
+    /// indices are candidate blocks, the scratch is a
+    /// [`SweepScratch`](crate::objectives::SweepScratch), and the shared
+    /// objective state is only ever borrowed.
+    pub fn scoped_map_with<T, S, I, F>(&self, n: usize, init: I, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        I: Fn() -> S + Sync,
+        F: Fn(usize, &mut S) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.size <= 1 || n == 1 {
+            let mut scratch = init();
+            return (0..n).map(|i| f(i, &mut scratch)).collect();
+        }
+        let chunks = (self.size * 4).min(n).max(1);
+        let chunk_len = n.div_ceil(chunks);
+        let nchunks = n.div_ceil(chunk_len);
+        let parts: Vec<Vec<T>> = self.scoped_map(nchunks, |c| {
+            let lo = c * chunk_len;
+            let hi = ((c + 1) * chunk_len).min(n);
+            let mut scratch = init();
+            (lo..hi).map(|i| f(i, &mut scratch)).collect()
+        });
+        let mut out = Vec::with_capacity(n);
+        for p in parts {
+            out.extend(p);
+        }
+        debug_assert_eq!(out.len(), n);
+        out
+    }
+
     /// Alias of [`ThreadPool::scoped_map`] kept for the original call
     /// sites' naming.
     pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
@@ -343,6 +383,39 @@ mod tests {
         for (i, v) in outer.iter().enumerate() {
             assert_eq!(*v, 28 + 8 * i);
         }
+    }
+
+    #[test]
+    fn scoped_map_with_reuses_scratch_per_chunk() {
+        let pool = ThreadPool::new(3);
+        let inits = Arc::new(AtomicU64::new(0));
+        let i2 = Arc::clone(&inits);
+        let out = pool.scoped_map_with(
+            97,
+            move || {
+                i2.fetch_add(1, Ordering::SeqCst);
+                Vec::<usize>::new()
+            },
+            |i, scratch| {
+                scratch.push(i); // scratch persists across a chunk's indices
+                i * 2 + scratch.len().min(1) // = i*2 + 1 always
+            },
+        );
+        assert_eq!(out.len(), 97);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 2 + 1);
+        }
+        // one scratch per dispatched chunk, bounded by size*4
+        let n_inits = inits.load(Ordering::SeqCst) as usize;
+        assert!(n_inits >= 1 && n_inits <= 12, "{n_inits} inits");
+    }
+
+    #[test]
+    fn scoped_map_with_sequential_degenerate() {
+        let pool = ThreadPool::new(1);
+        let out = pool.scoped_map_with(5, || 10usize, |i, s| i + *s);
+        assert_eq!(out, vec![10, 11, 12, 13, 14]);
+        assert!(pool.scoped_map_with(0, || (), |i, _| i).is_empty());
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Property tests for the blocked sweep kernels and the zero-clone engine
+//! path (the acceptance gate of the level-3 batched-oracle refactor):
+//!
+//! 1. for every objective, the blocked `gains_into` sweep matches the
+//!    scalar per-element `gain(a)` reference within 1e-9, across random
+//!    states — one batched implementation, numerically faithful;
+//! 2. the sharded sweep is **bit-identical** to the sequential blocked
+//!    sweep for shard counts {1, 2, 3, 7} — block boundaries are fixed by
+//!    candidate index, never by pool size;
+//! 3. `BatchExecutor::gains` performs zero `clone_box` calls, sequential
+//!    or sharded — states are shared by reference, scratch comes from the
+//!    per-shard arena.
+
+use dash_select::data::gene_sim::{gene_d4, GeneConfig};
+use dash_select::data::synthetic;
+use dash_select::objectives::{
+    AOptimalityObjective, DiverseObjective, GroupSqrtDiversity, LinearRegressionObjective,
+    LogisticObjective, Objective, ObjectiveState, OvrSoftmaxObjective, SweepScratch,
+};
+use dash_select::oracle::BatchExecutor;
+use dash_select::rng::Pcg64;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shard counts exercised by every bit-identity check (1 = sequential
+/// degenerate engine; 7 deliberately does not divide typical block counts).
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+/// Blocked-vs-scalar agreement tolerance (normalized objectives are O(1)).
+const TOL: f64 = 1e-9;
+
+fn check_objective(name: &str, obj: &dyn Objective, sets: &[Vec<usize>]) {
+    for set in sets {
+        let st = obj.state_for(set);
+        let cands: Vec<usize> = (0..obj.n()).collect();
+        // scalar reference: the per-element gain oracle
+        let scalar: Vec<f64> = cands.iter().map(|&a| st.gain(a)).collect();
+        // sequential blocked sweep through the engine
+        let seq = BatchExecutor::sequential().gains(&*st, &cands);
+        assert_eq!(seq.len(), scalar.len());
+        for (i, (b, s)) in seq.iter().zip(&scalar).enumerate() {
+            assert!(
+                (b - s).abs() < TOL,
+                "{name} set {set:?} cand {i}: blocked {b} vs scalar {s}"
+            );
+        }
+        // elements already in S must come back exactly 0 from both paths
+        for &a in set {
+            assert_eq!(seq[a], 0.0, "{name}: in-set candidate {a} must be 0");
+        }
+        // sharded output must be bit-identical to the sequential blocked
+        // sweep for every shard count
+        for threads in SHARD_COUNTS {
+            let par = BatchExecutor::new(threads).with_min_parallel(2);
+            let got = par.gains(&*st, &cands);
+            for (i, (p, s)) in got.iter().zip(&seq).enumerate() {
+                assert_eq!(
+                    p.to_bits(),
+                    s.to_bits(),
+                    "{name} shards={threads} set {set:?} cand {i}: {p} vs {s}"
+                );
+            }
+            if threads > 1 {
+                assert_eq!(
+                    par.stats().sharded_sweeps.load(Ordering::Relaxed),
+                    1,
+                    "{name} shards={threads}: sweep must actually shard"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lreg_blocked_matches_scalar_and_shards_bit_identically() {
+    let mut rng = Pcg64::seed_from(1);
+    // n = 70 spans two full SWEEP_BLOCKs plus a remainder block
+    let ds = synthetic::regression_d1(&mut rng, 50, 70, 12, 0.3);
+    let obj = LinearRegressionObjective::new(&ds);
+    let sets = [vec![], vec![3], vec![0, 17, 42, 69], (0..10).collect()];
+    check_objective("lreg", &obj, &sets);
+}
+
+#[test]
+fn aopt_blocked_matches_scalar_and_shards_bit_identically() {
+    let mut rng = Pcg64::seed_from(2);
+    let ds = synthetic::design_d1(&mut rng, 12, 70, 0.5);
+    let obj = AOptimalityObjective::new(&ds, 1.0, 1.0);
+    let sets = [vec![], vec![7], vec![1, 33, 69], (0..8).collect()];
+    check_objective("aopt", &obj, &sets);
+}
+
+#[test]
+fn diversity_blocked_matches_scalar_and_shards_bit_identically() {
+    let mut rng = Pcg64::seed_from(3);
+    let ds = synthetic::regression_d1(&mut rng, 40, 48, 8, 0.3);
+    let obj = DiverseObjective::new(
+        LinearRegressionObjective::new(&ds),
+        GroupSqrtDiversity::round_robin(48, 5, 0.1),
+    );
+    let sets = [vec![], vec![2, 9, 31], (0..6).collect()];
+    check_objective("lreg+div", &obj, &sets);
+}
+
+#[test]
+fn logistic_scalar_fallback_shards_bit_identically() {
+    let mut rng = Pcg64::seed_from(4);
+    // small: every logistic gain is a Newton refit
+    let ds = synthetic::classification_d3(&mut rng, 60, 8, 3, 0.2);
+    let obj = LogisticObjective::new(&ds);
+    let sets = [vec![], vec![1, 4]];
+    check_objective("logistic", &obj, &sets);
+}
+
+#[test]
+fn softmax_blocked_matches_scalar_and_shards_bit_identically() {
+    let mut rng = Pcg64::seed_from(5);
+    let ds = gene_d4(
+        &mut rng,
+        &GeneConfig {
+            samples: 120,
+            genes: 10,
+            classes: 3,
+            informative_per_class: 2,
+            ..Default::default()
+        },
+    );
+    let obj = OvrSoftmaxObjective::new(&ds);
+    let sets = [vec![], vec![0, 5]];
+    check_objective("ovr-softmax", &obj, &sets);
+}
+
+// ---------------------------------------------------------------------
+// zero-clone audit: the sweep path must never fork the state
+
+struct CloneCounting {
+    inner: LinearRegressionObjective,
+    clones: Arc<AtomicUsize>,
+}
+
+struct CloneCountingState {
+    inner: Box<dyn ObjectiveState>,
+    clones: Arc<AtomicUsize>,
+}
+
+impl Objective for CloneCounting {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn name(&self) -> &str {
+        "clone-counting"
+    }
+
+    fn empty_state(&self) -> Box<dyn ObjectiveState> {
+        Box::new(CloneCountingState {
+            inner: self.inner.empty_state(),
+            clones: Arc::clone(&self.clones),
+        })
+    }
+}
+
+impl ObjectiveState for CloneCountingState {
+    fn value(&self) -> f64 {
+        self.inner.value()
+    }
+
+    fn set(&self) -> &[usize] {
+        self.inner.set()
+    }
+
+    fn insert(&mut self, a: usize) {
+        self.inner.insert(a);
+    }
+
+    fn gain(&self, a: usize) -> f64 {
+        self.inner.gain(a)
+    }
+
+    fn gains_into(&self, candidates: &[usize], scratch: &mut SweepScratch, out: &mut [f64]) {
+        self.inner.gains_into(candidates, scratch, out);
+    }
+
+    fn sweep_block(&self) -> usize {
+        self.inner.sweep_block()
+    }
+
+    fn clone_box(&self) -> Box<dyn ObjectiveState> {
+        self.clones.fetch_add(1, Ordering::SeqCst);
+        Box::new(CloneCountingState {
+            inner: self.inner.clone_box(),
+            clones: Arc::clone(&self.clones),
+        })
+    }
+}
+
+#[test]
+fn sweep_path_is_zero_clone() {
+    let mut rng = Pcg64::seed_from(6);
+    let ds = synthetic::regression_d1(&mut rng, 60, 120, 20, 0.3);
+    let clones = Arc::new(AtomicUsize::new(0));
+    let obj = CloneCounting {
+        inner: LinearRegressionObjective::new(&ds),
+        clones: Arc::clone(&clones),
+    };
+    let mut st = obj.empty_state();
+    for a in [1usize, 5, 9] {
+        st.insert(a);
+    }
+    let cands: Vec<usize> = (0..120).collect();
+    let seq = BatchExecutor::sequential();
+    let par = BatchExecutor::new(4).with_min_parallel(2);
+    assert!(par.is_parallel());
+    let a = seq.gains(&*st, &cands);
+    let b = par.gains(&*st, &cands);
+    assert_eq!(a, b);
+    assert_eq!(par.stats().sharded_sweeps.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        clones.load(Ordering::SeqCst),
+        0,
+        "BatchExecutor::gains must not clone_box on the sweep path"
+    );
+}
