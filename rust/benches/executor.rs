@@ -12,6 +12,7 @@
 //! quick pass; DASH_THREADS=N to pin the pool size).
 
 use dash_select::bench::Bench;
+use dash_select::coordinator::session::SelectionSession;
 use dash_select::data::synthetic;
 use dash_select::objectives::{
     AOptimalityObjective, LinearRegressionObjective, Objective, ObjectiveState,
@@ -175,6 +176,55 @@ fn main() {
         (first, second)
     });
 
+    // ---- serial vs prefix-parallel prefix walk (adaptive sequencing) ----
+    // one iteration's round 2: |seq| prefix marginals on top of |S| = 32
+    let prefix_seq: Vec<usize> = (64..64 + 96).collect();
+    let prefix_serial_s = bench
+        .run("prefix walk |seq|=96 serial", || {
+            let mut s = SelectionSession::new(&lreg_big, BatchExecutor::sequential());
+            s.commit(&lreg_set);
+            s.prefix_gains_serial(&prefix_seq)
+        })
+        .mean_s;
+    let prefix_parallel_s = bench
+        .run(&format!("prefix walk |seq|=96 blocked x{threads}"), || {
+            let mut s =
+                SelectionSession::new(&lreg_big, BatchExecutor::with_pool(Arc::clone(&pool)));
+            s.commit(&lreg_set);
+            s.prefix_gains(&prefix_seq)
+        })
+        .mean_s;
+
+    // ---- session throughput: inserts/sec, warm vs invalidated cache ----
+    // warm: repeated sweeps at a fixed generation are pure cache hits;
+    // invalidated: each insert bumps the generation, so every sweep
+    // re-queries — the steady-state cost of a stepwise greedy session
+    let session_cand: Vec<usize> = (0..500).collect();
+    let mut warm_session =
+        SelectionSession::new(&lreg, BatchExecutor::with_pool(Arc::clone(&pool)));
+    let _ = warm_session.sweep(&session_cand); // populate the generation cache
+    let warm_sweep_s = bench
+        .run("session warm re-sweep n=500 (cache hits)", || {
+            let sw = warm_session.sweep(&session_cand);
+            assert_eq!(sw.fresh, 0);
+            sw.gains
+        })
+        .mean_s;
+    let insert_rounds = 8usize;
+    let insert_sweep_s = bench
+        .run("session insert+sweep n=500 (invalidated cache)", || {
+            let mut s = SelectionSession::new(&lreg, BatchExecutor::with_pool(Arc::clone(&pool)));
+            for a in 0..insert_rounds {
+                let sw = s.sweep(&session_cand);
+                assert_eq!(sw.fresh, session_cand.len());
+                s.insert(a);
+            }
+            s.metrics.inserts
+        })
+        .mean_s;
+    let inserts_per_s =
+        if insert_sweep_s > 0.0 { insert_rounds as f64 / insert_sweep_s } else { 0.0 };
+
     // ---- report ----
     println!();
     let mut obj_entries = Vec::new();
@@ -228,11 +278,40 @@ fn main() {
             ])
         })
         .collect();
+    let prefix_speedup =
+        if prefix_parallel_s > 0.0 { prefix_serial_s / prefix_parallel_s } else { 0.0 };
+    println!(
+        "prefix walk |seq|=96: serial {prefix_serial_s:.6}s, \
+         blocked {prefix_parallel_s:.6}s, speedup {prefix_speedup:.2}x"
+    );
+    println!(
+        "session: warm re-sweep {warm_sweep_s:.6}s, insert+sweep {insert_sweep_s:.6}s \
+         ({inserts_per_s:.1} inserts/s with invalidated cache)"
+    );
     let doc = Json::obj(vec![
         ("suite", "executor".into()),
         ("threads", threads.into()),
         ("objectives", Json::Arr(obj_entries)),
         ("sweeps", Json::Arr(entries)),
+        (
+            "prefix",
+            Json::obj(vec![
+                ("seq_len", 96usize.into()),
+                ("set_size", 32usize.into()),
+                ("serial_s", prefix_serial_s.into()),
+                ("parallel_s", prefix_parallel_s.into()),
+                ("speedup", prefix_speedup.into()),
+            ]),
+        ),
+        (
+            "session",
+            Json::obj(vec![
+                ("n", 500usize.into()),
+                ("warm_sweep_s", warm_sweep_s.into()),
+                ("insert_sweep_s", insert_sweep_s.into()),
+                ("inserts_per_s", inserts_per_s.into()),
+            ]),
+        ),
         ("reports", Json::Arr(reports)),
     ]);
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))

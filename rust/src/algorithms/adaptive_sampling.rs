@@ -8,8 +8,9 @@
 //! report `hit_iteration_cap = true` when the failure manifests; the
 //! integration tests reproduce the Appendix A.2 constructions exactly.
 
-use super::dash::{Dash, DashConfig, OptEstimate};
+use super::dash::{DashConfig, DashDriver, OptEstimate};
 use super::SelectionResult;
+use crate::coordinator::session::{drive, SelectionSession};
 use crate::objectives::Objective;
 use crate::oracle::BatchExecutor;
 use crate::rng::Pcg64;
@@ -40,6 +41,24 @@ impl Default for AdaptiveSamplingConfig {
     }
 }
 
+impl AdaptiveSamplingConfig {
+    /// The equivalent DASH configuration: α pinned to 1 (no scaling — the
+    /// Appendix A.2 failure mode left intact on purpose).
+    pub fn to_dash(&self) -> DashConfig {
+        DashConfig {
+            k: self.k,
+            r: self.r,
+            epsilon: self.epsilon,
+            alpha: 1.0,
+            samples: self.samples,
+            opt: self.opt,
+            opt_guesses: 6,
+            max_rounds: self.max_rounds,
+            max_filter_iters: 0,
+        }
+    }
+}
+
 /// The α = 1 adaptive sampling algorithm.
 pub struct AdaptiveSampling {
     cfg: AdaptiveSamplingConfig,
@@ -59,21 +78,12 @@ impl AdaptiveSampling {
     }
 
     pub fn run(&self, obj: &dyn Objective, rng: &mut Pcg64) -> SelectionResult {
-        let mut result = Dash::new(DashConfig {
-            k: self.cfg.k,
-            r: self.cfg.r,
-            epsilon: self.cfg.epsilon,
-            alpha: 1.0,
-            samples: self.cfg.samples,
-            opt: self.cfg.opt,
-            opt_guesses: 6,
-            max_rounds: self.cfg.max_rounds,
-            max_filter_iters: 0,
-        })
-        .with_executor(self.exec.clone())
-        .run(obj, rng);
-        result.algorithm = "adaptive_sampling".into();
-        result
+        let mut session = SelectionSession::new(obj, self.exec.clone());
+        drive(
+            Box::new(DashDriver::new(self.cfg.to_dash(), "adaptive_sampling")),
+            &mut session,
+            rng,
+        )
     }
 }
 

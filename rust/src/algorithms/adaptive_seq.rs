@@ -6,12 +6,22 @@
 //! One iteration: (1) filter the ground set by single-element marginals
 //! against the α-scaled threshold (one adaptive round — all queries
 //! independent); (2) draw a uniformly random *sequence* of survivors and
-//! evaluate all prefixes `f(S ∪ seq[..i])` concurrently (one more round);
-//! (3) append the longest prefix whose per-step gains stay above the
-//! threshold, allowing an ε-fraction of violations. The α-scaling plays
-//! the same termination-restoring role as in DASH.
+//! evaluate all prefix marginals `f_{S ∪ seq[..i]}(seq[i])` in **one**
+//! prefix-parallel round: the prefix states are materialized by a single
+//! incremental left-to-right pass, then every marginal is evaluated as one
+//! blocked sweep on the shared pool
+//! ([`SelectionSession::prefix_gains`]) — no per-prefix serial oracle
+//! calls; (3) append the longest prefix whose per-step gains stay above
+//! the threshold, allowing an ε-fraction of violations. The α-scaling
+//! plays the same termination-restoring role as in DASH.
+//!
+//! `serial_prefix` in the config switches step (2) back to the reference
+//! serial walk; both paths issue the same per-prefix `gain` queries on
+//! bitwise-identical states, so the selected sets, values (to the bit),
+//! rounds and query counts are identical — the tests assert this.
 
 use super::{RunTracker, SelectionResult};
+use crate::coordinator::session::{drive, SelectionSession, SessionDriver, StepOutcome};
 use crate::objectives::Objective;
 use crate::oracle::BatchExecutor;
 use crate::rng::Pcg64;
@@ -23,11 +33,21 @@ pub struct AdaptiveSequencingConfig {
     pub epsilon: f64,
     pub alpha: f64,
     pub max_rounds: usize,
+    /// use the reference serial prefix walk instead of the blocked
+    /// prefix-parallel round (identical results; kept for benchmarking and
+    /// the equivalence tests)
+    pub serial_prefix: bool,
 }
 
 impl Default for AdaptiveSequencingConfig {
     fn default() -> Self {
-        AdaptiveSequencingConfig { k: 10, epsilon: 0.1, alpha: 0.5, max_rounds: 300 }
+        AdaptiveSequencingConfig {
+            k: 10,
+            epsilon: 0.1,
+            alpha: 0.5,
+            max_rounds: 300,
+            serial_prefix: false,
+        }
     }
 }
 
@@ -43,106 +63,148 @@ impl AdaptiveSequencing {
         AdaptiveSequencing { cfg, exec: BatchExecutor::sequential() }
     }
 
-    /// Route the round-1 filter sweep through a shared batched-gain engine
-    /// (the blocked zero-clone sweep path; only the round-2 prefix walk
-    /// forks the state, once per iteration).
+    /// Route every round — the filter sweep *and* the prefix round —
+    /// through a shared batched-gain engine (the blocked zero-clone sweep
+    /// path for filters, the prefix-parallel fan-out for sequences).
     pub fn with_executor(mut self, exec: BatchExecutor) -> Self {
         self.exec = exec;
         self
     }
 
     pub fn run(&self, obj: &dyn Objective, rng: &mut Pcg64) -> SelectionResult {
+        let mut session = SelectionSession::new(obj, self.exec.clone());
+        drive(Box::new(AdaptiveSeqDriver::new(self.cfg.clone())), &mut session, rng)
+    }
+}
+
+/// Adaptive sequencing as a stepwise driver: one step is one full
+/// iteration — a filter round over the session's generation cache, a
+/// prefix round over the sampled sequence, and the prefix commit
+/// (generation bumps via `session.insert`).
+pub struct AdaptiveSeqDriver {
+    cfg: AdaptiveSequencingConfig,
+    tracker: Option<RunTracker>,
+    k: usize,
+    started: bool,
+    hit_cap: bool,
+    done: bool,
+}
+
+impl AdaptiveSeqDriver {
+    pub fn new(cfg: AdaptiveSequencingConfig) -> Self {
+        assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0);
+        AdaptiveSeqDriver {
+            cfg,
+            tracker: Some(RunTracker::new("adaptive_seq")),
+            k: 0,
+            started: false,
+            hit_cap: false,
+            done: false,
+        }
+    }
+}
+
+impl SessionDriver for AdaptiveSeqDriver {
+    fn label(&self) -> &str {
+        "adaptive_seq"
+    }
+
+    fn step(&mut self, session: &mut SelectionSession<'_>, rng: &mut Pcg64) -> StepOutcome {
+        if self.done {
+            return StepOutcome::Done;
+        }
+        if !self.started {
+            self.k = self.cfg.k.min(session.objective().n());
+            self.started = true;
+        }
         let cfg = &self.cfg;
-        let n = obj.n();
-        let k = cfg.k.min(n);
-        let mut tracker = RunTracker::new("adaptive_seq");
-        let mut st = obj.empty_state();
-        if k == 0 {
-            let v = st.value();
-            return tracker.finish(Vec::new(), v, false);
+        let k = self.k;
+        let tracker = self.tracker.as_mut().expect("driver not finished");
+        if session.len() >= k {
+            self.done = true;
+            return StepOutcome::Done;
         }
-
-        let mut hit_cap = false;
-        while st.set().len() < k {
-            if tracker.rounds() >= cfg.max_rounds {
-                hit_cap = true;
-                break;
-            }
-            // round 1: measure current marginals; the acceptance threshold
-            // is α·(1−ε)·(current best marginal) — the α-scaled analog of
-            // adaptive sequencing's (1−ε)·OPT/k threshold, re-estimated
-            // every iteration so the algorithm self-paces
-            let candidates: Vec<usize> =
-                (0..n).filter(|a| !st.set().contains(a)).collect();
-            if candidates.is_empty() {
-                break;
-            }
-            let gains = self.exec.gains(&*st, &candidates);
-            tracker.add_queries(candidates.len());
-            let gmax = gains.iter().cloned().fold(0.0, f64::max);
-            if gmax <= 1e-14 {
-                tracker.end_round(st.value(), st.set().len());
-                break; // nothing valuable remains
-            }
-            let thresh = cfg.alpha * (1.0 - cfg.epsilon.max(0.05)) * gmax;
-            let survivors: Vec<usize> = candidates
-                .iter()
-                .zip(&gains)
-                .filter(|(_, &g)| g >= thresh)
-                .map(|(&a, _)| a)
-                .collect();
-            tracker.end_round(st.value(), st.set().len());
-            // survivors is nonempty by construction (the argmax passes)
-
-            // round 2: random sequence, all prefixes evaluated concurrently
-            let mut seq = survivors;
-            rng.shuffle(&mut seq);
-            seq.truncate(k - st.set().len());
-            // prefix values: f(S ∪ seq[..i]) for i = 1..len — computed by
-            // one incremental sweep (queries are independent given S)
-            let mut prefix_vals = Vec::with_capacity(seq.len());
-            {
-                let mut s2 = st.clone_box();
-                for &a in &seq {
-                    s2.insert(a);
-                    prefix_vals.push(s2.value());
-                }
-            }
-            tracker.add_queries(seq.len());
-
-            // accept longest prefix with per-step gains ≥ α-threshold,
-            // tolerating an ε fraction of bad steps
-            let mut good = 0usize;
-            let mut accept_len = 0usize;
-            let mut prev = st.value();
-            for (i, &v) in prefix_vals.iter().enumerate() {
-                if v - prev >= thresh {
-                    good += 1;
-                }
-                let frac_good = good as f64 / (i + 1) as f64;
-                if frac_good >= 1.0 - cfg.epsilon.max(0.05) {
-                    accept_len = i + 1;
-                }
-                prev = v;
-            }
-            if accept_len == 0 {
-                // guarantee progress: take the single best prefix step
-                let (best_i, _) = prefix_vals
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap();
-                st.insert(seq[best_i.min(seq.len() - 1)]);
-            } else {
-                for &a in &seq[..accept_len] {
-                    st.insert(a);
-                }
-            }
-            tracker.end_round(st.value(), st.set().len());
+        if tracker.rounds() >= cfg.max_rounds {
+            self.hit_cap = true;
+            self.done = true;
+            return StepOutcome::Done;
         }
+        // round 1: measure current marginals; the acceptance threshold is
+        // α·(1−ε)·(current best marginal) — the α-scaled analog of adaptive
+        // sequencing's (1−ε)·OPT/k threshold, re-estimated every iteration
+        // so the algorithm self-paces
+        let candidates = session.remaining();
+        if candidates.is_empty() {
+            self.done = true;
+            return StepOutcome::Done;
+        }
+        let sw = session.sweep(&candidates);
+        tracker.add_queries(sw.fresh);
+        let gmax = sw.gains.iter().cloned().fold(0.0, f64::max);
+        if gmax <= 1e-14 {
+            tracker.end_round(session.value(), session.len());
+            self.done = true;
+            return StepOutcome::Done; // nothing valuable remains
+        }
+        let eps = cfg.epsilon.max(0.05);
+        let thresh = cfg.alpha * (1.0 - eps) * gmax;
+        let mut seq: Vec<usize> = candidates
+            .iter()
+            .zip(&sw.gains)
+            .filter(|(_, &g)| g >= thresh)
+            .map(|(&a, _)| a)
+            .collect();
+        tracker.end_round(session.value(), session.len());
+        // seq is nonempty by construction (the argmax passes)
 
-        let value = st.value();
-        tracker.finish(st.set().to_vec(), value, hit_cap)
+        // round 2: random sequence; all prefix marginals evaluated in one
+        // prefix-parallel round (or the reference serial walk)
+        rng.shuffle(&mut seq);
+        seq.truncate(k - session.len());
+        let step_gains = if cfg.serial_prefix {
+            session.prefix_gains_serial(&seq)
+        } else {
+            session.prefix_gains(&seq)
+        };
+        tracker.add_queries(seq.len());
+
+        // accept longest prefix with per-step gains ≥ α-threshold,
+        // tolerating an ε fraction of bad steps
+        let mut good = 0usize;
+        let mut accept_len = 0usize;
+        for (i, &g) in step_gains.iter().enumerate() {
+            if g >= thresh {
+                good += 1;
+            }
+            let frac_good = good as f64 / (i + 1) as f64;
+            if frac_good >= 1.0 - eps {
+                accept_len = i + 1;
+            }
+        }
+        if accept_len == 0 {
+            // guarantee progress: take the prefix end with the best
+            // cumulative value (argmax over prefix values)
+            let mut cum = 0.0;
+            let mut best_i = 0usize;
+            let mut best_v = f64::NEG_INFINITY;
+            for (i, &g) in step_gains.iter().enumerate() {
+                cum += g;
+                if cum >= best_v {
+                    best_v = cum;
+                    best_i = i;
+                }
+            }
+            session.insert(seq[best_i]);
+        } else {
+            session.commit(&seq[..accept_len]);
+        }
+        tracker.end_round(session.value(), session.len());
+        StepOutcome::Continue
+    }
+
+    fn finish(mut self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
+        let tracker = self.tracker.take().expect("finish called once");
+        tracker.finish(session.set().to_vec(), session.value(), self.hit_cap)
     }
 }
 
@@ -175,6 +237,34 @@ mod tests {
         let s = AdaptiveSequencing::new(AdaptiveSequencingConfig { k: 10, ..Default::default() })
             .run(&obj, &mut rng);
         assert!(s.value >= 0.6 * g.value, "seq {} vs greedy {}", s.value, g.value);
+    }
+
+    #[test]
+    fn prefix_parallel_identical_to_serial_walk() {
+        // the acceptance gate for the prefix-parallel round: same seed,
+        // same data — serial and blocked prefix evaluation must agree on
+        // sets, value bits, rounds, and query counts, sequential or pooled
+        let mut rng = Pcg64::seed_from(4);
+        let ds = synthetic::regression_d1(&mut rng, 150, 40, 12, 0.3);
+        let obj = LinearRegressionObjective::new(&ds);
+        let run = |serial: bool, exec: BatchExecutor| {
+            let mut rng = Pcg64::seed_from(77);
+            AdaptiveSequencing::new(AdaptiveSequencingConfig {
+                k: 12,
+                serial_prefix: serial,
+                ..Default::default()
+            })
+            .with_executor(exec)
+            .run(&obj, &mut rng)
+        };
+        let serial = run(true, BatchExecutor::sequential());
+        for exec in [BatchExecutor::sequential(), BatchExecutor::new(4).with_min_parallel(2)] {
+            let blocked = run(false, exec);
+            assert_eq!(serial.set, blocked.set, "selected set diverged");
+            assert_eq!(serial.value.to_bits(), blocked.value.to_bits());
+            assert_eq!(serial.rounds, blocked.rounds);
+            assert_eq!(serial.queries, blocked.queries);
+        }
     }
 
     #[test]

@@ -25,11 +25,13 @@
 //! guesses filter aggressively and may fail; low guesses accept freely and
 //! fill k cheaply; the winner is where the threshold matches the instance.
 
-use super::dash_core::{run_guess, GuessParams};
-use super::SelectionResult;
+use super::dash_core::{GuessDriver, GuessParams};
+use super::{RunTracker, SelectionResult};
+use crate::coordinator::session::{drive, SelectionSession, SessionDriver, StepOutcome};
 use crate::objectives::Objective;
 use crate::oracle::BatchExecutor;
 use crate::rng::Pcg64;
+use crate::util::Timer;
 
 /// How the algorithm obtains OPT for its thresholds.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -104,105 +106,210 @@ impl Dash {
     }
 
     pub fn run(&self, obj: &dyn Objective, rng: &mut Pcg64) -> SelectionResult {
-        let cfg = &self.cfg;
-        let n = obj.n();
-        let k = cfg.k.min(n);
-        if k == 0 {
-            let t = super::RunTracker::new("dash");
-            return t.finish(Vec::new(), obj.eval(&[]), false);
+        let mut session = SelectionSession::new(obj, self.exec.clone());
+        drive(Box::new(DashDriver::new(self.cfg.clone(), "dash")), &mut session, rng)
+    }
+}
+
+enum DashPhase {
+    /// singleton sweep + ladder construction
+    Start,
+    /// advancing through the guess ladder, one guess per step
+    Guesses { idx: usize },
+    Done,
+}
+
+/// DASH (and, with α = 1, plain adaptive sampling) as a stepwise driver
+/// over the job's [`SelectionSession`].
+///
+/// The first step is the singleton round through the session's cache; each
+/// following step runs one OPT guess to completion. A guess is itself a
+/// stepwise [`GuessDriver`] over its own *child* session on the same
+/// objective and executor — the guesses are logically parallel (they share
+/// no state), which is why reported adaptivity is the max of rounds across
+/// guesses while reported queries are the sum. The winning set is
+/// committed into the job session element by element (`session.insert`,
+/// one generation bump each), reproducing the winner's state bit for bit.
+pub struct DashDriver {
+    cfg: DashConfig,
+    label: &'static str,
+    phase: DashPhase,
+    guesses: Vec<f64>,
+    // resolved at Start
+    k: usize,
+    block: usize,
+    filter_cap: usize,
+    best: Option<SelectionResult>,
+    total_queries: usize,
+    max_rounds: usize,
+    timer: Timer,
+}
+
+impl DashDriver {
+    pub fn new(cfg: DashConfig, label: &'static str) -> Self {
+        assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0, "alpha in (0,1]");
+        assert!(cfg.epsilon >= 0.0 && cfg.epsilon < 1.0, "epsilon in [0,1)");
+        DashDriver {
+            cfg,
+            label,
+            phase: DashPhase::Start,
+            guesses: Vec::new(),
+            k: 0,
+            block: 1,
+            filter_cap: 0,
+            best: None,
+            total_queries: 0,
+            max_rounds: 1, // the singleton round
+            timer: Timer::start(),
         }
-        let r = if cfg.r == 0 {
-            ((n.max(2) as f64).log2().ceil() as usize).clamp(1, k)
-        } else {
-            cfg.r.clamp(1, k)
-        };
-        let eps = cfg.epsilon;
-        let filter_cap = if cfg.max_filter_iters > 0 {
-            cfg.max_filter_iters
-        } else if eps > 1e-9 {
-            ((n.max(2) as f64).ln() / (1.0 + eps / 2.0).ln()).ceil() as usize + 4
-        } else {
-            3 * (n.max(2) as f64).log2().ceil() as usize + 8
-        };
+    }
 
-        // --- singleton pass: seeds the guess ladder (1 round, n queries) ---
-        let st0 = obj.empty_state();
-        let all: Vec<usize> = (0..n).collect();
-        let singles = self.exec.gains(&*st0, &all);
-        let vmax = singles.iter().cloned().fold(0.0, f64::max);
-        let singleton_round_queries = n;
+    fn params_for(&self, opt: f64) -> GuessParams {
+        GuessParams {
+            k: self.k,
+            block: self.block,
+            m: self.cfg.samples.max(1),
+            alpha: self.cfg.alpha,
+            eps: self.cfg.epsilon,
+            filter_cap: self.filter_cap,
+            max_rounds: self.cfg.max_rounds,
+            opt,
+        }
+    }
+}
 
-        let guesses: Vec<f64> = match cfg.opt {
-            OptEstimate::Known(v) => vec![v],
-            OptEstimate::Auto => {
-                if vmax <= 0.0 {
-                    vec![0.0]
+impl SessionDriver for DashDriver {
+    fn label(&self) -> &str {
+        self.label
+    }
+
+    fn step(&mut self, session: &mut SelectionSession<'_>, rng: &mut Pcg64) -> StepOutcome {
+        let cfg = &self.cfg;
+        match self.phase {
+            DashPhase::Done => StepOutcome::Done,
+            DashPhase::Start => {
+                let n = session.objective().n();
+                let k = cfg.k.min(n);
+                if k == 0 {
+                    let t = RunTracker::new(self.label);
+                    self.best = Some(t.finish(Vec::new(), session.value(), false));
+                    self.total_queries = 0;
+                    self.max_rounds = 0;
+                    self.phase = DashPhase::Done;
+                    return StepOutcome::Done;
+                }
+                self.k = k;
+                let r = if cfg.r == 0 {
+                    ((n.max(2) as f64).log2().ceil() as usize).clamp(1, k)
                 } else {
-                    // differential submodularity only bounds OPT ≤ k·vmax/α
-                    // (via the sandwich h ≤ f/α summed over singletons), and
-                    // the α² acceptance slack means the *effective* threshold
-                    // of a guess v is α²·v — so the ladder tops out at
-                    // k·vmax/α² to make its strictest guess behave like an
-                    // unscaled (α=1) threshold at k·vmax. High guesses that
-                    // prove unattainable still return good partial sets.
-                    let a2 = (cfg.alpha * cfg.alpha).max(1e-6);
-                    let hi = k as f64 * vmax / a2;
-                    let lo = vmax.min(hi);
-                    let g = cfg.opt_guesses.max(1);
-                    if g == 1 || hi <= lo * (1.0 + 1e-9) {
-                        vec![hi]
-                    } else {
-                        let ratio = (hi / lo).powf(1.0 / (g - 1) as f64);
-                        (0..g).map(|i| hi / ratio.powi(i as i32)).collect()
+                    cfg.r.clamp(1, k)
+                };
+                self.block = k.div_ceil(r);
+                let eps = cfg.epsilon;
+                self.filter_cap = if cfg.max_filter_iters > 0 {
+                    cfg.max_filter_iters
+                } else if eps > 1e-9 {
+                    ((n.max(2) as f64).ln() / (1.0 + eps / 2.0).ln()).ceil() as usize + 4
+                } else {
+                    3 * (n.max(2) as f64).log2().ceil() as usize + 8
+                };
+
+                // --- singleton pass: seeds the ladder (1 round, n queries) ---
+                let all: Vec<usize> = (0..n).collect();
+                let sw = session.sweep(&all);
+                self.total_queries += sw.fresh;
+                let vmax = sw.gains.iter().cloned().fold(0.0, f64::max);
+
+                self.guesses = match cfg.opt {
+                    OptEstimate::Known(v) => vec![v],
+                    OptEstimate::Auto => {
+                        if vmax <= 0.0 {
+                            vec![0.0]
+                        } else {
+                            // differential submodularity only bounds OPT ≤
+                            // k·vmax/α (via the sandwich h ≤ f/α summed over
+                            // singletons), and the α² acceptance slack means
+                            // the *effective* threshold of a guess v is α²·v
+                            // — so the ladder tops out at k·vmax/α² to make
+                            // its strictest guess behave like an unscaled
+                            // (α=1) threshold at k·vmax. High guesses that
+                            // prove unattainable still return good partial
+                            // sets.
+                            let a2 = (cfg.alpha * cfg.alpha).max(1e-6);
+                            let hi = k as f64 * vmax / a2;
+                            let lo = vmax.min(hi);
+                            let g = cfg.opt_guesses.max(1);
+                            if g == 1 || hi <= lo * (1.0 + 1e-9) {
+                                vec![hi]
+                            } else {
+                                let ratio = (hi / lo).powf(1.0 / (g - 1) as f64);
+                                (0..g).map(|i| hi / ratio.powi(i as i32)).collect()
+                            }
+                        }
+                    }
+                };
+                self.timer = Timer::start();
+                self.phase = DashPhase::Guesses { idx: 0 };
+                StepOutcome::Continue
+            }
+            DashPhase::Guesses { idx } => {
+                // skip guesses that cannot beat an already-achieved value
+                let mut gi = idx;
+                while gi < self.guesses.len() {
+                    let opt = self.guesses[gi];
+                    match &self.best {
+                        Some(b) if opt <= b.value => gi += 1,
+                        _ => break,
                     }
                 }
-            }
-        };
-
-        let params_for = |opt: f64| GuessParams {
-            k,
-            block: k.div_ceil(r),
-            m: cfg.samples.max(1),
-            alpha: cfg.alpha,
-            eps,
-            filter_cap,
-            max_rounds: cfg.max_rounds,
-            opt,
-        };
-
-        // run guesses (logically parallel; see module docs for accounting)
-        let mut best: Option<SelectionResult> = None;
-        let mut total_queries = singleton_round_queries;
-        let mut max_rounds = 1; // the singleton round
-        let timer = crate::util::Timer::start();
-        for (gi, &opt) in guesses.iter().enumerate() {
-            // prune: a guess cannot beat an already-achieved value
-            if let Some(b) = &best {
-                if opt <= b.value {
-                    continue;
+                if gi >= self.guesses.len() {
+                    // ladder exhausted: commit the winner into the job
+                    // session (one generation bump per element)
+                    if let Some(b) = &self.best {
+                        session.commit(&b.set);
+                    }
+                    self.phase = DashPhase::Done;
+                    return StepOutcome::Done;
                 }
-            }
-            let mut guess_rng = Pcg64::seed_from(crate::rng::split_seed(rng.next_u64(), gi as u64));
-            let res = run_guess(obj, &params_for(opt), &mut guess_rng, "dash", &self.exec);
-            total_queries += res.queries;
-            max_rounds = max_rounds.max(res.rounds + 1);
-            let better = match &best {
-                None => true,
-                Some(b) => {
-                    res.value > b.value
-                        || (res.value == b.value && res.rounds < b.rounds)
+                // one guess per step, on its own child session (guesses are
+                // logically parallel: fresh state, fresh cache, same pool)
+                let opt = self.guesses[gi];
+                let mut guess_rng =
+                    Pcg64::seed_from(crate::rng::split_seed(rng.next_u64(), gi as u64));
+                let mut child =
+                    SelectionSession::new(session.objective(), session.executor().clone());
+                let res = drive(
+                    Box::new(GuessDriver::new(self.params_for(opt), self.label)),
+                    &mut child,
+                    &mut guess_rng,
+                );
+                // fold the child's work into the job session's telemetry —
+                // the guess ran on the job's behalf, and serving metrics
+                // must cover it
+                session.metrics.absorb(&child.metrics);
+                self.total_queries += res.queries;
+                self.max_rounds = self.max_rounds.max(res.rounds + 1);
+                let better = match &self.best {
+                    None => true,
+                    Some(b) => {
+                        res.value > b.value || (res.value == b.value && res.rounds < b.rounds)
+                    }
+                };
+                if better {
+                    self.best = Some(res);
                 }
-            };
-            if better {
-                best = Some(res);
+                self.phase = DashPhase::Guesses { idx: gi + 1 };
+                StepOutcome::Continue
             }
         }
+    }
 
-        let mut out = best.expect("at least one guess runs");
-        out.queries = total_queries;
-        out.rounds = max_rounds.max(out.rounds);
-        out.wall_s = timer.elapsed_s();
-        out.algorithm = "dash".into();
+    fn finish(self: Box<Self>, _session: &mut SelectionSession<'_>) -> SelectionResult {
+        let mut out = self.best.expect("at least one guess runs");
+        out.queries = self.total_queries;
+        out.rounds = self.max_rounds.max(out.rounds);
+        out.wall_s = self.timer.elapsed_s();
+        out.algorithm = self.label.into();
         out
     }
 }

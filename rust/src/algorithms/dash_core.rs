@@ -1,30 +1,31 @@
 //! Core of the DASH run loop, split from `dash.rs` for readability:
-//! a single fixed-OPT-guess execution of Algorithm 1.
+//! a single fixed-OPT-guess execution of Algorithm 1, as a stepwise
+//! [`SessionDriver`] over its own (per-guess) [`SelectionSession`].
 //!
-//! Every oracle interaction routes through the [`BatchExecutor`]:
+//! Every oracle interaction routes through the session and its shared
+//! [`BatchExecutor`](crate::oracle::BatchExecutor):
 //!
 //! - the per-round sample estimates `f_S(R)` go through
-//!   [`BatchExecutor::sample_blocks`] (one whole-set query per sample,
+//!   [`SelectionSession::sample_blocks`] (one whole-set query per sample,
 //!   fanned out over the pool and observable by `CountingObjective`); the
-//!   constructed `S ∪ R` states come back with the gains and are reused —
-//!   adopted on acceptance, swept by the filter step otherwise;
+//!   constructed `S ∪ R` states come back with the gains and are swept by
+//!   the filter step;
 //! - the filter step's per-candidate sweeps `f_{S∪R}(a)` go through
-//!   [`BatchExecutor::gains`] on those same states — the blocked
-//!   zero-clone sweep path, which shards each sweep over borrowed state
-//!   (the `S ∪ R` fork from the sample step is the only state
-//!   construction; the sweep itself never clones it again);
+//!   [`SelectionSession::fork_gains`] on those same states — the blocked
+//!   zero-clone sweep path, which shards each sweep over borrowed state;
 //! - the rare "every sample contained a" fallback queries `f_S(a)` through
-//!   a [`GainCache`] keyed on the current solution state, so repeated
-//!   filter iterations over surviving candidates skip unchanged work (the
-//!   cache is invalidated whenever `S` grows).
+//!   the session's generation-keyed cache
+//!   ([`SelectionSession::sweep`]), so repeated filter iterations over
+//!   surviving candidates skip unchanged work — and every accepted block
+//!   is committed through `session.insert`, whose generation bump
+//!   invalidates the cache in O(1).
 //!
 //! Reported queries equal oracle-observed queries exactly: `m` set queries
 //! per sample round, `|X|` per filter sweep, and only cache *misses* for
 //! the fallback singles.
 
 use super::{RunTracker, SelectionResult};
-use crate::objectives::Objective;
-use crate::oracle::{BatchExecutor, GainCache};
+use crate::coordinator::session::{SelectionSession, SessionDriver, StepOutcome};
 use crate::rng::Pcg64;
 
 pub(crate) struct GuessParams {
@@ -38,145 +39,195 @@ pub(crate) struct GuessParams {
     pub opt: f64,
 }
 
-/// Run Algorithm 1 against one fixed OPT guess. Returns a complete
-/// `SelectionResult`; `hit_iteration_cap = true` when the guess could not
-/// be met (candidate pool exhausted or filter-iteration cap reached — the
-/// Appendix A.2 failure mode when α is too large).
-pub(crate) fn run_guess(
-    obj: &dyn Objective,
-    p: &GuessParams,
-    rng: &mut Pcg64,
-    label: &str,
-    exec: &BatchExecutor,
-) -> SelectionResult {
-    let n = obj.n();
-    let mut tracker = RunTracker::new(label);
-    let mut st = obj.empty_state();
-    let mut hit_cap = false;
-    // memoized f_S(a) fallback singles for the *current* S; invalidated on
-    // every accepted block
-    let mut single_cache = GainCache::new(n);
+/// One fixed-OPT-guess execution of Algorithm 1 as a stepwise driver.
+/// Each step is one adaptive round: a sample round (possibly accepting and
+/// committing a block) or a sample+filter round. `hit_iteration_cap =
+/// true` in the result when the guess could not be met (candidate pool
+/// exhausted or filter-iteration cap reached — the Appendix A.2 failure
+/// mode when α is too large).
+pub(crate) struct GuessDriver {
+    p: GuessParams,
+    label: &'static str,
+    tracker: Option<RunTracker>,
+    /// current candidate pool X
+    x: Vec<usize>,
+    /// per-outer-iteration quantities, set on refresh
+    t: f64,
+    filter_thresh: f64,
+    want: usize,
+    filter_iters: usize,
+    stalled: usize,
+    need_refresh: bool,
+    hit_cap: bool,
+    done: bool,
+}
 
-    let mut x: Vec<usize> = Vec::with_capacity(n);
-    'outer: while st.set().len() < p.k && tracker.rounds() < p.max_rounds {
-        // refresh candidate pool: everything not selected
-        x.clear();
-        x.extend((0..n).filter(|a| !st.set().contains(a)));
-        let t = (1.0 - p.eps) * (p.opt - st.value());
-        if t <= 1e-12 {
-            break; // guess achieved
-        }
-        let filter_thresh = p.alpha * (1.0 + p.eps / 2.0) * t / p.k as f64;
-        let want = p.block.min(p.k - st.set().len());
-
-        let mut filter_iters = 0usize;
-        // Lemma 20 guarantees |X| shrinks by (1+ε/2)× per filter iteration
-        // while the guess is attainable; a pool that stops shrinking without
-        // reaching acceptance is a sampling-noise fixed point — declare the
-        // guess failed after a few stalled iterations instead of burning
-        // rounds to the worst-case cap.
-        let mut stalled = 0usize;
-        loop {
-            if tracker.rounds() >= p.max_rounds {
-                hit_cap = true;
-                break 'outer;
-            }
-            if x.is_empty() {
-                // every candidate filtered: this OPT guess is unattainable
-                hit_cap = true;
-                break 'outer;
-            }
-            let take = want.min(x.len());
-            // acceptance threshold α²·t·|R|/k — Algorithm 1's α²t/r for a
-            // full block |R| = k/r, scaled down pro rata when the remaining
-            // budget (or pool) forces a smaller block; otherwise an
-            // all-survivors pool could never satisfy a full-block bar and
-            // the loop would spin to the filter cap
-            let accept_thresh = p.alpha * p.alpha * t * take as f64 / p.k as f64;
-
-            // --- draw m sample blocks R ~ U(X); estimate E[f_S(R)] ---
-            // one counted oracle query per block; the constructed S ∪ R
-            // states come back with the gains and are reused below, so no
-            // state is ever built twice
-            let blocks: Vec<Vec<usize>> = (0..p.m)
-                .map(|_| {
-                    let idx = rng.sample_indices(x.len(), take);
-                    idx.into_iter().map(|i| x[i]).collect()
-                })
-                .collect();
-            let mut samples = exec.sample_blocks(obj, &*st, &blocks);
-            tracker.add_queries(p.m);
-            let set_gains: Vec<f64> = samples.iter().map(|(g, _)| *g).collect();
-            let e_hat = crate::util::mean(&set_gains);
-
-            if e_hat >= accept_thresh {
-                // accept a uniformly drawn block (one of the i.i.d. samples
-                // — same distribution as a fresh draw); adopt its state
-                let pick = rng.gen_range_usize(0, p.m - 1);
-                st = samples.swap_remove(pick).1;
-                single_cache.invalidate();
-                tracker.end_round(st.value(), st.set().len());
-                continue 'outer;
-            }
-
-            // --- filter step: expected marginals from the same samples ---
-            let mut sums = vec![0.0; x.len()];
-            let mut counts = vec![0u32; x.len()];
-            for (r_set, (_, s2)) in blocks.iter().zip(&samples) {
-                let gains = exec.gains(&**s2, &x);
-                tracker.add_queries(x.len());
-                for (j, &a) in x.iter().enumerate() {
-                    // skip samples containing a: the estimator targets
-                    // E[f_{S∪(R\a)}(a)] and a ∈ R would bias it toward 0
-                    if !r_set.contains(&a) {
-                        sums[j] += gains[j];
-                        counts[j] += 1;
-                    }
-                }
-            }
-            // fallback for candidates contained in every sample: the
-            // marginal on top of S alone, served through the memo cache
-            // (S is unchanged across filter iterations, so repeats are free)
-            let fallback: Vec<usize> = x
-                .iter()
-                .enumerate()
-                .filter(|(j, _)| counts[*j] == 0)
-                .map(|(_, &a)| a)
-                .collect();
-            let (fallback_gains, fresh) =
-                exec.cached_gains(&mut single_cache, &*st, &fallback);
-            tracker.add_queries(fresh);
-            let mut fb = fallback.iter().zip(&fallback_gains);
-
-            let mut survivors = Vec::with_capacity(x.len());
-            for (j, &a) in x.iter().enumerate() {
-                let est = if counts[j] > 0 {
-                    sums[j] / counts[j] as f64
-                } else {
-                    let (&fa, &g) = fb.next().expect("fallback entry");
-                    debug_assert_eq!(fa, a);
-                    g
-                };
-                if est >= filter_thresh {
-                    survivors.push(a);
-                }
-            }
-            if survivors.len() == x.len() {
-                stalled += 1;
-            } else {
-                stalled = 0;
-            }
-            x = survivors;
-            tracker.end_round(st.value(), st.set().len());
-
-            filter_iters += 1;
-            if filter_iters >= p.filter_cap || stalled >= 3 {
-                hit_cap = true;
-                break 'outer;
-            }
+impl GuessDriver {
+    pub(crate) fn new(p: GuessParams, label: &'static str) -> Self {
+        GuessDriver {
+            p,
+            label,
+            tracker: Some(RunTracker::new(label)),
+            x: Vec::new(),
+            t: 0.0,
+            filter_thresh: 0.0,
+            want: 0,
+            filter_iters: 0,
+            stalled: 0,
+            need_refresh: true,
+            hit_cap: false,
+            done: false,
         }
     }
+}
 
-    let value = st.value();
-    tracker.finish(st.set().to_vec(), value, hit_cap)
+impl SessionDriver for GuessDriver {
+    fn label(&self) -> &str {
+        self.label
+    }
+
+    fn step(&mut self, session: &mut SelectionSession<'_>, rng: &mut Pcg64) -> StepOutcome {
+        if self.done {
+            return StepOutcome::Done;
+        }
+        let p = &self.p;
+        let tracker = self.tracker.as_mut().expect("driver not finished");
+        // --- outer-iteration refresh: new pool + thresholds ---
+        if self.need_refresh {
+            if session.len() >= p.k || tracker.rounds() >= p.max_rounds {
+                self.done = true;
+                return StepOutcome::Done;
+            }
+            self.x = session.remaining();
+            self.t = (1.0 - p.eps) * (p.opt - session.value());
+            if self.t <= 1e-12 {
+                self.done = true; // guess achieved
+                return StepOutcome::Done;
+            }
+            self.filter_thresh = p.alpha * (1.0 + p.eps / 2.0) * self.t / p.k as f64;
+            self.want = p.block.min(p.k - session.len());
+            self.filter_iters = 0;
+            // Lemma 20 guarantees |X| shrinks by (1+ε/2)× per filter
+            // iteration while the guess is attainable; a pool that stops
+            // shrinking without reaching acceptance is a sampling-noise
+            // fixed point — declare the guess failed after a few stalled
+            // iterations instead of burning rounds to the worst-case cap.
+            self.stalled = 0;
+            self.need_refresh = false;
+        }
+
+        // --- one sample (and possibly filter) round ---
+        if tracker.rounds() >= p.max_rounds {
+            self.hit_cap = true;
+            self.done = true;
+            return StepOutcome::Done;
+        }
+        if self.x.is_empty() {
+            // every candidate filtered: this OPT guess is unattainable
+            self.hit_cap = true;
+            self.done = true;
+            return StepOutcome::Done;
+        }
+        let take = self.want.min(self.x.len());
+        // acceptance threshold α²·t·|R|/k — Algorithm 1's α²t/r for a
+        // full block |R| = k/r, scaled down pro rata when the remaining
+        // budget (or pool) forces a smaller block; otherwise an
+        // all-survivors pool could never satisfy a full-block bar and
+        // the loop would spin to the filter cap
+        let accept_thresh = p.alpha * p.alpha * self.t * take as f64 / p.k as f64;
+
+        // --- draw m sample blocks R ~ U(X); estimate E[f_S(R)] ---
+        // one counted oracle query per block; the constructed S ∪ R
+        // states come back with the gains and are swept by the filter
+        let blocks: Vec<Vec<usize>> = (0..p.m)
+            .map(|_| {
+                let idx = rng.sample_indices(self.x.len(), take);
+                idx.into_iter().map(|i| self.x[i]).collect()
+            })
+            .collect();
+        let samples = session.sample_blocks(&blocks);
+        tracker.add_queries(p.m);
+        let set_gains: Vec<f64> = samples.iter().map(|(g, _)| *g).collect();
+        let e_hat = crate::util::mean(&set_gains);
+
+        if e_hat >= accept_thresh {
+            // accept a uniformly drawn block (one of the i.i.d. samples —
+            // same distribution as a fresh draw); committing its elements
+            // in block order reproduces the sampled S ∪ R state bit for
+            // bit, with one generation bump per insert. This re-runs |R|
+            // incremental updates instead of adopting the prebuilt sample
+            // state — the price of routing every mutation through the
+            // session's insert/generation contract, and bounded by one
+            // rebuild per *accepted* round (each sample round already
+            // built m such states).
+            let pick = rng.gen_range_usize(0, p.m - 1);
+            session.commit(&blocks[pick]);
+            tracker.end_round(session.value(), session.len());
+            self.need_refresh = true;
+            return StepOutcome::Continue;
+        }
+
+        // --- filter step: expected marginals from the same samples ---
+        let mut sums = vec![0.0; self.x.len()];
+        let mut counts = vec![0u32; self.x.len()];
+        for (r_set, (_, s2)) in blocks.iter().zip(&samples) {
+            let gains = session.fork_gains(&**s2, &self.x);
+            tracker.add_queries(self.x.len());
+            for (j, &a) in self.x.iter().enumerate() {
+                // skip samples containing a: the estimator targets
+                // E[f_{S∪(R\a)}(a)] and a ∈ R would bias it toward 0
+                if !r_set.contains(&a) {
+                    sums[j] += gains[j];
+                    counts[j] += 1;
+                }
+            }
+        }
+        // fallback for candidates contained in every sample: the marginal
+        // on top of S alone, served through the session's generation cache
+        // (S is unchanged across filter iterations, so repeats are free)
+        let fallback: Vec<usize> = self
+            .x
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| counts[*j] == 0)
+            .map(|(_, &a)| a)
+            .collect();
+        let fb_sweep = session.sweep(&fallback);
+        tracker.add_queries(fb_sweep.fresh);
+        let mut fb = fallback.iter().zip(&fb_sweep.gains);
+
+        let mut survivors = Vec::with_capacity(self.x.len());
+        for (j, &a) in self.x.iter().enumerate() {
+            let est = if counts[j] > 0 {
+                sums[j] / counts[j] as f64
+            } else {
+                let (&fa, &g) = fb.next().expect("fallback entry");
+                debug_assert_eq!(fa, a);
+                g
+            };
+            if est >= self.filter_thresh {
+                survivors.push(a);
+            }
+        }
+        if survivors.len() == self.x.len() {
+            self.stalled += 1;
+        } else {
+            self.stalled = 0;
+        }
+        self.x = survivors;
+        tracker.end_round(session.value(), session.len());
+
+        self.filter_iters += 1;
+        if self.filter_iters >= p.filter_cap || self.stalled >= 3 {
+            self.hit_cap = true;
+            self.done = true;
+            return StepOutcome::Done;
+        }
+        StepOutcome::Continue
+    }
+
+    fn finish(mut self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
+        let tracker = self.tracker.take().expect("finish called once");
+        tracker.finish(session.set().to_vec(), session.value(), self.hit_cap)
+    }
 }

@@ -19,10 +19,19 @@
 //! posterior covariance. The default is the sequential engine, so
 //! `Greedy::new(..).run(..)` behaves exactly as before, and a coordinator
 //! can inject its shared parallel engine with [`Greedy::with_executor`].
+//!
+//! Both modes are *stepwise drivers* over a
+//! [`SelectionSession`](crate::coordinator::session::SelectionSession):
+//! one [`GreedyDriver::step`] is one adaptive round (sweep → argmax →
+//! `session.insert`), so the coordinator can interleave a greedy job with
+//! other live sessions; `run()` simply drives a fresh session to
+//! completion.
 
 use super::{RunTracker, SelectionResult};
+use crate::coordinator::session::{drive, SelectionSession, SessionDriver, StepOutcome};
 use crate::objectives::Objective;
 use crate::oracle::BatchExecutor;
+use crate::rng::Pcg64;
 
 /// Configuration for [`Greedy`].
 #[derive(Debug, Clone)]
@@ -58,94 +67,214 @@ impl Greedy {
         self
     }
 
-    pub fn run(&self, obj: &dyn Objective) -> SelectionResult {
-        if self.cfg.lazy {
-            self.run_lazy(obj)
+    /// The stepwise driver for this configuration (label picks between
+    /// `sds_ma` / `parallel_sds_ma`; lazy configs get the lazy driver).
+    pub fn driver(cfg: GreedyConfig, label: &'static str) -> Box<dyn SessionDriver> {
+        if cfg.lazy {
+            Box::new(LazyGreedyDriver::new(cfg))
         } else {
-            self.run_eager(obj)
+            Box::new(GreedyDriver::new(cfg, label))
         }
     }
 
-    fn run_eager(&self, obj: &dyn Objective) -> SelectionResult {
-        let n = obj.n();
-        let k = self.cfg.k.min(n);
-        let mut tracker = RunTracker::new("sds_ma");
-        let mut st = obj.empty_state();
-        let mut remaining: Vec<usize> = (0..n).collect();
-        for _ in 0..k {
-            let gains = self.exec.gains(&*st, &remaining);
-            tracker.add_queries(remaining.len());
-            let Some((best_i, best_g)) = argmax(&gains) else { break };
-            if best_g < self.cfg.min_gain {
-                tracker.end_round(st.value(), st.set().len());
-                break;
-            }
-            let a = remaining.swap_remove(best_i);
-            st.insert(a);
-            tracker.end_round(st.value(), st.set().len());
+    pub fn run(&self, obj: &dyn Objective) -> SelectionResult {
+        let mut session = SelectionSession::new(obj, self.exec.clone());
+        let mut rng = Pcg64::seed_from(0); // greedy is deterministic; unused
+        drive(Self::driver(self.cfg.clone(), "sds_ma"), &mut session, &mut rng)
+    }
+}
+
+/// Eager SDS_MA as a stepwise driver: each step is one adaptive round —
+/// a cached sweep of the remaining candidates, an argmax, and one
+/// `session.insert` (generation bump).
+pub struct GreedyDriver {
+    cfg: GreedyConfig,
+    label: &'static str,
+    tracker: Option<RunTracker>,
+    remaining: Vec<usize>,
+    k: usize,
+    iters: usize,
+    started: bool,
+    done: bool,
+}
+
+impl GreedyDriver {
+    pub fn new(cfg: GreedyConfig, label: &'static str) -> Self {
+        GreedyDriver {
+            tracker: Some(RunTracker::new(label)),
+            cfg,
+            label,
+            remaining: Vec::new(),
+            k: 0,
+            iters: 0,
+            started: false,
+            done: false,
         }
-        let value = st.value();
-        tracker.finish(st.set().to_vec(), value, false)
+    }
+}
+
+impl SessionDriver for GreedyDriver {
+    fn label(&self) -> &str {
+        self.label
     }
 
-    fn run_lazy(&self, obj: &dyn Objective) -> SelectionResult {
-        use std::cmp::Ordering;
-        use std::collections::BinaryHeap;
-
-        #[derive(PartialEq)]
-        struct Entry {
-            gain: f64,
-            elem: usize,
-            stamp: usize,
+    fn step(&mut self, session: &mut SelectionSession<'_>, _rng: &mut Pcg64) -> StepOutcome {
+        if !self.started {
+            self.k = self.cfg.k.min(session.objective().n());
+            self.remaining = session.remaining();
+            self.started = true;
         }
-        impl Eq for Entry {}
-        impl PartialOrd for Entry {
-            fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-                Some(self.cmp(other))
+        if self.done || self.iters >= self.k {
+            self.done = true;
+            return StepOutcome::Done;
+        }
+        self.iters += 1;
+        let tracker = self.tracker.as_mut().expect("driver not finished");
+        let sw = session.sweep(&self.remaining);
+        tracker.add_queries(sw.fresh);
+        let Some((best_i, best_g)) = argmax(&sw.gains) else {
+            self.done = true;
+            return StepOutcome::Done;
+        };
+        if best_g < self.cfg.min_gain {
+            tracker.end_round(session.value(), session.len());
+            self.done = true;
+            return StepOutcome::Done;
+        }
+        let a = self.remaining.swap_remove(best_i);
+        session.insert(a);
+        tracker.end_round(session.value(), session.len());
+        if self.iters >= self.k {
+            self.done = true;
+            StepOutcome::Done
+        } else {
+            StepOutcome::Continue
+        }
+    }
+
+    fn finish(mut self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
+        let tracker = self.tracker.take().expect("finish called once");
+        tracker.finish(session.set().to_vec(), session.value(), false)
+    }
+}
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+
+#[derive(PartialEq)]
+struct LazyEntry {
+    gain: f64,
+    elem: usize,
+    stamp: usize,
+}
+impl Eq for LazyEntry {}
+impl PartialOrd for LazyEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for LazyEntry {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        self.gain.partial_cmp(&other.gain).unwrap_or(CmpOrdering::Equal)
+    }
+}
+
+/// Lazy SDS_MA as a stepwise driver: one step processes heap entries until
+/// a fresh top is accepted (one insert = one adaptive round). Stale tops
+/// are re-evaluated through the session's generation cache — after each
+/// insert the generation bump guarantees re-evaluations are fresh queries,
+/// so accounting matches the classic lazy-greedy count exactly.
+pub struct LazyGreedyDriver {
+    cfg: GreedyConfig,
+    tracker: Option<RunTracker>,
+    heap: BinaryHeap<LazyEntry>,
+    stamp: usize,
+    k: usize,
+    started: bool,
+    done: bool,
+}
+
+impl LazyGreedyDriver {
+    pub fn new(cfg: GreedyConfig) -> Self {
+        LazyGreedyDriver {
+            cfg,
+            tracker: Some(RunTracker::new("sds_ma_lazy")),
+            heap: BinaryHeap::new(),
+            stamp: 0,
+            k: 0,
+            started: false,
+            done: false,
+        }
+    }
+}
+
+impl SessionDriver for LazyGreedyDriver {
+    fn label(&self) -> &str {
+        "sds_ma_lazy"
+    }
+
+    fn step(&mut self, session: &mut SelectionSession<'_>, _rng: &mut Pcg64) -> StepOutcome {
+        if self.done {
+            return StepOutcome::Done;
+        }
+        let tracker = self.tracker.as_mut().expect("driver not finished");
+        if !self.started {
+            // initial pass: all singleton gains (1 round)
+            let n = session.objective().n();
+            self.k = self.cfg.k.min(n);
+            let all: Vec<usize> = (0..n).collect();
+            let sw = session.sweep(&all);
+            tracker.add_queries(sw.fresh);
+            self.heap = sw
+                .gains
+                .iter()
+                .enumerate()
+                .map(|(e, &g)| LazyEntry { gain: g, elem: e, stamp: 0 })
+                .collect();
+            tracker.end_round(session.value(), session.len());
+            self.started = true;
+            if self.k == 0 {
+                self.done = true;
+                return StepOutcome::Done;
             }
+            return StepOutcome::Continue;
         }
-        impl Ord for Entry {
-            fn cmp(&self, other: &Self) -> Ordering {
-                self.gain.partial_cmp(&other.gain).unwrap_or(Ordering::Equal)
-            }
+        if session.len() >= self.k {
+            self.done = true;
+            return StepOutcome::Done;
         }
-
-        let n = obj.n();
-        let k = self.cfg.k.min(n);
-        let mut tracker = RunTracker::new("sds_ma_lazy");
-        let mut st = obj.empty_state();
-
-        // initial pass: all singleton gains (1 round)
-        let all: Vec<usize> = (0..n).collect();
-        let gains = self.exec.gains(&*st, &all);
-        tracker.add_queries(n);
-        let mut heap: BinaryHeap<Entry> = gains
-            .iter()
-            .enumerate()
-            .map(|(e, &g)| Entry { gain: g, elem: e, stamp: 0 })
-            .collect();
-        tracker.end_round(st.value(), 0);
-
-        let mut stamp = 0usize;
-        while st.set().len() < k {
-            let Some(top) = heap.pop() else { break };
-            if top.stamp == stamp {
+        loop {
+            let Some(top) = self.heap.pop() else {
+                self.done = true;
+                return StepOutcome::Done;
+            };
+            if top.stamp == self.stamp {
                 // fresh: accept
                 if top.gain < self.cfg.min_gain {
-                    break;
+                    self.done = true;
+                    return StepOutcome::Done;
                 }
-                st.insert(top.elem);
-                stamp += 1;
-                tracker.end_round(st.value(), st.set().len());
-            } else {
-                // stale: re-evaluate against current S
-                let g = st.gain(top.elem);
-                tracker.add_queries(1);
-                heap.push(Entry { gain: g, elem: top.elem, stamp });
+                session.insert(top.elem);
+                self.stamp += 1;
+                tracker.end_round(session.value(), session.len());
+                return if session.len() >= self.k {
+                    self.done = true;
+                    StepOutcome::Done
+                } else {
+                    StepOutcome::Continue
+                };
             }
+            // stale: re-evaluate against current S (generation bump after
+            // the last insert guarantees this is a fresh query)
+            let sw = session.sweep(&[top.elem]);
+            tracker.add_queries(sw.fresh);
+            self.heap.push(LazyEntry { gain: sw.gains[0], elem: top.elem, stamp: self.stamp });
         }
-        let value = st.value();
-        tracker.finish(st.set().to_vec(), value, false)
+    }
+
+    fn finish(mut self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
+        let tracker = self.tracker.take().expect("finish called once");
+        tracker.finish(session.set().to_vec(), session.value(), false)
     }
 }
 
@@ -174,25 +303,13 @@ impl ParallelGreedy {
     pub fn run(&self, obj: &dyn Objective) -> SelectionResult {
         let exec =
             self.exec.clone().unwrap_or_else(|| BatchExecutor::new(self.threads));
-        let n = obj.n();
-        let k = self.cfg.k.min(n);
-        let mut tracker = RunTracker::new("parallel_sds_ma");
-        let mut st = obj.empty_state();
-        let mut remaining: Vec<usize> = (0..n).collect();
-        for _ in 0..k {
-            let gains = exec.gains(&*st, &remaining);
-            tracker.add_queries(remaining.len());
-            let Some((best_i, best_g)) = argmax(&gains) else { break };
-            if best_g < self.cfg.min_gain {
-                tracker.end_round(st.value(), st.set().len());
-                break;
-            }
-            let a = remaining.swap_remove(best_i);
-            st.insert(a);
-            tracker.end_round(st.value(), st.set().len());
-        }
-        let value = st.value();
-        tracker.finish(st.set().to_vec(), value, false)
+        let mut session = SelectionSession::new(obj, exec);
+        let mut rng = Pcg64::seed_from(0); // deterministic; unused
+        drive(
+            Box::new(GreedyDriver::new(self.cfg.clone(), "parallel_sds_ma")),
+            &mut session,
+            &mut rng,
+        )
     }
 }
 

@@ -8,6 +8,15 @@
 //! produce a [`SelectionResult`] with identical accounting so the benchmark
 //! harness can compare values, adaptive rounds, oracle queries, measured
 //! wallclock, and modeled parallel runtime on equal footing.
+//!
+//! The oracle-driven algorithms (greedy, DASH, adaptive sampling, adaptive
+//! sequencing, TOP-k) are *stepwise drivers*
+//! ([`SessionDriver`](crate::coordinator::session::SessionDriver)) over a
+//! [`SelectionSession`](crate::coordinator::session::SelectionSession):
+//! every state mutation goes through `session.insert` (a generation bump),
+//! every sweep through the session's generation-keyed cache, and `run()`
+//! is just "drive a fresh session to completion" — which is what lets the
+//! coordinator's leader interleave many live selections over one pool.
 
 mod accounting;
 mod dash;
@@ -20,8 +29,8 @@ mod adaptive_seq;
 
 pub use accounting::{RoundRecord, RunTracker, SelectionResult};
 pub use adaptive_sampling::{AdaptiveSampling, AdaptiveSamplingConfig};
-pub use adaptive_seq::{AdaptiveSequencing, AdaptiveSequencingConfig};
-pub use dash::{Dash, DashConfig, OptEstimate};
-pub use greedy::{Greedy, GreedyConfig, ParallelGreedy};
+pub use adaptive_seq::{AdaptiveSeqDriver, AdaptiveSequencing, AdaptiveSequencingConfig};
+pub use dash::{Dash, DashConfig, DashDriver, OptEstimate};
+pub use greedy::{Greedy, GreedyConfig, GreedyDriver, LazyGreedyDriver, ParallelGreedy};
 pub use lasso::{Lasso, LassoConfig, LassoLogistic, LassoPathPoint};
-pub use topk_random::{RandomSelect, TopK};
+pub use topk_random::{RandomSelect, TopK, TopKDriver};

@@ -2,6 +2,7 @@
 //! shows a γ² worst-case bound for feature selection) and RANDOM.
 
 use super::{RunTracker, SelectionResult};
+use crate::coordinator::session::{drive, SelectionSession, SessionDriver, StepOutcome};
 use crate::objectives::Objective;
 use crate::oracle::BatchExecutor;
 use crate::rng::Pcg64;
@@ -26,20 +27,59 @@ impl TopK {
     }
 
     pub fn run(&self, obj: &dyn Objective) -> SelectionResult {
-        let n = obj.n();
+        let mut session = SelectionSession::new(obj, self.exec.clone());
+        let mut rng = Pcg64::seed_from(0); // deterministic; unused
+        drive(Box::new(TopKDriver::new(self.k)), &mut session, &mut rng)
+    }
+}
+
+/// TOP-k as a (single-step) session driver: one singleton sweep, one
+/// commit of the k best, one reporting `eval` of the chosen set.
+pub struct TopKDriver {
+    k: usize,
+    tracker: Option<RunTracker>,
+    value: f64,
+    done: bool,
+}
+
+impl TopKDriver {
+    pub fn new(k: usize) -> Self {
+        TopKDriver { k, tracker: Some(RunTracker::new("top_k")), value: 0.0, done: false }
+    }
+}
+
+impl SessionDriver for TopKDriver {
+    fn label(&self) -> &str {
+        "top_k"
+    }
+
+    fn step(&mut self, session: &mut SelectionSession<'_>, _rng: &mut Pcg64) -> StepOutcome {
+        if self.done {
+            return StepOutcome::Done;
+        }
+        self.done = true;
+        let tracker = self.tracker.as_mut().expect("driver not finished");
+        let n = session.objective().n();
         let k = self.k.min(n);
-        let mut tracker = RunTracker::new("top_k");
-        let st = obj.empty_state();
         let all: Vec<usize> = (0..n).collect();
-        let gains = self.exec.gains(&*st, &all);
-        tracker.add_queries(n);
+        let sw = session.sweep(&all);
+        tracker.add_queries(sw.fresh);
         let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&a, &b| gains[b].partial_cmp(&gains[a]).unwrap_or(std::cmp::Ordering::Equal));
+        order.sort_by(|&a, &b| {
+            sw.gains[b].partial_cmp(&sw.gains[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
         let set: Vec<usize> = order.into_iter().take(k).collect();
-        let value = obj.eval(&set);
+        session.commit(&set);
+        // reporting value: one whole-set oracle query, as the paper counts
+        self.value = session.objective().eval(&set);
         tracker.add_queries(1);
-        tracker.end_round(value, set.len());
-        tracker.finish(set, value, false)
+        tracker.end_round(self.value, set.len());
+        StepOutcome::Done
+    }
+
+    fn finish(mut self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
+        let tracker = self.tracker.take().expect("finish called once");
+        tracker.finish(session.set().to_vec(), self.value, false)
     }
 }
 

@@ -3,9 +3,22 @@
 //! artifacts' padded candidate shape, flushing on size or deadline —
 //! the same size-or-timeout discipline a serving router applies to
 //! incoming requests.
+//!
+//! The serving constructor [`BatchQueue::for_state`] is a thin
+//! *generation-aware* front over one long-lived solution state: flushes
+//! answer batched marginal gains through the shared
+//! [`BatchExecutor`] with a generation-keyed [`GainCache`] memo in front,
+//! and [`BatchQueue::insert`] grows the state in place — bumping the
+//! generation and logically invalidating the memo in O(1) — so one queue
+//! keeps serving across inserts instead of being rebuilt per state
+//! generation.
+//!
+//! Telemetry (`flushes`, the last-flush deadline stamp) is kept in atomics;
+//! the hot submit/flush path takes no lock beyond the pending queue itself.
 
 use crate::objectives::ObjectiveState;
 use crate::oracle::{BatchExecutor, GainCache};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -30,6 +43,16 @@ struct Pending {
     reply: Sender<f64>,
 }
 
+/// The served state behind a [`BatchQueue::for_state`] queue. Lock order
+/// is state → cache everywhere (flush and insert), so the two never
+/// deadlock against each other.
+struct ServedState {
+    state: Mutex<Box<dyn ObjectiveState>>,
+    cache: Mutex<GainCache>,
+    /// state generation: bumped by every [`BatchQueue::insert`]
+    generation: AtomicU64,
+}
+
 /// A size-or-deadline batch queue over candidate indices. The flush
 /// function evaluates a whole batch at once (one XLA dispatch) and the
 /// results are routed back to the individual submitters.
@@ -37,11 +60,16 @@ pub struct BatchQueue {
     cfg: BatchQueueConfig,
     queue: Arc<Mutex<Vec<Pending>>>,
     flush_fn: Arc<dyn Fn(&[usize]) -> Vec<f64> + Send + Sync>,
-    last_flush: Arc<Mutex<Instant>>,
+    /// queue birth; deadline math is done in nanos relative to this
+    epoch: Instant,
+    /// nanos-since-epoch of the last flush (atomic: no lock on the
+    /// deadline check every submit performs)
+    last_flush_nanos: AtomicU64,
     /// total batches flushed (telemetry)
-    flushes: Arc<Mutex<usize>>,
-    /// memo layer when built with [`BatchQueue::for_state`]
-    cache: Option<Arc<Mutex<GainCache>>>,
+    flushes: AtomicUsize,
+    /// generation-aware serving state when built with
+    /// [`BatchQueue::for_state`]
+    served: Option<Arc<ServedState>>,
 }
 
 impl BatchQueue {
@@ -53,18 +81,21 @@ impl BatchQueue {
             cfg,
             queue: Arc::new(Mutex::new(Vec::new())),
             flush_fn: Arc::new(flush_fn),
-            last_flush: Arc::new(Mutex::new(Instant::now())),
-            flushes: Arc::new(Mutex::new(0)),
-            cache: None,
+            epoch: Instant::now(),
+            last_flush_nanos: AtomicU64::new(0),
+            flushes: AtomicUsize::new(0),
+            served: None,
         }
     }
 
     /// Serving-side constructor: a queue whose flushes evaluate batched
-    /// marginal gains for one frozen solution state through the shared
-    /// [`BatchExecutor`], with a [`GainCache`] memo in front so repeated
-    /// requests for the same candidate are answered without touching the
-    /// oracle. One queue serves one state generation; build a fresh queue
-    /// when the solution set changes. `n` is the objective's ground-set
+    /// marginal gains for one long-lived solution state through the shared
+    /// [`BatchExecutor`], with a generation-keyed [`GainCache`] memo in
+    /// front so repeated requests for the same candidate are answered
+    /// without touching the oracle. The queue is generation-aware:
+    /// [`BatchQueue::insert`] grows the state in place and logically
+    /// invalidates the memo (O(1) generation bump), so the same queue
+    /// keeps serving across inserts. `n` is the objective's ground-set
     /// size.
     pub fn for_state(
         cfg: BatchQueueConfig,
@@ -72,26 +103,65 @@ impl BatchQueue {
         state: Box<dyn ObjectiveState>,
         n: usize,
     ) -> Self {
-        let cache = Arc::new(Mutex::new(GainCache::new(n)));
-        let cache_for_flush = Arc::clone(&cache);
+        let served = Arc::new(ServedState {
+            state: Mutex::new(state),
+            cache: Mutex::new(GainCache::new(n)),
+            generation: AtomicU64::new(0),
+        });
+        let served_for_flush = Arc::clone(&served);
         let mut queue = Self::new(cfg, move |items: &[usize]| {
-            let mut memo = cache_for_flush.lock().unwrap();
-            let (vals, _fresh) = exec.cached_gains(&mut memo, &*state, items);
+            // lock order: state → cache (matches `insert`)
+            let st = served_for_flush.state.lock().unwrap();
+            let mut memo = served_for_flush.cache.lock().unwrap();
+            let (vals, _fresh) = exec.cached_gains(&mut memo, &**st, items);
             vals
         });
-        queue.cache = Some(cache);
+        queue.served = Some(served);
         queue
+    }
+
+    /// Grow the served solution set: `S ← S ∪ {a}`. Bumps the state
+    /// generation and logically invalidates the gain memo (O(1)); the
+    /// queue keeps serving — subsequent flushes answer against the new
+    /// state. Returns the new generation.
+    ///
+    /// Panics on queues not built with [`BatchQueue::for_state`].
+    pub fn insert(&self, a: usize) -> u64 {
+        let served = self.served.as_ref().expect("insert requires a for_state queue");
+        // lock order: state → cache (matches the flush closure)
+        let mut st = served.state.lock().unwrap();
+        st.insert(a);
+        served.cache.lock().unwrap().invalidate();
+        served.generation.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Current state generation (0 for plain queues or before any insert).
+    pub fn generation(&self) -> u64 {
+        self.served
+            .as_ref()
+            .map(|s| s.generation.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     /// `(hits, misses)` of the memo layer (0,0 for plain queues).
     pub fn cache_stats(&self) -> (usize, usize) {
-        self.cache
+        self.served
             .as_ref()
-            .map(|c| {
-                let c = c.lock().unwrap();
+            .map(|s| {
+                let c = s.cache.lock().unwrap();
                 (c.hits, c.misses)
             })
             .unwrap_or((0, 0))
+    }
+
+    fn nanos_since_epoch(&self) -> u64 {
+        u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+
+    fn deadline_expired(&self) -> bool {
+        let since_flush =
+            self.nanos_since_epoch().saturating_sub(self.last_flush_nanos.load(Ordering::Relaxed));
+        u128::from(since_flush) >= self.cfg.max_wait.as_nanos()
     }
 
     /// Submit one candidate; blocks until its batch is evaluated and
@@ -103,8 +173,7 @@ impl BatchQueue {
         let should_flush = {
             let mut q = self.queue.lock().unwrap();
             q.push(Pending { item, reply: tx });
-            q.len() >= self.cfg.max_batch
-                || self.last_flush.lock().unwrap().elapsed() >= self.cfg.max_wait
+            q.len() >= self.cfg.max_batch || self.deadline_expired()
         };
         if should_flush {
             self.flush();
@@ -125,7 +194,7 @@ impl BatchQueue {
     /// already full-size).
     pub fn submit_many(&self, items: &[usize]) -> Vec<f64> {
         if items.len() >= self.cfg.max_batch {
-            *self.flushes.lock().unwrap() += 1;
+            self.flushes.fetch_add(1, Ordering::Relaxed);
             return (self.flush_fn)(items);
         }
         items.iter().map(|&i| self.submit(i)).collect()
@@ -140,8 +209,8 @@ impl BatchQueue {
         if pending.is_empty() {
             return;
         }
-        *self.last_flush.lock().unwrap() = Instant::now();
-        *self.flushes.lock().unwrap() += 1;
+        self.last_flush_nanos.store(self.nanos_since_epoch(), Ordering::Relaxed);
+        self.flushes.fetch_add(1, Ordering::Relaxed);
         let items: Vec<usize> = pending.iter().map(|p| p.item).collect();
         let results = (self.flush_fn)(&items);
         debug_assert_eq!(results.len(), items.len());
@@ -151,7 +220,7 @@ impl BatchQueue {
     }
 
     pub fn flush_count(&self) -> usize {
-        *self.flushes.lock().unwrap()
+        self.flushes.load(Ordering::Relaxed)
     }
 
     pub fn queued(&self) -> usize {
@@ -242,6 +311,43 @@ mod tests {
         let (hits, misses) = q.cache_stats();
         assert_eq!(misses, 20, "repeat requests must not re-query");
         assert!(hits >= 3);
+    }
+
+    #[test]
+    fn queue_keeps_serving_across_inserts() {
+        let mut rng = crate::rng::Pcg64::seed_from(9);
+        let ds = crate::data::synthetic::regression_d1(&mut rng, 60, 20, 6, 0.2);
+        let obj = crate::objectives::LinearRegressionObjective::new(&ds);
+        use crate::objectives::Objective;
+        let q = BatchQueue::for_state(
+            BatchQueueConfig { max_batch: 8, max_wait: Duration::from_millis(0) },
+            crate::oracle::BatchExecutor::sequential(),
+            obj.empty_state(),
+            obj.n(),
+        );
+        assert_eq!(q.generation(), 0);
+        let all: Vec<usize> = (0..obj.n()).collect();
+        let before = q.submit_many(&all);
+        assert_eq!(before, obj.empty_state().gains(&all));
+        // grow the served state: the SAME queue must answer for S = {4}
+        assert_eq!(q.insert(4), 1);
+        let after = q.submit_many(&all);
+        let expected = obj.state_for(&[4]).gains(&all);
+        for (a, e) in after.iter().zip(&expected) {
+            assert!((a - e).abs() < 1e-14, "stale-generation answer served");
+        }
+        let (_, misses) = q.cache_stats();
+        assert_eq!(misses, 2 * obj.n(), "insert must invalidate the memo");
+        assert_eq!(q.generation(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "for_state")]
+    fn insert_on_plain_queue_panics() {
+        let q = BatchQueue::new(BatchQueueConfig::default(), |items| {
+            items.iter().map(|_| 0.0).collect()
+        });
+        q.insert(3);
     }
 
     #[test]

@@ -3,10 +3,11 @@
 //! emits a [`SelectionReport`] plus metrics.
 
 use crate::algorithms::{
-    AdaptiveSampling, AdaptiveSamplingConfig, AdaptiveSequencing, AdaptiveSequencingConfig,
-    Dash, DashConfig, Greedy, GreedyConfig, Lasso, LassoConfig, LassoLogistic, ParallelGreedy,
-    RandomSelect, SelectionResult, TopK,
+    AdaptiveSampling, AdaptiveSamplingConfig, AdaptiveSeqDriver, AdaptiveSequencing,
+    AdaptiveSequencingConfig, Dash, DashConfig, DashDriver, Greedy, GreedyConfig, Lasso,
+    LassoConfig, LassoLogistic, ParallelGreedy, RandomSelect, SelectionResult, TopK, TopKDriver,
 };
+use crate::coordinator::session::{SelectionSession, SessionDriver, StepOutcome};
 use crate::coordinator::MetricsRegistry;
 use crate::data::{Dataset, Task};
 use crate::objectives::{
@@ -275,6 +276,20 @@ impl Leader {
             }
         };
 
+        let sweeps_after = self.exec.stats().sweeps.load(Ordering::Relaxed);
+        let sharded_after = self.exec.stats().sharded_sweeps.load(Ordering::Relaxed);
+        self.metrics
+            .inc("oracle.sweeps", sweeps_after.saturating_sub(sweeps_before) as u64);
+        self.metrics.inc(
+            "oracle.sharded_sweeps",
+            sharded_after.saturating_sub(sharded_before) as u64,
+        );
+        Ok(self.finalize(job, result))
+    }
+
+    /// Native re-evaluation, job metrics, and report assembly shared by
+    /// [`Leader::run`] and [`Leader::run_many`].
+    fn finalize(&self, job: &SelectionJob, result: SelectionResult) -> SelectionReport {
         // LASSO reports no objective value; evaluate its set. Recompute the
         // native value for every algorithm so backends are comparable.
         let native_obj: Box<dyn Objective> = match &job.objective {
@@ -294,18 +309,10 @@ impl Leader {
 
         self.metrics.inc("leader.jobs", 1);
         self.metrics.inc("oracle.queries", result.queries as u64);
-        let sweeps_after = self.exec.stats().sweeps.load(Ordering::Relaxed);
-        let sharded_after = self.exec.stats().sharded_sweeps.load(Ordering::Relaxed);
-        self.metrics
-            .inc("oracle.sweeps", sweeps_after.saturating_sub(sweeps_before) as u64);
-        self.metrics.inc(
-            "oracle.sharded_sweeps",
-            sharded_after.saturating_sub(sharded_before) as u64,
-        );
         self.metrics.set_gauge("last.value", result.value);
         self.metrics.set_gauge("last.rounds", result.rounds as f64);
 
-        Ok(SelectionReport {
+        SelectionReport {
             algorithm: result.algorithm.clone(),
             dataset: job.dataset.name.clone(),
             objective: format!("{:?}", job.objective),
@@ -316,7 +323,134 @@ impl Leader {
             k: job.k,
             native_value,
             result,
-        })
+        }
+    }
+
+    /// The stepwise [`SessionDriver`] for a job's algorithm, or `None` for
+    /// the non-oracle algorithms (LASSO, RANDOM) that have no adaptive
+    /// round structure to interleave.
+    pub fn driver_for(job: &SelectionJob) -> Option<Box<dyn SessionDriver>> {
+        let k = job.k;
+        match &job.algorithm {
+            AlgorithmChoice::Dash(cfg) => {
+                Some(Box::new(DashDriver::new(DashConfig { k, ..cfg.clone() }, "dash")))
+            }
+            AlgorithmChoice::Greedy(cfg) => {
+                Some(Greedy::driver(GreedyConfig { k, ..cfg.clone() }, "sds_ma"))
+            }
+            AlgorithmChoice::ParallelGreedy { cfg, .. } => {
+                // the shared engine supersedes the job's own threads knob
+                Some(Greedy::driver(GreedyConfig { k, ..cfg.clone() }, "parallel_sds_ma"))
+            }
+            AlgorithmChoice::TopK => Some(Box::new(TopKDriver::new(k))),
+            AlgorithmChoice::AdaptiveSampling(cfg) => {
+                let cfg = AdaptiveSamplingConfig { k, ..cfg.clone() };
+                Some(Box::new(DashDriver::new(cfg.to_dash(), "adaptive_sampling")))
+            }
+            AlgorithmChoice::AdaptiveSequencing(cfg) => Some(Box::new(AdaptiveSeqDriver::new(
+                AdaptiveSequencingConfig { k, ..cfg.clone() },
+            ))),
+            AlgorithmChoice::Random { .. } | AlgorithmChoice::Lasso(_) => None,
+        }
+    }
+
+    /// Serve many jobs as concurrent [`SelectionSession`]s multiplexed
+    /// over the leader's one pool: drivers are stepped round-robin, one
+    /// adaptive round at a time, so every live session's sweeps interleave
+    /// on the shared engine. Sessions are independent (own state, own
+    /// generation, own rng), so each job's result is byte-identical to
+    /// serving it alone. Jobs without a stepwise driver (LASSO, RANDOM)
+    /// are served run-to-completion after the multiplexed lanes drain.
+    pub fn run_many(&self, jobs: &[SelectionJob]) -> Vec<Result<SelectionReport, String>> {
+        let sweeps_before = self.exec.stats().sweeps.load(Ordering::Relaxed);
+        let sharded_before = self.exec.stats().sharded_sweeps.load(Ordering::Relaxed);
+        // resolve objectives first (the sessions below borrow them) — but
+        // only for jobs that get a stepwise driver; Direct lanes resolve
+        // inside `Leader::run`, and resolving here too would build each
+        // objective twice
+        let drivers: Vec<Option<Box<dyn SessionDriver>>> =
+            jobs.iter().map(Self::driver_for).collect();
+        let resolved: Vec<Option<Result<Box<dyn Objective>, String>>> = jobs
+            .iter()
+            .zip(&drivers)
+            .map(|(j, d)| d.is_some().then(|| self.objective(j)))
+            .collect();
+
+        enum Lane<'o> {
+            Live {
+                session: SelectionSession<'o>,
+                driver: Box<dyn SessionDriver>,
+                rng: Pcg64,
+                done: bool,
+            },
+            /// no stepwise driver: served via `Leader::run`
+            Direct,
+            Failed(String),
+        }
+
+        let mut lanes: Vec<Lane<'_>> = Vec::with_capacity(jobs.len());
+        for ((job, driver), obj) in jobs.iter().zip(drivers).zip(&resolved) {
+            lanes.push(match (driver, obj) {
+                (None, _) => Lane::Direct,
+                (Some(_), Some(Err(e))) => Lane::Failed(e.clone()),
+                (Some(driver), Some(Ok(obj))) => Lane::Live {
+                    session: SelectionSession::new(&**obj, self.exec.clone()),
+                    driver,
+                    rng: Pcg64::seed_from(job.seed),
+                    done: false,
+                },
+                (Some(_), None) => unreachable!("driver lanes always resolve"),
+            });
+        }
+
+        // round-robin: one step (≈ one adaptive round) per live lane per
+        // pass, until every lane is done
+        loop {
+            let mut progressed = false;
+            for lane in lanes.iter_mut() {
+                if let Lane::Live { session, driver, rng, done } = lane {
+                    if !*done {
+                        if driver.step(session, rng) == StepOutcome::Done {
+                            *done = true;
+                        }
+                        progressed = true;
+                    }
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+
+        // account the multiplexed lanes' sweeps now; Direct lanes below go
+        // through `run`, which records its own deltas
+        let sweeps_after = self.exec.stats().sweeps.load(Ordering::Relaxed);
+        let sharded_after = self.exec.stats().sharded_sweeps.load(Ordering::Relaxed);
+        self.metrics
+            .inc("oracle.sweeps", sweeps_after.saturating_sub(sweeps_before) as u64);
+        self.metrics.inc(
+            "oracle.sharded_sweeps",
+            sharded_after.saturating_sub(sharded_before) as u64,
+        );
+
+        jobs
+            .iter()
+            .zip(lanes)
+            .map(|(job, lane)| match lane {
+                Lane::Live { mut session, driver, .. } => {
+                    let result = driver.finish(&mut session);
+                    self.metrics
+                        .inc("session.inserts", session.metrics.inserts as u64);
+                    self.metrics
+                        .inc("session.fresh_queries", session.metrics.fresh_queries as u64);
+                    self.metrics
+                        .inc("session.cache_hits", session.metrics.cache_hits as u64);
+                    Ok(self.finalize(job, result))
+                }
+                Lane::Direct => self.run(job),
+                Lane::Failed(e) => Err(e),
+            })
+            .collect()
     }
 }
 
@@ -405,6 +539,53 @@ mod tests {
         assert_eq!(report.result.set, r2.result.set);
         assert_eq!(report.result.queries, r2.result.queries);
         assert_eq!(report.result.rounds, r2.result.rounds);
+    }
+
+    #[test]
+    fn run_many_multiplexes_sessions_byte_identically() {
+        let leader = Leader::with_threads(3);
+        let jobs = vec![
+            job(AlgorithmChoice::Greedy(GreedyConfig::default())),
+            job(AlgorithmChoice::Dash(DashConfig::default())),
+            job(AlgorithmChoice::AdaptiveSequencing(AdaptiveSequencingConfig::default())),
+            job(AlgorithmChoice::TopK),
+            job(AlgorithmChoice::Random { trials: 2 }), // direct lane
+        ];
+        let many = leader.run_many(&jobs);
+        assert_eq!(many.len(), jobs.len());
+        for (j, r) in jobs.iter().zip(&many) {
+            let solo = leader.run(j).unwrap();
+            let r = r.as_ref().unwrap();
+            assert_eq!(solo.result.set, r.result.set, "{}: set diverged", solo.algorithm);
+            assert_eq!(
+                solo.result.value.to_bits(),
+                r.result.value.to_bits(),
+                "{}: value not byte-identical",
+                solo.algorithm
+            );
+            assert_eq!(solo.result.queries, r.result.queries, "{}", solo.algorithm);
+            assert_eq!(solo.result.rounds, r.result.rounds, "{}", solo.algorithm);
+        }
+        // multiplexed lanes reported their per-session metrics
+        assert!(leader.metrics.counter("session.inserts") > 0);
+        assert!(leader.metrics.counter("session.fresh_queries") > 0);
+    }
+
+    #[test]
+    fn driver_for_covers_the_oracle_algorithms() {
+        for alg in [
+            AlgorithmChoice::Dash(DashConfig::default()),
+            AlgorithmChoice::Greedy(GreedyConfig::default()),
+            AlgorithmChoice::Greedy(GreedyConfig { lazy: true, ..Default::default() }),
+            AlgorithmChoice::ParallelGreedy { cfg: GreedyConfig::default(), threads: 2 },
+            AlgorithmChoice::TopK,
+            AlgorithmChoice::AdaptiveSampling(AdaptiveSamplingConfig::default()),
+            AlgorithmChoice::AdaptiveSequencing(AdaptiveSequencingConfig::default()),
+        ] {
+            assert!(Leader::driver_for(&job(alg)).is_some());
+        }
+        assert!(Leader::driver_for(&job(AlgorithmChoice::Random { trials: 1 })).is_none());
+        assert!(Leader::driver_for(&job(AlgorithmChoice::Lasso(LassoConfig::default()))).is_none());
     }
 
     #[test]

@@ -1,16 +1,22 @@
 //! Process metrics registry: named counters and gauges with a text
 //! snapshot, fed by the leader and the experiment harness.
+//!
+//! Hot-path friendly: the maps are behind `RwLock`s with atomic leaves, so
+//! incrementing or reading an *existing* key takes only a shared read lock
+//! plus one atomic op — pool workers bumping the same counter never
+//! serialize on a registry-wide mutex. The write lock is taken exactly
+//! once per key, on first touch.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::RwLock;
 
 /// Named counters (monotonic) and gauges (last-write-wins, fixed-point
 /// micro units for fractional values).
 #[derive(Debug, Default)]
 pub struct MetricsRegistry {
-    counters: Mutex<BTreeMap<String, AtomicU64>>,
-    gauges: Mutex<BTreeMap<String, AtomicI64>>,
+    counters: RwLock<BTreeMap<String, AtomicU64>>,
+    gauges: RwLock<BTreeMap<String, AtomicI64>>,
 }
 
 impl MetricsRegistry {
@@ -19,15 +25,24 @@ impl MetricsRegistry {
     }
 
     pub fn inc(&self, name: &str, by: u64) {
-        let mut map = self.counters.lock().unwrap();
-        map.entry(name.to_string())
+        // fast path: existing key under the shared read lock
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            c.fetch_add(by, Ordering::Relaxed);
+            return;
+        }
+        // first touch: `entry` under the write lock (another thread may
+        // have raced us to the insert; fetch_add composes either way)
+        self.counters
+            .write()
+            .unwrap()
+            .entry(name.to_string())
             .or_insert_with(|| AtomicU64::new(0))
             .fetch_add(by, Ordering::Relaxed);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
         self.counters
-            .lock()
+            .read()
             .unwrap()
             .get(name)
             .map(|c| c.load(Ordering::Relaxed))
@@ -36,15 +51,22 @@ impl MetricsRegistry {
 
     /// Set a gauge to a float value (stored as micro-units).
     pub fn set_gauge(&self, name: &str, value: f64) {
-        let mut map = self.gauges.lock().unwrap();
-        map.entry(name.to_string())
+        let micros = (value * 1e6) as i64;
+        if let Some(g) = self.gauges.read().unwrap().get(name) {
+            g.store(micros, Ordering::Relaxed);
+            return;
+        }
+        self.gauges
+            .write()
+            .unwrap()
+            .entry(name.to_string())
             .or_insert_with(|| AtomicI64::new(0))
-            .store((value * 1e6) as i64, Ordering::Relaxed);
+            .store(micros, Ordering::Relaxed);
     }
 
     pub fn gauge(&self, name: &str) -> f64 {
         self.gauges
-            .lock()
+            .read()
             .unwrap()
             .get(name)
             .map(|g| g.load(Ordering::Relaxed) as f64 / 1e6)
@@ -54,10 +76,10 @@ impl MetricsRegistry {
     /// Text snapshot, one `name value` per line, sorted.
     pub fn snapshot(&self) -> String {
         let mut out = String::new();
-        for (k, v) in self.counters.lock().unwrap().iter() {
+        for (k, v) in self.counters.read().unwrap().iter() {
             out.push_str(&format!("{k} {}\n", v.load(Ordering::Relaxed)));
         }
-        for (k, v) in self.gauges.lock().unwrap().iter() {
+        for (k, v) in self.gauges.read().unwrap().iter() {
             out.push_str(&format!(
                 "{k} {}\n",
                 crate::util::fmt_f64(v.load(Ordering::Relaxed) as f64 / 1e6)
@@ -70,6 +92,8 @@ impl MetricsRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::threadpool::ThreadPool;
+    use std::sync::Arc;
 
     #[test]
     fn counters_accumulate() {
@@ -98,5 +122,21 @@ mod tests {
         let snap = m.snapshot();
         let lines: Vec<&str> = snap.lines().collect();
         assert_eq!(lines, vec!["a.count 2", "b.count 1", "c.value 1.5"]);
+    }
+
+    #[test]
+    fn concurrent_increments_are_lossless() {
+        // pool workers hammering one (racing first-touch) key and disjoint
+        // per-worker keys: every increment must land
+        let m = Arc::new(MetricsRegistry::new());
+        let pool = ThreadPool::new(4);
+        let m2 = Arc::clone(&m);
+        pool.parallel_map(256, move |i| {
+            m2.inc("shared.count", 1);
+            m2.inc(&format!("worker.{}", i % 7), 2);
+        });
+        assert_eq!(m.counter("shared.count"), 256);
+        let per_worker: u64 = (0..7).map(|w| m.counter(&format!("worker.{w}"))).sum();
+        assert_eq!(per_worker, 2 * 256);
     }
 }

@@ -7,11 +7,22 @@
 //! drivers and the CLI submit [`SelectionJob`]s to the [`Leader`], which
 //! resolves datasets/objectives/backends, executes the algorithm, and
 //! returns a machine-readable [`SelectionReport`].
+//!
+//! Between the leader and the algorithms sits the [`session`] subsystem:
+//! a [`SelectionSession`] owns one objective state behind a monotonic
+//! [`Generation`] plus a generation-keyed gain cache, and every algorithm
+//! is a stepwise [`SessionDriver`] over it — which is what lets the leader
+//! multiplex many concurrent selections over one oracle pool
+//! ([`Leader::run_many`]).
 
 mod batcher;
 mod leader;
 mod metrics;
+pub mod session;
 
 pub use batcher::{BatchQueue, BatchQueueConfig};
 pub use leader::{AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, SelectionReport};
 pub use metrics::MetricsRegistry;
+pub use session::{
+    drive, Generation, SelectionSession, SessionDriver, SessionMetrics, SessionSweep, StepOutcome,
+};

@@ -1,0 +1,404 @@
+//! Selection sessions: long-lived, generation-aware serving state between
+//! the coordinator and the algorithms.
+//!
+//! The paper's framework earns its logarithmic parallel runtime only if
+//! *every* round of queries — greedy sweeps, DASH's sample/filter rounds,
+//! adaptive sequencing's prefix evaluations — hits the batched oracle. The
+//! ROADMAP's serving goal additionally needs selection state that outlives
+//! a single `run()` call. A [`SelectionSession`] is the abstraction both
+//! share:
+//!
+//! - it owns **one** objective state behind a monotonically increasing
+//!   [`Generation`];
+//! - it owns a generation-keyed [`GainCache`]: entries are stamped with the
+//!   generation they were computed at, and [`SelectionSession::insert`]
+//!   bumps the generation, which *logically* invalidates the whole cache in
+//!   O(1) — no clearing pass, no queue rebuild — so the session keeps
+//!   serving sweeps across inserts;
+//! - it shares the process-wide [`BatchExecutor`], so concurrent sessions
+//!   multiplexed by the [`Leader`](crate::coordinator::Leader) fan their
+//!   sweeps out over one pool;
+//! - it records per-session [`SessionMetrics`].
+//!
+//! # The generation contract
+//!
+//! Every mutation of the solution set goes through
+//! [`SelectionSession::insert`] (or [`SelectionSession::commit`], its batch
+//! form). Each successful insert bumps the generation and invalidates the
+//! cache, so a gain computed against generation `g` can never be served at
+//! generation `g' > g`: stale-generation cache hits are impossible by
+//! construction (`tests/session.rs` proves this). Reads
+//! ([`SelectionSession::sweep`]) report exactly how many oracle queries
+//! they freshly issued, so algorithm-side query accounting stays equal to
+//! the oracle-observed count — the same reported == observed invariant
+//! `tests/executor_audit.rs` enforces on the engine.
+//!
+//! # Stepwise drivers
+//!
+//! Algorithms are [`SessionDriver`]s: instead of owning a closed
+//! run-to-completion loop, each drives a session one adaptive round at a
+//! time (`sweep() → filter/sample → commit(insert)`), returning
+//! [`StepOutcome::Continue`] until it is done. [`drive`] runs a driver to
+//! completion (what every algorithm's `run()` does); the `Leader`
+//! interleaves `step()` calls across many sessions to multiplex concurrent
+//! jobs over one pool ([`Leader::run_many`](crate::coordinator::Leader::run_many)).
+//! Drivers expect a fresh (empty) session and are deterministic given the
+//! session's objective and their `Pcg64`, so an interleaved schedule is
+//! byte-identical to running each session alone.
+//!
+//! # Prefix-parallel adaptive sequencing
+//!
+//! [`SelectionSession::prefix_gains`] implements the paper's §1.2 prefix
+//! round: materialize the sampled sequence's prefix states `S ∪ seq[..i]`
+//! with one incremental left-to-right pass, then evaluate all prefix
+//! marginals as a single blocked sweep on the pool
+//! ([`BatchExecutor::prefix_gains`]) — one adaptive round, no per-prefix
+//! serial oracle calls. [`SelectionSession::prefix_gains_serial`] is the
+//! reference serial walk; both issue the same per-prefix `gain` queries on
+//! bitwise-identical states, so their results are identical to the bit.
+
+use crate::algorithms::SelectionResult;
+use crate::objectives::{Objective, ObjectiveState};
+use crate::oracle::{BatchExecutor, GainCache};
+use crate::rng::Pcg64;
+
+/// Monotonically increasing version of a session's solution state. Bumped
+/// by every successful [`SelectionSession::insert`]; gains computed at one
+/// generation are never served at a later one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Generation(pub u64);
+
+/// Per-session telemetry. Plain counters: a session is single-writer (the
+/// driver stepping it); cross-session aggregation happens in the leader's
+/// [`MetricsRegistry`](crate::coordinator::MetricsRegistry).
+#[derive(Debug, Default, Clone)]
+pub struct SessionMetrics {
+    /// cached sweeps served ([`SelectionSession::sweep`])
+    pub sweeps: usize,
+    /// candidates covered by those sweeps
+    pub swept_candidates: usize,
+    /// sweep candidates answered from the generation cache
+    pub cache_hits: usize,
+    /// sweep candidates freshly evaluated (oracle queries issued)
+    pub fresh_queries: usize,
+    /// successful inserts (== generation bumps)
+    pub inserts: usize,
+    /// whole-set sample rounds ([`SelectionSession::sample_blocks`])
+    pub sample_rounds: usize,
+    /// prefix rounds ([`SelectionSession::prefix_gains`], serial or blocked)
+    pub prefix_rounds: usize,
+    /// uncached sweeps over forked states ([`SelectionSession::fork_gains`])
+    pub fork_sweeps: usize,
+}
+
+impl SessionMetrics {
+    /// Fold another session's counters into this one — used by drivers
+    /// that run child sessions (DASH's per-guess sessions) so the job
+    /// session's metrics cover all work done on the job's behalf.
+    pub fn absorb(&mut self, other: &SessionMetrics) {
+        self.sweeps += other.sweeps;
+        self.swept_candidates += other.swept_candidates;
+        self.cache_hits += other.cache_hits;
+        self.fresh_queries += other.fresh_queries;
+        self.inserts += other.inserts;
+        self.sample_rounds += other.sample_rounds;
+        self.prefix_rounds += other.prefix_rounds;
+        self.fork_sweeps += other.fork_sweeps;
+    }
+}
+
+/// Result of one cached gain sweep.
+#[derive(Debug, Clone)]
+pub struct SessionSweep {
+    /// `f_S(a)` per candidate, in candidate order
+    pub gains: Vec<f64>,
+    /// oracle queries actually issued (cache misses) — report exactly this
+    /// to the round tracker so self-reported counts match observed counts
+    pub fresh: usize,
+    /// generation the sweep was served at
+    pub generation: Generation,
+}
+
+/// One live selection: an objective state behind a generation, its gain
+/// cache, and the shared batched-gain engine. See the module docs for the
+/// generation contract.
+pub struct SelectionSession<'o> {
+    obj: &'o dyn Objective,
+    state: Box<dyn ObjectiveState>,
+    generation: Generation,
+    cache: GainCache,
+    exec: BatchExecutor,
+    pub metrics: SessionMetrics,
+}
+
+impl<'o> SelectionSession<'o> {
+    /// Open a session over `obj` with an empty solution set, served by
+    /// `exec` (clone of the process-shared engine).
+    pub fn new(obj: &'o dyn Objective, exec: BatchExecutor) -> Self {
+        let state = obj.empty_state();
+        let cache = GainCache::new(obj.n());
+        SelectionSession {
+            obj,
+            state,
+            generation: Generation(0),
+            cache,
+            exec,
+            metrics: SessionMetrics::default(),
+        }
+    }
+
+    /// The objective this session optimizes. Returns the session's `'o`
+    /// borrow (not tied to `&self`), so drivers can open child sessions on
+    /// the same objective (DASH's logically-parallel OPT guesses).
+    pub fn objective(&self) -> &'o dyn Objective {
+        self.obj
+    }
+
+    /// The batched-gain engine serving this session.
+    pub fn executor(&self) -> &BatchExecutor {
+        &self.exec
+    }
+
+    /// Current generation (bumped by every successful insert).
+    pub fn generation(&self) -> Generation {
+        self.generation
+    }
+
+    /// Current `f(S)`.
+    pub fn value(&self) -> f64 {
+        self.state.value()
+    }
+
+    /// Elements currently selected (insertion order).
+    pub fn set(&self) -> &[usize] {
+        self.state.set()
+    }
+
+    /// `|S|`.
+    pub fn len(&self) -> usize {
+        self.state.set().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.set().is_empty()
+    }
+
+    /// Read access to the live state (for value/set inspection; mutation
+    /// must go through [`SelectionSession::insert`]).
+    pub fn state(&self) -> &dyn ObjectiveState {
+        &*self.state
+    }
+
+    /// Ground-set elements not yet selected, in index order.
+    pub fn remaining(&self) -> Vec<usize> {
+        let set = self.state.set();
+        (0..self.obj.n()).filter(|a| !set.contains(a)).collect()
+    }
+
+    /// Cached marginal-gain sweep over the current state. Candidates whose
+    /// gain is known *at the current generation* are served from the
+    /// cache; the misses are evaluated in one (possibly sharded) blocked
+    /// sweep through the engine. `fresh` is the number of oracle queries
+    /// actually issued. Candidates are assumed distinct.
+    pub fn sweep(&mut self, candidates: &[usize]) -> SessionSweep {
+        let (gains, fresh) = self.exec.cached_gains(&mut self.cache, &*self.state, candidates);
+        self.metrics.sweeps += 1;
+        self.metrics.swept_candidates += candidates.len();
+        self.metrics.fresh_queries += fresh;
+        self.metrics.cache_hits += candidates.len() - fresh;
+        SessionSweep { gains, fresh, generation: self.generation }
+    }
+
+    /// Uncached blocked sweep over a *forked* state (DASH's filter step
+    /// sweeps each sampled `S ∪ R` state). Bypasses the generation cache —
+    /// the fork is not the session state — but still runs on the shared
+    /// zero-clone engine.
+    pub fn fork_gains(&mut self, fork: &dyn ObjectiveState, candidates: &[usize]) -> Vec<f64> {
+        self.metrics.fork_sweeps += 1;
+        self.exec.gains(fork, candidates)
+    }
+
+    /// Whole-set sample gains `f_S(R)` for a batch of blocks, fanned out
+    /// over the pool; each block comes back with its constructed `S ∪ R`
+    /// state for reuse (one counted oracle query per block).
+    pub fn sample_blocks(
+        &mut self,
+        blocks: &[Vec<usize>],
+    ) -> Vec<(f64, Box<dyn ObjectiveState>)> {
+        self.metrics.sample_rounds += 1;
+        self.exec.sample_blocks(self.obj, &*self.state, blocks)
+    }
+
+    /// Grow `S ← S ∪ {a}`. On success (the element was not already
+    /// selected) the generation is bumped and the gain cache is logically
+    /// invalidated in O(1). Returns whether the set actually grew.
+    pub fn insert(&mut self, a: usize) -> bool {
+        let before = self.state.set().len();
+        self.state.insert(a);
+        let grew = self.state.set().len() > before;
+        if grew {
+            self.generation.0 += 1;
+            self.cache.invalidate();
+            self.metrics.inserts += 1;
+        }
+        grew
+    }
+
+    /// Insert every element of `items` in order (one generation bump per
+    /// successful insert). Returns how many actually entered the set.
+    pub fn commit(&mut self, items: &[usize]) -> usize {
+        items.iter().filter(|&&a| self.insert(a)).count()
+    }
+
+    /// Prefix-parallel round (paper §1.2): for the sampled sequence `seq`,
+    /// return the per-step marginals `g_i = f_{S ∪ seq[..i]}(seq[i])`.
+    /// The prefix states are materialized by one incremental left-to-right
+    /// pass, then **all** marginals are evaluated as a single blocked
+    /// sweep on the pool — one adaptive round, no per-prefix serial oracle
+    /// calls. Identical to [`SelectionSession::prefix_gains_serial`] to
+    /// the bit (same `gain` queries on bitwise-equal states).
+    ///
+    /// The session state is not mutated; callers commit the accepted
+    /// prefix afterwards.
+    pub fn prefix_gains(&mut self, seq: &[usize]) -> Vec<f64> {
+        if seq.is_empty() {
+            return Vec::new();
+        }
+        self.metrics.prefix_rounds += 1;
+        // one incremental pass: P_0 = S, P_{i+1} = P_i ∪ {seq[i]}
+        let mut prefixes: Vec<Box<dyn ObjectiveState>> = Vec::with_capacity(seq.len());
+        prefixes.push(self.state.clone_box());
+        for i in 1..seq.len() {
+            let mut next = prefixes[i - 1].clone_box();
+            next.insert(seq[i - 1]);
+            prefixes.push(next);
+        }
+        self.exec.prefix_gains(&prefixes, seq)
+    }
+
+    /// Reference serial prefix walk: the same per-prefix `gain` queries as
+    /// [`SelectionSession::prefix_gains`], issued one after another on a
+    /// single incrementally-updated walk state. Kept as the baseline the
+    /// blocked prefix round is benchmarked and tested against.
+    pub fn prefix_gains_serial(&mut self, seq: &[usize]) -> Vec<f64> {
+        if seq.is_empty() {
+            return Vec::new();
+        }
+        self.metrics.prefix_rounds += 1;
+        let mut walk = self.state.clone_box();
+        let mut out = Vec::with_capacity(seq.len());
+        for &a in seq {
+            out.push(walk.gain(a));
+            walk.insert(a);
+        }
+        out
+    }
+}
+
+/// Outcome of one driver step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// more adaptive rounds remain
+    Continue,
+    /// the driver has terminated; call [`SessionDriver::finish`]
+    Done,
+}
+
+/// A selection algorithm as a stepwise driver over a [`SelectionSession`].
+///
+/// One `step` advances the algorithm by (roughly) one adaptive round —
+/// a sweep, a sample/filter round, or a prefix round — and commits any
+/// state growth through the session (generation bumps). Drivers expect a
+/// fresh session and must be deterministic given the session's objective
+/// and the provided rng, so a leader interleaving many drivers over one
+/// executor reproduces each driver's solo run byte-for-byte.
+pub trait SessionDriver {
+    /// Algorithm label (matches `SelectionResult::algorithm`).
+    fn label(&self) -> &str;
+
+    /// Advance one round. Must be a no-op returning [`StepOutcome::Done`]
+    /// once the driver has terminated.
+    fn step(&mut self, session: &mut SelectionSession<'_>, rng: &mut Pcg64) -> StepOutcome;
+
+    /// Finalize accounting into a [`SelectionResult`].
+    fn finish(self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult;
+}
+
+/// Run a driver to completion on one session — the run-to-completion
+/// `run()` every algorithm exposes is exactly this.
+pub fn drive(
+    mut driver: Box<dyn SessionDriver + '_>,
+    session: &mut SelectionSession<'_>,
+    rng: &mut Pcg64,
+) -> SelectionResult {
+    while driver.step(session, rng) == StepOutcome::Continue {}
+    driver.finish(session)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::objectives::LinearRegressionObjective;
+    use crate::objectives::Objective;
+
+    fn obj() -> LinearRegressionObjective {
+        let mut rng = Pcg64::seed_from(1);
+        let ds = synthetic::regression_d1(&mut rng, 80, 30, 8, 0.3);
+        LinearRegressionObjective::new(&ds)
+    }
+
+    #[test]
+    fn insert_bumps_generation_and_invalidates() {
+        let o = obj();
+        let mut s = SelectionSession::new(&o, BatchExecutor::sequential());
+        assert_eq!(s.generation(), Generation(0));
+        let cand: Vec<usize> = (0..o.n()).collect();
+        let first = s.sweep(&cand);
+        assert_eq!(first.fresh, o.n());
+        // same generation: all hits
+        let again = s.sweep(&cand);
+        assert_eq!(again.fresh, 0);
+        assert_eq!(again.gains, first.gains);
+        assert!(s.insert(3));
+        assert_eq!(s.generation(), Generation(1));
+        // inserting a member is a no-op: no bump
+        assert!(!s.insert(3));
+        assert_eq!(s.generation(), Generation(1));
+        // new generation: everything re-queried, values match a fresh state
+        let after = s.sweep(&cand);
+        assert_eq!(after.fresh, o.n());
+        assert_eq!(after.gains, o.state_for(&[3]).gains(&cand));
+        assert_eq!(s.metrics.inserts, 1);
+        assert_eq!(s.metrics.cache_hits, o.n());
+    }
+
+    #[test]
+    fn prefix_round_matches_serial_walk_bitwise() {
+        let o = obj();
+        let exec = BatchExecutor::new(3).with_min_parallel(2);
+        let mut s = SelectionSession::new(&o, exec);
+        s.commit(&[1, 4]);
+        let seq = vec![7usize, 2, 19, 11, 28, 5];
+        let serial = s.prefix_gains_serial(&seq);
+        let blocked = s.prefix_gains(&seq);
+        assert_eq!(serial.len(), seq.len());
+        for (a, b) in serial.iter().zip(&blocked) {
+            assert_eq!(a.to_bits(), b.to_bits(), "prefix marginals must be bit-identical");
+        }
+        // the session state itself is untouched by prefix rounds
+        assert_eq!(s.set(), &[1, 4]);
+        assert_eq!(s.metrics.prefix_rounds, 2);
+    }
+
+    #[test]
+    fn commit_counts_only_new_elements() {
+        let o = obj();
+        let mut s = SelectionSession::new(&o, BatchExecutor::sequential());
+        assert_eq!(s.commit(&[2, 5, 2, 9]), 3);
+        assert_eq!(s.set(), &[2, 5, 9]);
+        assert_eq!(s.generation(), Generation(3));
+        assert_eq!(s.remaining().len(), o.n() - 3);
+        assert!(!s.remaining().contains(&5));
+    }
+}

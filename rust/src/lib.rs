@@ -52,7 +52,8 @@ pub mod prelude {
         Lasso, LassoConfig, ParallelGreedy, RandomSelect, SelectionResult, TopK,
     };
     pub use crate::coordinator::{
-        AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob,
+        AlgorithmChoice, Backend, Generation, Leader, ObjectiveChoice, SelectionJob,
+        SelectionSession, SessionDriver, StepOutcome,
     };
     pub use crate::data::{synthetic, Dataset, Task};
     pub use crate::linalg::Matrix;

@@ -59,6 +59,9 @@ pub struct ExecutorStats {
     pub elements: AtomicUsize,
     /// whole-set f(S ∪ R) evaluations issued through the engine
     pub set_evals: AtomicUsize,
+    /// prefix rounds (one per adaptive-sequencing sequence) served through
+    /// [`BatchExecutor::prefix_gains`]
+    pub prefix_sweeps: AtomicUsize,
 }
 
 impl ExecutorStats {
@@ -204,6 +207,33 @@ impl BatchExecutor {
         (out, misses.len())
     }
 
+    /// One gain query per (prefix state, element) pair, fanned out over the
+    /// pool: `out[i] = states[i].gain(items[i])`.
+    ///
+    /// This is adaptive sequencing's prefix round (paper §1.2): given a
+    /// sampled sequence, the marginal of `seq[i]` on top of the prefix
+    /// `S ∪ seq[..i]` is independent of every other prefix marginal once
+    /// the prefix states are materialized, so the whole walk collapses to
+    /// **one** adaptive round on the pool instead of a serial per-prefix
+    /// oracle walk. Each query is a scalar [`ObjectiveState::gain`] on its
+    /// own borrowed state, merged in index order — the output is identical
+    /// to evaluating the pairs one by one, for any pool size.
+    pub fn prefix_gains(
+        &self,
+        states: &[Box<dyn ObjectiveState>],
+        items: &[usize],
+    ) -> Vec<f64> {
+        assert_eq!(states.len(), items.len(), "one prefix state per item");
+        ExecutorStats::bump(&self.stats.prefix_sweeps, 1);
+        ExecutorStats::bump(&self.stats.elements, items.len());
+        match &self.pool {
+            Some(pool) if pool.size() > 1 && items.len() > 1 => {
+                pool.scoped_map(items.len(), |i| states[i].gain(items[i]))
+            }
+            _ => states.iter().zip(items).map(|(st, &a)| st.gain(a)).collect(),
+        }
+    }
+
     /// Whole-set gains `f_S(R)` for a batch of candidate blocks (DASH's
     /// per-round sample estimates), fanned out over the pool, each paired
     /// with the constructed `S ∪ R` state so callers can adopt or sweep
@@ -227,10 +257,14 @@ impl BatchExecutor {
 
 }
 
-/// Per-element gain memo for one state generation. The owner must call
-/// [`GainCache::invalidate`] whenever the underlying solution set changes;
-/// between invalidations, repeated sweeps over surviving candidates are
-/// served without re-querying the oracle.
+/// Generation-keyed per-element gain memo. Every entry is stamped with the
+/// generation it was computed at; [`GainCache::invalidate`] bumps the
+/// current generation in O(1), which logically forgets every entry — no
+/// clearing pass, no queue rebuild — so a long-lived selection session can
+/// invalidate on every `insert` for free. Between invalidations, repeated
+/// sweeps over surviving candidates are served without re-querying the
+/// oracle, and a stale-generation entry can never be served: `is_known`
+/// and `get` only accept entries stamped with the *current* generation.
 ///
 /// The cache grows on demand: a [`BatchQueue`](crate::coordinator::BatchQueue)
 /// or algorithm reused across datasets may submit indices beyond the ground
@@ -240,7 +274,10 @@ impl BatchExecutor {
 #[derive(Debug, Clone)]
 pub struct GainCache {
     vals: Vec<f64>,
-    known: Vec<bool>,
+    /// generation each entry was computed at (0 = never)
+    stamp: Vec<u64>,
+    /// current generation; starts at 1 so a zero stamp is always stale
+    gen: u64,
     /// served-from-memo element count (telemetry)
     pub hits: usize,
     /// freshly evaluated element count (telemetry)
@@ -250,21 +287,33 @@ pub struct GainCache {
 impl GainCache {
     /// Cache over ground set `0..n`.
     pub fn new(n: usize) -> Self {
-        GainCache { vals: vec![0.0; n], known: vec![false; n], hits: 0, misses: 0 }
+        GainCache { vals: vec![0.0; n], stamp: vec![0; n], gen: 1, hits: 0, misses: 0 }
     }
 
-    /// Forget every memoized gain (the state changed).
+    /// Bump the generation, logically forgetting every memoized gain (the
+    /// state changed). O(1): entries stay in place but their stamps no
+    /// longer match.
     pub fn invalidate(&mut self) {
-        self.known.fill(false);
+        self.gen += 1;
+    }
+
+    /// The cache's current generation (bumped by every invalidation).
+    pub fn generation(&self) -> u64 {
+        self.gen
     }
 
     pub fn is_known(&self, a: usize) -> bool {
-        self.known.get(a).copied().unwrap_or(false)
+        self.stamp.get(a).copied() == Some(self.gen)
     }
 
-    /// Memoized value (0.0 when unknown; check [`GainCache::is_known`]).
+    /// Memoized value (0.0 when unknown or stamped with a stale
+    /// generation; check [`GainCache::is_known`]).
     pub fn get(&self, a: usize) -> f64 {
-        self.vals.get(a).copied().unwrap_or(0.0)
+        if self.is_known(a) {
+            self.vals[a]
+        } else {
+            0.0
+        }
     }
 
     pub fn put(&mut self, a: usize, v: f64) {
@@ -273,10 +322,10 @@ impl GainCache {
             // unknown, so a silent panic here would only surface deep in a
             // flush; resizing keeps the unknown-⇒-miss contract coherent
             self.vals.resize(a + 1, 0.0);
-            self.known.resize(a + 1, false);
+            self.stamp.resize(a + 1, 0);
         }
         self.vals[a] = v;
-        self.known[a] = true;
+        self.stamp[a] = self.gen;
     }
 }
 
@@ -375,6 +424,46 @@ mod tests {
         assert_eq!(vals, st.gains(&cand));
         let (_, fresh2) = exec.cached_gains(&mut small, &*st, &cand);
         assert_eq!(fresh2, 0, "grown entries must memoize");
+    }
+
+    #[test]
+    fn invalidate_is_generation_bump() {
+        let mut cache = GainCache::new(8);
+        let g0 = cache.generation();
+        cache.put(3, 1.5);
+        assert!(cache.is_known(3));
+        assert_eq!(cache.get(3), 1.5);
+        cache.invalidate();
+        assert_eq!(cache.generation(), g0 + 1);
+        // stale-generation entries are unreachable: neither known nor served
+        assert!(!cache.is_known(3));
+        assert_eq!(cache.get(3), 0.0, "stale entry must not be served");
+        // re-putting at the new generation serves again
+        cache.put(3, 2.5);
+        assert!(cache.is_known(3));
+        assert_eq!(cache.get(3), 2.5);
+    }
+
+    #[test]
+    fn prefix_gains_match_serial_pairs() {
+        let (obj, _) = setup();
+        let base = obj.state_for(&[2, 9]);
+        let seq: Vec<usize> = vec![5, 11, 30, 41, 57];
+        // materialize prefix states: P_i = S ∪ seq[..i]
+        let mut prefixes: Vec<Box<dyn crate::objectives::ObjectiveState>> =
+            Vec::with_capacity(seq.len());
+        prefixes.push(base.clone_box());
+        for i in 1..seq.len() {
+            let mut next = prefixes[i - 1].clone_box();
+            next.insert(seq[i - 1]);
+            prefixes.push(next);
+        }
+        let expected: Vec<f64> =
+            prefixes.iter().zip(&seq).map(|(st, &a)| st.gain(a)).collect();
+        for exec in [BatchExecutor::sequential(), BatchExecutor::new(3)] {
+            let got = exec.prefix_gains(&prefixes, &seq);
+            assert_eq!(got, expected, "prefix round must be bit-identical");
+        }
     }
 
     #[test]

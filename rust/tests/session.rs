@@ -1,0 +1,201 @@
+//! Generation-semantics acceptance tests for the session subsystem:
+//!
+//! 1. stale-generation cache hits are impossible after `insert`;
+//! 2. interleaved sessions multiplexed over one executor are byte-for-byte
+//!    identical to their solo sequential runs;
+//! 3. the `executor_audit` reported == observed invariant holds through
+//!    the session path for every stepwise driver — including adaptive
+//!    sequencing, whose prefix round is only auditable now that prefix
+//!    marginals are real oracle queries instead of an opaque serial value
+//!    walk.
+
+use dash_select::algorithms::{
+    AdaptiveSeqDriver, AdaptiveSequencing, AdaptiveSequencingConfig, Dash, DashConfig, Greedy,
+    GreedyConfig, SelectionResult, TopK,
+};
+use dash_select::coordinator::session::{
+    drive, Generation, SelectionSession, SessionDriver, StepOutcome,
+};
+use dash_select::data::{synthetic, Dataset};
+use dash_select::objectives::{LinearRegressionObjective, Objective};
+use dash_select::oracle::{BatchExecutor, CountingObjective};
+use dash_select::rng::Pcg64;
+
+fn dataset(seed: u64) -> Dataset {
+    let mut rng = Pcg64::seed_from(seed);
+    synthetic::regression_d1(&mut rng, 100, 40, 10, 0.3)
+}
+
+/// (1) After an insert, every previously cached gain is stale and must be
+/// re-queried; the values served always match a freshly built state.
+#[test]
+fn stale_generation_hits_are_impossible() {
+    let ds = dataset(1);
+    let obj = LinearRegressionObjective::new(&ds);
+    let exec = BatchExecutor::new(3).with_min_parallel(2);
+    let mut session = SelectionSession::new(&obj, exec);
+    let cand: Vec<usize> = (0..obj.n()).collect();
+
+    let mut selected: Vec<usize> = Vec::new();
+    for round in 0..6 {
+        let sw = session.sweep(&cand);
+        assert_eq!(
+            sw.fresh,
+            cand.len(),
+            "round {round}: generation bump must force a full re-query"
+        );
+        // a second sweep at the same generation is pure cache
+        let warm = session.sweep(&cand);
+        assert_eq!(warm.fresh, 0);
+        assert_eq!(warm.gains, sw.gains);
+        // ground truth: a state built from scratch for the current set
+        let truth = obj.state_for(&selected).gains(&cand);
+        for (a, (&g, &t)) in sw.gains.iter().zip(&truth).enumerate() {
+            assert_eq!(g.to_bits(), t.to_bits(), "candidate {a} served a stale gain");
+        }
+        // insert the argmax and bump the generation
+        let best = (0..cand.len()).max_by(|&i, &j| sw.gains[i].total_cmp(&sw.gains[j])).unwrap();
+        assert!(session.insert(cand[best]) || selected.contains(&cand[best]));
+        selected.push(cand[best]);
+        assert_eq!(session.generation(), Generation(round as u64 + 1));
+    }
+}
+
+/// (2) Two sessions interleaved step-by-step over ONE shared executor must
+/// each reproduce their solo run byte-for-byte.
+#[test]
+fn interleaved_sessions_match_solo_runs() {
+    let ds_a = dataset(2);
+    let ds_b = dataset(3);
+    let obj_a = LinearRegressionObjective::new(&ds_a);
+    let obj_b = LinearRegressionObjective::new(&ds_b);
+    let shared = BatchExecutor::new(4).with_min_parallel(2);
+
+    // solo references, each on its own engine
+    let solo_a = Greedy::new(GreedyConfig { k: 8, ..Default::default() }).run(&obj_a);
+    let mut rng_b = Pcg64::seed_from(11);
+    let solo_b = Dash::new(DashConfig { k: 6, ..Default::default() }).run(&obj_b, &mut rng_b);
+
+    // interleaved: alternate single steps on the shared executor
+    let mut sess_a = SelectionSession::new(&obj_a, shared.clone());
+    let mut sess_b = SelectionSession::new(&obj_b, shared.clone());
+    let mut drv_a: Box<dyn SessionDriver> =
+        dash_select::algorithms::Greedy::driver(GreedyConfig { k: 8, ..Default::default() }, "sds_ma");
+    let mut drv_b: Box<dyn SessionDriver> =
+        Box::new(dash_select::algorithms::DashDriver::new(DashConfig { k: 6, ..Default::default() }, "dash"));
+    let mut rng_a = Pcg64::seed_from(0);
+    let mut rng_b = Pcg64::seed_from(11);
+    let (mut done_a, mut done_b) = (false, false);
+    while !(done_a && done_b) {
+        if !done_a {
+            done_a = drv_a.step(&mut sess_a, &mut rng_a) == StepOutcome::Done;
+        }
+        if !done_b {
+            done_b = drv_b.step(&mut sess_b, &mut rng_b) == StepOutcome::Done;
+        }
+    }
+    let inter_a = drv_a.finish(&mut sess_a);
+    let inter_b = drv_b.finish(&mut sess_b);
+
+    for (solo, inter) in [(&solo_a, &inter_a), (&solo_b, &inter_b)] {
+        assert_eq!(solo.set, inter.set, "{}: set diverged under interleaving", solo.algorithm);
+        assert_eq!(
+            solo.value.to_bits(),
+            inter.value.to_bits(),
+            "{}: value not byte-identical",
+            solo.algorithm
+        );
+        assert_eq!(solo.rounds, inter.rounds, "{}", solo.algorithm);
+        assert_eq!(solo.queries, inter.queries, "{}", solo.algorithm);
+    }
+    // the sessions really did share one engine
+    assert!(shared.stats().sweeps.load(std::sync::atomic::Ordering::Relaxed) > 0);
+}
+
+fn executors() -> Vec<(&'static str, BatchExecutor)> {
+    vec![
+        ("sequential", BatchExecutor::sequential()),
+        ("parallel", BatchExecutor::new(4).with_min_parallel(2)),
+    ]
+}
+
+fn assert_audited(mode: &str, res: &SelectionResult, observed: usize) {
+    assert_eq!(
+        res.queries, observed,
+        "{mode}/{}: reported queries != oracle-observed",
+        res.algorithm
+    );
+}
+
+/// (3) reported == observed through the session path, for every driver.
+#[test]
+fn session_path_preserves_query_audit() {
+    let ds = dataset(4);
+    // greedy (eager + lazy) and top-k
+    for (mode, exec) in executors() {
+        let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+        let res = Greedy::new(GreedyConfig { k: 6, ..Default::default() })
+            .with_executor(exec.clone())
+            .run(&counting);
+        assert_audited(mode, &res, counting.stats.total_oracle_queries());
+
+        let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+        let res = Greedy::new(GreedyConfig { k: 6, lazy: true, ..Default::default() })
+            .with_executor(exec.clone())
+            .run(&counting);
+        assert_audited(mode, &res, counting.stats.total_oracle_queries());
+
+        let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+        let res = TopK::new(7).with_executor(exec.clone()).run(&counting);
+        assert_audited(mode, &res, counting.stats.total_oracle_queries());
+
+        // DASH through the session path (sample + filter + fallback rounds)
+        let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+        let mut rng = Pcg64::seed_from(21);
+        let res = Dash::new(DashConfig { k: 6, ..Default::default() })
+            .with_executor(exec.clone())
+            .run(&counting, &mut rng);
+        assert_audited(mode, &res, counting.stats.total_oracle_queries());
+
+        // adaptive sequencing: prefix marginals are now counted oracle
+        // queries, so the audit covers the prefix-parallel round too
+        for serial in [false, true] {
+            let counting = CountingObjective::new(LinearRegressionObjective::new(&ds));
+            let mut rng = Pcg64::seed_from(31);
+            let res = AdaptiveSequencing::new(AdaptiveSequencingConfig {
+                k: 8,
+                serial_prefix: serial,
+                ..Default::default()
+            })
+            .with_executor(exec.clone())
+            .run(&counting, &mut rng);
+            assert_audited(mode, &res, counting.stats.total_oracle_queries());
+            assert!(res.set.len() <= 8);
+        }
+    }
+}
+
+/// The prefix-parallel round goes through the pool (the executor records a
+/// prefix sweep), not through per-prefix serial oracle calls.
+#[test]
+fn prefix_rounds_hit_the_pool() {
+    let ds = dataset(5);
+    let obj = LinearRegressionObjective::new(&ds);
+    let exec = BatchExecutor::new(4).with_min_parallel(2);
+    let mut rng = Pcg64::seed_from(9);
+    let mut session = SelectionSession::new(&obj, exec.clone());
+    let res = drive(
+        Box::new(AdaptiveSeqDriver::new(AdaptiveSequencingConfig {
+            k: 10,
+            ..Default::default()
+        })),
+        &mut session,
+        &mut rng,
+    );
+    assert!(res.set.len() >= 8);
+    let prefix_sweeps =
+        exec.stats().prefix_sweeps.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(prefix_sweeps >= 1, "prefix rounds must route through the engine");
+    assert_eq!(session.metrics.prefix_rounds, prefix_sweeps);
+    assert!(session.metrics.inserts >= res.set.len());
+}
