@@ -1,0 +1,141 @@
+//! Serving-front walkthrough: many clients, few pooled oracle rounds.
+//!
+//! Opens a `SessionServer` through the leader — one greedy-driven session,
+//! one DASH-driven session, and one ad-hoc session — and serves them to
+//! concurrent clients over cloneable `SessionClient` handles. Shows the
+//! three serving invariants:
+//!
+//! 1. **determinism** — driving an algorithm through the server is
+//!    byte-identical to running it solo (`Leader::run`);
+//! 2. **coalescing** — concurrent same-generation sweep requests collapse
+//!    into fewer pooled oracle rounds (the paper's few-adaptive-rounds
+//!    discipline applied to request traffic);
+//! 3. **generation stamps** — an insert bumps the generation, every sweep
+//!    reply says which generation its gains describe, and a client's own
+//!    writes are always visible to its later reads.
+//!
+//! ```bash
+//! cargo run --release --offline --example serving
+//! ```
+
+use dash_select::algorithms::{DashConfig, GreedyConfig};
+use dash_select::coordinator::{
+    AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, ServeConfig, ServeSpec,
+};
+use dash_select::data::synthetic;
+use dash_select::rng::Pcg64;
+use std::sync::Arc;
+
+fn main() {
+    let mut rng = Pcg64::seed_from(7);
+    let data = Arc::new(synthetic::regression_d1(&mut rng, 150, 120, 30, 0.4));
+    let n = data.n();
+    let k = 8;
+    println!(
+        "serving workload: {} ({} samples × {n} features), k = {k}\n",
+        data.name,
+        data.d()
+    );
+
+    let leader = Leader::new();
+    let job = |algorithm| SelectionJob {
+        dataset: Arc::clone(&data),
+        objective: ObjectiveChoice::Lreg,
+        backend: Backend::Native,
+        algorithm,
+        k,
+        seed: 3,
+    };
+    let greedy_job = job(AlgorithmChoice::Greedy(GreedyConfig { k, ..Default::default() }));
+    let specs = vec![
+        ServeSpec::driven(greedy_job.clone()),
+        ServeSpec::driven(job(AlgorithmChoice::Dash(DashConfig { k, ..Default::default() }))),
+        ServeSpec::adhoc(job(AlgorithmChoice::TopK)),
+    ];
+
+    // two stepper clients drive the algorithm sessions while three reader
+    // clients hammer the ad-hoc lane with overlapping sweeps; reader 0
+    // also grows the ad-hoc set, so the others race a moving generation
+    let ((greedy_served, dash_served, reader_gens), summary) = leader
+        .serve(&specs, ServeConfig::default(), move |clients| {
+            let adhoc = clients[2].clone();
+            std::thread::scope(|s| {
+                let g = {
+                    let c = clients[0].clone();
+                    s.spawn(move || c.drive().expect("greedy lane"))
+                };
+                let d = {
+                    let c = clients[1].clone();
+                    s.spawn(move || c.drive().expect("dash lane"))
+                };
+                let readers: Vec<_> = (0..3usize)
+                    .map(|t| {
+                        let c = adhoc.clone();
+                        s.spawn(move || {
+                            let cand: Vec<usize> = (0..n).collect();
+                            let mut gens = Vec::new();
+                            for i in 0..12 {
+                                let sw = c.sweep(&cand).expect("ad-hoc sweep");
+                                assert_eq!(sw.gains.len(), n);
+                                gens.push(sw.generation);
+                                if t == 0 && i % 4 == 3 {
+                                    c.insert(i).expect("ad-hoc insert");
+                                }
+                            }
+                            gens
+                        })
+                    })
+                    .collect();
+                let gens: Vec<Vec<u64>> =
+                    readers.into_iter().map(|h| h.join().expect("reader")).collect();
+                (g.join().expect("greedy"), d.join().expect("dash"), gens)
+            })
+        })
+        .expect("serve");
+
+    // 1. determinism: served greedy == solo run, byte for byte
+    let solo = leader.run(&greedy_job).expect("solo greedy").result;
+    assert_eq!(solo.set, greedy_served.set);
+    assert_eq!(solo.value.to_bits(), greedy_served.value.to_bits());
+    assert_eq!(solo.queries, greedy_served.queries);
+    println!(
+        "greedy through the server: f(S) = {:.5}, |S| = {}, {} queries — byte-identical to solo",
+        greedy_served.value,
+        greedy_served.set.len(),
+        greedy_served.queries
+    );
+    println!(
+        "dash through the server:   f(S) = {:.5} in {} adaptive rounds",
+        dash_served.value, dash_served.rounds
+    );
+
+    // 2. coalescing
+    let m = &summary.metrics;
+    println!(
+        "\ncoalescing: {} sweep requests served by {} pooled rounds \
+         ({:.2} sweeps/round) across {} turns",
+        m.sweep_requests,
+        m.coalesced_rounds,
+        m.sweep_requests as f64 / m.coalesced_rounds.max(1) as f64,
+        m.turns
+    );
+
+    // 3. generation stamps: monotone per client (no reply is ever staler
+    // than one the client already saw), ad-hoc lane ended at generation 3
+    for gens in &reader_gens {
+        assert!(gens.windows(2).all(|w| w[0] <= w[1]), "stale reply: {gens:?}");
+    }
+    let adhoc_snap = &summary.sessions[2];
+    assert_eq!(adhoc_snap.generation.0, 3);
+    println!(
+        "generations observed per reader (first → last, all monotone): {:?}; \
+         ad-hoc lane finished at generation {} with S = {:?}",
+        reader_gens
+            .iter()
+            .map(|g| (g.first().copied().unwrap_or(0), g.last().copied().unwrap_or(0)))
+            .collect::<Vec<_>>(),
+        adhoc_snap.generation.0,
+        adhoc_snap.set
+    );
+    println!("\nserving OK");
+}

@@ -13,6 +13,9 @@
 
 use dash_select::bench::Bench;
 use dash_select::coordinator::session::SelectionSession;
+use dash_select::coordinator::{
+    AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, ServeConfig, ServeSpec,
+};
 use dash_select::data::synthetic;
 use dash_select::objectives::{
     AOptimalityObjective, LinearRegressionObjective, Objective, ObjectiveState,
@@ -225,6 +228,54 @@ fn main() {
     let inserts_per_s =
         if insert_sweep_s > 0.0 { insert_rounds as f64 / insert_sweep_s } else { 0.0 };
 
+    // ---- serving front: request throughput + sweep coalescing ----
+    // concurrent clients hammer one ad-hoc session through Leader::serve;
+    // the server coalesces same-generation sweeps into pooled rounds, so
+    // rounds-per-sweep < 1 is the coalescing win
+    let fast = std::env::var("DASH_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let serve_clients = 4usize;
+    let serve_sweeps = if fast { 32usize } else { 160 };
+    let serve_ds = synthetic::regression_d1(&mut rng, 120, 400, 40, 0.3);
+    let serve_n = serve_ds.n();
+    let serve_leader = Leader::with_threads(threads);
+    let serve_spec = ServeSpec::adhoc(SelectionJob {
+        dataset: Arc::new(serve_ds),
+        objective: ObjectiveChoice::Lreg,
+        backend: Backend::Native,
+        algorithm: AlgorithmChoice::TopK,
+        k: 16,
+        seed: 1,
+    });
+    let serve_t0 = std::time::Instant::now();
+    let ((), serve_summary) = serve_leader
+        .serve(&[serve_spec], ServeConfig::default(), move |clients| {
+            let handle = clients[0].clone();
+            std::thread::scope(|s| {
+                for t in 0..serve_clients {
+                    let c = handle.clone();
+                    s.spawn(move || {
+                        let cand: Vec<usize> = (0..serve_n).collect();
+                        for i in 0..serve_sweeps {
+                            let sw = c.sweep(&cand).expect("bench sweep");
+                            assert_eq!(sw.gains.len(), serve_n);
+                            if t == 0 && i % 8 == 7 {
+                                c.insert((i * 13) % serve_n).expect("bench insert");
+                            }
+                        }
+                    });
+                }
+            });
+        })
+        .expect("serve bench");
+    let serve_elapsed = serve_t0.elapsed().as_secs_f64().max(1e-12);
+    let sm = &serve_summary.metrics;
+    let serve_rps = sm.requests as f64 / serve_elapsed;
+    let rounds_per_sweep = if sm.sweep_requests > 0 {
+        sm.coalesced_rounds as f64 / sm.sweep_requests as f64
+    } else {
+        0.0
+    };
+
     // ---- report ----
     println!();
     let mut obj_entries = Vec::new();
@@ -288,6 +339,12 @@ fn main() {
         "session: warm re-sweep {warm_sweep_s:.6}s, insert+sweep {insert_sweep_s:.6}s \
          ({inserts_per_s:.1} inserts/s with invalidated cache)"
     );
+    println!(
+        "serve: {} requests from {serve_clients} clients in {serve_elapsed:.3}s \
+         ({serve_rps:.0} req/s); {} sweeps → {} pooled rounds \
+         ({rounds_per_sweep:.3} rounds/sweep)",
+        sm.requests, sm.sweep_requests, sm.coalesced_rounds
+    );
     let doc = Json::obj(vec![
         ("suite", "executor".into()),
         ("threads", threads.into()),
@@ -310,6 +367,20 @@ fn main() {
                 ("warm_sweep_s", warm_sweep_s.into()),
                 ("insert_sweep_s", insert_sweep_s.into()),
                 ("inserts_per_s", inserts_per_s.into()),
+            ]),
+        ),
+        (
+            "serve",
+            Json::obj(vec![
+                ("clients", serve_clients.into()),
+                ("n", serve_n.into()),
+                ("requests", sm.requests.into()),
+                ("sweep_requests", sm.sweep_requests.into()),
+                ("coalesced_rounds", sm.coalesced_rounds.into()),
+                ("inserts", sm.inserts.into()),
+                ("elapsed_s", serve_elapsed.into()),
+                ("requests_per_s", serve_rps.into()),
+                ("rounds_per_sweep", rounds_per_sweep.into()),
             ]),
         ),
         ("reports", Json::Arr(reports)),

@@ -125,9 +125,20 @@ impl BatchQueue {
     /// queue keeps serving — subsequent flushes answer against the new
     /// state. Returns the new generation.
     ///
+    /// The pending queue is flushed first as a best-effort courtesy, so
+    /// requests that fully queued before the insert are *usually* answered
+    /// against the pre-insert state — but this is not a guarantee: a
+    /// submitter whose own flush has drained the queue but not yet reached
+    /// the state lock can still be answered post-insert. Replies here are
+    /// bare gains with no generation stamp; callers that need to know
+    /// which generation answered must use the generation-stamped serving
+    /// front ([`coordinator::serve`](crate::coordinator::serve)) instead.
+    ///
     /// Panics on queues not built with [`BatchQueue::for_state`].
     pub fn insert(&self, a: usize) -> u64 {
         let served = self.served.as_ref().expect("insert requires a for_state queue");
+        // answer the backlog against the state it was submitted under
+        self.flush();
         // lock order: state → cache (matches the flush closure)
         let mut st = served.state.lock().unwrap();
         st.insert(a);

@@ -7,6 +7,9 @@ use crate::algorithms::{
     AdaptiveSequencingConfig, Dash, DashConfig, DashDriver, Greedy, GreedyConfig, Lasso,
     LassoConfig, LassoLogistic, ParallelGreedy, RandomSelect, SelectionResult, TopK, TopKDriver,
 };
+use crate::coordinator::serve::{
+    Envelope, ServeConfig, ServeSummary, SessionClient, SessionId, SessionServer,
+};
 use crate::coordinator::session::{SelectionSession, SessionDriver, StepOutcome};
 use crate::coordinator::MetricsRegistry;
 use crate::data::{Dataset, Task};
@@ -84,6 +87,29 @@ pub struct SelectionJob {
     pub algorithm: AlgorithmChoice,
     pub k: usize,
     pub seed: u64,
+}
+
+/// One lane of a [`Leader::serve`] session set: the job resolves the
+/// objective (and, for driven lanes, the stepwise driver plus the rng
+/// seed).
+#[derive(Clone)]
+pub struct ServeSpec {
+    pub job: SelectionJob,
+    /// attach the job's stepwise driver (`Step`/`Finish` requests); ad-hoc
+    /// lanes (raw sweep/insert traffic) leave this false
+    pub driven: bool,
+}
+
+impl ServeSpec {
+    /// Lane with the job's stepwise driver attached.
+    pub fn driven(job: SelectionJob) -> Self {
+        ServeSpec { job, driven: true }
+    }
+
+    /// Ad-hoc lane: raw sweep/insert traffic, no driver.
+    pub fn adhoc(job: SelectionJob) -> Self {
+        ServeSpec { job, driven: false }
+    }
 }
 
 /// Machine-readable job outcome.
@@ -452,6 +478,64 @@ impl Leader {
             })
             .collect()
     }
+
+    /// Serve a set of live sessions to concurrent clients
+    /// ([`coordinator::serve`](crate::coordinator::serve)): the caller's
+    /// thread becomes the server loop — the lanes borrow leader-built
+    /// objectives, which never cross threads — while `f` runs on a scoped
+    /// worker thread with one cloneable [`SessionClient`] per spec'd
+    /// session (clients are `Send + 'static`; `f` may spawn its own
+    /// threads). Requests flow through a bounded queue
+    /// ([`ServeConfig::queue_bound`] — backpressure), concurrent
+    /// same-generation sweeps coalesce into one pooled round on the
+    /// leader's shared engine, and every sweep reply is
+    /// generation-stamped.
+    ///
+    /// Returns `f`'s result plus the serving summary once every client
+    /// handle is dropped — `f` must not leak a client into its return
+    /// value, or the loop never observes disconnect.
+    pub fn serve<R, F>(
+        &self,
+        specs: &[ServeSpec],
+        cfg: ServeConfig,
+        f: F,
+    ) -> Result<(R, ServeSummary), String>
+    where
+        R: Send,
+        F: FnOnce(Vec<SessionClient>) -> R + Send,
+    {
+        // resolve objectives first (the server lanes borrow them)
+        let objectives = specs
+            .iter()
+            .map(|s| self.objective(&s.job))
+            .collect::<Result<Vec<Box<dyn Objective>>, String>>()?;
+        let mut server = SessionServer::new();
+        for (spec, obj) in specs.iter().zip(&objectives) {
+            if spec.driven {
+                let driver = Self::driver_for(&spec.job).ok_or_else(|| {
+                    format!("{} has no stepwise driver to serve", spec.job.algorithm.label())
+                })?;
+                server.open_driven(&**obj, self.exec.clone(), driver, spec.job.seed);
+            } else {
+                server.open(&**obj, self.exec.clone());
+            }
+        }
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Envelope>(cfg.queue_bound.max(1));
+        let clients: Vec<SessionClient> =
+            (0..specs.len()).map(|i| SessionClient::new(tx.clone(), SessionId(i))).collect();
+        // the loop exits when every sender is gone; only clients hold one
+        drop(tx);
+        let (r, summary) = std::thread::scope(|scope| {
+            let client_thread = scope.spawn(move || f(clients));
+            let summary = server.run(rx);
+            (client_thread.join().expect("serve client closure panicked"), summary)
+        });
+        self.metrics.inc("serve.requests", summary.metrics.requests as u64);
+        self.metrics.inc("serve.sweep_requests", summary.metrics.sweep_requests as u64);
+        self.metrics.inc("serve.coalesced_rounds", summary.metrics.coalesced_rounds as u64);
+        self.metrics.inc("serve.inserts", summary.metrics.inserts as u64);
+        Ok((r, summary))
+    }
 }
 
 #[cfg(test)]
@@ -586,6 +670,48 @@ mod tests {
         }
         assert!(Leader::driver_for(&job(AlgorithmChoice::Random { trials: 1 })).is_none());
         assert!(Leader::driver_for(&job(AlgorithmChoice::Lasso(LassoConfig::default()))).is_none());
+    }
+
+    #[test]
+    fn serve_driven_lane_matches_solo_run_and_records_metrics() {
+        let leader = Leader::with_threads(2);
+        let greedy = job(AlgorithmChoice::Greedy(GreedyConfig::default()));
+        let adhoc = job(AlgorithmChoice::TopK);
+        let n = greedy.dataset.n();
+        let specs =
+            vec![ServeSpec::driven(greedy.clone()), ServeSpec::adhoc(adhoc)];
+        let (served, summary) = leader
+            .serve(&specs, ServeConfig::default(), move |clients| {
+                // grow the ad-hoc lane, then read it back
+                let (grew, generation) = clients[1].insert(3).unwrap();
+                assert!(grew);
+                assert_eq!(generation, 1);
+                let sw = clients[1].sweep(&(0..n).collect::<Vec<_>>()).unwrap();
+                assert_eq!(sw.generation, 1);
+                assert_eq!(sw.gains.len(), n);
+                // drive the greedy lane to completion
+                clients[0].drive().unwrap()
+            })
+            .unwrap();
+        let solo = leader.run(&greedy).unwrap();
+        assert_eq!(served.set, solo.result.set);
+        assert_eq!(served.value.to_bits(), solo.result.value.to_bits());
+        assert_eq!(served.queries, solo.result.queries);
+        assert_eq!(summary.metrics.inserts, 1);
+        assert_eq!(summary.metrics.sweep_requests, 1);
+        assert_eq!(summary.sessions[1].generation.0, 1);
+        assert_eq!(summary.sessions[1].set, vec![3]);
+        assert!(leader.metrics.counter("serve.requests") >= 3);
+    }
+
+    #[test]
+    fn serve_rejects_driverless_algorithms_in_driven_lanes() {
+        let leader = Leader::with_threads(1);
+        let specs = vec![ServeSpec::driven(job(AlgorithmChoice::Random { trials: 2 }))];
+        let err = leader
+            .serve(&specs, ServeConfig::default(), |clients| drop(clients))
+            .unwrap_err();
+        assert!(err.contains("no stepwise driver"), "{err}");
     }
 
     #[test]

@@ -14,15 +14,30 @@
 //! is a stepwise [`SessionDriver`] over it — which is what lets the leader
 //! multiplex many concurrent selections over one oracle pool
 //! ([`Leader::run_many`]).
+//!
+//! On top of the sessions sits the [`serve`] subsystem: a [`SessionServer`]
+//! serves live sessions to many concurrent clients over cloneable
+//! [`SessionClient`] handles, coalescing same-generation sweep requests
+//! into single pooled rounds with generation-stamped replies and
+//! bounded-queue backpressure ([`Leader::serve`] spins the loop on the
+//! shared pool).
 
 mod batcher;
 mod leader;
 mod metrics;
+pub mod serve;
 pub mod session;
 
 pub use batcher::{BatchQueue, BatchQueueConfig};
-pub use leader::{AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, SelectionReport};
+pub use leader::{
+    AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, SelectionReport, ServeSpec,
+};
 pub use metrics::MetricsRegistry;
+pub use serve::{
+    ServeConfig, ServeError, ServeMetrics, ServeReply, ServeRequest, ServeSummary, SessionClient,
+    SessionId, SessionServer, SweptGains,
+};
 pub use session::{
-    drive, Generation, SelectionSession, SessionDriver, SessionMetrics, SessionSweep, StepOutcome,
+    drive, Generation, SelectionSession, SessionDriver, SessionMetrics, SessionSnapshot,
+    SessionSweep, StepOutcome,
 };

@@ -1,0 +1,819 @@
+//! Concurrent serving front for selection sessions: many clients, few
+//! pooled oracle rounds.
+//!
+//! The paper's framework wins by turning polynomially many independent
+//! queries into a handful of adaptive rounds; this module applies the same
+//! discipline to *request traffic*. A [`SessionServer`] owns a set of
+//! [`SelectionSession`]s (each optionally driven by a stepwise
+//! [`SessionDriver`]); clients hold cloneable, thread-safe
+//! [`SessionClient`] handles (std `mpsc` channels, mirroring
+//! `runtime/client.rs` — tokio is unavailable offline) and submit
+//! [`ServeRequest`]s: `Sweep`, `Insert`, `Step`, `Finish`, `Metrics`.
+//!
+//! # The serving loop
+//!
+//! The server is a single-owner actor. Its loop drains everything queued
+//! since the previous turn and services the batch as one **turn** with a
+//! fixed two-phase order:
+//!
+//! 1. **reads, coalesced** — all `Sweep` requests for one session are
+//!    merged into a single candidate union (ascending, deduped) and served
+//!    by **one** pooled [`BatchExecutor`] round through the session's
+//!    generation cache; each requester gets its own candidates' gains
+//!    sliced out of the round. `Metrics` reads are answered from the same
+//!    pre-write state.
+//! 2. **writes, in arrival order** — `Insert`, `Step`, and `Finish`
+//!    requests are applied in the deterministic total order of arrival.
+//!
+//! # The generation contract, served
+//!
+//! Every sweep reply is **generation-stamped**: it carries the generation
+//! its gains were computed at, so a reply raced by a concurrent `insert`
+//! is impossible to observe stale — the stamp tells the client exactly
+//! which solution set the gains describe. Because reads precede writes
+//! inside a turn, and a client blocks on each reply before submitting its
+//! next request, a client always observes its own inserts ("read your
+//! writes"): its later sweeps are served at a generation ≥ the one its
+//! insert reply reported. Stale-generation *cache* hits remain impossible
+//! by the session contract ([`SelectionSession::insert`] bumps the
+//! generation); `tests/serve_interleave.rs` replays hundreds of seeded
+//! client interleavings against the deterministic core and checks every
+//! reply bitwise.
+//!
+//! # Driver-owned lanes
+//!
+//! A lane opened with a driver belongs to that driver until it is
+//! finished: clients may `Step`, `Finish` (only once the driver has
+//! stepped to `Done`), and read `Metrics`, but raw `Sweep`/`Insert`
+//! traffic is rejected — client cache warming or set growth would
+//! silently break the documented byte-identical-to-solo determinism of
+//! the driven run. Once finished, the lane's final state is frozen:
+//! `Sweep` becomes a legal read-only observation, `Insert` stays
+//! rejected.
+//!
+//! # Backpressure
+//!
+//! Clients talk to the loop over a **bounded** queue
+//! ([`ServeConfig::queue_bound`]): when the server lags, `submit` blocks
+//! the client instead of growing an unbounded backlog. Replies travel
+//! over per-request unbounded channels, so the server itself never
+//! blocks on a slow client.
+//!
+//! # Determinism
+//!
+//! Given the order requests enter the queue and the turn boundaries, the
+//! serving outcome is a pure function: the same schedule replays to the
+//! same replies, bit for bit. The threaded loop ([`SessionServer::run`])
+//! only decides *which* schedule happens; the deterministic core
+//! ([`SessionServer::submit`] + [`SessionServer::turn`]) is what the
+//! concurrency harness drives directly.
+
+use crate::algorithms::SelectionResult;
+use crate::coordinator::session::{
+    SelectionSession, SessionDriver, SessionSnapshot, StepOutcome,
+};
+use crate::objectives::Objective;
+use crate::oracle::BatchExecutor;
+use crate::rng::Pcg64;
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
+
+/// Index of one session inside a [`SessionServer`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SessionId(pub usize);
+
+/// A client request against one served session.
+#[derive(Debug, Clone)]
+pub enum ServeRequest {
+    /// Marginal gains for these candidates at the session's current
+    /// generation (coalesced with concurrent sweeps of the same session).
+    Sweep { candidates: Vec<usize> },
+    /// Grow the session's solution set: `S ← S ∪ {item}`.
+    Insert { item: usize },
+    /// Advance the session's attached driver by one adaptive round.
+    Step,
+    /// Finalize the attached driver into a [`SelectionResult`]. Rejected
+    /// until the driver has stepped to `Done` (some drivers cannot
+    /// finalize mid-run); idempotent afterwards — repeated finishes
+    /// return the same result.
+    Finish,
+    /// Point-in-time [`SessionSnapshot`] of the session.
+    Metrics,
+}
+
+/// Reply to one [`ServeRequest`].
+#[derive(Debug, Clone)]
+pub enum ServeReply {
+    /// Gains in the request's candidate order, stamped with the generation
+    /// they were computed at; `round_fresh` is the number of oracle
+    /// queries the whole coalesced round issued (0 = served from cache).
+    Sweep { gains: Vec<f64>, generation: u64, round_fresh: usize },
+    /// Whether the set grew, and the generation after the insert.
+    Insert { grew: bool, generation: u64 },
+    /// Whether the driver has terminated, and the generation after the
+    /// step.
+    Step { done: bool, generation: u64 },
+    Finish { result: SelectionResult },
+    Metrics { snapshot: SessionSnapshot },
+}
+
+/// Client-visible serving failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The server loop is gone (all requests fail cleanly, none hang).
+    Disconnected,
+    /// The request was invalid for its target session (unknown id, no
+    /// driver to step/finish, out-of-range element index, ...). Rejection
+    /// is per-request: the session and every other client keep serving.
+    Rejected(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Disconnected => write!(f, "session server disconnected"),
+            ServeError::Rejected(why) => write!(f, "request rejected: {why}"),
+        }
+    }
+}
+
+/// One queued request plus its reply slot.
+pub struct Envelope {
+    session: SessionId,
+    req: ServeRequest,
+    reply: Sender<Result<ServeReply, ServeError>>,
+}
+
+impl Envelope {
+    /// Build a request envelope and the receiver its reply will arrive on.
+    pub fn new(
+        session: SessionId,
+        req: ServeRequest,
+    ) -> (Envelope, Receiver<Result<ServeReply, ServeError>>) {
+        let (reply, rx) = channel();
+        (Envelope { session, req, reply }, rx)
+    }
+}
+
+/// Server-side traffic counters (single-writer: the serving loop).
+#[derive(Debug, Default, Clone)]
+pub struct ServeMetrics {
+    /// requests accepted into the queue
+    pub requests: usize,
+    /// individual `Sweep` requests received
+    pub sweep_requests: usize,
+    /// pooled sweep rounds actually issued (one per session with sweep
+    /// traffic per turn) — coalescing makes this ≤ `sweep_requests`
+    pub coalesced_rounds: usize,
+    /// total union candidates covered by those rounds
+    pub coalesced_candidates: usize,
+    /// `Insert` requests applied
+    pub inserts: usize,
+    /// `Step` requests applied
+    pub steps: usize,
+    /// `Finish` requests answered
+    pub finishes: usize,
+    /// `Metrics` requests answered
+    pub metrics_reads: usize,
+    /// requests answered with [`ServeError::Rejected`]
+    pub rejected: usize,
+    /// serving turns (batches drained)
+    pub turns: usize,
+}
+
+/// End-of-serve report: traffic counters plus one snapshot per session.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub metrics: ServeMetrics,
+    pub sessions: Vec<SessionSnapshot>,
+}
+
+/// Bounded-queue serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Depth of the client→server request queue. Submissions block once
+    /// this many requests are in flight (backpressure), so a burst of
+    /// clients cannot grow an unbounded backlog.
+    pub queue_bound: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { queue_bound: 256 }
+    }
+}
+
+struct Lane<'o> {
+    session: SelectionSession<'o>,
+    driver: Option<Box<dyn SessionDriver>>,
+    rng: Pcg64,
+    /// the driver reported [`StepOutcome::Done`]; gates `Finish` (some
+    /// drivers cannot finalize mid-run)
+    done: bool,
+    /// set by the first `Finish`; later finishes replay it
+    result: Option<SelectionResult>,
+}
+
+/// The serving actor: owns every lane (session + optional driver + rng)
+/// and services queued requests in deterministic turns. See the module
+/// docs for the two-phase turn order and the generation contract.
+#[derive(Default)]
+pub struct SessionServer<'o> {
+    lanes: Vec<Lane<'o>>,
+    pending: Vec<Envelope>,
+    pub metrics: ServeMetrics,
+}
+
+impl<'o> SessionServer<'o> {
+    pub fn new() -> Self {
+        SessionServer { lanes: Vec::new(), pending: Vec::new(), metrics: ServeMetrics::default() }
+    }
+
+    /// Open an ad-hoc session (raw sweep/insert traffic, no driver).
+    pub fn open(&mut self, obj: &'o dyn Objective, exec: BatchExecutor) -> SessionId {
+        self.open_lane(obj, exec, None, 0)
+    }
+
+    /// Open a session with an attached stepwise driver; `Step` requests
+    /// advance it (rng seeded from `seed`, exactly as a solo `drive()`
+    /// with `Pcg64::seed_from(seed)` would be).
+    pub fn open_driven(
+        &mut self,
+        obj: &'o dyn Objective,
+        exec: BatchExecutor,
+        driver: Box<dyn SessionDriver>,
+        seed: u64,
+    ) -> SessionId {
+        self.open_lane(obj, exec, Some(driver), seed)
+    }
+
+    fn open_lane(
+        &mut self,
+        obj: &'o dyn Objective,
+        exec: BatchExecutor,
+        driver: Option<Box<dyn SessionDriver>>,
+        seed: u64,
+    ) -> SessionId {
+        self.lanes.push(Lane {
+            session: SelectionSession::new(obj, exec),
+            driver,
+            rng: Pcg64::seed_from(seed),
+            done: false,
+            result: None,
+        });
+        SessionId(self.lanes.len() - 1)
+    }
+
+    /// Number of open sessions.
+    pub fn sessions(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Read access to one served session (assertions, snapshots).
+    pub fn session(&self, id: SessionId) -> Option<&SelectionSession<'o>> {
+        self.lanes.get(id.0).map(|l| &l.session)
+    }
+
+    /// Requests queued for the next turn.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Queue a request, returning the receiver its reply arrives on after
+    /// the next [`SessionServer::turn`]. This is the deterministic-core
+    /// entry the concurrency harness drives directly.
+    pub fn submit(
+        &mut self,
+        session: SessionId,
+        req: ServeRequest,
+    ) -> Receiver<Result<ServeReply, ServeError>> {
+        let (env, rx) = Envelope::new(session, req);
+        self.enqueue(env);
+        rx
+    }
+
+    /// Queue an already-built envelope (the transport loop's entry).
+    pub fn enqueue(&mut self, env: Envelope) {
+        self.metrics.requests += 1;
+        self.pending.push(env);
+    }
+
+    /// Service every pending request as one turn: coalesced reads first,
+    /// then writes in arrival order. No-op when nothing is pending.
+    pub fn turn(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        self.metrics.turns += 1;
+        let batch = std::mem::take(&mut self.pending);
+
+        // partition: reads grouped per lane (coalescing unit), writes in
+        // arrival order; unknown sessions rejected immediately
+        let mut reads: Vec<Vec<Envelope>> = (0..self.lanes.len()).map(|_| Vec::new()).collect();
+        let mut writes: Vec<Envelope> = Vec::new();
+        for env in batch {
+            if env.session.0 >= self.lanes.len() {
+                self.metrics.rejected += 1;
+                let _ = env
+                    .reply
+                    .send(Err(ServeError::Rejected(format!("unknown session {:?}", env.session))));
+                continue;
+            }
+            match env.req {
+                ServeRequest::Sweep { .. } | ServeRequest::Metrics => reads[env.session.0].push(env),
+                _ => writes.push(env),
+            }
+        }
+
+        // phase A — reads. All of a lane's sweep requests are served by ONE
+        // pooled round over the union of their candidates, every reply
+        // stamped with the turn-entry generation.
+        for (lane_idx, lane_reads) in reads.into_iter().enumerate() {
+            if lane_reads.is_empty() {
+                continue;
+            }
+            // validate first: an out-of-range candidate is a rejected
+            // request, never a panic inside the objective state that would
+            // tear down every other client's session; empty sweeps are
+            // answered directly so no-op requests cannot pollute the
+            // round/coalescing accounting; sweeps on a still-running
+            // driven lane are rejected — client cache traffic would
+            // silently perturb the driver's byte-identical-to-solo run
+            let n = self.lanes[lane_idx].session.objective().n();
+            let generation = self.lanes[lane_idx].session.generation().0;
+            let driver_owned = self.lanes[lane_idx].driver.is_some();
+            let mut valid: Vec<Envelope> = Vec::with_capacity(lane_reads.len());
+            for env in lane_reads {
+                if let ServeRequest::Sweep { candidates } = &env.req {
+                    if driver_owned {
+                        self.metrics.rejected += 1;
+                        let _ = env.reply.send(Err(ServeError::Rejected(
+                            "session is driver-owned until finished; sweep it after Finish"
+                                .into(),
+                        )));
+                        continue;
+                    }
+                    if candidates.is_empty() {
+                        let _ = env.reply.send(Ok(ServeReply::Sweep {
+                            gains: Vec::new(),
+                            generation,
+                            round_fresh: 0,
+                        }));
+                        continue;
+                    }
+                    if let Some(&bad) = candidates.iter().find(|&&a| a >= n) {
+                        self.metrics.rejected += 1;
+                        let _ = env.reply.send(Err(ServeError::Rejected(format!(
+                            "candidate {bad} out of range (ground set 0..{n})"
+                        ))));
+                        continue;
+                    }
+                }
+                valid.push(env);
+            }
+            let lane_reads = valid;
+            let mut union: Vec<usize> = Vec::new();
+            let mut nsweeps = 0usize;
+            for env in &lane_reads {
+                if let ServeRequest::Sweep { candidates } = &env.req {
+                    nsweeps += 1;
+                    union.extend_from_slice(candidates);
+                }
+            }
+            union.sort_unstable();
+            union.dedup();
+            let lane = &mut self.lanes[lane_idx];
+            let round = if nsweeps > 0 {
+                self.metrics.sweep_requests += nsweeps;
+                self.metrics.coalesced_rounds += 1;
+                self.metrics.coalesced_candidates += union.len();
+                Some(lane.session.sweep(&union))
+            } else {
+                None
+            };
+            for env in lane_reads {
+                match env.req {
+                    ServeRequest::Sweep { candidates } => {
+                        let round = round.as_ref().expect("sweep round was issued");
+                        let gains: Vec<f64> = candidates
+                            .iter()
+                            .map(|a| {
+                                let i = union
+                                    .binary_search(a)
+                                    .expect("requested candidate is in the union");
+                                round.gains[i]
+                            })
+                            .collect();
+                        let _ = env.reply.send(Ok(ServeReply::Sweep {
+                            gains,
+                            generation: round.generation.0,
+                            round_fresh: round.fresh,
+                        }));
+                    }
+                    ServeRequest::Metrics => {
+                        self.metrics.metrics_reads += 1;
+                        let _ = env
+                            .reply
+                            .send(Ok(ServeReply::Metrics { snapshot: lane.session.snapshot() }));
+                    }
+                    _ => unreachable!("read bucket holds only sweep/metrics"),
+                }
+            }
+        }
+
+        // phase B — writes, in arrival order.
+        for env in writes {
+            let lane = &mut self.lanes[env.session.0];
+            let reply = match env.req {
+                ServeRequest::Insert { item } => {
+                    let n = lane.session.objective().n();
+                    if lane.driver.is_some() || lane.result.is_some() {
+                        // a driven lane's mutations belong to its driver;
+                        // after finish the result must stay immutable
+                        Err(ServeError::Rejected(
+                            "driven session: the solution set grows only through its driver"
+                                .into(),
+                        ))
+                    } else if item >= n {
+                        Err(ServeError::Rejected(format!(
+                            "element {item} out of range (ground set 0..{n})"
+                        )))
+                    } else {
+                        self.metrics.inserts += 1;
+                        let grew = lane.session.insert(item);
+                        Ok(ServeReply::Insert {
+                            grew,
+                            generation: lane.session.generation().0,
+                        })
+                    }
+                }
+                ServeRequest::Step => {
+                    if lane.result.is_some() {
+                        // already finished: stepping is a no-op, like a
+                        // terminated driver's step
+                        self.metrics.steps += 1;
+                        Ok(ServeReply::Step {
+                            done: true,
+                            generation: lane.session.generation().0,
+                        })
+                    } else if let Some(driver) = lane.driver.as_mut() {
+                        self.metrics.steps += 1;
+                        let done =
+                            driver.step(&mut lane.session, &mut lane.rng) == StepOutcome::Done;
+                        if done {
+                            lane.done = true;
+                        }
+                        Ok(ServeReply::Step { done, generation: lane.session.generation().0 })
+                    } else {
+                        Err(ServeError::Rejected("session has no driver to step".into()))
+                    }
+                }
+                ServeRequest::Finish => {
+                    // finish only a driver that has stepped to Done: some
+                    // drivers (DASH's guess ladder) cannot finalize mid-run,
+                    // and a premature finish must reject, not panic the loop
+                    if lane.result.is_none() && lane.done {
+                        if let Some(driver) = lane.driver.take() {
+                            lane.result = Some(driver.finish(&mut lane.session));
+                        }
+                    }
+                    match &lane.result {
+                        Some(result) => {
+                            self.metrics.finishes += 1;
+                            Ok(ServeReply::Finish { result: result.clone() })
+                        }
+                        None if lane.driver.is_some() => Err(ServeError::Rejected(
+                            "driver has not terminated; step it to Done before finishing"
+                                .into(),
+                        )),
+                        None => {
+                            Err(ServeError::Rejected("session has no driver to finish".into()))
+                        }
+                    }
+                }
+                _ => unreachable!("write bucket holds only insert/step/finish"),
+            };
+            if reply.is_err() {
+                self.metrics.rejected += 1;
+            }
+            let _ = env.reply.send(reply);
+        }
+    }
+
+    /// Traffic counters plus a snapshot of every session.
+    pub fn summary(&self) -> ServeSummary {
+        ServeSummary {
+            metrics: self.metrics.clone(),
+            sessions: self.lanes.iter().map(|l| l.session.snapshot()).collect(),
+        }
+    }
+
+    /// The threaded serving loop: block for the next request, drain
+    /// everything else already queued (the coalescing window), service the
+    /// batch as one turn, repeat until every client handle is dropped.
+    /// Consumes the server and returns the final [`ServeSummary`].
+    pub fn run(mut self, rx: Receiver<Envelope>) -> ServeSummary {
+        while let Ok(env) = rx.recv() {
+            self.enqueue(env);
+            while let Ok(more) = rx.try_recv() {
+                self.enqueue(more);
+            }
+            self.turn();
+        }
+        self.summary()
+    }
+}
+
+/// Gains slice of one coalesced round, as seen by a single client.
+#[derive(Debug, Clone)]
+pub struct SweptGains {
+    /// `f_S(a)` per requested candidate, in request order
+    pub gains: Vec<f64>,
+    /// generation the gains were computed at
+    pub generation: u64,
+    /// oracle queries the whole coalesced round issued
+    pub round_fresh: usize,
+}
+
+/// Cloneable, thread-safe handle to one served session. Every method
+/// blocks until its reply arrives (or the server is gone). Clone freely —
+/// clones share the bounded request queue; [`SessionClient::for_session`]
+/// retargets a handle at another session of the same server.
+#[derive(Clone)]
+pub struct SessionClient {
+    tx: SyncSender<Envelope>,
+    session: SessionId,
+}
+
+impl SessionClient {
+    pub fn new(tx: SyncSender<Envelope>, session: SessionId) -> Self {
+        SessionClient { tx, session }
+    }
+
+    /// The session this handle targets.
+    pub fn id(&self) -> SessionId {
+        self.session
+    }
+
+    /// A handle to another session of the same server.
+    pub fn for_session(&self, session: SessionId) -> SessionClient {
+        SessionClient { tx: self.tx.clone(), session }
+    }
+
+    fn call(&self, req: ServeRequest) -> Result<ServeReply, ServeError> {
+        let (env, rx) = Envelope::new(self.session, req);
+        self.tx.send(env).map_err(|_| ServeError::Disconnected)?;
+        rx.recv().map_err(|_| ServeError::Disconnected)?
+    }
+
+    /// Generation-stamped marginal gains for `candidates` (one coalesced
+    /// pooled round shared with every concurrent sweep of this session).
+    pub fn sweep(&self, candidates: &[usize]) -> Result<SweptGains, ServeError> {
+        match self.call(ServeRequest::Sweep { candidates: candidates.to_vec() })? {
+            ServeReply::Sweep { gains, generation, round_fresh } => {
+                Ok(SweptGains { gains, generation, round_fresh })
+            }
+            other => Err(ServeError::Rejected(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// `S ← S ∪ {item}`; returns `(grew, generation after the insert)`.
+    pub fn insert(&self, item: usize) -> Result<(bool, u64), ServeError> {
+        match self.call(ServeRequest::Insert { item })? {
+            ServeReply::Insert { grew, generation } => Ok((grew, generation)),
+            other => Err(ServeError::Rejected(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Advance the attached driver one adaptive round; `Ok(true)` once it
+    /// has terminated.
+    pub fn step(&self) -> Result<bool, ServeError> {
+        match self.call(ServeRequest::Step)? {
+            ServeReply::Step { done, .. } => Ok(done),
+            other => Err(ServeError::Rejected(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Finalize the attached driver (idempotent).
+    pub fn finish(&self) -> Result<SelectionResult, ServeError> {
+        match self.call(ServeRequest::Finish)? {
+            ServeReply::Finish { result } => Ok(result),
+            other => Err(ServeError::Rejected(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Step the attached driver to termination, then finish — the served
+    /// equivalent of [`drive`](crate::coordinator::session::drive).
+    pub fn drive(&self) -> Result<SelectionResult, ServeError> {
+        while !self.step()? {}
+        self.finish()
+    }
+
+    /// Point-in-time snapshot of the session.
+    pub fn metrics(&self) -> Result<SessionSnapshot, ServeError> {
+        match self.call(ServeRequest::Metrics)? {
+            ServeReply::Metrics { snapshot } => Ok(snapshot),
+            other => Err(ServeError::Rejected(format!("unexpected reply {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{Greedy, GreedyConfig};
+    use crate::coordinator::session::drive;
+    use crate::data::synthetic;
+    use crate::objectives::{LinearRegressionObjective, ObjectiveState};
+
+    fn obj() -> LinearRegressionObjective {
+        let mut rng = Pcg64::seed_from(3);
+        let ds = synthetic::regression_d1(&mut rng, 70, 24, 8, 0.3);
+        LinearRegressionObjective::new(&ds)
+    }
+
+    #[test]
+    fn coalesced_sweeps_share_one_round_and_stamp_generations() {
+        let o = obj();
+        let exec = BatchExecutor::sequential();
+        let mut server = SessionServer::new();
+        let lane = server.open(&o, exec.clone());
+        let rx_a = server.submit(lane, ServeRequest::Sweep { candidates: vec![0, 1, 2] });
+        let rx_b = server.submit(lane, ServeRequest::Sweep { candidates: vec![2, 3] });
+        let rx_ins = server.submit(lane, ServeRequest::Insert { item: 1 });
+        server.turn();
+        // one pooled round served both sweeps, before the insert
+        assert_eq!(server.metrics.sweep_requests, 2);
+        assert_eq!(server.metrics.coalesced_rounds, 1);
+        assert_eq!(server.session(lane).unwrap().metrics.sweeps, 1);
+        let truth = o.empty_state().gains(&[0, 1, 2, 3]);
+        match rx_a.recv().unwrap().unwrap() {
+            ServeReply::Sweep { gains, generation, .. } => {
+                assert_eq!(generation, 0);
+                for (g, t) in gains.iter().zip(&truth[..3]) {
+                    assert_eq!(g.to_bits(), t.to_bits());
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match rx_b.recv().unwrap().unwrap() {
+            ServeReply::Sweep { gains, generation, .. } => {
+                assert_eq!(generation, 0);
+                assert_eq!(gains.len(), 2);
+                assert_eq!(gains[0].to_bits(), truth[2].to_bits());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match rx_ins.recv().unwrap().unwrap() {
+            ServeReply::Insert { grew, generation } => {
+                assert!(grew);
+                assert_eq!(generation, 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // next turn's sweeps are stamped with the new generation
+        let rx = server.submit(lane, ServeRequest::Sweep { candidates: vec![0] });
+        server.turn();
+        match rx.recv().unwrap().unwrap() {
+            ServeReply::Sweep { generation, .. } => assert_eq!(generation, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn driven_lane_matches_solo_drive() {
+        let o = obj();
+        let cfg = GreedyConfig { k: 5, ..Default::default() };
+        let solo = {
+            let mut s = SelectionSession::new(&o, BatchExecutor::sequential());
+            drive(Greedy::driver(cfg.clone(), "sds_ma"), &mut s, &mut Pcg64::seed_from(0))
+        };
+        let mut server = SessionServer::new();
+        let lane = server.open_driven(
+            &o,
+            BatchExecutor::sequential(),
+            Greedy::driver(cfg, "sds_ma"),
+            0,
+        );
+        // a driver-owned lane rejects premature finishes and raw traffic —
+        // per-request, never a loop-killing panic
+        let rx_early_fin = server.submit(lane, ServeRequest::Finish);
+        let rx_ins = server.submit(lane, ServeRequest::Insert { item: 0 });
+        let rx_sweep = server.submit(lane, ServeRequest::Sweep { candidates: vec![0, 1] });
+        server.turn();
+        assert!(matches!(rx_early_fin.recv().unwrap(), Err(ServeError::Rejected(_))));
+        assert!(matches!(rx_ins.recv().unwrap(), Err(ServeError::Rejected(_))));
+        assert!(matches!(rx_sweep.recv().unwrap(), Err(ServeError::Rejected(_))));
+        loop {
+            let rx = server.submit(lane, ServeRequest::Step);
+            server.turn();
+            match rx.recv().unwrap().unwrap() {
+                ServeReply::Step { done, .. } => {
+                    if done {
+                        break;
+                    }
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let rx = server.submit(lane, ServeRequest::Finish);
+        // finish twice: idempotent
+        let rx2 = server.submit(lane, ServeRequest::Finish);
+        server.turn();
+        let r1 = match rx.recv().unwrap().unwrap() {
+            ServeReply::Finish { result } => result,
+            other => panic!("unexpected {other:?}"),
+        };
+        let r2 = match rx2.recv().unwrap().unwrap() {
+            ServeReply::Finish { result } => result,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(solo.set, r1.set);
+        assert_eq!(solo.value.to_bits(), r1.value.to_bits());
+        assert_eq!(solo.rounds, r1.rounds);
+        assert_eq!(solo.queries, r1.queries);
+        assert_eq!(r1.set, r2.set);
+        // a step after finish is a terminated no-op
+        let rx = server.submit(lane, ServeRequest::Step);
+        server.turn();
+        match rx.recv().unwrap().unwrap() {
+            ServeReply::Step { done, .. } => assert!(done),
+            other => panic!("unexpected {other:?}"),
+        }
+        // once finished, the frozen lane serves read-only sweeps but still
+        // rejects inserts
+        let rx_sweep = server.submit(lane, ServeRequest::Sweep { candidates: vec![0, 1] });
+        let rx_ins = server.submit(lane, ServeRequest::Insert { item: 0 });
+        server.turn();
+        match rx_sweep.recv().unwrap().unwrap() {
+            ServeReply::Sweep { gains, generation, .. } => {
+                assert_eq!(gains.len(), 2);
+                assert_eq!(generation, r1.set.len() as u64);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(rx_ins.recv().unwrap(), Err(ServeError::Rejected(_))));
+    }
+
+    #[test]
+    fn invalid_requests_are_rejected_not_fatal() {
+        let o = obj();
+        let mut server = SessionServer::new();
+        let lane = server.open(&o, BatchExecutor::sequential());
+        let rx_bad = server.submit(SessionId(9), ServeRequest::Metrics);
+        let rx_step = server.submit(lane, ServeRequest::Step);
+        let rx_fin = server.submit(lane, ServeRequest::Finish);
+        server.turn();
+        assert!(matches!(rx_bad.recv().unwrap(), Err(ServeError::Rejected(_))));
+        assert!(matches!(rx_step.recv().unwrap(), Err(ServeError::Rejected(_))));
+        assert!(matches!(rx_fin.recv().unwrap(), Err(ServeError::Rejected(_))));
+        assert_eq!(server.metrics.rejected, 3);
+        assert_eq!(server.metrics.steps, 0, "rejected steps are not counted as applied");
+        assert_eq!(server.metrics.finishes, 0, "rejected finishes are not counted");
+        // out-of-range traffic from one client is rejected per-request —
+        // never a panic that would tear down the other clients' sessions —
+        // and in-range requests in the same turn are still served
+        let rx_bad_sweep =
+            server.submit(lane, ServeRequest::Sweep { candidates: vec![0, o.n()] });
+        let rx_ok_sweep = server.submit(lane, ServeRequest::Sweep { candidates: vec![0] });
+        let rx_bad_ins = server.submit(lane, ServeRequest::Insert { item: o.n() + 3 });
+        server.turn();
+        assert!(matches!(rx_bad_sweep.recv().unwrap(), Err(ServeError::Rejected(_))));
+        assert!(matches!(rx_ok_sweep.recv().unwrap(), Ok(ServeReply::Sweep { .. })));
+        assert!(matches!(rx_bad_ins.recv().unwrap(), Err(ServeError::Rejected(_))));
+        assert_eq!(server.metrics.rejected, 5);
+        assert_eq!(server.metrics.sweep_requests, 1, "rejected sweeps are not counted");
+        assert_eq!(server.metrics.inserts, 0, "rejected inserts are not applied");
+        // an empty sweep is answered directly: no pooled round, no
+        // coalescing-accounting skew
+        let rx_empty = server.submit(lane, ServeRequest::Sweep { candidates: Vec::new() });
+        server.turn();
+        match rx_empty.recv().unwrap().unwrap() {
+            ServeReply::Sweep { gains, round_fresh, .. } => {
+                assert!(gains.is_empty());
+                assert_eq!(round_fresh, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(server.metrics.sweep_requests, 1, "empty sweeps are not rounds");
+        assert_eq!(server.metrics.coalesced_rounds, 1);
+        // the lane still serves after rejections; a dropped reply receiver
+        // must not wedge the turn either
+        drop(server.submit(lane, ServeRequest::Sweep { candidates: vec![0, 1] }));
+        server.turn();
+        let rx = server.submit(lane, ServeRequest::Insert { item: 2 });
+        server.turn();
+        assert!(matches!(
+            rx.recv().unwrap().unwrap(),
+            ServeReply::Insert { grew: true, generation: 1 }
+        ));
+    }
+
+    #[test]
+    fn client_handles_are_send_and_clone() {
+        fn assert_send<T: Send>() {}
+        fn assert_clone<T: Clone>() {}
+        assert_send::<SessionClient>();
+        assert_clone::<SessionClient>();
+        assert_send::<Envelope>();
+    }
+}

@@ -107,6 +107,20 @@ impl SessionMetrics {
     }
 }
 
+/// Point-in-time public view of one live session — what the serving
+/// front's `Metrics` requests return ([`coordinator::serve`](crate::coordinator::serve)).
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    /// generation at snapshot time
+    pub generation: Generation,
+    /// selected elements (insertion order)
+    pub set: Vec<usize>,
+    /// `f(S)` at snapshot time
+    pub value: f64,
+    /// per-session counters at snapshot time
+    pub metrics: SessionMetrics,
+}
+
 /// Result of one cached gain sweep.
 #[derive(Debug, Clone)]
 pub struct SessionSweep {
@@ -187,6 +201,16 @@ impl<'o> SelectionSession<'o> {
     /// must go through [`SelectionSession::insert`]).
     pub fn state(&self) -> &dyn ObjectiveState {
         &*self.state
+    }
+
+    /// Point-in-time snapshot (generation, set, value, counters).
+    pub fn snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot {
+            generation: self.generation,
+            set: self.state.set().to_vec(),
+            value: self.state.value(),
+            metrics: self.metrics.clone(),
+        }
     }
 
     /// Ground-set elements not yet selected, in index order.

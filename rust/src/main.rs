@@ -11,7 +11,9 @@ use dash_select::algorithms::{
     AdaptiveSamplingConfig, AdaptiveSequencingConfig, DashConfig, GreedyConfig, LassoConfig,
 };
 use dash_select::cli::Args;
-use dash_select::coordinator::{AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob};
+use dash_select::coordinator::{
+    AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, ServeConfig, ServeSpec,
+};
 use dash_select::experiments::{self, fig1, figs, appendix, DatasetId, Scale};
 use dash_select::objectives::spectra;
 use dash_select::rng::Pcg64;
@@ -32,6 +34,11 @@ USAGE:
 
   dash experiment <E> [--scale quick|paper] [--panel rounds|accuracy|time|all]
       E: fig1 | fig2 | fig3 | fig4 | appendix-a | topk-bound
+
+  dash serve [--sessions N] [--clients C] [--sweeps R] [--dataset <D>] [--k K]
+      smoke-run the concurrent serving front: N driven sessions plus one
+      ad-hoc session, C sweep clients; prints request throughput and
+      sweep-coalescing stats
 
   dash artifacts          show the AOT artifact inventory
   dash spectra --dataset <D> --k <K>   sampled γ / α = γ² estimates
@@ -55,6 +62,7 @@ fn main() {
     let code = match args.subcommand() {
         Some("run") => cmd_run(&args),
         Some("experiment") => cmd_experiment(&args),
+        Some("serve") => cmd_serve(&args),
         Some("artifacts") => cmd_artifacts(),
         Some("spectra") => cmd_spectra(&args),
         Some("help") | None => {
@@ -225,6 +233,109 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown experiment '{other}'")),
     }
     let _ = experiments::results_dir();
+    Ok(())
+}
+
+/// Smoke-run the serving front: driven sessions racing ad-hoc sweep
+/// traffic over one bounded queue, with throughput + coalescing stats.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let (id, scale) = dataset_for(args)?;
+    let seed = args.get_u64("seed", 1)?;
+    let k = args.get_usize("k", 10)?;
+    let sessions = args.get_usize("sessions", 2)?.max(1);
+    let readers = args.get_usize("clients", 2)?.max(1);
+    let sweeps = args.get_usize("sweeps", 32)?.max(1);
+    let ds = Arc::new(id.build(scale, seed));
+    let n = ds.n();
+    let objective = objective_for(id);
+    let leader = Leader::new();
+    // driven lanes alternate greedy / dash; one ad-hoc lane takes the raw
+    // sweep + insert traffic
+    let mut specs: Vec<ServeSpec> = (0..sessions)
+        .map(|i| {
+            let algorithm = if i % 2 == 0 {
+                AlgorithmChoice::Greedy(GreedyConfig { k, ..Default::default() })
+            } else {
+                AlgorithmChoice::Dash(DashConfig { k, ..Default::default() })
+            };
+            ServeSpec::driven(SelectionJob {
+                dataset: Arc::clone(&ds),
+                objective: objective.clone(),
+                backend: Backend::Native,
+                algorithm,
+                k,
+                seed: seed + i as u64,
+            })
+        })
+        .collect();
+    specs.push(ServeSpec::adhoc(SelectionJob {
+        dataset: Arc::clone(&ds),
+        objective: objective.clone(),
+        backend: Backend::Native,
+        algorithm: AlgorithmChoice::TopK,
+        k,
+        seed,
+    }));
+    eprintln!(
+        "serving {sessions} driven + 1 ad-hoc session over {} ({n} candidates); \
+         {readers} sweep clients × {sweeps} sweeps",
+        ds.name
+    );
+    let t0 = std::time::Instant::now();
+    let (results, summary) = leader.serve(&specs, ServeConfig::default(), move |clients| {
+        let adhoc = clients[sessions].clone();
+        std::thread::scope(|s| {
+            let drivers: Vec<_> = clients[..sessions]
+                .iter()
+                .map(|c| {
+                    let c = c.clone();
+                    s.spawn(move || c.drive().expect("driven session failed"))
+                })
+                .collect();
+            for t in 0..readers {
+                let c = adhoc.clone();
+                s.spawn(move || {
+                    let cand: Vec<usize> = (0..n).collect();
+                    for i in 0..sweeps {
+                        let sw = c.sweep(&cand).expect("sweep failed");
+                        assert_eq!(sw.gains.len(), cand.len());
+                        if t == 0 && i % 8 == 7 {
+                            c.insert((i * 31) % n).expect("insert failed");
+                        }
+                    }
+                });
+            }
+            drivers
+                .into_iter()
+                .map(|h| h.join().expect("driver client panicked"))
+                .collect::<Vec<_>>()
+        })
+    })?;
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    for r in &results {
+        println!(
+            "{}: f(S) = {:.5}  |S| = {}  rounds = {}  queries = {}",
+            r.algorithm,
+            r.value,
+            r.set.len(),
+            r.rounds,
+            r.queries
+        );
+    }
+    let m = &summary.metrics;
+    println!(
+        "serve: {} requests in {:.3}s ({:.0} req/s); {} sweep requests → {} coalesced \
+         rounds ({:.2} sweeps/round); {} inserts, {} steps, {} turns",
+        m.requests,
+        dt,
+        m.requests as f64 / dt,
+        m.sweep_requests,
+        m.coalesced_rounds,
+        m.sweep_requests as f64 / m.coalesced_rounds.max(1) as f64,
+        m.inserts,
+        m.steps,
+        m.turns
+    );
     Ok(())
 }
 

@@ -50,11 +50,11 @@ impl RuntimeClient {
     }
 
     fn send(&self, req: Req) -> Result<()> {
-        self.tx
-            .lock()
-            .unwrap()
-            .send(req)
-            .map_err(|_| anyhow!("pjrt service thread terminated"))
+        // a caller that panicked mid-send poisons the mutex; later callers
+        // must see a clean channel error, not a poisoned-lock panic (the
+        // sender itself is still valid — poisoning carries no torn state)
+        let tx = self.tx.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        tx.send(req).map_err(|_| anyhow!("pjrt service thread terminated"))
     }
 
     /// Backend platform name (e.g. "cpu"); also validates the client came
@@ -109,50 +109,60 @@ fn service_loop(rx: std::sync::mpsc::Receiver<Req>) {
             }
             Req::Compile { path, reply } => {
                 ensure_client(&mut client);
-                let r = (|| -> std::result::Result<ModuleId, String> {
-                    let c = client.as_ref().unwrap().as_ref().map_err(|e| e.clone())?;
-                    let proto = xla::HloModuleProto::from_text_file(&path)
-                        .map_err(|e| format!("parsing HLO text {path:?}: {e}"))?;
-                    let comp = xla::XlaComputation::from_proto(&proto);
-                    let exe = c
-                        .compile(&comp)
-                        .map_err(|e| format!("compiling {path:?}: {e}"))?;
-                    modules.push(exe);
-                    Ok(ModuleId(modules.len() - 1))
-                })();
+                // contain panics from the FFI layer to this request: the
+                // service must answer (Err) and keep serving, never die
+                // with in-flight replies dangling
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || -> std::result::Result<ModuleId, String> {
+                        let c = client.as_ref().unwrap().as_ref().map_err(|e| e.clone())?;
+                        let proto = xla::HloModuleProto::from_text_file(&path)
+                            .map_err(|e| format!("parsing HLO text {path:?}: {e}"))?;
+                        let comp = xla::XlaComputation::from_proto(&proto);
+                        let exe = c
+                            .compile(&comp)
+                            .map_err(|e| format!("compiling {path:?}: {e}"))?;
+                        modules.push(exe);
+                        Ok(ModuleId(modules.len() - 1))
+                    },
+                ))
+                .unwrap_or_else(|_| Err(format!("pjrt compile of {path:?} panicked")));
                 let _ = reply.send(r);
             }
             Req::Run { module, inputs, reply } => {
-                let r = (|| -> std::result::Result<Vec<f32>, String> {
-                    let exe = modules
-                        .get(module.0)
-                        .ok_or_else(|| format!("unknown module {module:?}"))?;
-                    let mut literals = Vec::with_capacity(inputs.len());
-                    for (data, dims) in &inputs {
-                        let numel: i64 = dims.iter().product();
-                        if numel as usize != data.len() {
-                            return Err(format!(
-                                "input length {} != shape {:?}",
-                                data.len(),
-                                dims
-                            ));
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || -> std::result::Result<Vec<f32>, String> {
+                        let exe = modules
+                            .get(module.0)
+                            .ok_or_else(|| format!("unknown module {module:?}"))?;
+                        let mut literals = Vec::with_capacity(inputs.len());
+                        for (data, dims) in &inputs {
+                            let numel: i64 = dims.iter().product();
+                            if numel as usize != data.len() {
+                                return Err(format!(
+                                    "input length {} != shape {:?}",
+                                    data.len(),
+                                    dims
+                                ));
+                            }
+                            let lit = xla::Literal::vec1(data);
+                            let lit = if dims.len() == 1 {
+                                lit
+                            } else {
+                                lit.reshape(dims).map_err(|e| e.to_string())?
+                            };
+                            literals.push(lit);
                         }
-                        let lit = xla::Literal::vec1(data);
-                        let lit = if dims.len() == 1 {
-                            lit
-                        } else {
-                            lit.reshape(dims).map_err(|e| e.to_string())?
-                        };
-                        literals.push(lit);
-                    }
-                    let result = exe
-                        .execute::<xla::Literal>(&literals)
-                        .map_err(|e| e.to_string())?;
-                    let out = result[0][0].to_literal_sync().map_err(|e| e.to_string())?;
-                    // aot.py lowers with return_tuple=True → unwrap 1-tuple
-                    let first = out.to_tuple1().map_err(|e| e.to_string())?;
-                    first.to_vec::<f32>().map_err(|e| e.to_string())
-                })();
+                        let result = exe
+                            .execute::<xla::Literal>(&literals)
+                            .map_err(|e| e.to_string())?;
+                        let out =
+                            result[0][0].to_literal_sync().map_err(|e| e.to_string())?;
+                        // aot.py lowers with return_tuple=True → unwrap 1-tuple
+                        let first = out.to_tuple1().map_err(|e| e.to_string())?;
+                        first.to_vec::<f32>().map_err(|e| e.to_string())
+                    },
+                ))
+                .unwrap_or_else(|_| Err("pjrt execute panicked".into()));
                 let _ = reply.send(r);
             }
         }
@@ -165,6 +175,57 @@ mod tests {
 
     fn artifacts_dir() -> std::path::PathBuf {
         crate::runtime::default_artifacts_dir()
+    }
+
+    /// A non-global client over a custom service loop (error-path tests
+    /// inject dead/panicking services without touching the singleton).
+    fn client_with_service(
+        f: impl FnOnce(std::sync::mpsc::Receiver<Req>) + Send + 'static,
+    ) -> (RuntimeClient, std::thread::JoinHandle<()>) {
+        let (tx, rx) = channel::<Req>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-test-service".into())
+            .spawn(move || f(rx))
+            .expect("spawn test service");
+        (RuntimeClient { tx: Arc::new(Mutex::new(tx)) }, handle)
+    }
+
+    #[test]
+    fn panicked_service_surfaces_errors_never_hangs() {
+        // the service receives one request and dies without replying: the
+        // in-flight caller must get an Err (its reply sender is dropped
+        // during unwind), never block forever
+        let (client, handle) = client_with_service(|rx| {
+            let _first = rx.recv();
+            panic!("simulated pjrt worker crash");
+        });
+        assert!(client.platform().is_err(), "dead service must error, not hang");
+        // once the thread is fully gone, every subsequent request fails
+        // cleanly on the closed channel — and keeps failing
+        let _ = handle.join(); // Err(panic payload), expected
+        for _ in 0..3 {
+            let e = client.platform().unwrap_err().to_string();
+            assert!(e.contains("terminated"), "{e}");
+        }
+    }
+
+    #[test]
+    fn service_that_exits_immediately_fails_cleanly() {
+        let (client, handle) = client_with_service(drop);
+        let _ = handle.join();
+        let e = client.platform().unwrap_err().to_string();
+        assert!(e.contains("terminated"), "{e}");
+    }
+
+    #[test]
+    fn real_service_loop_survives_failing_requests() {
+        // the real loop: a bad request is answered with Err and the loop
+        // keeps serving — repeated failures stay clean Errs
+        let (client, _handle) = client_with_service(service_loop);
+        for _ in 0..3 {
+            let e = client.run_f32(ModuleId(9999), vec![]).unwrap_err().to_string();
+            assert!(e.contains("unknown module"), "{e}");
+        }
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Seeded interleaving stress for the stepwise multiplexing layer
+//! (independent of the serving front): random round-robin schedules over
+//! all five session drivers must be byte-identical to their solo runs,
+//! and `SessionMetrics` folding must be lossless.
+//!
+//! `Leader::run_many` steps its lanes in a fixed round-robin; these tests
+//! prove the stronger property that justifies it — *any* step order over
+//! independent sessions reproduces each solo run bit for bit — and cover
+//! the full driver matrix (eager greedy, lazy greedy, DASH, adaptive
+//! sequencing, TOP-k) plus the leader entry point itself.
+
+use dash_select::algorithms::{
+    AdaptiveSamplingConfig, AdaptiveSeqDriver, AdaptiveSequencingConfig, DashConfig, DashDriver,
+    Greedy, GreedyConfig, LassoConfig, SelectionResult, TopKDriver,
+};
+use dash_select::coordinator::session::{
+    drive, SelectionSession, SessionDriver, SessionMetrics, StepOutcome,
+};
+use dash_select::coordinator::{
+    AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob,
+};
+use dash_select::data::{synthetic, Dataset};
+use dash_select::objectives::LinearRegressionObjective;
+use dash_select::oracle::BatchExecutor;
+use dash_select::rng::Pcg64;
+use std::sync::Arc;
+
+fn dataset(seed: u64) -> Dataset {
+    let mut rng = Pcg64::seed_from(seed);
+    synthetic::regression_d1(&mut rng, 90, 32, 8, 0.3)
+}
+
+/// The five stepwise drivers with their rng seeds — identical
+/// construction for the solo references and the interleaved lanes.
+fn drivers(k: usize) -> Vec<(Box<dyn SessionDriver>, u64)> {
+    vec![
+        (Greedy::driver(GreedyConfig { k, ..Default::default() }, "sds_ma"), 10),
+        (Greedy::driver(GreedyConfig { k, lazy: true, ..Default::default() }, "sds_ma"), 11),
+        (Box::new(DashDriver::new(DashConfig { k, ..Default::default() }, "dash")), 12),
+        (
+            Box::new(AdaptiveSeqDriver::new(AdaptiveSequencingConfig {
+                k,
+                ..Default::default()
+            })),
+            13,
+        ),
+        (Box::new(TopKDriver::new(k)), 14),
+    ]
+}
+
+fn metrics_fields(m: &SessionMetrics) -> [usize; 8] {
+    [
+        m.sweeps,
+        m.swept_candidates,
+        m.cache_hits,
+        m.fresh_queries,
+        m.inserts,
+        m.sample_rounds,
+        m.prefix_rounds,
+        m.fork_sweeps,
+    ]
+}
+
+#[test]
+fn random_schedules_are_byte_identical_to_solo() {
+    let datasets: Vec<Dataset> = (0..5).map(|i| dataset(40 + i)).collect();
+    let objectives: Vec<LinearRegressionObjective> =
+        datasets.iter().map(LinearRegressionObjective::new).collect();
+    let k = 5;
+
+    // solo references, one per driver, each on its own engine
+    let solos: Vec<SelectionResult> = drivers(k)
+        .into_iter()
+        .zip(&objectives)
+        .map(|((driver, seed), obj)| {
+            let mut session = SelectionSession::new(obj, BatchExecutor::sequential());
+            drive(driver, &mut session, &mut Pcg64::seed_from(seed))
+        })
+        .collect();
+
+    struct Lane<'o> {
+        session: SelectionSession<'o>,
+        driver: Box<dyn SessionDriver>,
+        rng: Pcg64,
+        done: bool,
+    }
+
+    for schedule in 0..30u64 {
+        let mut sched_rng = Pcg64::seed_from(7_000 + schedule);
+        let shared = BatchExecutor::sequential();
+        let mut lanes: Vec<Lane<'_>> = drivers(k)
+            .into_iter()
+            .zip(&objectives)
+            .map(|((driver, seed), obj)| Lane {
+                session: SelectionSession::new(obj, shared.clone()),
+                driver,
+                rng: Pcg64::seed_from(seed),
+                done: false,
+            })
+            .collect();
+
+        // random schedule: keep stepping a randomly chosen live lane
+        loop {
+            let live: Vec<usize> = lanes
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| !l.done)
+                .map(|(i, _)| i)
+                .collect();
+            if live.is_empty() {
+                break;
+            }
+            let i = live[(sched_rng.next_u64() as usize) % live.len()];
+            let lane = &mut lanes[i];
+            if lane.driver.step(&mut lane.session, &mut lane.rng) == StepOutcome::Done {
+                lane.done = true;
+            }
+        }
+
+        // byte identity + lossless metrics folding
+        let mut folded = SessionMetrics::default();
+        let mut sums = [0usize; 8];
+        for (lane, solo) in lanes.into_iter().zip(&solos) {
+            let Lane { mut session, driver, .. } = lane;
+            let got = driver.finish(&mut session);
+            assert_eq!(got.set, solo.set, "schedule {schedule}: {} set diverged", solo.algorithm);
+            assert_eq!(
+                got.value.to_bits(),
+                solo.value.to_bits(),
+                "schedule {schedule}: {} value not byte-identical",
+                solo.algorithm
+            );
+            assert_eq!(got.rounds, solo.rounds, "schedule {schedule}: {}", solo.algorithm);
+            assert_eq!(got.queries, solo.queries, "schedule {schedule}: {}", solo.algorithm);
+            for (s, f) in sums.iter_mut().zip(metrics_fields(&session.metrics)) {
+                *s += f;
+            }
+            folded.absorb(&session.metrics);
+        }
+        assert_eq!(
+            metrics_fields(&folded),
+            sums,
+            "schedule {schedule}: SessionMetrics folding lost counts"
+        );
+        // sanity: the lanes really did work
+        assert!(folded.inserts >= 2 * k, "schedule {schedule}: {folded:?}");
+        assert!(folded.fresh_queries > 0, "schedule {schedule}");
+    }
+}
+
+#[test]
+fn run_many_covers_every_driver_and_direct_lane() {
+    let ds = Arc::new(dataset(77));
+    let leader = Leader::with_threads(2);
+    let job = |algorithm| SelectionJob {
+        dataset: Arc::clone(&ds),
+        objective: ObjectiveChoice::Lreg,
+        backend: Backend::Native,
+        algorithm,
+        k: 5,
+        seed: 9,
+    };
+    let jobs = vec![
+        job(AlgorithmChoice::Greedy(GreedyConfig { k: 5, ..Default::default() })),
+        job(AlgorithmChoice::Greedy(GreedyConfig { k: 5, lazy: true, ..Default::default() })),
+        job(AlgorithmChoice::Dash(DashConfig { k: 5, ..Default::default() })),
+        job(AlgorithmChoice::AdaptiveSampling(AdaptiveSamplingConfig {
+            k: 5,
+            ..Default::default()
+        })),
+        job(AlgorithmChoice::AdaptiveSequencing(AdaptiveSequencingConfig {
+            k: 5,
+            ..Default::default()
+        })),
+        job(AlgorithmChoice::TopK),
+        job(AlgorithmChoice::Lasso(LassoConfig::default())), // direct lane
+    ];
+    let reports = leader.run_many(&jobs);
+    assert_eq!(reports.len(), jobs.len());
+    for (j, report) in jobs.iter().zip(&reports) {
+        let solo = leader.run(j).unwrap();
+        let report = report.as_ref().unwrap();
+        assert_eq!(solo.result.set, report.result.set, "{}", solo.algorithm);
+        assert_eq!(
+            solo.result.value.to_bits(),
+            report.result.value.to_bits(),
+            "{}",
+            solo.algorithm
+        );
+        assert_eq!(solo.result.queries, report.result.queries, "{}", solo.algorithm);
+        assert_eq!(solo.result.rounds, report.result.rounds, "{}", solo.algorithm);
+    }
+    // the multiplexed lanes folded their session metrics into the registry
+    assert!(leader.metrics.counter("session.inserts") > 0);
+    assert!(leader.metrics.counter("session.fresh_queries") > 0);
+}

@@ -1,0 +1,739 @@
+//! Deterministic-schedule concurrency harness for the serving front
+//! (`coordinator::serve`), plus threaded end-to-end coverage.
+//!
+//! A PCG-seeded virtual scheduler replays hundreds of distinct client
+//! interleavings — sweep / insert / step mixes across N clients × M
+//! sessions — against the *deterministic* `SessionServer` core
+//! (`submit` + `turn()`, no threads, no timing), asserting for every
+//! schedule:
+//!
+//! 1. **byte-identical selections** vs the solo `drive()` path for every
+//!    driven lane, and vs a solo hand-rolled greedy loop for the ad-hoc
+//!    lane;
+//! 2. **reported == observed** query accounting through the server
+//!    (`CountingObjective` on both lane kinds);
+//! 3. **zero stale-generation replies**: every sweep reply's gains are
+//!    bitwise-equal to a fresh state at the generation the reply is
+//!    stamped with;
+//! 4. **coalescing**: concurrent same-generation sweeps collapse into one
+//!    pooled round, measured through `SessionMetrics` and the server's
+//!    own counters.
+//!
+//! The ad-hoc lane runs on a scalar-path objective (default `gains_into`)
+//! on purpose: its per-candidate bits depend only on `(state, candidate)`,
+//! never on which other candidates share a coalesced sweep slice, so the
+//! bitwise stale check is exact under arbitrary request coalescing. (The
+//! blocked lreg/aopt kernels guarantee bit-identity only for a fixed
+//! candidate slice — see the block-determinism contract in
+//! `objectives/mod.rs` — and the driven lanes exercise exactly that case:
+//! their drivers issue the same slices as their solo runs.)
+
+use dash_select::algorithms::{DashConfig, DashDriver, Greedy, GreedyConfig, SelectionResult};
+use dash_select::coordinator::serve::{
+    ServeConfig, ServeError, ServeReply, ServeRequest, SessionId, SessionServer,
+};
+use dash_select::coordinator::session::{drive, SelectionSession};
+use dash_select::coordinator::{
+    AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, ServeSpec,
+};
+use dash_select::data::{synthetic, Dataset};
+use dash_select::objectives::{LinearRegressionObjective, Objective, ObjectiveState};
+use dash_select::oracle::{BatchExecutor, CountingObjective};
+use dash_select::rng::Pcg64;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+fn dataset(seed: u64) -> Dataset {
+    let mut rng = Pcg64::seed_from(seed);
+    synthetic::regression_d1(&mut rng, 80, 24, 8, 0.3)
+}
+
+// ---------------------------------------------------------------------------
+// A deterministic scalar-path objective for exact bitwise stale detection.
+// ---------------------------------------------------------------------------
+
+/// `f_S(a) = w[a] · 2^{-|S|}` for `a ∉ S`, else 0. Every gain goes through
+/// the default scalar `gains_into`, so a candidate's bits are a pure
+/// function of `(|S|, membership, a)` — independent of sweep slicing —
+/// and every insert changes every remaining gain, which makes a
+/// wrongly-stamped reply bitwise-detectable.
+#[derive(Clone)]
+struct ScalarObjective {
+    w: Arc<Vec<f64>>,
+}
+
+impl ScalarObjective {
+    fn new(n: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::seed_from(seed);
+        let w: Vec<f64> = (0..n).map(|i| 1.0 + rng.next_f64() + i as f64 * 1e-9).collect();
+        ScalarObjective { w: Arc::new(w) }
+    }
+}
+
+struct ScalarState {
+    w: Arc<Vec<f64>>,
+    set: Vec<usize>,
+    in_set: Vec<bool>,
+    value: f64,
+}
+
+impl ObjectiveState for ScalarState {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    fn set(&self) -> &[usize] {
+        &self.set
+    }
+
+    fn insert(&mut self, a: usize) {
+        if !self.in_set[a] {
+            self.value += self.gain(a);
+            self.in_set[a] = true;
+            self.set.push(a);
+        }
+    }
+
+    fn gain(&self, a: usize) -> f64 {
+        if self.in_set[a] {
+            0.0
+        } else {
+            self.w[a] * 0.5f64.powi(self.set.len() as i32)
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn ObjectiveState> {
+        Box::new(ScalarState {
+            w: Arc::clone(&self.w),
+            set: self.set.clone(),
+            in_set: self.in_set.clone(),
+            value: self.value,
+        })
+    }
+}
+
+impl Objective for ScalarObjective {
+    fn n(&self) -> usize {
+        self.w.len()
+    }
+
+    fn name(&self) -> &str {
+        "scalar-test"
+    }
+
+    fn empty_state(&self) -> Box<dyn ObjectiveState> {
+        Box::new(ScalarState {
+            w: Arc::clone(&self.w),
+            set: Vec::new(),
+            in_set: vec![false; self.w.len()],
+            value: 0.0,
+        })
+    }
+}
+
+/// First-maximum argmax over the not-yet-selected candidates — shared by
+/// the served writer and its solo reference so both break ties the same
+/// way.
+fn argmax_not_selected(gains: &[f64], candidates: &[usize], selected: &[usize]) -> usize {
+    let mut best: Option<(usize, f64)> = None;
+    for (&a, &g) in candidates.iter().zip(gains) {
+        if selected.contains(&a) {
+            continue;
+        }
+        let better = match best {
+            Some((_, bg)) => g.total_cmp(&bg) == std::cmp::Ordering::Greater,
+            None => true,
+        };
+        if better {
+            best = Some((a, g));
+        }
+    }
+    best.expect("non-empty candidate pool").0
+}
+
+/// Solo reference for the ad-hoc lane: a hand-rolled greedy loop over a
+/// plain `SelectionSession`, recording the full-ground-set gains at every
+/// generation (`truth[g]`).
+fn solo_adhoc(obj: &ScalarObjective, k: usize) -> (Vec<usize>, Vec<Vec<f64>>) {
+    let mut session = SelectionSession::new(obj, BatchExecutor::sequential());
+    let all: Vec<usize> = (0..obj.n()).collect();
+    let mut selected = Vec::new();
+    let mut truth = Vec::new();
+    loop {
+        let sw = session.sweep(&all);
+        truth.push(sw.gains.clone());
+        if selected.len() == k {
+            break;
+        }
+        let best = argmax_not_selected(&sw.gains, &all, &selected);
+        assert!(session.insert(best));
+        selected.push(best);
+    }
+    (selected, truth)
+}
+
+// ---------------------------------------------------------------------------
+// Client scripts: small state machines the virtual scheduler interleaves.
+// ---------------------------------------------------------------------------
+
+type Reply = Result<ServeReply, ServeError>;
+
+trait ClientScript {
+    /// Next request to submit, or `None` when the script is complete.
+    fn next(&mut self) -> Option<(SessionId, ServeRequest)>;
+    fn on_reply(&mut self, reply: Reply);
+    fn done(&self) -> bool;
+    /// Finished driver result (stepper scripts).
+    fn result(&self) -> Option<&SelectionResult> {
+        None
+    }
+    /// Elements this script inserted, in order (writer scripts).
+    fn selected(&self) -> Option<&[usize]> {
+        None
+    }
+    /// Every sweep reply observed: `(stamped generation, candidates, gains)`.
+    fn observations(&self) -> &[(u64, Vec<usize>, Vec<f64>)] {
+        &[]
+    }
+}
+
+/// Steps a driven lane until the driver reports `Done`, then finishes.
+struct Stepper {
+    lane: SessionId,
+    stepping: bool,
+    result: Option<SelectionResult>,
+}
+
+impl Stepper {
+    fn new(lane: SessionId) -> Self {
+        Stepper { lane, stepping: true, result: None }
+    }
+}
+
+impl ClientScript for Stepper {
+    fn next(&mut self) -> Option<(SessionId, ServeRequest)> {
+        if self.result.is_some() {
+            None
+        } else if self.stepping {
+            Some((self.lane, ServeRequest::Step))
+        } else {
+            Some((self.lane, ServeRequest::Finish))
+        }
+    }
+
+    fn on_reply(&mut self, reply: Reply) {
+        match reply.expect("stepper request rejected") {
+            ServeReply::Step { done, .. } => {
+                if done {
+                    self.stepping = false;
+                }
+            }
+            ServeReply::Finish { result } => self.result = Some(result),
+            other => panic!("stepper: unexpected reply {other:?}"),
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.result.is_some()
+    }
+
+    fn result(&self) -> Option<&SelectionResult> {
+        self.result.as_ref()
+    }
+}
+
+/// Hand-rolled greedy over the server: sweep everything, insert the
+/// argmax, repeat to `k`. The only mutator of its lane, so every reply it
+/// sees must reflect exactly its own inserts (read-your-writes).
+struct Writer {
+    lane: SessionId,
+    k: usize,
+    all: Vec<usize>,
+    selected: Vec<usize>,
+    next_insert: Option<usize>,
+    complete: bool,
+    observed: Vec<(u64, Vec<usize>, Vec<f64>)>,
+}
+
+impl Writer {
+    fn new(lane: SessionId, k: usize, n: usize) -> Self {
+        Writer {
+            lane,
+            k,
+            all: (0..n).collect(),
+            selected: Vec::new(),
+            next_insert: None,
+            complete: false,
+            observed: Vec::new(),
+        }
+    }
+}
+
+impl ClientScript for Writer {
+    fn next(&mut self) -> Option<(SessionId, ServeRequest)> {
+        if self.complete {
+            None
+        } else if let Some(item) = self.next_insert {
+            Some((self.lane, ServeRequest::Insert { item }))
+        } else {
+            Some((self.lane, ServeRequest::Sweep { candidates: self.all.clone() }))
+        }
+    }
+
+    fn on_reply(&mut self, reply: Reply) {
+        match reply.expect("writer request rejected") {
+            ServeReply::Sweep { gains, generation, .. } => {
+                assert_eq!(
+                    generation,
+                    self.selected.len() as u64,
+                    "writer must observe exactly its own inserts"
+                );
+                let best = argmax_not_selected(&gains, &self.all, &self.selected);
+                self.observed.push((generation, self.all.clone(), gains));
+                self.next_insert = Some(best);
+            }
+            ServeReply::Insert { grew, generation } => {
+                assert!(grew, "writer re-inserted a member");
+                let item = self.next_insert.take().expect("insert reply without a request");
+                self.selected.push(item);
+                assert_eq!(generation, self.selected.len() as u64);
+                if self.selected.len() == self.k {
+                    self.complete = true;
+                }
+            }
+            other => panic!("writer: unexpected reply {other:?}"),
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.complete
+    }
+
+    fn selected(&self) -> Option<&[usize]> {
+        Some(&self.selected)
+    }
+
+    fn observations(&self) -> &[(u64, Vec<usize>, Vec<f64>)] {
+        &self.observed
+    }
+}
+
+/// Random read-only traffic: subset sweeps and metrics probes against one
+/// lane.
+struct Reader {
+    lane: SessionId,
+    n: usize,
+    ops: usize,
+    rng: Pcg64,
+    in_flight: Option<Vec<usize>>,
+    observed: Vec<(u64, Vec<usize>, Vec<f64>)>,
+}
+
+impl Reader {
+    fn new(lane: SessionId, n: usize, ops: usize, rng: Pcg64) -> Self {
+        Reader { lane, n, ops, rng, in_flight: None, observed: Vec::new() }
+    }
+}
+
+impl ClientScript for Reader {
+    fn next(&mut self) -> Option<(SessionId, ServeRequest)> {
+        if self.ops == 0 {
+            return None;
+        }
+        self.ops -= 1;
+        if self.rng.next_u64() % 5 == 0 {
+            self.in_flight = None;
+            return Some((self.lane, ServeRequest::Metrics));
+        }
+        let len = self.rng.gen_range_usize(1, self.n.min(8));
+        let mut cand: Vec<usize> =
+            (0..len).map(|_| self.rng.gen_range_usize(0, self.n - 1)).collect();
+        cand.sort_unstable();
+        cand.dedup();
+        self.in_flight = Some(cand.clone());
+        Some((self.lane, ServeRequest::Sweep { candidates: cand }))
+    }
+
+    fn on_reply(&mut self, reply: Reply) {
+        match reply.expect("reader request rejected") {
+            ServeReply::Sweep { gains, generation, .. } => {
+                let cand = self.in_flight.take().expect("sweep reply without a request");
+                assert_eq!(gains.len(), cand.len());
+                self.observed.push((generation, cand, gains));
+            }
+            ServeReply::Metrics { snapshot } => {
+                // only the writer mutates this lane, so generation == |S|
+                assert_eq!(snapshot.generation.0, snapshot.set.len() as u64);
+            }
+            other => panic!("reader: unexpected reply {other:?}"),
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.ops == 0
+    }
+
+    fn observations(&self) -> &[(u64, Vec<usize>, Vec<f64>)] {
+        &self.observed
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The virtual scheduler.
+// ---------------------------------------------------------------------------
+
+/// Replay one schedule: every tick either lets a random ready client
+/// submit its next request or runs a server turn (forced when no client
+/// can submit). Runs until every script is complete and every reply is
+/// delivered. Fully deterministic given `rng`.
+fn run_schedule(
+    server: &mut SessionServer<'_>,
+    clients: &mut [Box<dyn ClientScript>],
+    rng: &mut Pcg64,
+) {
+    let mut outstanding: Vec<Option<Receiver<Reply>>> =
+        (0..clients.len()).map(|_| None).collect();
+    loop {
+        let ready: Vec<usize> = (0..clients.len())
+            .filter(|&i| outstanding[i].is_none() && !clients[i].done())
+            .collect();
+        let in_flight = outstanding.iter().any(|o| o.is_some());
+        if ready.is_empty() && server.pending() == 0 && !in_flight {
+            break;
+        }
+        let do_turn = ready.is_empty() || rng.next_u64() % 4 == 0;
+        if do_turn {
+            server.turn();
+            for (i, slot) in outstanding.iter_mut().enumerate() {
+                let got = match slot {
+                    Some(rx) => rx.try_recv().ok(),
+                    None => None,
+                };
+                if let Some(reply) = got {
+                    *slot = None;
+                    clients[i].on_reply(reply);
+                }
+            }
+        } else {
+            let i = ready[(rng.next_u64() as usize) % ready.len()];
+            if let Some((lane, req)) = clients[i].next() {
+                outstanding[i] = Some(server.submit(lane, req));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: ≥ 200 distinct seeded schedules.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seeded_schedules_match_solo_paths() {
+    let ds_greedy = dataset(11);
+    let ds_dash = dataset(12);
+    let n_scalar = 30usize;
+    let k_adhoc = 5usize;
+    let scalar = ScalarObjective::new(n_scalar, 99);
+
+    let greedy_cfg = GreedyConfig { k: 4, ..Default::default() };
+    let dash_cfg = DashConfig { k: 4, ..Default::default() };
+    let (greedy_seed, dash_seed) = (5u64, 7u64);
+
+    // solo references, computed once (sequential engines, like the lanes)
+    let obj_greedy = LinearRegressionObjective::new(&ds_greedy);
+    let obj_dash = LinearRegressionObjective::new(&ds_dash);
+    let solo_greedy = {
+        let mut s = SelectionSession::new(&obj_greedy, BatchExecutor::sequential());
+        drive(
+            Greedy::driver(greedy_cfg.clone(), "sds_ma"),
+            &mut s,
+            &mut Pcg64::seed_from(greedy_seed),
+        )
+    };
+    let solo_dash = {
+        let mut s = SelectionSession::new(&obj_dash, BatchExecutor::sequential());
+        drive(
+            Box::new(DashDriver::new(dash_cfg.clone(), "dash")),
+            &mut s,
+            &mut Pcg64::seed_from(dash_seed),
+        )
+    };
+    let (solo_set, truth) = solo_adhoc(&scalar, k_adhoc);
+    assert_eq!(solo_set.len(), k_adhoc);
+    assert_eq!(truth.len(), k_adhoc + 1, "one truth row per generation");
+
+    let schedules = 240usize;
+    let mut schedules_with_coalescing = 0usize;
+    for schedule in 0..schedules {
+        let mut sched_rng = Pcg64::seed_from(1_000 + schedule as u64);
+
+        // fresh audited objectives per schedule (sessions start empty)
+        let count_greedy = CountingObjective::new(LinearRegressionObjective::new(&ds_greedy));
+        let count_dash = CountingObjective::new(LinearRegressionObjective::new(&ds_dash));
+        let count_scalar = CountingObjective::new(scalar.clone());
+
+        let mut server = SessionServer::new();
+        let lane_greedy = server.open_driven(
+            &count_greedy,
+            BatchExecutor::sequential(),
+            Greedy::driver(greedy_cfg.clone(), "sds_ma"),
+            greedy_seed,
+        );
+        let lane_dash = server.open_driven(
+            &count_dash,
+            BatchExecutor::sequential(),
+            Box::new(DashDriver::new(dash_cfg.clone(), "dash")),
+            dash_seed,
+        );
+        let lane_scalar = server.open(&count_scalar, BatchExecutor::sequential());
+
+        // 6 clients × 3 sessions: two steppers race on the greedy lane
+        // (redundant steps must be no-ops), one steps dash, one writer
+        // greedifies the ad-hoc lane by hand, two readers race it
+        let mut clients: Vec<Box<dyn ClientScript>> = vec![
+            Box::new(Stepper::new(lane_greedy)),
+            Box::new(Stepper::new(lane_greedy)),
+            Box::new(Stepper::new(lane_dash)),
+            Box::new(Writer::new(lane_scalar, k_adhoc, n_scalar)),
+            Box::new(Reader::new(
+                lane_scalar,
+                n_scalar,
+                6,
+                Pcg64::seed_from(2_000 + schedule as u64),
+            )),
+            Box::new(Reader::new(
+                lane_scalar,
+                n_scalar,
+                6,
+                Pcg64::seed_from(3_000 + schedule as u64),
+            )),
+        ];
+        run_schedule(&mut server, &mut clients, &mut sched_rng);
+
+        // 1. byte-identical selections vs solo drive()
+        for (idx, solo) in [(0usize, &solo_greedy), (1, &solo_greedy), (2, &solo_dash)] {
+            let got = clients[idx].result().expect("stepper finished");
+            assert_eq!(got.set, solo.set, "schedule {schedule}: client {idx} set diverged");
+            assert_eq!(
+                got.value.to_bits(),
+                solo.value.to_bits(),
+                "schedule {schedule}: client {idx} value not byte-identical"
+            );
+            assert_eq!(got.rounds, solo.rounds, "schedule {schedule}: client {idx}");
+            assert_eq!(got.queries, solo.queries, "schedule {schedule}: client {idx}");
+        }
+        let written = clients[3].selected().expect("writer tracks inserts");
+        assert_eq!(written, &solo_set[..], "schedule {schedule}: ad-hoc selection diverged");
+
+        // 2. reported == observed through the server
+        assert_eq!(
+            clients[0].result().unwrap().queries,
+            count_greedy.stats.total_oracle_queries(),
+            "schedule {schedule}: greedy lane audit"
+        );
+        assert_eq!(
+            clients[2].result().unwrap().queries,
+            count_dash.stats.total_oracle_queries(),
+            "schedule {schedule}: dash lane audit"
+        );
+        let scalar_session = server.session(lane_scalar).unwrap();
+        assert_eq!(
+            count_scalar.stats.total_oracle_queries(),
+            scalar_session.metrics.fresh_queries,
+            "schedule {schedule}: ad-hoc lane audit"
+        );
+
+        // 3. zero stale-generation replies: every sweep reply is bitwise
+        // equal to a fresh state at its stamped generation
+        for client in &clients[3..] {
+            for (gen, cand, gains) in client.observations() {
+                let g = *gen as usize;
+                assert!(g < truth.len(), "schedule {schedule}: impossible generation {g}");
+                for (j, &a) in cand.iter().enumerate() {
+                    assert_eq!(
+                        gains[j].to_bits(),
+                        truth[g][a].to_bits(),
+                        "schedule {schedule}: stale gain for candidate {a} at generation {g}"
+                    );
+                }
+            }
+        }
+
+        // 4. coalescing accounting: pooled rounds never exceed requests,
+        // and the ad-hoc session's sweep count IS the server's round count
+        // (only the ad-hoc lane receives client sweeps)
+        let m = &server.metrics;
+        assert!(m.coalesced_rounds <= m.sweep_requests, "schedule {schedule}");
+        assert_eq!(
+            m.coalesced_rounds, scalar_session.metrics.sweeps,
+            "schedule {schedule}: round accounting diverged"
+        );
+        if m.coalesced_rounds < m.sweep_requests {
+            schedules_with_coalescing += 1;
+        }
+    }
+    // with 3 concurrent clients on the ad-hoc lane and 1-in-4 turn ticks,
+    // most schedules must have seen at least one coalesced round
+    assert!(
+        schedules_with_coalescing > schedules / 4,
+        "coalescing almost never engaged: {schedules_with_coalescing}/{schedules}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Coalescing reduces executor rounds — the deterministic micro-case.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_same_generation_sweeps_coalesce_into_one_round() {
+    let scalar = ScalarObjective::new(20, 5);
+    let exec = BatchExecutor::sequential();
+    let mut server = SessionServer::new();
+    let lane = server.open(&scalar, exec.clone());
+
+    // five overlapping sweeps plus one insert, all in one turn
+    let sweep_rxs: Vec<_> = (0..5)
+        .map(|i| server.submit(lane, ServeRequest::Sweep { candidates: vec![i, i + 1, i + 2] }))
+        .collect();
+    let insert_rx = server.submit(lane, ServeRequest::Insert { item: 0 });
+    server.turn();
+
+    // ONE pooled round served all five requests: session metrics, server
+    // counters, and the engine's own sweep counter all agree
+    {
+        let session = server.session(lane).unwrap();
+        assert_eq!(session.metrics.sweeps, 1);
+        assert_eq!(session.metrics.swept_candidates, 7, "union of [0..7) deduped");
+    }
+    assert_eq!(server.metrics.sweep_requests, 5);
+    assert_eq!(server.metrics.coalesced_rounds, 1);
+    assert_eq!(server.metrics.coalesced_candidates, 7);
+    assert_eq!(exec.stats().sweeps.load(Ordering::Relaxed), 1);
+
+    // every reply is stamped at the pre-insert generation 0 with the
+    // per-candidate gains of the empty state
+    let empty = scalar.empty_state();
+    for (i, rx) in sweep_rxs.into_iter().enumerate() {
+        match rx.recv().unwrap().unwrap() {
+            ServeReply::Sweep { gains, generation, .. } => {
+                assert_eq!(generation, 0);
+                for (j, a) in (i..i + 3).enumerate() {
+                    assert_eq!(gains[j].to_bits(), empty.gain(a).to_bits());
+                }
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    // the insert applied after the reads
+    match insert_rx.recv().unwrap().unwrap() {
+        ServeReply::Insert { grew, generation } => {
+            assert!(grew);
+            assert_eq!(generation, 1);
+        }
+        other => panic!("unexpected reply {other:?}"),
+    }
+    // the next turn serves the new generation
+    let rx = server.submit(lane, ServeRequest::Sweep { candidates: vec![3] });
+    server.turn();
+    match rx.recv().unwrap().unwrap() {
+        ServeReply::Sweep { gains, generation, .. } => {
+            assert_eq!(generation, 1);
+            let fresh = scalar.empty_state();
+            let mut with_zero = fresh.clone_box();
+            with_zero.insert(0);
+            assert_eq!(gains[0].to_bits(), with_zero.gain(3).to_bits());
+        }
+        other => panic!("unexpected reply {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded end-to-end: Leader::serve under a tiny queue bound.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn threaded_serve_with_backpressure_matches_solo() {
+    let mut rng = Pcg64::seed_from(4);
+    let ds = Arc::new(synthetic::regression_d1(&mut rng, 80, 30, 8, 0.3));
+    let job = |algorithm| SelectionJob {
+        dataset: Arc::clone(&ds),
+        objective: ObjectiveChoice::Lreg,
+        backend: Backend::Native,
+        algorithm,
+        k: 5,
+        seed: 3,
+    };
+    let leader = Leader::with_threads(2);
+    let specs = vec![
+        ServeSpec::driven(job(AlgorithmChoice::Greedy(GreedyConfig { k: 5, ..Default::default() }))),
+        ServeSpec::driven(job(AlgorithmChoice::Dash(DashConfig { k: 5, ..Default::default() }))),
+        ServeSpec::adhoc(job(AlgorithmChoice::TopK)),
+    ];
+    let n = ds.n();
+    // queue bound 2: submissions block when the server lags (backpressure);
+    // the run must still complete, deadlock-free and correct
+    let cfg = ServeConfig { queue_bound: 2 };
+    let ((served_greedy, served_dash, reader_gens), summary) = leader
+        .serve(&specs, cfg, move |clients| {
+            std::thread::scope(|s| {
+                let g = {
+                    let c = clients[0].clone();
+                    s.spawn(move || c.drive().unwrap())
+                };
+                let d = {
+                    let c = clients[1].clone();
+                    s.spawn(move || c.drive().unwrap())
+                };
+                let readers: Vec<_> = (0..3usize)
+                    .map(|t| {
+                        let c = clients[2].clone();
+                        s.spawn(move || {
+                            let cand: Vec<usize> = (0..n).collect();
+                            let mut gens = Vec::new();
+                            for i in 0..10 {
+                                let sw = c.sweep(&cand).unwrap();
+                                assert_eq!(sw.gains.len(), n);
+                                gens.push(sw.generation);
+                                if t == 0 && i % 3 == 2 {
+                                    c.insert(i).unwrap();
+                                }
+                            }
+                            gens
+                        })
+                    })
+                    .collect();
+                let gens: Vec<Vec<u64>> =
+                    readers.into_iter().map(|h| h.join().unwrap()).collect();
+                (g.join().unwrap(), d.join().unwrap(), gens)
+            })
+        })
+        .unwrap();
+
+    // byte-identity with direct leader runs on the same shared engine
+    let solo_greedy = leader.run(&specs[0].job).unwrap().result;
+    let solo_dash = leader.run(&specs[1].job).unwrap().result;
+    assert_eq!(served_greedy.set, solo_greedy.set);
+    assert_eq!(served_greedy.value.to_bits(), solo_greedy.value.to_bits());
+    assert_eq!(served_greedy.queries, solo_greedy.queries);
+    assert_eq!(served_greedy.rounds, solo_greedy.rounds);
+    assert_eq!(served_dash.set, solo_dash.set);
+    assert_eq!(served_dash.value.to_bits(), solo_dash.value.to_bits());
+    assert_eq!(served_dash.queries, solo_dash.queries);
+
+    // generation stamps are monotone per client: no reply is ever staler
+    // than one already observed
+    for gens in &reader_gens {
+        assert!(gens.windows(2).all(|w| w[0] <= w[1]), "stale replies: {gens:?}");
+    }
+
+    // traffic totals line up exactly
+    assert_eq!(summary.metrics.sweep_requests, 30);
+    assert!(summary.metrics.coalesced_rounds <= 30);
+    assert_eq!(summary.metrics.inserts, 3);
+    let adhoc = &summary.sessions[2];
+    assert_eq!(adhoc.generation.0, 3);
+    assert_eq!(adhoc.set, vec![2, 5, 8]);
+    assert!(leader.metrics.counter("serve.requests") >= 33);
+    assert!(leader.metrics.counter("serve.coalesced_rounds") >= 1);
+}

@@ -17,8 +17,8 @@ use dash_select::coordinator::session::{
     drive, Generation, SelectionSession, SessionDriver, StepOutcome,
 };
 use dash_select::data::{synthetic, Dataset};
-use dash_select::objectives::{LinearRegressionObjective, Objective};
-use dash_select::oracle::{BatchExecutor, CountingObjective};
+use dash_select::objectives::{LinearRegressionObjective, Objective, ObjectiveState};
+use dash_select::oracle::{BatchExecutor, CountingObjective, GainCache};
 use dash_select::rng::Pcg64;
 
 fn dataset(seed: u64) -> Dataset {
@@ -173,6 +173,120 @@ fn session_path_preserves_query_audit() {
             assert!(res.set.len() <= 8);
         }
     }
+}
+
+/// Generation stamping at the boundary: entries written at generation `g`
+/// must miss after `insert()` even when the recomputed gain is
+/// bitwise-equal to the cached one — the stamp, not the value, is the
+/// cache key. A modular objective makes every post-insert regain bitwise
+/// identical by construction.
+#[test]
+fn bitwise_equal_regains_still_miss_after_insert() {
+    struct Modular {
+        w: Vec<f64>,
+    }
+    struct ModularState {
+        w: Vec<f64>,
+        set: Vec<usize>,
+        value: f64,
+    }
+    impl ObjectiveState for ModularState {
+        fn value(&self) -> f64 {
+            self.value
+        }
+        fn set(&self) -> &[usize] {
+            &self.set
+        }
+        fn insert(&mut self, a: usize) {
+            if !self.set.contains(&a) {
+                self.value += self.w[a];
+                self.set.push(a);
+            }
+        }
+        fn gain(&self, a: usize) -> f64 {
+            if self.set.contains(&a) {
+                0.0
+            } else {
+                self.w[a]
+            }
+        }
+        fn clone_box(&self) -> Box<dyn ObjectiveState> {
+            Box::new(ModularState {
+                w: self.w.clone(),
+                set: self.set.clone(),
+                value: self.value,
+            })
+        }
+    }
+    impl Objective for Modular {
+        fn n(&self) -> usize {
+            self.w.len()
+        }
+        fn name(&self) -> &str {
+            "modular"
+        }
+        fn empty_state(&self) -> Box<dyn ObjectiveState> {
+            Box::new(ModularState { w: self.w.clone(), set: Vec::new(), value: 0.0 })
+        }
+    }
+
+    let obj = Modular { w: (0..12).map(|i| 1.0 + i as f64 * 0.25).collect() };
+    let mut session = SelectionSession::new(&obj, BatchExecutor::sequential());
+    let cand: Vec<usize> = (0..obj.n()).collect();
+    let first = session.sweep(&cand);
+    assert_eq!(first.fresh, obj.n());
+    assert!(session.insert(0));
+    let second = session.sweep(&cand);
+    // the values did not change — the generation did, and that alone must
+    // force a full re-query
+    assert_eq!(second.fresh, obj.n(), "bitwise-equal regains must still be cache misses");
+    for a in 1..obj.n() {
+        assert_eq!(first.gains[a].to_bits(), second.gains[a].to_bits());
+    }
+    assert_eq!(second.gains[0], 0.0, "the inserted element's regain is 0");
+    assert_eq!(session.metrics.cache_hits, 0);
+    assert_eq!(session.metrics.fresh_queries, 2 * obj.n());
+}
+
+/// `GainCache` keeps growing past its initial ground set *across*
+/// generations: grown entries obey the same generation stamping as
+/// in-range ones, and regrowth never resurrects stale entries.
+#[test]
+fn gain_cache_grows_across_generations() {
+    let mut cache = GainCache::new(2);
+    cache.put(0, 1.0);
+    cache.put(9, 9.0); // grows to 10 entries at generation 1
+    assert!(cache.is_known(0) && cache.is_known(9));
+    cache.invalidate();
+    // generation 2: the grown range is stale like everything else
+    assert!(!cache.is_known(9) && !cache.is_known(0));
+    assert_eq!(cache.get(9), 0.0);
+    cache.put(17, 17.0); // grows again, at generation 2
+    cache.put(9, 9.5);
+    assert!(cache.is_known(17) && cache.is_known(9));
+    assert_eq!(cache.get(9), 9.5);
+    assert!(!cache.is_known(0), "regrowth must not resurrect stale entries");
+    cache.invalidate();
+    assert!(!cache.is_known(17) && !cache.is_known(9));
+    // stamps still work after another full round trip at generation 3
+    cache.put(17, 18.0);
+    assert!(cache.is_known(17));
+    assert_eq!(cache.get(17), 18.0);
+
+    // end-to-end: a session-style cached sweep over the grown cache keeps
+    // reported fresh counts equal to actual misses across invalidations
+    let ds = dataset(8);
+    let obj = LinearRegressionObjective::new(&ds);
+    let st = obj.empty_state();
+    let exec = BatchExecutor::sequential();
+    let mut small = GainCache::new(3);
+    let cand = vec![0usize, 20, 39];
+    let (_, fresh1) = exec.cached_gains(&mut small, &*st, &cand);
+    assert_eq!(fresh1, 3);
+    small.invalidate();
+    let (vals, fresh2) = exec.cached_gains(&mut small, &*st, &cand);
+    assert_eq!(fresh2, 3, "grown entries must go stale on invalidation");
+    assert_eq!(vals, st.gains(&cand));
 }
 
 /// The prefix-parallel round goes through the pool (the executor records a
