@@ -19,9 +19,7 @@
 //! ```
 
 use dash_select::algorithms::{Dash, DashConfig, Greedy, GreedyConfig};
-use dash_select::coordinator::{
-    AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob,
-};
+use dash_select::coordinator::{Backend, Leader, ObjectiveChoice, PlanSpec, ProblemSpec, SelectError};
 use dash_select::data::synthetic;
 use dash_select::objectives::Objective;
 use dash_select::oracle::XlaLregObjective;
@@ -31,13 +29,13 @@ use dash_select::util::csvio::CsvTable;
 use dash_select::util::Timer;
 use std::sync::Arc;
 
-fn main() -> Result<(), String> {
+fn main() -> Result<(), SelectError> {
     // ---- 1. runtime + artifacts (optional: native-only fallback) ----
     // fall back to native-only ONLY when no artifacts were built at all; a
     // manifest that exists but fails to load is a real regression and errors
     let dir = default_artifacts_dir();
     let manifest = if dir.join("manifest.json").exists() {
-        Some(Manifest::load(&dir).map_err(|e| e.to_string())?)
+        Some(Manifest::load(&dir).map_err(SelectError::Backend)?)
     } else {
         println!(
             "artifacts not built (no manifest in {dir:?}); running the native-only \
@@ -46,10 +44,10 @@ fn main() -> Result<(), String> {
         None
     };
     if let Some(manifest) = &manifest {
-        let client = RuntimeClient::global().map_err(|e| e.to_string())?;
+        let client = RuntimeClient::global().map_err(|e| SelectError::Backend(e.to_string()))?;
         println!(
             "PJRT platform: {}; {} artifacts loaded from {:?}",
-            client.platform().map_err(|e| e.to_string())?,
+            client.platform().map_err(|e| SelectError::Backend(e.to_string()))?,
             manifest.artifacts.len(),
             manifest.dir
         );
@@ -80,7 +78,8 @@ fn main() -> Result<(), String> {
 
     // ---- batched request serving: measure oracle latency/throughput ----
     if let Some(manifest) = &manifest {
-        let xla_obj = XlaLregObjective::new(&data, manifest, k).map_err(|e| e.to_string())?;
+        let xla_obj =
+            XlaLregObjective::new(&data, manifest, k).map_err(|e| SelectError::Backend(e.to_string()))?;
         let st = xla_obj.state_for(&[0, 7, 100, 320]);
         let all: Vec<usize> = (0..data.n()).collect();
         // warmup (compiles nothing new, fills caches)
@@ -111,27 +110,24 @@ fn main() -> Result<(), String> {
     let curve_tag = if manifest.is_some() { "xla" } else { "native" };
     let mut rows: Vec<(String, f64, usize, usize, f64)> = Vec::new();
     let mut dash_history = Vec::new();
+    // v1 builders: the plans are backend-independent; one validated
+    // problem per backend pairs with each of them
+    let dataset = Arc::new(data.clone());
+    let plans = [
+        (PlanSpec::dash().build()?, "dash"),
+        (PlanSpec::parallel_greedy().threads(4).build()?, "parallel_sds_ma"),
+        (PlanSpec::topk().build()?, "top_k"),
+    ];
     for (backend, tag) in backends {
-        for (alg, name) in [
-            (AlgorithmChoice::Dash(DashConfig { k, ..Default::default() }), "dash"),
-            (
-                AlgorithmChoice::ParallelGreedy {
-                    cfg: GreedyConfig { k, ..Default::default() },
-                    threads: 4,
-                },
-                "parallel_sds_ma",
-            ),
-            (AlgorithmChoice::TopK, "top_k"),
-        ] {
-            let job = SelectionJob {
-                dataset: Arc::new(data.clone()),
-                objective: ObjectiveChoice::Lreg,
-                backend,
-                algorithm: alg,
-                k,
-                seed: 5,
-            };
-            let report = leader.run(&job)?;
+        let problem = ProblemSpec::builder(Arc::clone(&dataset))
+            .objective(ObjectiveChoice::Lreg)
+            .backend(backend)
+            .k(k)
+            .seed(5)
+            .build()?;
+        for (plan, name) in &plans {
+            let name = *name;
+            let report = leader.run(&problem.job(plan))?;
             if name == "dash" && tag == curve_tag {
                 dash_history = report.result.history.clone();
             }
@@ -155,14 +151,15 @@ fn main() -> Result<(), String> {
         let diff = (v("dash[xla]") - v("dash[native]")).abs();
         println!("\nbackend cross-check: |R²(xla) − R²(native)| = {diff:.2e}");
         if diff > 0.05 {
-            return Err(format!("backend divergence too large: {diff}"));
+            return Err(SelectError::Backend(format!("backend divergence too large: {diff}")));
         }
     }
     let greedy_r = Greedy::new(GreedyConfig { k, ..Default::default() })
         .run(&dash_select::objectives::LinearRegressionObjective::new(&data));
     let dash_r = match &manifest {
         Some(manifest) => Dash::new(DashConfig { k, ..Default::default() }).run(
-            &XlaLregObjective::new(&data, manifest, k).map_err(|e| e.to_string())?,
+            &XlaLregObjective::new(&data, manifest, k)
+                .map_err(|e| SelectError::Backend(e.to_string()))?,
             &mut rng,
         ),
         None => Dash::new(DashConfig { k, ..Default::default() }).run(
@@ -190,7 +187,7 @@ fn main() -> Result<(), String> {
         ]);
     }
     let out = dash_select::experiments::results_dir().join("e2e_curve.csv");
-    curve.save(&out).map_err(|e| e.to_string())?;
+    curve.save(&out).map_err(|e| SelectError::Backend(e.to_string()))?;
     println!(
         "\nwrote DASH({curve_tag}) value-vs-round curve to {out:?} ({} rounds)",
         curve.rows.len()

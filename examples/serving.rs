@@ -18,10 +18,7 @@
 //! cargo run --release --offline --example serving
 //! ```
 
-use dash_select::algorithms::{DashConfig, GreedyConfig};
-use dash_select::coordinator::{
-    AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, ServeConfig, ServeSpec,
-};
+use dash_select::coordinator::{Leader, PlanSpec, ProblemSpec, ServeConfig, ServeSpec};
 use dash_select::data::synthetic;
 use dash_select::rng::Pcg64;
 use std::sync::Arc;
@@ -38,19 +35,18 @@ fn main() {
     );
 
     let leader = Leader::new();
-    let job = |algorithm| SelectionJob {
-        dataset: Arc::clone(&data),
-        objective: ObjectiveChoice::Lreg,
-        backend: Backend::Native,
-        algorithm,
-        k,
-        seed: 3,
-    };
-    let greedy_job = job(AlgorithmChoice::Greedy(GreedyConfig { k, ..Default::default() }));
+    // the v1 builders: one validated problem (dataset, k, seed; objective
+    // defaults to Lreg for a regression task), one plan per lane
+    let problem = ProblemSpec::builder(Arc::clone(&data))
+        .k(k)
+        .seed(3)
+        .build()
+        .expect("problem spec");
+    let greedy_job = problem.job(&PlanSpec::greedy().build().expect("greedy plan"));
     let specs = vec![
         ServeSpec::driven(greedy_job.clone()),
-        ServeSpec::driven(job(AlgorithmChoice::Dash(DashConfig { k, ..Default::default() }))),
-        ServeSpec::adhoc(job(AlgorithmChoice::TopK)),
+        ServeSpec::driven(problem.job(&PlanSpec::dash().build().expect("dash plan"))),
+        ServeSpec::adhoc(problem.job(&PlanSpec::topk().build().expect("topk plan"))),
     ];
 
     // two stepper clients drive the algorithm sessions while three reader

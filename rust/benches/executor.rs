@@ -14,7 +14,8 @@
 use dash_select::bench::Bench;
 use dash_select::coordinator::session::SelectionSession;
 use dash_select::coordinator::{
-    AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, ServeConfig, ServeSpec,
+    AlgorithmChoice, ApiReply, ApiRequest, Backend, Leader, ObjectiveChoice, SelectionJob,
+    ServeConfig, ServeSpec,
 };
 use dash_select::data::synthetic;
 use dash_select::objectives::{
@@ -276,6 +277,39 @@ fn main() {
         0.0
     };
 
+    // ---- v1 wire codec: per-frame encode/decode overhead ----
+    // the shape a sweep-heavy wire client pays per request: one n=500
+    // sweep request frame out, one 500-gain reply frame back
+    let api_n = 500usize;
+    let api_req = ApiRequest::Sweep { session: 0, candidates: (0..api_n).collect() };
+    let api_req_line = api_req.encode(1);
+    let api_reply = ApiReply::Swept {
+        gains: (0..api_n).map(|i| i as f64 * 0.1253 + 0.5).collect(),
+        generation: 3,
+        fresh: api_n,
+    };
+    let api_reply_line = api_reply.encode(1);
+    let api_encode_request_s =
+        bench.run("api encode sweep request n=500", || api_req.encode(1)).mean_s;
+    let api_decode_request_s = bench
+        .run("api decode sweep request n=500", || {
+            ApiRequest::decode(&api_req_line).expect("bench frame decodes")
+        })
+        .mean_s;
+    let api_encode_reply_s =
+        bench.run("api encode swept reply n=500", || api_reply.encode(1)).mean_s;
+    let api_decode_reply_s = bench
+        .run("api decode swept reply n=500", || {
+            ApiReply::decode(&api_reply_line).expect("bench frame decodes")
+        })
+        .mean_s;
+    let api_round_trip_s = api_encode_request_s
+        + api_decode_request_s
+        + api_encode_reply_s
+        + api_decode_reply_s;
+    let api_frames_per_s =
+        if api_round_trip_s > 0.0 { 1.0 / api_round_trip_s } else { 0.0 };
+
     // ---- report ----
     println!();
     let mut obj_entries = Vec::new();
@@ -345,6 +379,13 @@ fn main() {
          ({rounds_per_sweep:.3} rounds/sweep)",
         sm.requests, sm.sweep_requests, sm.coalesced_rounds
     );
+    println!(
+        "api wire codec (n=500): encode req {api_encode_request_s:.6}s, decode req \
+         {api_decode_request_s:.6}s, encode reply {api_encode_reply_s:.6}s, decode reply \
+         {api_decode_reply_s:.6}s ({api_frames_per_s:.0} round-trips/s; {}+{} bytes/frame)",
+        api_req_line.len(),
+        api_reply_line.len()
+    );
     let doc = Json::obj(vec![
         ("suite", "executor".into()),
         ("threads", threads.into()),
@@ -381,6 +422,20 @@ fn main() {
                 ("elapsed_s", serve_elapsed.into()),
                 ("requests_per_s", serve_rps.into()),
                 ("rounds_per_sweep", rounds_per_sweep.into()),
+            ]),
+        ),
+        (
+            "api",
+            Json::obj(vec![
+                ("candidates", api_n.into()),
+                ("encode_request_s", api_encode_request_s.into()),
+                ("decode_request_s", api_decode_request_s.into()),
+                ("encode_reply_s", api_encode_reply_s.into()),
+                ("decode_reply_s", api_decode_reply_s.into()),
+                ("round_trip_s", api_round_trip_s.into()),
+                ("frames_per_s", api_frames_per_s.into()),
+                ("request_bytes", api_req_line.len().into()),
+                ("reply_bytes", api_reply_line.len().into()),
             ]),
         ),
         ("reports", Json::Arr(reports)),

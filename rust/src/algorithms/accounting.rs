@@ -14,7 +14,7 @@
 use crate::util::timer::Timer;
 
 /// Per-round record for accuracy-vs-rounds curves.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RoundRecord {
     /// 1-based adaptive round index
     pub round: usize,
@@ -28,8 +28,9 @@ pub struct RoundRecord {
     pub set_size: usize,
 }
 
-/// Final output of a selection algorithm.
-#[derive(Debug, Clone)]
+/// Final output of a selection algorithm. `PartialEq` compares every
+/// field (the wire protocol's round-trip tests rely on it).
+#[derive(Debug, Clone, PartialEq)]
 pub struct SelectionResult {
     pub algorithm: String,
     pub set: Vec<usize>,

@@ -17,6 +17,12 @@
 //! every sweep through the session's generation-keyed cache, and `run()`
 //! is just "drive a fresh session to completion" — which is what lets the
 //! coordinator's leader interleave many live selections over one pool.
+//!
+//! The per-algorithm config structs here are the *internal* tuning
+//! representation; the public v1 API constructs them through the
+//! validating [`PlanSpec`](crate::coordinator::api::PlanSpec) builders
+//! (which also resolve the problem-level `k` into each config), so jobs
+//! built through the builders can never carry out-of-range knobs.
 
 mod accounting;
 mod dash;

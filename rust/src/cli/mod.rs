@@ -1,7 +1,10 @@
 //! Minimal CLI substrate (clap is unavailable offline): positional
 //! subcommands plus `--key value` / `--flag` options, with typed accessors
-//! and a generated usage block.
+//! and a generated usage block. Parse and accessor failures are
+//! [`SelectError::InvalidSpec`] — the CLI shares the v1 API's unified
+//! error type end to end.
 
+use crate::coordinator::api::SelectError;
 use std::collections::BTreeMap;
 
 /// Parsed command line.
@@ -15,13 +18,13 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of argument strings (excluding argv[0]).
-    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, SelectError> {
         let mut out = Args::default();
         let mut it = args.into_iter().peekable();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
                 if key.is_empty() {
-                    return Err("empty option name".into());
+                    return Err(SelectError::InvalidSpec("empty option name".into()));
                 }
                 if let Some((k, v)) = key.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
@@ -37,7 +40,7 @@ impl Args {
         Ok(out)
     }
 
-    pub fn from_env() -> Result<Args, String> {
+    pub fn from_env() -> Result<Args, SelectError> {
         Self::parse(std::env::args().skip(1))
     }
 
@@ -53,24 +56,30 @@ impl Args {
         self.get(key).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, SelectError> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+            Some(v) => v.parse().map_err(|_| {
+                SelectError::InvalidSpec(format!("--{key}: expected integer, got '{v}'"))
+            }),
         }
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, SelectError> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| format!("--{key}: expected number, got '{v}'")),
+            Some(v) => v.parse().map_err(|_| {
+                SelectError::InvalidSpec(format!("--{key}: expected number, got '{v}'"))
+            }),
         }
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, SelectError> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+            Some(v) => v.parse().map_err(|_| {
+                SelectError::InvalidSpec(format!("--{key}: expected integer, got '{v}'"))
+            }),
         }
     }
 

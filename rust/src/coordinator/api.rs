@@ -1,0 +1,814 @@
+//! Typed v1 public API: validating spec builders and the unified error
+//! type every public entry point returns.
+//!
+//! Before this module, the public surface grew organically: `Leader::run`
+//! returned `Result<_, String>`, each algorithm exposed its own config
+//! struct with `k` duplicated inside, and a malformed job could panic deep
+//! inside an objective state. The v1 API fixes the contract:
+//!
+//! - **[`ProblemSpec`]** — *what* to optimize: dataset, objective, backend,
+//!   cardinality `k`, seed. Built through [`ProblemSpec::builder`], which
+//!   validates (`k ≥ 1`, `k ≤ n`, objective/backend pairing, A-optimality
+//!   priors) and derives the default objective from the dataset's
+//!   [`Task`](crate::data::Task).
+//! - **[`PlanSpec`]** — *how* to optimize: the algorithm plus its tuning,
+//!   subsuming [`AlgorithmChoice`] and the per-algorithm config structs.
+//!   Built through [`PlanSpec::builder`] (or the per-algorithm shortcuts
+//!   like [`PlanSpec::dash`]); knobs are validated at `build()` and `k` is
+//!   resolved from the problem at job-assembly time, so it can never
+//!   disagree between the problem and the plan.
+//! - **[`SelectError`]** — the one error type. Implements
+//!   [`std::error::Error`]; every `Leader` entry point, the serving front,
+//!   the wire protocol ([`coordinator::wire`](crate::coordinator::wire)),
+//!   and the CLI return it. `From<SelectError> for String` exists so
+//!   legacy `Result<_, String>` callers keep composing with `?`.
+//!
+//! [`SelectionJob::new`] assembles a job from the two specs;
+//! [`SelectionJob::validate`] re-checks hand-assembled jobs, and is called
+//! by `Leader::run`, `run_many`, and `serve`, so malformed jobs return
+//! `Err` — never panic — through every entry point.
+//!
+//! ```no_run
+//! use dash_select::prelude::*;
+//! use std::sync::Arc;
+//!
+//! # fn main() -> Result<(), SelectError> {
+//! let mut rng = Pcg64::seed_from(7);
+//! let data = Arc::new(synthetic::regression_d1(&mut rng, 400, 500, 100, 0.4));
+//! let problem = ProblemSpec::builder(data).k(25).seed(7).build()?;
+//! let plan = PlanSpec::dash().epsilon(0.1).alpha(0.75).build()?;
+//! let leader = Leader::new();
+//! let report = leader.run(&problem.job(&plan))?;
+//! println!("f(S) = {:.4} in {} rounds", report.result.value, report.result.rounds);
+//! # Ok(())
+//! # }
+//! ```
+
+use crate::algorithms::{
+    AdaptiveSamplingConfig, AdaptiveSequencingConfig, DashConfig, GreedyConfig, LassoConfig,
+    OptEstimate,
+};
+use crate::coordinator::leader::{AlgorithmChoice, Backend, ObjectiveChoice, SelectionJob};
+use crate::data::{Dataset, Task};
+use std::fmt;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// SelectError
+// ---------------------------------------------------------------------------
+
+/// The unified error of the v1 selection API. Every public `Leader`, serve,
+/// wire, and CLI entry point returns this; no `Result<_, String>` and no
+/// user-input-reachable panic remain on the public surface.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SelectError {
+    /// A spec, builder input, or job failed validation.
+    InvalidSpec(String),
+    /// A request addressed a session the server does not know.
+    UnknownSession(usize),
+    /// A generation-pinned request (`insert … if_generation g`) found the
+    /// session at a different generation — the client's view was stale.
+    StaleGeneration {
+        /// generation the request was pinned to
+        pinned: u64,
+        /// generation the session is actually at
+        actual: u64,
+    },
+    /// The server refused to take on more work (session budget, queue).
+    Backpressure(String),
+    /// Backend resolution failed (missing artifacts, runtime errors).
+    Backend(String),
+    /// A structurally valid request was rejected for its target session
+    /// (driver-owned lane, out-of-range index, no driver to step, …).
+    /// Rejection is per-request: the session and every other client keep
+    /// serving.
+    Rejected(String),
+    /// The caller's serve client closure panicked. The sessions served
+    /// and shut down cleanly; the crash is the client's, and is kept
+    /// distinct from per-request `Rejected` so retry/alerting logic never
+    /// mistakes it for routine traffic rejection.
+    ClientPanic(String),
+    /// The server loop is gone; all requests fail cleanly, none hang.
+    Disconnected,
+    /// A wire frame could not be decoded (bad JSON, missing field,
+    /// unsupported version, unknown op).
+    Protocol(String),
+}
+
+impl SelectError {
+    /// Shorthand constructor used throughout the builders.
+    pub(crate) fn invalid(msg: impl Into<String>) -> SelectError {
+        SelectError::InvalidSpec(msg.into())
+    }
+
+    /// Stable machine-readable discriminant — the `kind` field of the wire
+    /// encoding ([`coordinator::wire`](crate::coordinator::wire)).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SelectError::InvalidSpec(_) => "invalid_spec",
+            SelectError::UnknownSession(_) => "unknown_session",
+            SelectError::StaleGeneration { .. } => "stale_generation",
+            SelectError::Backpressure(_) => "backpressure",
+            SelectError::Backend(_) => "backend",
+            SelectError::Rejected(_) => "rejected",
+            SelectError::ClientPanic(_) => "client_panic",
+            SelectError::Disconnected => "disconnected",
+            SelectError::Protocol(_) => "protocol",
+        }
+    }
+}
+
+impl fmt::Display for SelectError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SelectError::InvalidSpec(m) => write!(f, "invalid spec: {m}"),
+            SelectError::UnknownSession(s) => write!(f, "unknown session {s}"),
+            SelectError::StaleGeneration { pinned, actual } => write!(
+                f,
+                "stale generation: request pinned to generation {pinned}, session is at {actual}"
+            ),
+            SelectError::Backpressure(m) => write!(f, "backpressure: {m}"),
+            SelectError::Backend(m) => write!(f, "backend error: {m}"),
+            SelectError::Rejected(m) => write!(f, "request rejected: {m}"),
+            SelectError::ClientPanic(m) => write!(f, "serve client closure panicked: {m}"),
+            SelectError::Disconnected => write!(f, "session server disconnected"),
+            SelectError::Protocol(m) => write!(f, "protocol error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SelectError {}
+
+/// Legacy compatibility: `?` in a `Result<_, String>` context keeps
+/// working while callers migrate to the typed error.
+impl From<SelectError> for String {
+    fn from(e: SelectError) -> String {
+        e.to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ProblemSpec
+// ---------------------------------------------------------------------------
+
+/// *What* to optimize: a validated (dataset, objective, backend, k, seed)
+/// tuple. Construct through [`ProblemSpec::builder`].
+#[derive(Clone)]
+pub struct ProblemSpec {
+    pub dataset: Arc<Dataset>,
+    pub objective: ObjectiveChoice,
+    pub backend: Backend,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl ProblemSpec {
+    /// Start building a problem over `dataset`. `k` is required; the
+    /// objective defaults to the natural one for the dataset's task
+    /// (regression → `Lreg`, binary → `Logistic`, multiclass →
+    /// `OvrSoftmax`, design → `Aopt`), backend to native, seed to 1.
+    pub fn builder(dataset: Arc<Dataset>) -> ProblemBuilder {
+        ProblemBuilder { dataset, objective: None, backend: Backend::Native, k: None, seed: 1 }
+    }
+
+    /// Assemble a runnable [`SelectionJob`] from this problem and a plan.
+    pub fn job(&self, plan: &PlanSpec) -> SelectionJob {
+        SelectionJob::new(self, plan)
+    }
+}
+
+/// Validating builder for [`ProblemSpec`].
+pub struct ProblemBuilder {
+    dataset: Arc<Dataset>,
+    objective: Option<ObjectiveChoice>,
+    backend: Backend,
+    k: Option<usize>,
+    seed: u64,
+}
+
+/// The natural objective for a dataset's task.
+pub fn default_objective(ds: &Dataset) -> ObjectiveChoice {
+    match ds.task {
+        Task::Regression => ObjectiveChoice::Lreg,
+        Task::BinaryClassification => ObjectiveChoice::Logistic,
+        Task::MultiClassification { .. } => ObjectiveChoice::OvrSoftmax,
+        Task::Design => ObjectiveChoice::Aopt { beta_sq: 1.0, sigma_sq: 1.0 },
+    }
+}
+
+impl ProblemBuilder {
+    pub fn objective(mut self, objective: ObjectiveChoice) -> Self {
+        self.objective = Some(objective);
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Cardinality constraint (required).
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = Some(k);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn build(self) -> Result<ProblemSpec, SelectError> {
+        let k = self
+            .k
+            .ok_or_else(|| SelectError::invalid("k (cardinality constraint) is required"))?;
+        let objective = self.objective.unwrap_or_else(|| default_objective(&self.dataset));
+        validate_problem(&self.dataset, &objective, self.backend, k)?;
+        Ok(ProblemSpec { dataset: self.dataset, objective, backend: self.backend, k, seed: self.seed })
+    }
+}
+
+/// Problem-side checks shared by [`ProblemBuilder::build`] and
+/// [`SelectionJob::validate`] — one source of truth, so the two layers can
+/// never drift.
+pub fn validate_problem(
+    dataset: &Dataset,
+    objective: &ObjectiveChoice,
+    backend: Backend,
+    k: usize,
+) -> Result<(), SelectError> {
+    let n = dataset.n();
+    if n == 0 {
+        return Err(SelectError::invalid("dataset has no candidate elements"));
+    }
+    if k == 0 {
+        return Err(SelectError::invalid("k must be >= 1"));
+    }
+    if k > n {
+        return Err(SelectError::invalid(format!(
+            "k = {k} exceeds the ground set ({n} candidates)"
+        )));
+    }
+    if let ObjectiveChoice::Aopt { beta_sq, sigma_sq } = objective {
+        if !(beta_sq.is_finite() && *beta_sq > 0.0) {
+            return Err(SelectError::invalid(format!(
+                "aopt beta_sq must be finite and > 0, got {beta_sq}"
+            )));
+        }
+        if !(sigma_sq.is_finite() && *sigma_sq > 0.0) {
+            return Err(SelectError::invalid(format!(
+                "aopt sigma_sq must be finite and > 0, got {sigma_sq}"
+            )));
+        }
+    }
+    if backend == Backend::Xla
+        && matches!(objective, ObjectiveChoice::R2 | ObjectiveChoice::OvrSoftmax)
+    {
+        return Err(SelectError::invalid(format!(
+            "{objective:?} has no XLA backend (only Lreg, Logistic, Aopt)"
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// PlanSpec
+// ---------------------------------------------------------------------------
+
+/// The algorithm families of the v1 API. [`PlanKind::parse`] accepts the
+/// CLI/wire names (`dash`, `greedy`, `lazy-greedy`, `parallel-greedy`,
+/// `topk`, `random`, `lasso`, `adaptive-sampling`, `adaptive-seq`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKind {
+    Dash,
+    Greedy,
+    LazyGreedy,
+    ParallelGreedy,
+    TopK,
+    Random,
+    Lasso,
+    AdaptiveSampling,
+    AdaptiveSequencing,
+}
+
+impl PlanKind {
+    pub fn parse(s: &str) -> Option<PlanKind> {
+        match s {
+            "dash" => Some(PlanKind::Dash),
+            "greedy" => Some(PlanKind::Greedy),
+            "lazy-greedy" => Some(PlanKind::LazyGreedy),
+            "parallel-greedy" => Some(PlanKind::ParallelGreedy),
+            "topk" | "top-k" => Some(PlanKind::TopK),
+            "random" => Some(PlanKind::Random),
+            "lasso" => Some(PlanKind::Lasso),
+            "adaptive-sampling" => Some(PlanKind::AdaptiveSampling),
+            "adaptive-seq" => Some(PlanKind::AdaptiveSequencing),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI/wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanKind::Dash => "dash",
+            PlanKind::Greedy => "greedy",
+            PlanKind::LazyGreedy => "lazy-greedy",
+            PlanKind::ParallelGreedy => "parallel-greedy",
+            PlanKind::TopK => "topk",
+            PlanKind::Random => "random",
+            PlanKind::Lasso => "lasso",
+            PlanKind::AdaptiveSampling => "adaptive-sampling",
+            PlanKind::AdaptiveSequencing => "adaptive-seq",
+        }
+    }
+
+    /// Whether plans of this kind have a stepwise driver to serve
+    /// (`Leader::driver_for`); LASSO and RANDOM only run to completion.
+    pub fn has_driver(&self) -> bool {
+        !matches!(self, PlanKind::Random | PlanKind::Lasso)
+    }
+
+    pub fn all() -> &'static [PlanKind] {
+        &[
+            PlanKind::Dash,
+            PlanKind::Greedy,
+            PlanKind::LazyGreedy,
+            PlanKind::ParallelGreedy,
+            PlanKind::TopK,
+            PlanKind::Random,
+            PlanKind::Lasso,
+            PlanKind::AdaptiveSampling,
+            PlanKind::AdaptiveSequencing,
+        ]
+    }
+}
+
+/// *How* to optimize: a validated algorithm + tuning. The cardinality `k`
+/// is deliberately absent — it belongs to the [`ProblemSpec`] and is
+/// resolved into the per-algorithm config at job assembly, so the two can
+/// never disagree.
+#[derive(Debug, Clone)]
+pub struct PlanSpec {
+    kind: PlanKind,
+    choice: AlgorithmChoice,
+}
+
+impl PlanSpec {
+    /// Builder for an explicit kind. Knobs that do not apply to the chosen
+    /// algorithm are ignored (documented per knob); values out of range
+    /// fail `build()`.
+    pub fn builder(kind: PlanKind) -> PlanBuilder {
+        PlanBuilder {
+            kind,
+            epsilon: None,
+            alpha: None,
+            samples: None,
+            r: None,
+            max_rounds: None,
+            threads: None,
+            trials: None,
+            serial_prefix: None,
+            opt: None,
+            min_gain: None,
+            lasso: None,
+        }
+    }
+
+    /// Builder from a CLI/wire algorithm name.
+    pub fn parse(name: &str) -> Result<PlanBuilder, SelectError> {
+        PlanKind::parse(name)
+            .map(PlanSpec::builder)
+            .ok_or_else(|| SelectError::invalid(format!("unknown algorithm '{name}'")))
+    }
+
+    pub fn dash() -> PlanBuilder {
+        PlanSpec::builder(PlanKind::Dash)
+    }
+    pub fn greedy() -> PlanBuilder {
+        PlanSpec::builder(PlanKind::Greedy)
+    }
+    pub fn lazy_greedy() -> PlanBuilder {
+        PlanSpec::builder(PlanKind::LazyGreedy)
+    }
+    pub fn parallel_greedy() -> PlanBuilder {
+        PlanSpec::builder(PlanKind::ParallelGreedy)
+    }
+    pub fn topk() -> PlanBuilder {
+        PlanSpec::builder(PlanKind::TopK)
+    }
+    pub fn random() -> PlanBuilder {
+        PlanSpec::builder(PlanKind::Random)
+    }
+    pub fn lasso() -> PlanBuilder {
+        PlanSpec::builder(PlanKind::Lasso)
+    }
+    pub fn adaptive_sampling() -> PlanBuilder {
+        PlanSpec::builder(PlanKind::AdaptiveSampling)
+    }
+    pub fn adaptive_seq() -> PlanBuilder {
+        PlanSpec::builder(PlanKind::AdaptiveSequencing)
+    }
+
+    pub fn kind(&self) -> PlanKind {
+        self.kind
+    }
+
+    /// The validated algorithm choice (its internal `k` is a placeholder;
+    /// [`SelectionJob::new`] resolves the problem's `k` into it).
+    pub fn choice(&self) -> &AlgorithmChoice {
+        &self.choice
+    }
+
+    /// The algorithm choice with the problem's `k` resolved in.
+    pub fn algorithm_for(&self, k: usize) -> AlgorithmChoice {
+        self.choice.with_k(k)
+    }
+}
+
+/// Validating builder for [`PlanSpec`]. Every setter is optional; unset
+/// knobs take the per-algorithm defaults.
+#[derive(Debug, Clone)]
+pub struct PlanBuilder {
+    kind: PlanKind,
+    epsilon: Option<f64>,
+    alpha: Option<f64>,
+    samples: Option<usize>,
+    r: Option<usize>,
+    max_rounds: Option<usize>,
+    threads: Option<usize>,
+    trials: Option<usize>,
+    serial_prefix: Option<bool>,
+    opt: Option<OptEstimate>,
+    min_gain: Option<f64>,
+    lasso: Option<LassoConfig>,
+}
+
+impl PlanBuilder {
+    /// Accuracy parameter ε (DASH, adaptive sampling/sequencing).
+    pub fn epsilon(mut self, epsilon: f64) -> Self {
+        self.epsilon = Some(epsilon);
+        self
+    }
+
+    /// Differential-submodularity parameter α (DASH, adaptive sequencing).
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.alpha = Some(alpha);
+        self
+    }
+
+    /// Expectation-estimate sample count m (DASH, adaptive sampling).
+    pub fn samples(mut self, samples: usize) -> Self {
+        self.samples = Some(samples);
+        self
+    }
+
+    /// Outer iterations r; 0 = auto (DASH, adaptive sampling).
+    pub fn r(mut self, r: usize) -> Self {
+        self.r = Some(r);
+        self
+    }
+
+    /// Adaptive-round safety cap (DASH, adaptive sampling/sequencing).
+    pub fn max_rounds(mut self, max_rounds: usize) -> Self {
+        self.max_rounds = Some(max_rounds);
+        self
+    }
+
+    /// Standalone worker threads (parallel greedy only; a leader's shared
+    /// pool supersedes this when the job is served).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Mean-of-trials count (random baseline only).
+    pub fn trials(mut self, trials: usize) -> Self {
+        self.trials = Some(trials);
+        self
+    }
+
+    /// Use the reference serial prefix walk (adaptive sequencing only).
+    pub fn serial_prefix(mut self, serial: bool) -> Self {
+        self.serial_prefix = Some(serial);
+        self
+    }
+
+    /// OPT estimate: known value or the Appendix G guess ladder (DASH,
+    /// adaptive sampling).
+    pub fn opt(mut self, opt: OptEstimate) -> Self {
+        self.opt = Some(opt);
+        self
+    }
+
+    /// Early-stop gain threshold (greedy variants only).
+    pub fn min_gain(mut self, min_gain: f64) -> Self {
+        self.min_gain = Some(min_gain);
+        self
+    }
+
+    /// Full LASSO path configuration (lasso only).
+    pub fn lasso_config(mut self, cfg: LassoConfig) -> Self {
+        self.lasso = Some(cfg);
+        self
+    }
+
+    pub fn build(self) -> Result<PlanSpec, SelectError> {
+        let choice = match self.kind {
+            PlanKind::Dash => {
+                let d = DashConfig::default();
+                AlgorithmChoice::Dash(DashConfig {
+                    epsilon: self.epsilon.unwrap_or(d.epsilon),
+                    alpha: self.alpha.unwrap_or(d.alpha),
+                    samples: self.samples.unwrap_or(d.samples),
+                    r: self.r.unwrap_or(d.r),
+                    max_rounds: self.max_rounds.unwrap_or(d.max_rounds),
+                    opt: self.opt.unwrap_or(d.opt),
+                    ..d
+                })
+            }
+            PlanKind::Greedy | PlanKind::LazyGreedy => {
+                let d = GreedyConfig::default();
+                AlgorithmChoice::Greedy(GreedyConfig {
+                    min_gain: self.min_gain.unwrap_or(d.min_gain),
+                    lazy: self.kind == PlanKind::LazyGreedy,
+                    ..d
+                })
+            }
+            PlanKind::ParallelGreedy => {
+                let d = GreedyConfig::default();
+                AlgorithmChoice::ParallelGreedy {
+                    cfg: GreedyConfig {
+                        min_gain: self.min_gain.unwrap_or(d.min_gain),
+                        lazy: false,
+                        ..d
+                    },
+                    threads: self.threads.unwrap_or(4),
+                }
+            }
+            PlanKind::TopK => AlgorithmChoice::TopK,
+            PlanKind::Random => AlgorithmChoice::Random { trials: self.trials.unwrap_or(5) },
+            PlanKind::Lasso => AlgorithmChoice::Lasso(self.lasso.unwrap_or_default()),
+            PlanKind::AdaptiveSampling => {
+                let d = AdaptiveSamplingConfig::default();
+                AlgorithmChoice::AdaptiveSampling(AdaptiveSamplingConfig {
+                    epsilon: self.epsilon.unwrap_or(d.epsilon),
+                    samples: self.samples.unwrap_or(d.samples),
+                    r: self.r.unwrap_or(d.r),
+                    max_rounds: self.max_rounds.unwrap_or(d.max_rounds),
+                    opt: self.opt.unwrap_or(d.opt),
+                    ..d
+                })
+            }
+            PlanKind::AdaptiveSequencing => {
+                let d = AdaptiveSequencingConfig::default();
+                AlgorithmChoice::AdaptiveSequencing(AdaptiveSequencingConfig {
+                    epsilon: self.epsilon.unwrap_or(d.epsilon),
+                    alpha: self.alpha.unwrap_or(d.alpha),
+                    max_rounds: self.max_rounds.unwrap_or(d.max_rounds),
+                    serial_prefix: self.serial_prefix.unwrap_or(d.serial_prefix),
+                    ..d
+                })
+            }
+        };
+        validate_algorithm(&choice)?;
+        Ok(PlanSpec { kind: self.kind, choice })
+    }
+}
+
+/// Range checks for a fully assembled algorithm choice — the single source
+/// of truth shared by [`PlanBuilder::build`] and [`SelectionJob::validate`].
+pub fn validate_algorithm(alg: &AlgorithmChoice) -> Result<(), SelectError> {
+    fn epsilon_in_unit(epsilon: f64) -> Result<(), SelectError> {
+        if epsilon.is_finite() && epsilon > 0.0 && epsilon < 1.0 {
+            Ok(())
+        } else {
+            Err(SelectError::invalid(format!("epsilon must be in (0, 1), got {epsilon}")))
+        }
+    }
+    fn alpha_in_unit(alpha: f64) -> Result<(), SelectError> {
+        if alpha.is_finite() && alpha > 0.0 && alpha <= 1.0 {
+            Ok(())
+        } else {
+            Err(SelectError::invalid(format!("alpha must be in (0, 1], got {alpha}")))
+        }
+    }
+    fn at_least_one(name: &str, v: usize) -> Result<(), SelectError> {
+        if v >= 1 {
+            Ok(())
+        } else {
+            Err(SelectError::invalid(format!("{name} must be >= 1")))
+        }
+    }
+    fn opt_positive(opt: &OptEstimate) -> Result<(), SelectError> {
+        match opt {
+            OptEstimate::Auto => Ok(()),
+            OptEstimate::Known(v) if v.is_finite() && *v > 0.0 => Ok(()),
+            OptEstimate::Known(v) => {
+                Err(SelectError::invalid(format!("known OPT must be finite and > 0, got {v}")))
+            }
+        }
+    }
+
+    match alg {
+        AlgorithmChoice::Dash(c) => {
+            epsilon_in_unit(c.epsilon)?;
+            alpha_in_unit(c.alpha)?;
+            at_least_one("samples", c.samples)?;
+            at_least_one("max_rounds", c.max_rounds)?;
+            at_least_one("opt_guesses", c.opt_guesses)?;
+            opt_positive(&c.opt)
+        }
+        AlgorithmChoice::Greedy(c) => {
+            if c.min_gain.is_finite() && c.min_gain >= 0.0 {
+                Ok(())
+            } else {
+                Err(SelectError::invalid(format!(
+                    "min_gain must be finite and >= 0, got {}",
+                    c.min_gain
+                )))
+            }
+        }
+        AlgorithmChoice::ParallelGreedy { cfg, threads } => {
+            at_least_one("threads", *threads)?;
+            validate_algorithm(&AlgorithmChoice::Greedy(cfg.clone()))
+        }
+        AlgorithmChoice::TopK => Ok(()),
+        AlgorithmChoice::Random { trials } => at_least_one("trials", *trials),
+        AlgorithmChoice::Lasso(c) => {
+            at_least_one("path_len", c.path_len)?;
+            at_least_one("max_iters", c.max_iters)?;
+            if !(c.lambda_min_ratio.is_finite()
+                && c.lambda_min_ratio > 0.0
+                && c.lambda_min_ratio < 1.0)
+            {
+                return Err(SelectError::invalid(format!(
+                    "lambda_min_ratio must be in (0, 1), got {}",
+                    c.lambda_min_ratio
+                )));
+            }
+            if c.tol.is_finite() && c.tol > 0.0 {
+                Ok(())
+            } else {
+                Err(SelectError::invalid(format!("tol must be finite and > 0, got {}", c.tol)))
+            }
+        }
+        AlgorithmChoice::AdaptiveSampling(c) => {
+            epsilon_in_unit(c.epsilon)?;
+            at_least_one("samples", c.samples)?;
+            at_least_one("max_rounds", c.max_rounds)?;
+            opt_positive(&c.opt)
+        }
+        AlgorithmChoice::AdaptiveSequencing(c) => {
+            epsilon_in_unit(c.epsilon)?;
+            alpha_in_unit(c.alpha)?;
+            at_least_one("max_rounds", c.max_rounds)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SelectionJob assembly + validation
+// ---------------------------------------------------------------------------
+
+impl SelectionJob {
+    /// Assemble a job from the two validated specs — the one construction
+    /// path `Leader::run`, `run_many`, `serve`, the CLI, and the wire
+    /// front all share. The problem's `k` is resolved into the plan's
+    /// per-algorithm config.
+    pub fn new(problem: &ProblemSpec, plan: &PlanSpec) -> SelectionJob {
+        SelectionJob {
+            dataset: Arc::clone(&problem.dataset),
+            objective: problem.objective.clone(),
+            backend: problem.backend,
+            algorithm: plan.algorithm_for(problem.k),
+            k: problem.k,
+            seed: problem.seed,
+        }
+    }
+
+    /// Validate a job (builder-made jobs always pass; hand-assembled
+    /// literals are re-checked here, through exactly the builders' own
+    /// [`validate_problem`] + [`validate_algorithm`] checks). Called by
+    /// every `Leader` entry point, so a malformed job is an `Err`, never
+    /// a panic.
+    pub fn validate(&self) -> Result<(), SelectError> {
+        validate_problem(&self.dataset, &self.objective, self.backend, self.k)?;
+        validate_algorithm(&self.algorithm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::rng::Pcg64;
+
+    fn dataset() -> Arc<Dataset> {
+        let mut rng = Pcg64::seed_from(1);
+        Arc::new(synthetic::regression_d1(&mut rng, 60, 20, 8, 0.3))
+    }
+
+    #[test]
+    fn problem_builder_validates() {
+        let ds = dataset();
+        // k required
+        let e = ProblemSpec::builder(Arc::clone(&ds)).build().unwrap_err();
+        assert!(matches!(e, SelectError::InvalidSpec(_)), "{e}");
+        assert!(e.to_string().contains("k"), "{e}");
+        // k = 0 and k > n rejected
+        assert!(ProblemSpec::builder(Arc::clone(&ds)).k(0).build().is_err());
+        let e = ProblemSpec::builder(Arc::clone(&ds)).k(21).build().unwrap_err();
+        assert!(e.to_string().contains("exceeds the ground set"), "{e}");
+        // defaults: objective from task, native backend, seed 1
+        let p = ProblemSpec::builder(Arc::clone(&ds)).k(5).build().unwrap();
+        assert_eq!(p.objective, ObjectiveChoice::Lreg);
+        assert_eq!(p.backend, Backend::Native);
+        assert_eq!(p.seed, 1);
+        // invalid aopt priors rejected
+        let e = ProblemSpec::builder(Arc::clone(&ds))
+            .objective(ObjectiveChoice::Aopt { beta_sq: 0.0, sigma_sq: 1.0 })
+            .k(5)
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("beta_sq"), "{e}");
+        // r2 over xla rejected at build time
+        let e = ProblemSpec::builder(ds)
+            .objective(ObjectiveChoice::R2)
+            .backend(Backend::Xla)
+            .k(5)
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("no XLA backend"), "{e}");
+    }
+
+    #[test]
+    fn plan_builder_validates_and_resolves_k() {
+        let plan = PlanSpec::dash().epsilon(0.2).alpha(0.5).samples(3).build().unwrap();
+        match plan.algorithm_for(7) {
+            AlgorithmChoice::Dash(c) => {
+                assert_eq!(c.k, 7);
+                assert!((c.epsilon - 0.2).abs() < 1e-12);
+                assert!((c.alpha - 0.5).abs() < 1e-12);
+                assert_eq!(c.samples, 3);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(PlanSpec::dash().epsilon(0.0).build().is_err());
+        assert!(PlanSpec::dash().epsilon(1.0).build().is_err());
+        assert!(PlanSpec::dash().alpha(1.5).build().is_err());
+        assert!(PlanSpec::dash().samples(0).build().is_err());
+        assert!(PlanSpec::random().trials(0).build().is_err());
+        assert!(PlanSpec::parallel_greedy().threads(0).build().is_err());
+        assert!(PlanSpec::adaptive_seq().alpha(0.0).build().is_err());
+        // lazy-greedy is the lazy flag, expressed as a kind
+        match PlanSpec::lazy_greedy().build().unwrap().algorithm_for(3) {
+            AlgorithmChoice::Greedy(c) => assert!(c.lazy),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plan_parse_covers_every_kind() {
+        for kind in PlanKind::all() {
+            let b = PlanSpec::parse(kind.name()).unwrap();
+            let plan = b.build().unwrap();
+            assert_eq!(plan.kind(), *kind);
+        }
+        let e = PlanSpec::parse("simulated-annealing").unwrap_err();
+        assert!(e.to_string().contains("unknown algorithm"), "{e}");
+    }
+
+    #[test]
+    fn job_assembly_and_validation() {
+        let ds = dataset();
+        let problem = ProblemSpec::builder(Arc::clone(&ds)).k(5).seed(9).build().unwrap();
+        let plan = PlanSpec::greedy().build().unwrap();
+        let job = problem.job(&plan);
+        assert_eq!(job.k, 5);
+        assert_eq!(job.seed, 9);
+        job.validate().unwrap();
+        // hand-assembled invalid jobs are caught by validate()
+        let mut bad = job.clone();
+        bad.k = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = job.clone();
+        bad.algorithm = AlgorithmChoice::Random { trials: 0 };
+        assert!(bad.validate().is_err());
+        // validate applies the builders' full problem checks, pairing
+        // included — hand-assembled jobs cannot sidestep them
+        let mut bad = job.clone();
+        bad.objective = ObjectiveChoice::R2;
+        bad.backend = Backend::Xla;
+        assert!(bad.validate().unwrap_err().to_string().contains("no XLA backend"));
+    }
+
+    #[test]
+    fn select_error_is_std_error() {
+        fn assert_error<E: std::error::Error>() {}
+        assert_error::<SelectError>();
+        // String compatibility shim for legacy `?` callers
+        let s: String = SelectError::UnknownSession(3).into();
+        assert_eq!(s, "unknown session 3");
+        assert_eq!(SelectError::Disconnected.kind(), "disconnected");
+    }
+}

@@ -7,6 +7,7 @@ use crate::algorithms::{
     AdaptiveSequencingConfig, Dash, DashConfig, DashDriver, Greedy, GreedyConfig, Lasso,
     LassoConfig, LassoLogistic, ParallelGreedy, RandomSelect, SelectionResult, TopK, TopKDriver,
 };
+use crate::coordinator::api::SelectError;
 use crate::coordinator::serve::{
     Envelope, ServeConfig, ServeSummary, SessionClient, SessionId, SessionServer,
 };
@@ -49,6 +50,24 @@ pub enum Backend {
     Xla,
 }
 
+impl Backend {
+    /// The one name↔backend mapping the CLI and the wire protocol share.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "native" => Some(Backend::Native),
+            "xla" => Some(Backend::Xla),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Xla => "xla",
+        }
+    }
+}
+
 /// Which algorithm to run.
 #[derive(Debug, Clone)]
 pub enum AlgorithmChoice {
@@ -63,6 +82,31 @@ pub enum AlgorithmChoice {
 }
 
 impl AlgorithmChoice {
+    /// The same plan with the cardinality constraint set to `k`. Jobs carry
+    /// `k` at the problem level; this resolves it into the per-algorithm
+    /// config so the two can never disagree.
+    pub fn with_k(&self, k: usize) -> AlgorithmChoice {
+        match self {
+            AlgorithmChoice::Dash(cfg) => AlgorithmChoice::Dash(DashConfig { k, ..cfg.clone() }),
+            AlgorithmChoice::Greedy(cfg) => {
+                AlgorithmChoice::Greedy(GreedyConfig { k, ..cfg.clone() })
+            }
+            AlgorithmChoice::ParallelGreedy { cfg, threads } => AlgorithmChoice::ParallelGreedy {
+                cfg: GreedyConfig { k, ..cfg.clone() },
+                threads: *threads,
+            },
+            AlgorithmChoice::TopK => AlgorithmChoice::TopK,
+            AlgorithmChoice::Random { trials } => AlgorithmChoice::Random { trials: *trials },
+            AlgorithmChoice::Lasso(cfg) => AlgorithmChoice::Lasso(cfg.clone()),
+            AlgorithmChoice::AdaptiveSampling(cfg) => {
+                AlgorithmChoice::AdaptiveSampling(AdaptiveSamplingConfig { k, ..cfg.clone() })
+            }
+            AlgorithmChoice::AdaptiveSequencing(cfg) => {
+                AlgorithmChoice::AdaptiveSequencing(AdaptiveSequencingConfig { k, ..cfg.clone() })
+            }
+        }
+    }
+
     pub fn label(&self) -> &'static str {
         match self {
             AlgorithmChoice::Dash(_) => "dash",
@@ -201,8 +245,11 @@ impl Leader {
         self.pool.as_ref()
     }
 
-    /// Build the objective for a job.
-    fn objective(&self, job: &SelectionJob) -> Result<Box<dyn Objective>, String> {
+    /// Build the objective for a job (also the wire front's resolution
+    /// path). Backend failures — missing artifacts, runtime errors — are
+    /// [`SelectError::Backend`]; impossible pairings are
+    /// [`SelectError::InvalidSpec`].
+    pub fn objective(&self, job: &SelectionJob) -> Result<Box<dyn Objective>, SelectError> {
         let ds = &job.dataset;
         match (&job.objective, job.backend) {
             (ObjectiveChoice::Lreg, Backend::Native) => {
@@ -217,10 +264,9 @@ impl Leader {
                 Ok(Box::new(AOptimalityObjective::new(ds, *beta_sq, *sigma_sq)))
             }
             (choice, Backend::Xla) => {
-                let manifest = self
-                    .manifest
-                    .as_ref()
-                    .ok_or("XLA backend requested but artifacts/ not built")?;
+                let manifest = self.manifest.as_ref().ok_or_else(|| {
+                    SelectError::Backend("XLA backend requested but artifacts/ not built".into())
+                })?;
                 match choice {
                     ObjectiveChoice::Lreg => crate::oracle::XlaLregObjective::new(
                         ds,
@@ -228,18 +274,20 @@ impl Leader {
                         job.k.max(1),
                     )
                     .map(|o| Box::new(o) as Box<dyn Objective>)
-                    .map_err(|e| e.to_string()),
+                    .map_err(|e| SelectError::Backend(e.to_string())),
                     ObjectiveChoice::Logistic => {
                         crate::oracle::XlaLogisticObjective::new(ds, manifest)
                             .map(|o| Box::new(o) as Box<dyn Objective>)
-                            .map_err(|e| e.to_string())
+                            .map_err(|e| SelectError::Backend(e.to_string()))
                     }
                     ObjectiveChoice::Aopt { beta_sq, sigma_sq } => {
                         crate::oracle::XlaAoptObjective::new(ds, manifest, *beta_sq, *sigma_sq)
                             .map(|o| Box::new(o) as Box<dyn Objective>)
-                            .map_err(|e| e.to_string())
+                            .map_err(|e| SelectError::Backend(e.to_string()))
                     }
-                    other => Err(format!("{other:?} has no XLA backend")),
+                    other => Err(SelectError::InvalidSpec(format!(
+                        "{other:?} has no XLA backend"
+                    ))),
                 }
             }
         }
@@ -248,27 +296,25 @@ impl Leader {
     /// Execute a job. Every gain sweep runs on the leader's shared engine —
     /// the job-level `threads` knob of `ParallelGreedy` is superseded by
     /// the shared pool when served here (standalone use still honors it).
-    pub fn run(&self, job: &SelectionJob) -> Result<SelectionReport, String> {
+    /// The job is validated first, so a malformed job (hand-assembled or
+    /// builder-made) returns `Err`, never panics.
+    pub fn run(&self, job: &SelectionJob) -> Result<SelectionReport, SelectError> {
+        job.validate()?;
         let mut rng = Pcg64::seed_from(job.seed);
         let obj = self.objective(job)?;
         let sweeps_before = self.exec.stats().sweeps.load(Ordering::Relaxed);
         let sharded_before = self.exec.stats().sharded_sweeps.load(Ordering::Relaxed);
-        let result = match &job.algorithm {
+        // the job's k supersedes whatever placeholder the plan carried
+        let result = match &job.algorithm.with_k(job.k) {
             AlgorithmChoice::Dash(cfg) => {
-                let mut c = cfg.clone();
-                c.k = job.k;
-                Dash::new(c).with_executor(self.exec.clone()).run(&*obj, &mut rng)
+                Dash::new(cfg.clone()).with_executor(self.exec.clone()).run(&*obj, &mut rng)
             }
             AlgorithmChoice::Greedy(cfg) => {
-                let mut c = cfg.clone();
-                c.k = job.k;
-                Greedy::new(c).with_executor(self.exec.clone()).run(&*obj)
+                Greedy::new(cfg.clone()).with_executor(self.exec.clone()).run(&*obj)
             }
             AlgorithmChoice::ParallelGreedy { cfg, threads } => {
-                let mut c = cfg.clone();
-                c.k = job.k;
                 // the shared engine supersedes the job's own threads knob
-                ParallelGreedy::new(c, *threads)
+                ParallelGreedy::new(cfg.clone(), *threads)
                     .with_executor(self.exec.clone())
                     .run(&*obj)
             }
@@ -287,16 +333,12 @@ impl Leader {
                 _ => Lasso::new(cfg.clone()).run_for_k(&job.dataset.x, &job.dataset.y, job.k),
             },
             AlgorithmChoice::AdaptiveSampling(cfg) => {
-                let mut c = cfg.clone();
-                c.k = job.k;
-                AdaptiveSampling::new(c)
+                AdaptiveSampling::new(cfg.clone())
                     .with_executor(self.exec.clone())
                     .run(&*obj, &mut rng)
             }
             AlgorithmChoice::AdaptiveSequencing(cfg) => {
-                let mut c = cfg.clone();
-                c.k = job.k;
-                AdaptiveSequencing::new(AdaptiveSequencingConfig { k: job.k, ..c })
+                AdaptiveSequencing::new(cfg.clone())
                     .with_executor(self.exec.clone())
                     .run(&*obj, &mut rng)
             }
@@ -342,10 +384,7 @@ impl Leader {
             algorithm: result.algorithm.clone(),
             dataset: job.dataset.name.clone(),
             objective: format!("{:?}", job.objective),
-            backend: match job.backend {
-                Backend::Native => "native",
-                Backend::Xla => "xla",
-            },
+            backend: job.backend.name(),
             k: job.k,
             native_value,
             result,
@@ -356,26 +395,21 @@ impl Leader {
     /// the non-oracle algorithms (LASSO, RANDOM) that have no adaptive
     /// round structure to interleave.
     pub fn driver_for(job: &SelectionJob) -> Option<Box<dyn SessionDriver>> {
-        let k = job.k;
-        match &job.algorithm {
-            AlgorithmChoice::Dash(cfg) => {
-                Some(Box::new(DashDriver::new(DashConfig { k, ..cfg.clone() }, "dash")))
-            }
-            AlgorithmChoice::Greedy(cfg) => {
-                Some(Greedy::driver(GreedyConfig { k, ..cfg.clone() }, "sds_ma"))
-            }
+        // with_k is the one place the job's k overrides the plan's config
+        match job.algorithm.with_k(job.k) {
+            AlgorithmChoice::Dash(cfg) => Some(Box::new(DashDriver::new(cfg, "dash"))),
+            AlgorithmChoice::Greedy(cfg) => Some(Greedy::driver(cfg, "sds_ma")),
+            // the shared engine supersedes the job's own threads knob
             AlgorithmChoice::ParallelGreedy { cfg, .. } => {
-                // the shared engine supersedes the job's own threads knob
-                Some(Greedy::driver(GreedyConfig { k, ..cfg.clone() }, "parallel_sds_ma"))
+                Some(Greedy::driver(cfg, "parallel_sds_ma"))
             }
-            AlgorithmChoice::TopK => Some(Box::new(TopKDriver::new(k))),
+            AlgorithmChoice::TopK => Some(Box::new(TopKDriver::new(job.k))),
             AlgorithmChoice::AdaptiveSampling(cfg) => {
-                let cfg = AdaptiveSamplingConfig { k, ..cfg.clone() };
                 Some(Box::new(DashDriver::new(cfg.to_dash(), "adaptive_sampling")))
             }
-            AlgorithmChoice::AdaptiveSequencing(cfg) => Some(Box::new(AdaptiveSeqDriver::new(
-                AdaptiveSequencingConfig { k, ..cfg.clone() },
-            ))),
+            AlgorithmChoice::AdaptiveSequencing(cfg) => {
+                Some(Box::new(AdaptiveSeqDriver::new(cfg)))
+            }
             AlgorithmChoice::Random { .. } | AlgorithmChoice::Lasso(_) => None,
         }
     }
@@ -387,7 +421,7 @@ impl Leader {
     /// generation, own rng), so each job's result is byte-identical to
     /// serving it alone. Jobs without a stepwise driver (LASSO, RANDOM)
     /// are served run-to-completion after the multiplexed lanes drain.
-    pub fn run_many(&self, jobs: &[SelectionJob]) -> Vec<Result<SelectionReport, String>> {
+    pub fn run_many(&self, jobs: &[SelectionJob]) -> Vec<Result<SelectionReport, SelectError>> {
         let sweeps_before = self.exec.stats().sweeps.load(Ordering::Relaxed);
         let sharded_before = self.exec.stats().sharded_sweeps.load(Ordering::Relaxed);
         // resolve objectives first (the sessions below borrow them) — but
@@ -396,10 +430,13 @@ impl Leader {
         // objective twice
         let drivers: Vec<Option<Box<dyn SessionDriver>>> =
             jobs.iter().map(Self::driver_for).collect();
-        let resolved: Vec<Option<Result<Box<dyn Objective>, String>>> = jobs
+        let validity: Vec<Result<(), SelectError>> =
+            jobs.iter().map(|j| j.validate()).collect();
+        let resolved: Vec<Option<Result<Box<dyn Objective>, SelectError>>> = jobs
             .iter()
             .zip(&drivers)
-            .map(|(j, d)| d.is_some().then(|| self.objective(j)))
+            .zip(&validity)
+            .map(|((j, d), v)| (d.is_some() && v.is_ok()).then(|| self.objective(j)))
             .collect();
 
         enum Lane<'o> {
@@ -411,11 +448,19 @@ impl Leader {
             },
             /// no stepwise driver: served via `Leader::run`
             Direct,
-            Failed(String),
+            Failed(SelectError),
         }
 
         let mut lanes: Vec<Lane<'_>> = Vec::with_capacity(jobs.len());
-        for ((job, driver), obj) in jobs.iter().zip(drivers).zip(&resolved) {
+        for (((job, driver), obj), valid) in
+            jobs.iter().zip(drivers).zip(&resolved).zip(validity)
+        {
+            // a malformed job fails its own lane — never panics, never
+            // takes the other lanes down
+            if let Err(e) = valid {
+                lanes.push(Lane::Failed(e));
+                continue;
+            }
             lanes.push(match (driver, obj) {
                 (None, _) => Lane::Direct,
                 (Some(_), Some(Err(e))) => Lane::Failed(e.clone()),
@@ -425,7 +470,7 @@ impl Leader {
                     rng: Pcg64::seed_from(job.seed),
                     done: false,
                 },
-                (Some(_), None) => unreachable!("driver lanes always resolve"),
+                (Some(_), None) => unreachable!("valid driver lanes always resolve"),
             });
         }
 
@@ -499,21 +544,27 @@ impl Leader {
         specs: &[ServeSpec],
         cfg: ServeConfig,
         f: F,
-    ) -> Result<(R, ServeSummary), String>
+    ) -> Result<(R, ServeSummary), SelectError>
     where
         R: Send,
         F: FnOnce(Vec<SessionClient>) -> R + Send,
     {
-        // resolve objectives first (the server lanes borrow them)
+        // validate + resolve objectives first (the server lanes borrow them)
+        for spec in specs {
+            spec.job.validate()?;
+        }
         let objectives = specs
             .iter()
             .map(|s| self.objective(&s.job))
-            .collect::<Result<Vec<Box<dyn Objective>>, String>>()?;
+            .collect::<Result<Vec<Box<dyn Objective>>, SelectError>>()?;
         let mut server = SessionServer::new();
         for (spec, obj) in specs.iter().zip(&objectives) {
             if spec.driven {
                 let driver = Self::driver_for(&spec.job).ok_or_else(|| {
-                    format!("{} has no stepwise driver to serve", spec.job.algorithm.label())
+                    SelectError::InvalidSpec(format!(
+                        "{} has no stepwise driver to serve",
+                        spec.job.algorithm.label()
+                    ))
                 })?;
                 server.open_driven(&**obj, self.exec.clone(), driver, spec.job.seed);
             } else {
@@ -525,15 +576,26 @@ impl Leader {
             (0..specs.len()).map(|i| SessionClient::new(tx.clone(), SessionId(i))).collect();
         // the loop exits when every sender is gone; only clients hold one
         drop(tx);
-        let (r, summary) = std::thread::scope(|scope| {
+        let (joined, summary) = std::thread::scope(|scope| {
             let client_thread = scope.spawn(move || f(clients));
             let summary = server.run(rx);
-            (client_thread.join().expect("serve client closure panicked"), summary)
+            (client_thread.join(), summary)
         });
         self.metrics.inc("serve.requests", summary.metrics.requests as u64);
         self.metrics.inc("serve.sweep_requests", summary.metrics.sweep_requests as u64);
         self.metrics.inc("serve.coalesced_rounds", summary.metrics.coalesced_rounds as u64);
         self.metrics.inc("serve.inserts", summary.metrics.inserts as u64);
+        // a panicking client closure surfaces as an error, not a panic of
+        // the serving thread (the sessions served fine; the client died);
+        // the panic payload rides along so assertion messages survive
+        let r = joined.map_err(|payload| {
+            let msg = payload
+                .downcast_ref::<&'static str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            SelectError::ClientPanic(msg)
+        })?;
         Ok((r, summary))
     }
 }
@@ -601,7 +663,8 @@ mod tests {
         let mut j = job(AlgorithmChoice::TopK);
         j.backend = Backend::Xla;
         let err = leader.run(&j).unwrap_err();
-        assert!(err.contains("artifacts"), "{err}");
+        assert!(matches!(err, SelectError::Backend(_)), "{err:?}");
+        assert!(err.to_string().contains("artifacts"), "{err}");
     }
 
     #[test]
@@ -711,7 +774,8 @@ mod tests {
         let err = leader
             .serve(&specs, ServeConfig::default(), |clients| drop(clients))
             .unwrap_err();
-        assert!(err.contains("no stepwise driver"), "{err}");
+        assert!(matches!(err, SelectError::InvalidSpec(_)), "{err:?}");
+        assert!(err.to_string().contains("no stepwise driver"), "{err}");
     }
 
     #[test]

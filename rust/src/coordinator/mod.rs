@@ -21,23 +21,39 @@
 //! into single pooled rounds with generation-stamped replies and
 //! bounded-queue backpressure ([`Leader::serve`] spins the loop on the
 //! shared pool).
+//!
+//! The public face of all of it is the typed v1 API: the [`api`] module's
+//! validating spec builders ([`ProblemSpec`], [`PlanSpec`]) and unified
+//! [`SelectError`], and the [`wire`] module's versioned JSON protocol
+//! ([`ApiRequest`]/[`ApiReply`]) serving the same turns over
+//! `dash serve --stdio` that [`SessionClient`] serves in-process.
 
+pub mod api;
 mod batcher;
 mod leader;
 mod metrics;
 pub mod serve;
 pub mod session;
+pub mod wire;
 
+pub use api::{
+    default_objective, validate_algorithm, validate_problem, PlanBuilder, PlanKind, PlanSpec,
+    ProblemBuilder, ProblemSpec, SelectError,
+};
 pub use batcher::{BatchQueue, BatchQueueConfig};
 pub use leader::{
     AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, SelectionReport, ServeSpec,
 };
 pub use metrics::MetricsRegistry;
 pub use serve::{
-    ServeConfig, ServeError, ServeMetrics, ServeReply, ServeRequest, ServeSummary, SessionClient,
-    SessionId, SessionServer, SweptGains,
+    ServeConfig, ServeMetrics, ServeReply, ServeRequest, ServeSummary, SessionClient, SessionId,
+    SessionServer, SweptGains,
 };
 pub use session::{
     drive, Generation, SelectionSession, SessionDriver, SessionMetrics, SessionSnapshot,
     SessionSweep, StepOutcome,
+};
+pub use wire::{
+    ApiReply, ApiRequest, DatasetCache, SessionInfo, StdioServer, WirePlan, WireProblem,
+    MAX_WIRE_INT, WIRE_VERSION,
 };

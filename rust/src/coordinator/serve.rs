@@ -69,9 +69,11 @@
 //! concurrency harness drives directly.
 
 use crate::algorithms::SelectionResult;
+use crate::coordinator::api::SelectError;
 use crate::coordinator::session::{
     SelectionSession, SessionDriver, SessionSnapshot, StepOutcome,
 };
+use crate::coordinator::wire::{ApiReply, ApiRequest};
 use crate::objectives::Objective;
 use crate::oracle::BatchExecutor;
 use crate::rng::Pcg64;
@@ -87,8 +89,12 @@ pub enum ServeRequest {
     /// Marginal gains for these candidates at the session's current
     /// generation (coalesced with concurrent sweeps of the same session).
     Sweep { candidates: Vec<usize> },
-    /// Grow the session's solution set: `S ← S ∪ {item}`.
-    Insert { item: usize },
+    /// Grow the session's solution set: `S ← S ∪ {item}`. When
+    /// `if_generation` is set, the insert applies only while the session
+    /// is still at that generation; otherwise it is answered with
+    /// [`SelectError::StaleGeneration`] — optimistic concurrency for
+    /// clients racing other writers.
+    Insert { item: usize, if_generation: Option<u64> },
     /// Advance the session's attached driver by one adaptive round.
     Step,
     /// Finalize the attached driver into a [`SelectionResult`]. Rejected
@@ -116,31 +122,14 @@ pub enum ServeReply {
     Metrics { snapshot: SessionSnapshot },
 }
 
-/// Client-visible serving failure.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum ServeError {
-    /// The server loop is gone (all requests fail cleanly, none hang).
-    Disconnected,
-    /// The request was invalid for its target session (unknown id, no
-    /// driver to step/finish, out-of-range element index, ...). Rejection
-    /// is per-request: the session and every other client keep serving.
-    Rejected(String),
-}
-
-impl std::fmt::Display for ServeError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            ServeError::Disconnected => write!(f, "session server disconnected"),
-            ServeError::Rejected(why) => write!(f, "request rejected: {why}"),
-        }
-    }
-}
-
-/// One queued request plus its reply slot.
+/// One queued request plus its reply slot. Serving failures are the
+/// unified [`SelectError`] (`Rejected`, `UnknownSession`,
+/// `StaleGeneration`, `Disconnected`, …): rejection is per-request — the
+/// session and every other client keep serving.
 pub struct Envelope {
     session: SessionId,
     req: ServeRequest,
-    reply: Sender<Result<ServeReply, ServeError>>,
+    reply: Sender<Result<ServeReply, SelectError>>,
 }
 
 impl Envelope {
@@ -148,7 +137,7 @@ impl Envelope {
     pub fn new(
         session: SessionId,
         req: ServeRequest,
-    ) -> (Envelope, Receiver<Result<ServeReply, ServeError>>) {
+    ) -> (Envelope, Receiver<Result<ServeReply, SelectError>>) {
         let (reply, rx) = channel();
         (Envelope { session, req, reply }, rx)
     }
@@ -174,7 +163,7 @@ pub struct ServeMetrics {
     pub finishes: usize,
     /// `Metrics` requests answered
     pub metrics_reads: usize,
-    /// requests answered with [`ServeError::Rejected`]
+    /// requests answered with [`SelectError::Rejected`]
     pub rejected: usize,
     /// serving turns (batches drained)
     pub turns: usize,
@@ -278,6 +267,12 @@ impl<'o> SessionServer<'o> {
         self.pending.len()
     }
 
+    /// Whether the lane's driver has been finalized (`None` for an unknown
+    /// session) — the wire front's `list` op reads this.
+    pub fn finished(&self, id: SessionId) -> Option<bool> {
+        self.lanes.get(id.0).map(|l| l.result.is_some())
+    }
+
     /// Queue a request, returning the receiver its reply arrives on after
     /// the next [`SessionServer::turn`]. This is the deterministic-core
     /// entry the concurrency harness drives directly.
@@ -285,7 +280,7 @@ impl<'o> SessionServer<'o> {
         &mut self,
         session: SessionId,
         req: ServeRequest,
-    ) -> Receiver<Result<ServeReply, ServeError>> {
+    ) -> Receiver<Result<ServeReply, SelectError>> {
         let (env, rx) = Envelope::new(session, req);
         self.enqueue(env);
         rx
@@ -313,9 +308,7 @@ impl<'o> SessionServer<'o> {
         for env in batch {
             if env.session.0 >= self.lanes.len() {
                 self.metrics.rejected += 1;
-                let _ = env
-                    .reply
-                    .send(Err(ServeError::Rejected(format!("unknown session {:?}", env.session))));
+                let _ = env.reply.send(Err(SelectError::UnknownSession(env.session.0)));
                 continue;
             }
             match env.req {
@@ -346,7 +339,7 @@ impl<'o> SessionServer<'o> {
                 if let ServeRequest::Sweep { candidates } = &env.req {
                     if driver_owned {
                         self.metrics.rejected += 1;
-                        let _ = env.reply.send(Err(ServeError::Rejected(
+                        let _ = env.reply.send(Err(SelectError::Rejected(
                             "session is driver-owned until finished; sweep it after Finish"
                                 .into(),
                         )));
@@ -362,7 +355,7 @@ impl<'o> SessionServer<'o> {
                     }
                     if let Some(&bad) = candidates.iter().find(|&&a| a >= n) {
                         self.metrics.rejected += 1;
-                        let _ = env.reply.send(Err(ServeError::Rejected(format!(
+                        let _ = env.reply.send(Err(SelectError::Rejected(format!(
                             "candidate {bad} out of range (ground set 0..{n})"
                         ))));
                         continue;
@@ -424,19 +417,28 @@ impl<'o> SessionServer<'o> {
         for env in writes {
             let lane = &mut self.lanes[env.session.0];
             let reply = match env.req {
-                ServeRequest::Insert { item } => {
+                ServeRequest::Insert { item, if_generation } => {
                     let n = lane.session.objective().n();
+                    let current = lane.session.generation().0;
                     if lane.driver.is_some() || lane.result.is_some() {
                         // a driven lane's mutations belong to its driver;
                         // after finish the result must stay immutable
-                        Err(ServeError::Rejected(
+                        Err(SelectError::Rejected(
                             "driven session: the solution set grows only through its driver"
                                 .into(),
                         ))
                     } else if item >= n {
-                        Err(ServeError::Rejected(format!(
+                        Err(SelectError::Rejected(format!(
                             "element {item} out of range (ground set 0..{n})"
                         )))
+                    } else if if_generation.is_some_and(|pinned| pinned != current) {
+                        // generation-pinned insert raced another writer:
+                        // reject without mutating, so the client can
+                        // re-sweep and decide against fresh gains
+                        Err(SelectError::StaleGeneration {
+                            pinned: if_generation.unwrap_or(0),
+                            actual: current,
+                        })
                     } else {
                         self.metrics.inserts += 1;
                         let grew = lane.session.insert(item);
@@ -464,7 +466,7 @@ impl<'o> SessionServer<'o> {
                         }
                         Ok(ServeReply::Step { done, generation: lane.session.generation().0 })
                     } else {
-                        Err(ServeError::Rejected("session has no driver to step".into()))
+                        Err(SelectError::Rejected("session has no driver to step".into()))
                     }
                 }
                 ServeRequest::Finish => {
@@ -481,12 +483,12 @@ impl<'o> SessionServer<'o> {
                             self.metrics.finishes += 1;
                             Ok(ServeReply::Finish { result: result.clone() })
                         }
-                        None if lane.driver.is_some() => Err(ServeError::Rejected(
+                        None if lane.driver.is_some() => Err(SelectError::Rejected(
                             "driver has not terminated; step it to Done before finishing"
                                 .into(),
                         )),
                         None => {
-                            Err(ServeError::Rejected("session has no driver to finish".into()))
+                            Err(SelectError::Rejected("session has no driver to finish".into()))
                         }
                     }
                 }
@@ -538,6 +540,11 @@ pub struct SweptGains {
 /// blocks until its reply arrives (or the server is gone). Clone freely —
 /// clones share the bounded request queue; [`SessionClient::for_session`]
 /// retargets a handle at another session of the same server.
+///
+/// The handle is a thin veneer over the typed v1 values: every method
+/// builds an [`ApiRequest`] and matches an [`ApiReply`] through
+/// [`SessionClient::api`], the same conversions the stdio wire front uses
+/// — the two fronts are one API by construction.
 #[derive(Clone)]
 pub struct SessionClient {
     tx: SyncSender<Envelope>,
@@ -559,60 +566,88 @@ impl SessionClient {
         SessionClient { tx: self.tx.clone(), session }
     }
 
-    fn call(&self, req: ServeRequest) -> Result<ServeReply, ServeError> {
-        let (env, rx) = Envelope::new(self.session, req);
-        self.tx.send(env).map_err(|_| ServeError::Disconnected)?;
-        rx.recv().map_err(|_| ServeError::Disconnected)?
+    /// Issue one typed v1 request and block for its typed reply. The
+    /// request is converted through [`ApiRequest::into_serve`] and the
+    /// reply through [`ApiReply::from_serve`] — exactly the conversions
+    /// the stdio front applies per line. Server-level ops (`Open`/`List`)
+    /// are not session-addressed and are rejected; the request's own
+    /// `session` field is honored (it may target any session of this
+    /// server, like [`SessionClient::for_session`]).
+    pub fn api(&self, req: ApiRequest) -> Result<ApiReply, SelectError> {
+        let (session, sreq) = req.into_serve()?;
+        let (env, rx) = Envelope::new(session, sreq);
+        self.tx.send(env).map_err(|_| SelectError::Disconnected)?;
+        let reply = rx.recv().map_err(|_| SelectError::Disconnected)??;
+        Ok(ApiReply::from_serve(reply))
     }
 
     /// Generation-stamped marginal gains for `candidates` (one coalesced
     /// pooled round shared with every concurrent sweep of this session).
-    pub fn sweep(&self, candidates: &[usize]) -> Result<SweptGains, ServeError> {
-        match self.call(ServeRequest::Sweep { candidates: candidates.to_vec() })? {
-            ServeReply::Sweep { gains, generation, round_fresh } => {
-                Ok(SweptGains { gains, generation, round_fresh })
+    pub fn sweep(&self, candidates: &[usize]) -> Result<SweptGains, SelectError> {
+        let req =
+            ApiRequest::Sweep { session: self.session.0, candidates: candidates.to_vec() };
+        match self.api(req)? {
+            ApiReply::Swept { gains, generation, fresh } => {
+                Ok(SweptGains { gains, generation, round_fresh: fresh })
             }
-            other => Err(ServeError::Rejected(format!("unexpected reply {other:?}"))),
+            other => Err(SelectError::Protocol(format!("unexpected reply {other:?}"))),
         }
     }
 
     /// `S ← S ∪ {item}`; returns `(grew, generation after the insert)`.
-    pub fn insert(&self, item: usize) -> Result<(bool, u64), ServeError> {
-        match self.call(ServeRequest::Insert { item })? {
-            ServeReply::Insert { grew, generation } => Ok((grew, generation)),
-            other => Err(ServeError::Rejected(format!("unexpected reply {other:?}"))),
+    pub fn insert(&self, item: usize) -> Result<(bool, u64), SelectError> {
+        self.insert_req(item, None)
+    }
+
+    /// Generation-pinned insert: applies only while the session is still
+    /// at `generation` (e.g. the stamp of the sweep that chose `item`),
+    /// otherwise fails with [`SelectError::StaleGeneration`] and mutates
+    /// nothing.
+    pub fn insert_at(&self, item: usize, generation: u64) -> Result<(bool, u64), SelectError> {
+        self.insert_req(item, Some(generation))
+    }
+
+    fn insert_req(
+        &self,
+        item: usize,
+        if_generation: Option<u64>,
+    ) -> Result<(bool, u64), SelectError> {
+        let req = ApiRequest::Insert { session: self.session.0, item, if_generation };
+        match self.api(req)? {
+            ApiReply::Inserted { grew, generation } => Ok((grew, generation)),
+            other => Err(SelectError::Protocol(format!("unexpected reply {other:?}"))),
         }
     }
 
     /// Advance the attached driver one adaptive round; `Ok(true)` once it
     /// has terminated.
-    pub fn step(&self) -> Result<bool, ServeError> {
-        match self.call(ServeRequest::Step)? {
-            ServeReply::Step { done, .. } => Ok(done),
-            other => Err(ServeError::Rejected(format!("unexpected reply {other:?}"))),
+    pub fn step(&self) -> Result<bool, SelectError> {
+        match self.api(ApiRequest::Step { session: self.session.0 })? {
+            ApiReply::Stepped { done, .. } => Ok(done),
+            other => Err(SelectError::Protocol(format!("unexpected reply {other:?}"))),
         }
     }
 
     /// Finalize the attached driver (idempotent).
-    pub fn finish(&self) -> Result<SelectionResult, ServeError> {
-        match self.call(ServeRequest::Finish)? {
-            ServeReply::Finish { result } => Ok(result),
-            other => Err(ServeError::Rejected(format!("unexpected reply {other:?}"))),
+    pub fn finish(&self) -> Result<SelectionResult, SelectError> {
+        match self.api(ApiRequest::Finish { session: self.session.0 })? {
+            ApiReply::Finished { result } => Ok(result),
+            other => Err(SelectError::Protocol(format!("unexpected reply {other:?}"))),
         }
     }
 
     /// Step the attached driver to termination, then finish — the served
     /// equivalent of [`drive`](crate::coordinator::session::drive).
-    pub fn drive(&self) -> Result<SelectionResult, ServeError> {
+    pub fn drive(&self) -> Result<SelectionResult, SelectError> {
         while !self.step()? {}
         self.finish()
     }
 
     /// Point-in-time snapshot of the session.
-    pub fn metrics(&self) -> Result<SessionSnapshot, ServeError> {
-        match self.call(ServeRequest::Metrics)? {
-            ServeReply::Metrics { snapshot } => Ok(snapshot),
-            other => Err(ServeError::Rejected(format!("unexpected reply {other:?}"))),
+    pub fn metrics(&self) -> Result<SessionSnapshot, SelectError> {
+        match self.api(ApiRequest::Metrics { session: self.session.0 })? {
+            ApiReply::Snapshot { snapshot } => Ok(snapshot),
+            other => Err(SelectError::Protocol(format!("unexpected reply {other:?}"))),
         }
     }
 }
@@ -639,7 +674,7 @@ mod tests {
         let lane = server.open(&o, exec.clone());
         let rx_a = server.submit(lane, ServeRequest::Sweep { candidates: vec![0, 1, 2] });
         let rx_b = server.submit(lane, ServeRequest::Sweep { candidates: vec![2, 3] });
-        let rx_ins = server.submit(lane, ServeRequest::Insert { item: 1 });
+        let rx_ins = server.submit(lane, ServeRequest::Insert { item: 1, if_generation: None });
         server.turn();
         // one pooled round served both sweeps, before the insert
         assert_eq!(server.metrics.sweep_requests, 2);
@@ -697,12 +732,12 @@ mod tests {
         // a driver-owned lane rejects premature finishes and raw traffic —
         // per-request, never a loop-killing panic
         let rx_early_fin = server.submit(lane, ServeRequest::Finish);
-        let rx_ins = server.submit(lane, ServeRequest::Insert { item: 0 });
+        let rx_ins = server.submit(lane, ServeRequest::Insert { item: 0, if_generation: None });
         let rx_sweep = server.submit(lane, ServeRequest::Sweep { candidates: vec![0, 1] });
         server.turn();
-        assert!(matches!(rx_early_fin.recv().unwrap(), Err(ServeError::Rejected(_))));
-        assert!(matches!(rx_ins.recv().unwrap(), Err(ServeError::Rejected(_))));
-        assert!(matches!(rx_sweep.recv().unwrap(), Err(ServeError::Rejected(_))));
+        assert!(matches!(rx_early_fin.recv().unwrap(), Err(SelectError::Rejected(_))));
+        assert!(matches!(rx_ins.recv().unwrap(), Err(SelectError::Rejected(_))));
+        assert!(matches!(rx_sweep.recv().unwrap(), Err(SelectError::Rejected(_))));
         loop {
             let rx = server.submit(lane, ServeRequest::Step);
             server.turn();
@@ -742,7 +777,7 @@ mod tests {
         // once finished, the frozen lane serves read-only sweeps but still
         // rejects inserts
         let rx_sweep = server.submit(lane, ServeRequest::Sweep { candidates: vec![0, 1] });
-        let rx_ins = server.submit(lane, ServeRequest::Insert { item: 0 });
+        let rx_ins = server.submit(lane, ServeRequest::Insert { item: 0, if_generation: None });
         server.turn();
         match rx_sweep.recv().unwrap().unwrap() {
             ServeReply::Sweep { gains, generation, .. } => {
@@ -751,7 +786,7 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
-        assert!(matches!(rx_ins.recv().unwrap(), Err(ServeError::Rejected(_))));
+        assert!(matches!(rx_ins.recv().unwrap(), Err(SelectError::Rejected(_))));
     }
 
     #[test]
@@ -763,9 +798,9 @@ mod tests {
         let rx_step = server.submit(lane, ServeRequest::Step);
         let rx_fin = server.submit(lane, ServeRequest::Finish);
         server.turn();
-        assert!(matches!(rx_bad.recv().unwrap(), Err(ServeError::Rejected(_))));
-        assert!(matches!(rx_step.recv().unwrap(), Err(ServeError::Rejected(_))));
-        assert!(matches!(rx_fin.recv().unwrap(), Err(ServeError::Rejected(_))));
+        assert!(matches!(rx_bad.recv().unwrap(), Err(SelectError::UnknownSession(9))));
+        assert!(matches!(rx_step.recv().unwrap(), Err(SelectError::Rejected(_))));
+        assert!(matches!(rx_fin.recv().unwrap(), Err(SelectError::Rejected(_))));
         assert_eq!(server.metrics.rejected, 3);
         assert_eq!(server.metrics.steps, 0, "rejected steps are not counted as applied");
         assert_eq!(server.metrics.finishes, 0, "rejected finishes are not counted");
@@ -775,11 +810,11 @@ mod tests {
         let rx_bad_sweep =
             server.submit(lane, ServeRequest::Sweep { candidates: vec![0, o.n()] });
         let rx_ok_sweep = server.submit(lane, ServeRequest::Sweep { candidates: vec![0] });
-        let rx_bad_ins = server.submit(lane, ServeRequest::Insert { item: o.n() + 3 });
+        let rx_bad_ins = server.submit(lane, ServeRequest::Insert { item: o.n() + 3, if_generation: None });
         server.turn();
-        assert!(matches!(rx_bad_sweep.recv().unwrap(), Err(ServeError::Rejected(_))));
+        assert!(matches!(rx_bad_sweep.recv().unwrap(), Err(SelectError::Rejected(_))));
         assert!(matches!(rx_ok_sweep.recv().unwrap(), Ok(ServeReply::Sweep { .. })));
-        assert!(matches!(rx_bad_ins.recv().unwrap(), Err(ServeError::Rejected(_))));
+        assert!(matches!(rx_bad_ins.recv().unwrap(), Err(SelectError::Rejected(_))));
         assert_eq!(server.metrics.rejected, 5);
         assert_eq!(server.metrics.sweep_requests, 1, "rejected sweeps are not counted");
         assert_eq!(server.metrics.inserts, 0, "rejected inserts are not applied");
@@ -800,7 +835,7 @@ mod tests {
         // must not wedge the turn either
         drop(server.submit(lane, ServeRequest::Sweep { candidates: vec![0, 1] }));
         server.turn();
-        let rx = server.submit(lane, ServeRequest::Insert { item: 2 });
+        let rx = server.submit(lane, ServeRequest::Insert { item: 2, if_generation: None });
         server.turn();
         assert!(matches!(
             rx.recv().unwrap().unwrap(),

@@ -71,7 +71,7 @@ pub struct Generation(pub u64);
 /// Per-session telemetry. Plain counters: a session is single-writer (the
 /// driver stepping it); cross-session aggregation happens in the leader's
 /// [`MetricsRegistry`](crate::coordinator::MetricsRegistry).
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct SessionMetrics {
     /// cached sweeps served ([`SelectionSession::sweep`])
     pub sweeps: usize,
@@ -108,8 +108,10 @@ impl SessionMetrics {
 }
 
 /// Point-in-time public view of one live session — what the serving
-/// front's `Metrics` requests return ([`coordinator::serve`](crate::coordinator::serve)).
-#[derive(Debug, Clone)]
+/// front's `Metrics` requests return ([`coordinator::serve`](crate::coordinator::serve)),
+/// in-process and over the v1 wire protocol
+/// ([`coordinator::wire`](crate::coordinator::wire)) alike.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SessionSnapshot {
     /// generation at snapshot time
     pub generation: Generation,

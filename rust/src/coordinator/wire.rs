@@ -1,0 +1,1358 @@
+//! v1 JSON wire protocol: the serving front as newline-delimited JSON.
+//!
+//! The in-process serving front ([`coordinator::serve`](crate::coordinator::serve))
+//! is deterministic and typed but trapped in one address space. This module
+//! defines the externally drivable form of the same API:
+//!
+//! - **[`ApiRequest`] / [`ApiReply`]** — the typed v1 request/reply values.
+//!   They mirror the serving turns (`Sweep`, `Insert`, `Step`, `Finish`,
+//!   `Metrics`) one-to-one, plus the server-level `Open` (create a session
+//!   from wire specs) and `List`. The in-process
+//!   [`SessionClient`](crate::coordinator::serve::SessionClient) is
+//!   implemented over exactly these values
+//!   ([`SessionClient::api`](crate::coordinator::serve::SessionClient::api)),
+//!   so the stdio front and the in-process front are provably one API: both
+//!   convert through [`ApiRequest::into_serve`] / [`ApiReply::from_serve`].
+//! - **Frames** — one compact JSON object per line. Requests carry
+//!   `{"v":1,"id":N,"op":...}` plus the op's fields; replies echo `v`/`id`
+//!   with the reply op (errors are the `"error"` op carrying a
+//!   [`SelectError`] by `kind`). Object keys serialize sorted
+//!   (`util::json` uses a BTreeMap), so frames are byte-deterministic —
+//!   `tests/wire_props.rs` pins the schema against
+//!   `tests/golden/api_v1.jsonl`.
+//! - **[`StdioServer`]** — the transport: reads request lines, drives the
+//!   deterministic [`SessionServer`] core (`submit` + `turn`), writes one
+//!   reply line per request in order. `dash serve --stdio` wires it to
+//!   stdin/stdout; any process that can spawn a child and speak JSON can
+//!   drive selections with exact, generation-stamped semantics.
+//!
+//! # Protocol (v1)
+//!
+//! ```text
+//! → {"v":1,"id":1,"op":"open","driven":true,
+//!    "problem":{"dataset":"d1","k":8,"seed":3},"plan":{"algo":"greedy"}}
+//! ← {"id":1,"op":"opened","session":0,"v":1}
+//! → {"v":1,"id":2,"op":"step","session":0}
+//! ← {"done":false,"generation":1,"id":2,"op":"stepped","v":1}
+//! → {"v":1,"id":3,"op":"sweep","session":0,"candidates":[0,1,2]}
+//! ← {"fresh":3,"gains":[…],"generation":1,"id":3,"op":"swept","v":1}
+//! → {"v":1,"id":4,"op":"insert","session":0,"item":5,"if_generation":1}
+//! ← {"error":{"kind":"rejected",…},"id":4,"op":"error","v":1}
+//! ```
+//!
+//! Numbers ride JSON's f64: exact for the integers used here (ids,
+//! generations, indices — all far below 2^53) and bit-exact for gains and
+//! values (the writer emits the shortest round-tripping decimal). Non-finite
+//! floats are not representable; objectives produce finite gains.
+//!
+//! # Session lifetime
+//!
+//! [`StdioServer`] serves for the life of its process. Objectives opened
+//! over the wire are intentionally leaked (`Box::leak`) to satisfy the
+//! borrow the deterministic core takes on them; the leak is bounded by
+//! [`StdioServer::with_max_sessions`] (default 64) and reclaimed at
+//! process exit. Long-lived embedders should reuse sessions rather than
+//! churn opens.
+
+use crate::algorithms::{LassoConfig, OptEstimate, RoundRecord, SelectionResult};
+use crate::coordinator::api::{PlanSpec, ProblemSpec, SelectError};
+use crate::coordinator::leader::{Backend, Leader, ObjectiveChoice, SelectionJob};
+use crate::coordinator::serve::{ServeReply, ServeRequest, ServeSummary, SessionId, SessionServer};
+use crate::coordinator::session::{Generation, SessionDriver, SessionMetrics, SessionSnapshot};
+use crate::data::{Dataset, Task};
+use crate::experiments::{DatasetId, Scale};
+use crate::objectives::Objective;
+use crate::util::json::Json;
+use std::sync::Arc;
+
+/// Wire protocol version; requests with any other `v` are rejected with a
+/// [`SelectError::Protocol`] reply.
+pub const WIRE_VERSION: u64 = 1;
+
+/// Largest integer a v1 frame can carry faithfully (JSON numbers are
+/// f64): ids, generations, and indices must stay at or below 2^53 − 1.
+/// Decoders reject larger values as [`SelectError::Protocol`]; encoders
+/// clamp ids here so an out-of-contract id produces a deliverable frame
+/// instead of one the peer must reject.
+pub const MAX_WIRE_INT: u64 = (1 << 53) - 1;
+
+// ---------------------------------------------------------------------------
+// Wire specs (the serializable face of ProblemSpec / PlanSpec)
+// ---------------------------------------------------------------------------
+
+/// Wire form of a [`ProblemSpec`]: datasets travel by experiment id
+/// (`d1`, `d2-design`, …) + scale + seed, not by value. Optional fields
+/// default exactly as [`ProblemSpec::builder`] does.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireProblem {
+    /// experiment dataset id (`d1`, `d1-design`, `d2`, `d2-design`, `d3`, `d4`)
+    pub dataset: String,
+    /// `quick` (default) or `paper`
+    pub scale: Option<String>,
+    /// `lreg` | `r2` | `logistic` | `ovr-softmax` | `aopt`; default derived
+    /// from the dataset's task
+    pub objective: Option<String>,
+    /// A-optimality prior β² (aopt only; default 1.0)
+    pub beta_sq: Option<f64>,
+    /// A-optimality noise σ² (aopt only; default 1.0)
+    pub sigma_sq: Option<f64>,
+    /// `native` (default) or `xla`
+    pub backend: Option<String>,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl WireProblem {
+    /// Minimal problem: dataset + k, everything else defaulted.
+    pub fn new(dataset: &str, k: usize, seed: u64) -> WireProblem {
+        WireProblem {
+            dataset: dataset.to_string(),
+            scale: None,
+            objective: None,
+            beta_sq: None,
+            sigma_sq: None,
+            backend: None,
+            k,
+            seed,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("dataset", self.dataset.as_str().into()),
+            ("k", self.k.into()),
+            ("seed", self.seed.into()),
+        ];
+        if let Some(s) = &self.scale {
+            pairs.push(("scale", s.as_str().into()));
+        }
+        if let Some(o) = &self.objective {
+            pairs.push(("objective", o.as_str().into()));
+        }
+        if let Some(b) = self.beta_sq {
+            pairs.push(("beta_sq", b.into()));
+        }
+        if let Some(s) = self.sigma_sq {
+            pairs.push(("sigma_sq", s.into()));
+        }
+        if let Some(b) = &self.backend {
+            pairs.push(("backend", b.as_str().into()));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<WireProblem, SelectError> {
+        Ok(WireProblem {
+            dataset: need_str(j, "dataset")?.to_string(),
+            scale: opt_str(j, "scale")?,
+            objective: opt_str(j, "objective")?,
+            beta_sq: opt_f64(j, "beta_sq")?,
+            sigma_sq: opt_f64(j, "sigma_sq")?,
+            backend: opt_str(j, "backend")?,
+            k: need_usize(j, "k")?,
+            // same default as ProblemSpec::builder, so the two documented
+            // surfaces can never silently diverge
+            seed: opt_u64(j, "seed")?.unwrap_or(1),
+        })
+    }
+
+    /// Build the dataset and validate into a [`ProblemSpec`]. Every name
+    /// field (dataset, scale, objective, backend) is validated *before*
+    /// the dataset is synthesized, so a typo'd open never pays for a
+    /// paper-scale build it then throws away.
+    pub fn resolve(&self) -> Result<ProblemSpec, SelectError> {
+        self.resolve_cached(&mut DatasetCache::new())
+    }
+
+    /// [`WireProblem::resolve`] with dataset memoization: identical
+    /// `(dataset, scale, seed)` opens share one synthesized [`Dataset`]
+    /// instead of paying for (and pinning) a fresh build each time — the
+    /// [`StdioServer`] routes every spec open through its own cache.
+    pub fn resolve_cached(&self, cache: &mut DatasetCache) -> Result<ProblemSpec, SelectError> {
+        let id = DatasetId::parse(&self.dataset)
+            .ok_or_else(|| SelectError::invalid(format!("unknown dataset '{}'", self.dataset)))?;
+        let scale = match &self.scale {
+            None => Scale::Quick,
+            Some(s) => Scale::parse(s)
+                .ok_or_else(|| SelectError::invalid(format!("unknown scale '{s}'")))?,
+        };
+        let aopt = ObjectiveChoice::Aopt {
+            beta_sq: self.beta_sq.unwrap_or(1.0),
+            sigma_sq: self.sigma_sq.unwrap_or(1.0),
+        };
+        let named_objective = match &self.objective {
+            Some(name) => Some(match name.as_str() {
+                "lreg" => ObjectiveChoice::Lreg,
+                "r2" => ObjectiveChoice::R2,
+                "logistic" => ObjectiveChoice::Logistic,
+                "ovr-softmax" => ObjectiveChoice::OvrSoftmax,
+                "aopt" => aopt.clone(),
+                other => {
+                    return Err(SelectError::invalid(format!("unknown objective '{other}'")))
+                }
+            }),
+            None => None,
+        };
+        // priors only parameterize the aopt objective; naming any other
+        // objective alongside them is a contradiction to reject, never a
+        // silent drop
+        if (self.beta_sq.is_some() || self.sigma_sq.is_some())
+            && matches!(&named_objective, Some(o) if !matches!(o, ObjectiveChoice::Aopt { .. }))
+        {
+            return Err(SelectError::invalid(format!(
+                "beta_sq/sigma_sq apply only to the aopt objective, not '{}'",
+                self.objective.as_deref().unwrap_or("")
+            )));
+        }
+        let backend = match self.backend.as_deref() {
+            None => Backend::Native,
+            Some(name) => Backend::parse(name)
+                .ok_or_else(|| SelectError::invalid(format!("unknown backend '{name}'")))?,
+        };
+        // the one k check that needs no dataset; k ≤ n waits for the build
+        if self.k == 0 {
+            return Err(SelectError::invalid("k must be >= 1"));
+        }
+        let key = (id, scale, self.seed);
+        let (dataset, cached) = match cache.iter().find(|(k, _)| *k == key) {
+            Some((_, ds)) => (Arc::clone(ds), true),
+            None => (Arc::new(id.build(scale, self.seed)), false),
+        };
+        let objective = match named_objective {
+            Some(o) => Some(o),
+            // priors without an objective name: they only apply to aopt, so
+            // honor them when that is the dataset's natural objective and
+            // reject (instead of silently dropping them) otherwise
+            None if self.beta_sq.is_some() || self.sigma_sq.is_some() => {
+                if dataset.task == Task::Design {
+                    Some(aopt)
+                } else {
+                    return Err(SelectError::invalid(
+                        "beta_sq/sigma_sq apply only to the aopt objective; \
+                         set \"objective\":\"aopt\" explicitly",
+                    ));
+                }
+            }
+            None => None,
+        };
+        let mut b =
+            ProblemSpec::builder(dataset).backend(backend).k(self.k).seed(self.seed);
+        if let Some(objective) = objective {
+            b = b.objective(objective);
+        }
+        let spec = b.build()?;
+        // memoize only specs that validated end to end: a stream of
+        // rejected opens (k > n, bad priors) must not grow the cache —
+        // successful opens are bounded by the server's session budget
+        if !cached {
+            cache.push((key, Arc::clone(&spec.dataset)));
+        }
+        Ok(spec)
+    }
+}
+
+/// Memo of synthesized datasets keyed by `(dataset id, scale, seed)` —
+/// see [`WireProblem::resolve_cached`].
+pub type DatasetCache = Vec<((DatasetId, Scale, u64), Arc<Dataset>)>;
+
+/// Wire form of a [`PlanSpec`]: the algorithm name plus optional tuning.
+/// Unset knobs take the algorithm's defaults; knobs that do not apply are
+/// ignored, exactly as in [`PlanSpec::builder`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WirePlan {
+    /// CLI/wire algorithm name ([`PlanKind::parse`](crate::coordinator::api::PlanKind::parse))
+    pub algo: String,
+    pub epsilon: Option<f64>,
+    pub alpha: Option<f64>,
+    pub samples: Option<usize>,
+    pub r: Option<usize>,
+    pub max_rounds: Option<usize>,
+    pub threads: Option<usize>,
+    pub trials: Option<usize>,
+    pub serial_prefix: Option<bool>,
+    /// early-stop gain threshold (greedy variants)
+    pub min_gain: Option<f64>,
+    /// known OPT value (dash, adaptive-sampling); absent = the Appendix G
+    /// guess ladder
+    pub opt: Option<f64>,
+    /// LASSO path tuning (lasso only)
+    pub path_len: Option<usize>,
+    pub lambda_min_ratio: Option<f64>,
+    pub max_iters: Option<usize>,
+    pub tol: Option<f64>,
+}
+
+impl WirePlan {
+    pub fn new(algo: &str) -> WirePlan {
+        WirePlan { algo: algo.to_string(), ..WirePlan::default() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("algo", self.algo.as_str().into())];
+        if let Some(v) = self.epsilon {
+            pairs.push(("epsilon", v.into()));
+        }
+        if let Some(v) = self.alpha {
+            pairs.push(("alpha", v.into()));
+        }
+        if let Some(v) = self.samples {
+            pairs.push(("samples", v.into()));
+        }
+        if let Some(v) = self.r {
+            pairs.push(("r", v.into()));
+        }
+        if let Some(v) = self.max_rounds {
+            pairs.push(("max_rounds", v.into()));
+        }
+        if let Some(v) = self.threads {
+            pairs.push(("threads", v.into()));
+        }
+        if let Some(v) = self.trials {
+            pairs.push(("trials", v.into()));
+        }
+        if let Some(v) = self.serial_prefix {
+            pairs.push(("serial_prefix", v.into()));
+        }
+        if let Some(v) = self.min_gain {
+            pairs.push(("min_gain", v.into()));
+        }
+        if let Some(v) = self.opt {
+            pairs.push(("opt", v.into()));
+        }
+        if let Some(v) = self.path_len {
+            pairs.push(("path_len", v.into()));
+        }
+        if let Some(v) = self.lambda_min_ratio {
+            pairs.push(("lambda_min_ratio", v.into()));
+        }
+        if let Some(v) = self.max_iters {
+            pairs.push(("max_iters", v.into()));
+        }
+        if let Some(v) = self.tol {
+            pairs.push(("tol", v.into()));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<WirePlan, SelectError> {
+        Ok(WirePlan {
+            algo: need_str(j, "algo")?.to_string(),
+            epsilon: opt_f64(j, "epsilon")?,
+            alpha: opt_f64(j, "alpha")?,
+            samples: opt_usize(j, "samples")?,
+            r: opt_usize(j, "r")?,
+            max_rounds: opt_usize(j, "max_rounds")?,
+            threads: opt_usize(j, "threads")?,
+            trials: opt_usize(j, "trials")?,
+            serial_prefix: opt_bool(j, "serial_prefix")?,
+            min_gain: opt_f64(j, "min_gain")?,
+            opt: opt_f64(j, "opt")?,
+            path_len: opt_usize(j, "path_len")?,
+            lambda_min_ratio: opt_f64(j, "lambda_min_ratio")?,
+            max_iters: opt_usize(j, "max_iters")?,
+            tol: opt_f64(j, "tol")?,
+        })
+    }
+
+    /// Validate into a [`PlanSpec`].
+    pub fn resolve(&self) -> Result<PlanSpec, SelectError> {
+        let mut b = PlanSpec::parse(&self.algo)?;
+        if let Some(v) = self.epsilon {
+            b = b.epsilon(v);
+        }
+        if let Some(v) = self.alpha {
+            b = b.alpha(v);
+        }
+        if let Some(v) = self.samples {
+            b = b.samples(v);
+        }
+        if let Some(v) = self.r {
+            b = b.r(v);
+        }
+        if let Some(v) = self.max_rounds {
+            b = b.max_rounds(v);
+        }
+        if let Some(v) = self.threads {
+            b = b.threads(v);
+        }
+        if let Some(v) = self.trials {
+            b = b.trials(v);
+        }
+        if let Some(v) = self.serial_prefix {
+            b = b.serial_prefix(v);
+        }
+        if let Some(v) = self.min_gain {
+            b = b.min_gain(v);
+        }
+        if let Some(v) = self.opt {
+            b = b.opt(OptEstimate::Known(v));
+        }
+        if self.path_len.is_some()
+            || self.lambda_min_ratio.is_some()
+            || self.max_iters.is_some()
+            || self.tol.is_some()
+        {
+            let d = LassoConfig::default();
+            b = b.lasso_config(LassoConfig {
+                path_len: self.path_len.unwrap_or(d.path_len),
+                lambda_min_ratio: self.lambda_min_ratio.unwrap_or(d.lambda_min_ratio),
+                max_iters: self.max_iters.unwrap_or(d.max_iters),
+                tol: self.tol.unwrap_or(d.tol),
+            });
+        }
+        b.build()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed v1 requests / replies
+// ---------------------------------------------------------------------------
+
+/// One v1 API request. The five session-addressed ops mirror
+/// [`ServeRequest`] one-to-one ([`ApiRequest::into_serve`]); `Open`/`List`
+/// are server-level and handled by the front that owns the
+/// [`SessionServer`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiRequest {
+    /// Create a session from wire specs; `driven` attaches the plan's
+    /// stepwise driver (`step`/`finish`), otherwise the lane takes raw
+    /// sweep/insert traffic.
+    Open { problem: WireProblem, plan: WirePlan, driven: bool },
+    /// Enumerate open sessions.
+    List,
+    /// Marginal gains for `candidates` at the session's current generation.
+    Sweep { session: usize, candidates: Vec<usize> },
+    /// Grow the session's solution set. `if_generation` pins the insert:
+    /// it applies only while the session is still at that generation,
+    /// otherwise the reply is a [`SelectError::StaleGeneration`] —
+    /// optimistic concurrency for clients racing other writers.
+    Insert { session: usize, item: usize, if_generation: Option<u64> },
+    /// Advance the session's attached driver by one adaptive round.
+    Step { session: usize },
+    /// Finalize the attached driver (idempotent once stepped to done).
+    Finish { session: usize },
+    /// Point-in-time session snapshot.
+    Metrics { session: usize },
+}
+
+/// Summary row of one open session ([`ApiReply::Sessions`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionInfo {
+    pub session: usize,
+    /// result-label of the lane's algorithm (`sds_ma`, `dash`, …)
+    pub algorithm: String,
+    pub driven: bool,
+    /// the lane's driver has been finalized
+    pub finished: bool,
+    pub generation: u64,
+    pub set_len: usize,
+}
+
+/// One v1 API reply. `Error` carries the [`SelectError`] a request was
+/// answered with; every other variant mirrors a [`ServeReply`]
+/// ([`ApiReply::from_serve`]) or a server-level op.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiReply {
+    Opened { session: usize },
+    Sessions { sessions: Vec<SessionInfo> },
+    Swept { gains: Vec<f64>, generation: u64, fresh: usize },
+    Inserted { grew: bool, generation: u64 },
+    Stepped { done: bool, generation: u64 },
+    Finished { result: SelectionResult },
+    Snapshot { snapshot: SessionSnapshot },
+    Error { error: SelectError },
+}
+
+impl ApiRequest {
+    /// The frame's `op` string.
+    pub fn op(&self) -> &'static str {
+        match self {
+            ApiRequest::Open { .. } => "open",
+            ApiRequest::List => "list",
+            ApiRequest::Sweep { .. } => "sweep",
+            ApiRequest::Insert { .. } => "insert",
+            ApiRequest::Step { .. } => "step",
+            ApiRequest::Finish { .. } => "finish",
+            ApiRequest::Metrics { .. } => "metrics",
+        }
+    }
+
+    /// Convert a session-addressed request into its serving-core form.
+    /// Server-level ops (`Open`, `List`) have no session target and are
+    /// rejected here — the owning front handles them before this point.
+    pub fn into_serve(self) -> Result<(SessionId, ServeRequest), SelectError> {
+        match self {
+            ApiRequest::Sweep { session, candidates } => {
+                Ok((SessionId(session), ServeRequest::Sweep { candidates }))
+            }
+            ApiRequest::Insert { session, item, if_generation } => {
+                Ok((SessionId(session), ServeRequest::Insert { item, if_generation }))
+            }
+            ApiRequest::Step { session } => Ok((SessionId(session), ServeRequest::Step)),
+            ApiRequest::Finish { session } => Ok((SessionId(session), ServeRequest::Finish)),
+            ApiRequest::Metrics { session } => Ok((SessionId(session), ServeRequest::Metrics)),
+            ApiRequest::Open { .. } | ApiRequest::List => Err(SelectError::Rejected(
+                "open/list are server-level requests, not addressed to a session".into(),
+            )),
+        }
+    }
+
+    /// Encode one newline-free request frame. `id` is clamped to
+    /// [`MAX_WIRE_INT`] (the JSON-faithful integer range).
+    pub fn encode(&self, id: u64) -> String {
+        let id = id.min(MAX_WIRE_INT);
+        let mut pairs: Vec<(&str, Json)> =
+            vec![("v", WIRE_VERSION.into()), ("id", id.into()), ("op", self.op().into())];
+        match self {
+            ApiRequest::Open { problem, plan, driven } => {
+                pairs.push(("driven", (*driven).into()));
+                pairs.push(("problem", problem.to_json()));
+                pairs.push(("plan", plan.to_json()));
+            }
+            ApiRequest::List => {}
+            ApiRequest::Sweep { session, candidates } => {
+                pairs.push(("session", (*session).into()));
+                pairs.push(("candidates", Json::arr_usize(candidates)));
+            }
+            ApiRequest::Insert { session, item, if_generation } => {
+                pairs.push(("session", (*session).into()));
+                pairs.push(("item", (*item).into()));
+                if let Some(g) = if_generation {
+                    pairs.push(("if_generation", (*g).into()));
+                }
+            }
+            ApiRequest::Step { session }
+            | ApiRequest::Finish { session }
+            | ApiRequest::Metrics { session } => {
+                pairs.push(("session", (*session).into()));
+            }
+        }
+        Json::obj(pairs).to_string_compact()
+    }
+
+    /// Decode one request frame: `(id, request)`. Any malformed input —
+    /// bad JSON, wrong `v`, unknown `op`, missing or mistyped fields — is
+    /// a [`SelectError::Protocol`].
+    pub fn decode(line: &str) -> Result<(u64, ApiRequest), SelectError> {
+        let j = Json::parse(line.trim())
+            .map_err(|e| SelectError::Protocol(format!("bad frame: {e}")))?;
+        let v = need_u64(&j, "v")?;
+        if v != WIRE_VERSION {
+            return Err(SelectError::Protocol(format!(
+                "unsupported protocol version {v} (this server speaks v{WIRE_VERSION})"
+            )));
+        }
+        let id = opt_u64(&j, "id")?.unwrap_or(0);
+        let req = match need_str(&j, "op")? {
+            "open" => ApiRequest::Open {
+                problem: WireProblem::from_json(need(&j, "problem")?)?,
+                plan: WirePlan::from_json(need(&j, "plan")?)?,
+                driven: opt_bool(&j, "driven")?.unwrap_or(false),
+            },
+            "list" => ApiRequest::List,
+            "sweep" => ApiRequest::Sweep {
+                session: need_usize(&j, "session")?,
+                candidates: need_usize_arr(&j, "candidates")?,
+            },
+            "insert" => ApiRequest::Insert {
+                session: need_usize(&j, "session")?,
+                item: need_usize(&j, "item")?,
+                if_generation: opt_u64(&j, "if_generation")?,
+            },
+            "step" => ApiRequest::Step { session: need_usize(&j, "session")? },
+            "finish" => ApiRequest::Finish { session: need_usize(&j, "session")? },
+            "metrics" => ApiRequest::Metrics { session: need_usize(&j, "session")? },
+            other => return Err(SelectError::Protocol(format!("unknown op '{other}'"))),
+        };
+        Ok((id, req))
+    }
+}
+
+impl ApiReply {
+    /// The frame's `op` string.
+    pub fn op(&self) -> &'static str {
+        match self {
+            ApiReply::Opened { .. } => "opened",
+            ApiReply::Sessions { .. } => "sessions",
+            ApiReply::Swept { .. } => "swept",
+            ApiReply::Inserted { .. } => "inserted",
+            ApiReply::Stepped { .. } => "stepped",
+            ApiReply::Finished { .. } => "finished",
+            ApiReply::Snapshot { .. } => "snapshot",
+            ApiReply::Error { .. } => "error",
+        }
+    }
+
+    /// Lift a serving-core reply into its wire form — the shared exit path
+    /// of the in-process client and the stdio front.
+    pub fn from_serve(reply: ServeReply) -> ApiReply {
+        match reply {
+            ServeReply::Sweep { gains, generation, round_fresh } => {
+                ApiReply::Swept { gains, generation, fresh: round_fresh }
+            }
+            ServeReply::Insert { grew, generation } => ApiReply::Inserted { grew, generation },
+            ServeReply::Step { done, generation } => ApiReply::Stepped { done, generation },
+            ServeReply::Finish { result } => ApiReply::Finished { result },
+            ServeReply::Metrics { snapshot } => ApiReply::Snapshot { snapshot },
+        }
+    }
+
+    /// Encode one newline-free reply frame (echoing the request's `id`,
+    /// clamped to [`MAX_WIRE_INT`]).
+    pub fn encode(&self, id: u64) -> String {
+        let id = id.min(MAX_WIRE_INT);
+        let mut pairs: Vec<(&str, Json)> =
+            vec![("v", WIRE_VERSION.into()), ("id", id.into()), ("op", self.op().into())];
+        match self {
+            ApiReply::Opened { session } => pairs.push(("session", (*session).into())),
+            ApiReply::Sessions { sessions } => {
+                pairs.push((
+                    "sessions",
+                    Json::Arr(sessions.iter().map(session_info_to_json).collect()),
+                ));
+            }
+            ApiReply::Swept { gains, generation, fresh } => {
+                pairs.push(("gains", Json::arr_f64(gains)));
+                pairs.push(("generation", (*generation).into()));
+                pairs.push(("fresh", (*fresh).into()));
+            }
+            ApiReply::Inserted { grew, generation } => {
+                pairs.push(("grew", (*grew).into()));
+                pairs.push(("generation", (*generation).into()));
+            }
+            ApiReply::Stepped { done, generation } => {
+                pairs.push(("done", (*done).into()));
+                pairs.push(("generation", (*generation).into()));
+            }
+            ApiReply::Finished { result } => pairs.push(("result", result_to_json(result))),
+            ApiReply::Snapshot { snapshot } => {
+                pairs.push(("snapshot", snapshot_to_json(snapshot)))
+            }
+            ApiReply::Error { error } => pairs.push(("error", error_to_json(error))),
+        }
+        Json::obj(pairs).to_string_compact()
+    }
+
+    /// Decode one reply frame: `(id, reply)`.
+    pub fn decode(line: &str) -> Result<(u64, ApiReply), SelectError> {
+        let j = Json::parse(line.trim())
+            .map_err(|e| SelectError::Protocol(format!("bad frame: {e}")))?;
+        let v = need_u64(&j, "v")?;
+        if v != WIRE_VERSION {
+            return Err(SelectError::Protocol(format!(
+                "unsupported protocol version {v} (this client speaks v{WIRE_VERSION})"
+            )));
+        }
+        let id = opt_u64(&j, "id")?.unwrap_or(0);
+        let reply = match need_str(&j, "op")? {
+            "opened" => ApiReply::Opened { session: need_usize(&j, "session")? },
+            "sessions" => ApiReply::Sessions {
+                sessions: need(&j, "sessions")?
+                    .as_arr()
+                    .ok_or_else(|| SelectError::Protocol("'sessions' must be an array".into()))?
+                    .iter()
+                    .map(session_info_from_json)
+                    .collect::<Result<Vec<_>, _>>()?,
+            },
+            "swept" => ApiReply::Swept {
+                gains: need_f64_arr(&j, "gains")?,
+                generation: need_u64(&j, "generation")?,
+                fresh: need_usize(&j, "fresh")?,
+            },
+            "inserted" => ApiReply::Inserted {
+                grew: need_bool(&j, "grew")?,
+                generation: need_u64(&j, "generation")?,
+            },
+            "stepped" => ApiReply::Stepped {
+                done: need_bool(&j, "done")?,
+                generation: need_u64(&j, "generation")?,
+            },
+            "finished" => ApiReply::Finished { result: result_from_json(need(&j, "result")?)? },
+            "snapshot" => {
+                ApiReply::Snapshot { snapshot: snapshot_from_json(need(&j, "snapshot")?)? }
+            }
+            "error" => ApiReply::Error { error: error_from_json(need(&j, "error")?)? },
+            other => return Err(SelectError::Protocol(format!("unknown op '{other}'"))),
+        };
+        Ok((id, reply))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Payload codecs
+// ---------------------------------------------------------------------------
+
+fn session_info_to_json(s: &SessionInfo) -> Json {
+    Json::obj(vec![
+        ("session", s.session.into()),
+        ("algorithm", s.algorithm.as_str().into()),
+        ("driven", s.driven.into()),
+        ("finished", s.finished.into()),
+        ("generation", s.generation.into()),
+        ("set_len", s.set_len.into()),
+    ])
+}
+
+fn session_info_from_json(j: &Json) -> Result<SessionInfo, SelectError> {
+    Ok(SessionInfo {
+        session: need_usize(j, "session")?,
+        algorithm: need_str(j, "algorithm")?.to_string(),
+        driven: need_bool(j, "driven")?,
+        finished: need_bool(j, "finished")?,
+        generation: need_u64(j, "generation")?,
+        set_len: need_usize(j, "set_len")?,
+    })
+}
+
+/// Wire form of a [`SelectionResult`] — every field, history included, so
+/// a result decoded from the wire equals the in-process one.
+pub fn result_to_json(r: &SelectionResult) -> Json {
+    Json::obj(vec![
+        ("algorithm", r.algorithm.as_str().into()),
+        ("set", Json::arr_usize(&r.set)),
+        ("value", r.value.into()),
+        ("rounds", r.rounds.into()),
+        ("queries", r.queries.into()),
+        ("wall_s", r.wall_s.into()),
+        ("hit_iteration_cap", r.hit_iteration_cap.into()),
+        (
+            "history",
+            Json::Arr(
+                r.history
+                    .iter()
+                    .map(|rec| {
+                        Json::obj(vec![
+                            ("round", rec.round.into()),
+                            ("value", rec.value.into()),
+                            ("queries", rec.queries.into()),
+                            ("wall_s", rec.wall_s.into()),
+                            ("set_size", rec.set_size.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+pub fn result_from_json(j: &Json) -> Result<SelectionResult, SelectError> {
+    let history = need(j, "history")?
+        .as_arr()
+        .ok_or_else(|| SelectError::Protocol("'history' must be an array".into()))?
+        .iter()
+        .map(|rec| {
+            Ok(RoundRecord {
+                round: need_usize(rec, "round")?,
+                value: need_f64(rec, "value")?,
+                queries: need_usize(rec, "queries")?,
+                wall_s: need_f64(rec, "wall_s")?,
+                set_size: need_usize(rec, "set_size")?,
+            })
+        })
+        .collect::<Result<Vec<_>, SelectError>>()?;
+    Ok(SelectionResult {
+        algorithm: need_str(j, "algorithm")?.to_string(),
+        set: need_usize_arr(j, "set")?,
+        value: need_f64(j, "value")?,
+        rounds: need_usize(j, "rounds")?,
+        queries: need_usize(j, "queries")?,
+        wall_s: need_f64(j, "wall_s")?,
+        hit_iteration_cap: need_bool(j, "hit_iteration_cap")?,
+        history,
+    })
+}
+
+fn snapshot_to_json(s: &SessionSnapshot) -> Json {
+    let m = &s.metrics;
+    Json::obj(vec![
+        ("generation", s.generation.0.into()),
+        ("set", Json::arr_usize(&s.set)),
+        ("value", s.value.into()),
+        (
+            "metrics",
+            Json::obj(vec![
+                ("sweeps", m.sweeps.into()),
+                ("swept_candidates", m.swept_candidates.into()),
+                ("cache_hits", m.cache_hits.into()),
+                ("fresh_queries", m.fresh_queries.into()),
+                ("inserts", m.inserts.into()),
+                ("sample_rounds", m.sample_rounds.into()),
+                ("prefix_rounds", m.prefix_rounds.into()),
+                ("fork_sweeps", m.fork_sweeps.into()),
+            ]),
+        ),
+    ])
+}
+
+fn snapshot_from_json(j: &Json) -> Result<SessionSnapshot, SelectError> {
+    let m = need(j, "metrics")?;
+    Ok(SessionSnapshot {
+        generation: Generation(need_u64(j, "generation")?),
+        set: need_usize_arr(j, "set")?,
+        value: need_f64(j, "value")?,
+        metrics: SessionMetrics {
+            sweeps: need_usize(m, "sweeps")?,
+            swept_candidates: need_usize(m, "swept_candidates")?,
+            cache_hits: need_usize(m, "cache_hits")?,
+            fresh_queries: need_usize(m, "fresh_queries")?,
+            inserts: need_usize(m, "inserts")?,
+            sample_rounds: need_usize(m, "sample_rounds")?,
+            prefix_rounds: need_usize(m, "prefix_rounds")?,
+            fork_sweeps: need_usize(m, "fork_sweeps")?,
+        },
+    })
+}
+
+/// Encode a [`SelectError`] as its wire object: a stable `kind`, the
+/// display `message`, and the variant's structured payload (`reason`,
+/// `session`, `pinned`/`actual`).
+pub fn error_to_json(e: &SelectError) -> Json {
+    let mut pairs: Vec<(&str, Json)> =
+        vec![("kind", e.kind().into()), ("message", e.to_string().into())];
+    match e {
+        SelectError::InvalidSpec(m)
+        | SelectError::Backpressure(m)
+        | SelectError::Backend(m)
+        | SelectError::Rejected(m)
+        | SelectError::ClientPanic(m)
+        | SelectError::Protocol(m) => pairs.push(("reason", m.as_str().into())),
+        SelectError::UnknownSession(s) => pairs.push(("session", (*s).into())),
+        SelectError::StaleGeneration { pinned, actual } => {
+            pairs.push(("pinned", (*pinned).into()));
+            pairs.push(("actual", (*actual).into()));
+        }
+        SelectError::Disconnected => {}
+    }
+    Json::obj(pairs)
+}
+
+/// Decode a wire error object back into the exact [`SelectError`].
+pub fn error_from_json(j: &Json) -> Result<SelectError, SelectError> {
+    let reason = || -> Result<String, SelectError> { Ok(need_str(j, "reason")?.to_string()) };
+    match need_str(j, "kind")? {
+        "invalid_spec" => Ok(SelectError::InvalidSpec(reason()?)),
+        "unknown_session" => Ok(SelectError::UnknownSession(need_usize(j, "session")?)),
+        "stale_generation" => Ok(SelectError::StaleGeneration {
+            pinned: need_u64(j, "pinned")?,
+            actual: need_u64(j, "actual")?,
+        }),
+        "backpressure" => Ok(SelectError::Backpressure(reason()?)),
+        "backend" => Ok(SelectError::Backend(reason()?)),
+        "rejected" => Ok(SelectError::Rejected(reason()?)),
+        "client_panic" => Ok(SelectError::ClientPanic(reason()?)),
+        "disconnected" => Ok(SelectError::Disconnected),
+        "protocol" => Ok(SelectError::Protocol(reason()?)),
+        other => Err(SelectError::Protocol(format!("unknown error kind '{other}'"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decode helpers
+// ---------------------------------------------------------------------------
+
+fn need<'a>(j: &'a Json, key: &str) -> Result<&'a Json, SelectError> {
+    j.get(key)
+        .ok_or_else(|| SelectError::Protocol(format!("missing field '{key}'")))
+}
+
+fn need_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, SelectError> {
+    need(j, key)?
+        .as_str()
+        .ok_or_else(|| SelectError::Protocol(format!("field '{key}' must be a string")))
+}
+
+fn need_usize(j: &Json, key: &str) -> Result<usize, SelectError> {
+    need(j, key)?
+        .as_usize()
+        .ok_or_else(|| SelectError::Protocol(format!("field '{key}' must be a non-negative integer")))
+}
+
+fn need_u64(j: &Json, key: &str) -> Result<u64, SelectError> {
+    need(j, key)?
+        .as_u64()
+        .ok_or_else(|| SelectError::Protocol(format!("field '{key}' must be a non-negative integer")))
+}
+
+fn need_f64(j: &Json, key: &str) -> Result<f64, SelectError> {
+    need(j, key)?
+        .as_f64()
+        .ok_or_else(|| SelectError::Protocol(format!("field '{key}' must be a number")))
+}
+
+fn need_bool(j: &Json, key: &str) -> Result<bool, SelectError> {
+    need(j, key)?
+        .as_bool()
+        .ok_or_else(|| SelectError::Protocol(format!("field '{key}' must be a boolean")))
+}
+
+fn need_usize_arr(j: &Json, key: &str) -> Result<Vec<usize>, SelectError> {
+    need(j, key)?
+        .as_arr()
+        .ok_or_else(|| SelectError::Protocol(format!("field '{key}' must be an array")))?
+        .iter()
+        .map(|v| {
+            v.as_usize().ok_or_else(|| {
+                SelectError::Protocol(format!("field '{key}' must hold non-negative integers"))
+            })
+        })
+        .collect()
+}
+
+fn need_f64_arr(j: &Json, key: &str) -> Result<Vec<f64>, SelectError> {
+    need(j, key)?
+        .as_arr()
+        .ok_or_else(|| SelectError::Protocol(format!("field '{key}' must be an array")))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| SelectError::Protocol(format!("field '{key}' must hold numbers")))
+        })
+        .collect()
+}
+
+fn opt_str(j: &Json, key: &str) -> Result<Option<String>, SelectError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(_) => Ok(Some(need_str(j, key)?.to_string())),
+    }
+}
+
+fn opt_f64(j: &Json, key: &str) -> Result<Option<f64>, SelectError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(_) => Ok(Some(need_f64(j, key)?)),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>, SelectError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(_) => Ok(Some(need_usize(j, key)?)),
+    }
+}
+
+fn opt_u64(j: &Json, key: &str) -> Result<Option<u64>, SelectError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(_) => Ok(Some(need_u64(j, key)?)),
+    }
+}
+
+fn opt_bool(j: &Json, key: &str) -> Result<Option<bool>, SelectError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(_) => Ok(Some(need_bool(j, key)?)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StdioServer — the v1 front over the deterministic serving core
+// ---------------------------------------------------------------------------
+
+/// Best-effort id of a frame that failed to decode: a malformed frame
+/// with a perfectly readable `id` (missing field, unknown op, wrong
+/// version) still gets its error reply correlated to the request.
+fn readable_frame_id(line: &str) -> u64 {
+    Json::parse(line.trim())
+        .ok()
+        .and_then(|j| j.get("id").and_then(Json::as_u64))
+        .unwrap_or(0)
+}
+
+/// Bookkeeping for one wire-opened lane.
+struct WireLane {
+    algorithm: String,
+    driven: bool,
+}
+
+/// The v1 wire front: decodes request frames, drives the deterministic
+/// [`SessionServer`] core (`submit` + `turn`), and encodes one reply frame
+/// per request, in order. Used by `dash serve --stdio` over
+/// stdin/stdout and driven directly (no process, no threads) by the
+/// protocol tests.
+///
+/// Sessions opened over the wire resolve their dataset/objective through
+/// the leader ([`Leader::objective`]) and are intentionally leaked for the
+/// life of the process (see the module docs); the open budget is capped by
+/// [`StdioServer::with_max_sessions`].
+pub struct StdioServer {
+    leader: Leader,
+    server: SessionServer<'static>,
+    lanes: Vec<WireLane>,
+    /// identical (dataset, scale, seed) opens share one synthesized dataset
+    datasets: DatasetCache,
+    max_sessions: usize,
+}
+
+impl StdioServer {
+    pub fn new(leader: Leader) -> StdioServer {
+        StdioServer {
+            leader,
+            server: SessionServer::new(),
+            lanes: Vec::new(),
+            datasets: DatasetCache::new(),
+            max_sessions: 64,
+        }
+    }
+
+    /// Cap on wire-opened sessions; opens beyond it are answered with
+    /// [`SelectError::Backpressure`].
+    pub fn with_max_sessions(mut self, max_sessions: usize) -> StdioServer {
+        self.max_sessions = max_sessions.max(1);
+        self
+    }
+
+    /// The leader resolving this front's objectives and pooling its sweeps.
+    pub fn leader(&self) -> &Leader {
+        &self.leader
+    }
+
+    /// Open a lane from wire specs (the `open` op).
+    pub fn open_spec(
+        &mut self,
+        problem: &WireProblem,
+        plan: &WirePlan,
+        driven: bool,
+    ) -> Result<usize, SelectError> {
+        // cheap rejections first: an over-budget or malformed-plan open
+        // must not pay for the dataset build and objective construction
+        // it is about to throw away (open_objective re-checks the budget,
+        // as the choke point every open — spec or embedded — funnels
+        // through)
+        self.check_budget()?;
+        let plan = plan.resolve()?;
+        if driven && !plan.kind().has_driver() {
+            return Err(SelectError::invalid(format!(
+                "{} has no stepwise driver to serve",
+                plan.kind().name()
+            )));
+        }
+        let problem = problem.resolve_cached(&mut self.datasets)?;
+        let job = SelectionJob::new(&problem, &plan);
+        job.validate()?;
+        let driver = if driven {
+            Some(Leader::driver_for(&job).ok_or_else(|| {
+                SelectError::invalid(format!(
+                    "{} has no stepwise driver to serve",
+                    job.algorithm.label()
+                ))
+            })?)
+        } else {
+            None
+        };
+        let objective = self.leader.objective(&job)?;
+        self.open_objective(objective, driver, job.seed, job.algorithm.label())
+    }
+
+    /// Open a lane over an already-built objective — the embedding hook
+    /// the byte-identity and accounting tests use to serve instrumented
+    /// objectives (e.g. `CountingObjective`) through the wire codec. The
+    /// objective is leaked for the life of the process, like every
+    /// wire-opened lane.
+    pub fn open_objective(
+        &mut self,
+        objective: Box<dyn Objective>,
+        driver: Option<Box<dyn SessionDriver>>,
+        seed: u64,
+        label: &str,
+    ) -> Result<usize, SelectError> {
+        self.check_budget()?;
+        // the deterministic core borrows its objectives; wire lanes live
+        // for the process, so the leak is the ownership story (bounded by
+        // max_sessions, reclaimed at exit)
+        let objective: &'static dyn Objective = Box::leak(objective);
+        let driven = driver.is_some();
+        let id = match driver {
+            Some(driver) => {
+                self.server
+                    .open_driven(objective, self.leader.executor().clone(), driver, seed)
+            }
+            None => self.server.open(objective, self.leader.executor().clone()),
+        };
+        self.lanes.push(WireLane { algorithm: label.to_string(), driven });
+        Ok(id.0)
+    }
+
+    fn check_budget(&self) -> Result<(), SelectError> {
+        if self.lanes.len() >= self.max_sessions {
+            return Err(SelectError::Backpressure(format!(
+                "session budget exhausted ({} open, max {})",
+                self.lanes.len(),
+                self.max_sessions
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serve one typed request (shared by [`StdioServer::line`] and the
+    /// protocol tests).
+    pub fn handle(&mut self, req: ApiRequest) -> Result<ApiReply, SelectError> {
+        match req {
+            ApiRequest::Open { problem, plan, driven } => self
+                .open_spec(&problem, &plan, driven)
+                .map(|session| ApiReply::Opened { session }),
+            ApiRequest::List => {
+                let sessions = self
+                    .lanes
+                    .iter()
+                    .enumerate()
+                    .map(|(i, lane)| {
+                        let snap = self
+                            .server
+                            .session(SessionId(i))
+                            .expect("wire lanes and server lanes are 1:1")
+                            .snapshot();
+                        SessionInfo {
+                            session: i,
+                            algorithm: lane.algorithm.clone(),
+                            driven: lane.driven,
+                            finished: self.server.finished(SessionId(i)).unwrap_or(false),
+                            generation: snap.generation.0,
+                            set_len: snap.set.len(),
+                        }
+                    })
+                    .collect();
+                Ok(ApiReply::Sessions { sessions })
+            }
+            other => {
+                let (session, sreq) = other.into_serve()?;
+                let rx = self.server.submit(session, sreq);
+                self.server.turn();
+                let reply = rx.recv().map_err(|_| SelectError::Disconnected)??;
+                Ok(ApiReply::from_serve(reply))
+            }
+        }
+    }
+
+    /// Serve one request line, producing exactly one reply line. Framing
+    /// errors echo the frame's `id` whenever it is readable (pipelined
+    /// clients correlate replies by id even for rejected frames); only
+    /// frames whose id cannot be parsed at all are answered with id 0.
+    pub fn line(&mut self, line: &str) -> String {
+        match ApiRequest::decode(line) {
+            Ok((id, req)) => match self.handle(req) {
+                Ok(reply) => reply.encode(id),
+                Err(error) => ApiReply::Error { error }.encode(id),
+            },
+            Err(error) => ApiReply::Error { error }.encode(readable_frame_id(line)),
+        }
+    }
+
+    /// The transport loop: one reply line per non-blank request line,
+    /// flushed as produced, until EOF. A client that closes its read end
+    /// early (broken pipe) is a routine disconnect, not a transport
+    /// error. Returns the serving summary.
+    pub fn run<R, W>(mut self, input: R, out: &mut W) -> std::io::Result<ServeSummary>
+    where
+        R: std::io::BufRead,
+        W: std::io::Write,
+    {
+        for line in input.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = self.line(&line);
+            if let Err(e) = writeln!(out, "{reply}").and_then(|_| out.flush()) {
+                if e.kind() == std::io::ErrorKind::BrokenPipe {
+                    break;
+                }
+                return Err(e);
+            }
+        }
+        Ok(self.summary())
+    }
+
+    /// Traffic counters plus a snapshot of every session.
+    pub fn summary(&self) -> ServeSummary {
+        self.server.summary()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::api::PlanKind;
+    use crate::coordinator::leader::AlgorithmChoice;
+
+    #[test]
+    fn request_frames_round_trip() {
+        let reqs = vec![
+            ApiRequest::Open {
+                problem: WireProblem::new("d1", 8, 3),
+                plan: WirePlan::new("greedy"),
+                driven: true,
+            },
+            ApiRequest::List,
+            ApiRequest::Sweep { session: 0, candidates: vec![0, 2, 5] },
+            ApiRequest::Insert { session: 1, item: 3, if_generation: Some(2) },
+            ApiRequest::Insert { session: 1, item: 3, if_generation: None },
+            ApiRequest::Step { session: 0 },
+            ApiRequest::Finish { session: 0 },
+            ApiRequest::Metrics { session: 2 },
+        ];
+        for (i, req) in reqs.into_iter().enumerate() {
+            let line = req.encode(i as u64);
+            assert!(!line.contains('\n'));
+            let (id, back) = ApiRequest::decode(&line).unwrap();
+            assert_eq!(id, i as u64);
+            assert_eq!(back, req);
+        }
+    }
+
+    #[test]
+    fn oversized_ids_clamp_to_the_faithful_range() {
+        let line = ApiRequest::List.encode(u64::MAX);
+        let (id, _) = ApiRequest::decode(&line).unwrap();
+        assert_eq!(id, MAX_WIRE_INT);
+        let line = ApiReply::Opened { session: 0 }.encode(u64::MAX);
+        let (id, _) = ApiReply::decode(&line).unwrap();
+        assert_eq!(id, MAX_WIRE_INT);
+    }
+
+    #[test]
+    fn malformed_frames_are_protocol_errors() {
+        for line in [
+            "not json",
+            "{}",
+            r#"{"v":2,"op":"list"}"#,
+            r#"{"v":1,"op":"warp"}"#,
+            r#"{"v":1,"op":"sweep","session":0}"#,
+            r#"{"v":1,"op":"sweep","session":0,"candidates":[1.5]}"#,
+            r#"{"v":1,"op":"insert","session":0}"#,
+            r#"{"v":1,"op":"open","problem":{"k":3},"plan":{"algo":"dash"}}"#,
+        ] {
+            match ApiRequest::decode(line) {
+                Err(SelectError::Protocol(_)) => {}
+                other => panic!("{line}: expected protocol error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_error_kind_round_trips() {
+        let errors = vec![
+            SelectError::InvalidSpec("k must be >= 1".into()),
+            SelectError::UnknownSession(9),
+            SelectError::StaleGeneration { pinned: 3, actual: 4 },
+            SelectError::Backpressure("session budget exhausted".into()),
+            SelectError::Backend("artifacts not built".into()),
+            SelectError::Rejected("driver-owned".into()),
+            SelectError::ClientPanic("assertion failed: left == right".into()),
+            SelectError::Disconnected,
+            SelectError::Protocol("bad frame".into()),
+        ];
+        for e in errors {
+            let reply = ApiReply::Error { error: e.clone() };
+            let line = reply.encode(7);
+            let (id, back) = ApiReply::decode(&line).unwrap();
+            assert_eq!(id, 7);
+            assert_eq!(back, reply, "{e:?}");
+        }
+    }
+
+    #[test]
+    fn wire_plan_resolves_every_algorithm_name() {
+        for kind in PlanKind::all() {
+            let plan = WirePlan::new(kind.name()).resolve().unwrap();
+            assert_eq!(plan.kind(), *kind);
+        }
+        assert!(WirePlan::new("nope").resolve().is_err());
+    }
+
+    #[test]
+    fn wire_plan_resolves_extended_knobs() {
+        // every PlanBuilder knob is reachable over the wire
+        let mut p = WirePlan::new("greedy");
+        p.min_gain = Some(0.25);
+        match p.resolve().unwrap().algorithm_for(3) {
+            AlgorithmChoice::Greedy(c) => assert!((c.min_gain - 0.25).abs() < 1e-12),
+            other => panic!("unexpected {other:?}"),
+        }
+        let mut p = WirePlan::new("dash");
+        p.opt = Some(7.5);
+        match p.resolve().unwrap().algorithm_for(3) {
+            AlgorithmChoice::Dash(c) => assert_eq!(c.opt, OptEstimate::Known(7.5)),
+            other => panic!("unexpected {other:?}"),
+        }
+        let mut p = WirePlan::new("lasso");
+        p.path_len = Some(10);
+        p.tol = Some(1e-5);
+        match p.resolve().unwrap().algorithm_for(3) {
+            AlgorithmChoice::Lasso(c) => {
+                assert_eq!(c.path_len, 10);
+                assert!((c.tol - 1e-5).abs() < 1e-18);
+                assert_eq!(c.max_iters, LassoConfig::default().max_iters);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // wire-supplied knobs go through the same validation as builders
+        let mut p = WirePlan::new("dash");
+        p.opt = Some(-1.0);
+        assert!(matches!(p.resolve().unwrap_err(), SelectError::InvalidSpec(_)));
+    }
+
+    #[test]
+    fn priors_without_objective_resolve_or_reject() {
+        // design dataset: priors flow into the default aopt objective
+        let mut p = WireProblem::new("d1-design", 5, 1);
+        p.beta_sq = Some(2.5);
+        p.sigma_sq = Some(0.5);
+        match p.resolve().unwrap().objective {
+            ObjectiveChoice::Aopt { beta_sq, sigma_sq } => {
+                assert!((beta_sq - 2.5).abs() < 1e-12);
+                assert!((sigma_sq - 0.5).abs() < 1e-12);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // non-design dataset: priors without "objective":"aopt" are an
+        // error, never silently dropped
+        let mut p = WireProblem::new("d1", 5, 1);
+        p.beta_sq = Some(2.0);
+        assert!(matches!(p.resolve().unwrap_err(), SelectError::InvalidSpec(_)));
+        // ...and priors alongside an explicit non-aopt objective likewise
+        let mut p = WireProblem::new("d1", 5, 1);
+        p.objective = Some("lreg".into());
+        p.sigma_sq = Some(0.5);
+        let e = p.resolve().unwrap_err();
+        assert!(e.to_string().contains("aopt"), "{e}");
+    }
+
+    #[test]
+    fn repeated_opens_share_one_dataset_build() {
+        let mut cache = DatasetCache::new();
+        let p = WireProblem::new("d1", 5, 1);
+        let a = p.resolve_cached(&mut cache).unwrap();
+        let b = p.resolve_cached(&mut cache).unwrap();
+        assert_eq!(cache.len(), 1, "one build serves identical opens");
+        assert!(Arc::ptr_eq(&a.dataset, &b.dataset));
+        // a different seed is a different dataset
+        let c = WireProblem::new("d1", 5, 2).resolve_cached(&mut cache).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert!(!Arc::ptr_eq(&a.dataset, &c.dataset));
+    }
+
+    #[test]
+    fn driven_open_without_driver_rejects_cheaply() {
+        let mut server = StdioServer::new(Leader::with_threads(1));
+        let err = server
+            .open_spec(&WireProblem::new("d1", 5, 1), &WirePlan::new("lasso"), true)
+            .unwrap_err();
+        assert!(err.to_string().contains("no stepwise driver"), "{err}");
+        assert_eq!(server.summary().sessions.len(), 0);
+    }
+
+    #[test]
+    fn wire_problem_rejects_unknowns() {
+        assert!(WireProblem::new("d99", 5, 1).resolve().is_err());
+        let mut p = WireProblem::new("d1", 5, 1);
+        p.scale = Some("galactic".into());
+        assert!(p.resolve().is_err());
+        let mut p = WireProblem::new("d1", 5, 1);
+        p.objective = Some("entropy".into());
+        assert!(p.resolve().is_err());
+        let mut p = WireProblem::new("d1", 5, 1);
+        p.backend = Some("tpu".into());
+        assert!(p.resolve().is_err());
+    }
+}

@@ -19,18 +19,32 @@
 //! - **runtime**: loads the HLO artifacts via the PJRT CPU client
 //!   ([`runtime`]) and serves batched gain queries ([`oracle`]).
 //!
-//! ## Quickstart
+//! ## Quickstart (public API v1)
+//!
+//! Jobs are built through the validating spec builders and run through the
+//! [`coordinator::Leader`]; every public entry point returns the unified
+//! [`coordinator::SelectError`]:
 //!
 //! ```no_run
 //! use dash_select::prelude::*;
+//! use std::sync::Arc;
 //!
+//! # fn main() -> Result<(), SelectError> {
 //! let mut rng = Pcg64::seed_from(7);
-//! let data = synthetic::regression_d1(&mut rng, 1000, 500, 100, 0.4);
-//! let obj = LinearRegressionObjective::new(&data);
-//! let result = Dash::new(DashConfig { k: 25, ..Default::default() })
-//!     .run(&obj, &mut rng);
-//! println!("f(S) = {:.4} in {} rounds", result.value, result.rounds);
+//! let data = Arc::new(synthetic::regression_d1(&mut rng, 1000, 500, 100, 0.4));
+//! let problem = ProblemSpec::builder(data).k(25).seed(7).build()?;
+//! let plan = PlanSpec::dash().epsilon(0.1).alpha(0.75).build()?;
+//! let report = Leader::new().run(&problem.job(&plan))?;
+//! println!("f(S) = {:.4} in {} rounds", report.result.value, report.result.rounds);
+//! # Ok(())
+//! # }
 //! ```
+//!
+//! The same API is drivable from outside the process: `dash serve --stdio`
+//! speaks the versioned JSON wire protocol of
+//! [`coordinator::wire`] — one request frame per line, one reply frame per
+//! request, against the same deterministic serving core the in-process
+//! [`coordinator::SessionClient`] uses.
 
 pub mod util;
 pub mod cli;
@@ -52,8 +66,9 @@ pub mod prelude {
         Lasso, LassoConfig, ParallelGreedy, RandomSelect, SelectionResult, TopK,
     };
     pub use crate::coordinator::{
-        AlgorithmChoice, Backend, Generation, Leader, ObjectiveChoice, SelectionJob,
-        SelectionSession, SessionDriver, StepOutcome,
+        AlgorithmChoice, Backend, Generation, Leader, ObjectiveChoice, PlanKind, PlanSpec,
+        ProblemSpec, SelectError, SelectionJob, SelectionReport, SelectionSession, ServeSpec,
+        SessionClient, SessionDriver, StepOutcome,
     };
     pub use crate::data::{synthetic, Dataset, Task};
     pub use crate::linalg::Matrix;

@@ -7,12 +7,10 @@
 //! dash spectra    --dataset d1 --k 25   # γ / α estimates for a workload
 //! ```
 
-use dash_select::algorithms::{
-    AdaptiveSamplingConfig, AdaptiveSequencingConfig, DashConfig, GreedyConfig, LassoConfig,
-};
 use dash_select::cli::Args;
 use dash_select::coordinator::{
-    AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, ServeConfig, ServeSpec,
+    Backend, Leader, ObjectiveChoice, PlanSpec, ProblemSpec, SelectError, ServeConfig, ServeSpec,
+    StdioServer,
 };
 use dash_select::experiments::{self, fig1, figs, appendix, DatasetId, Scale};
 use dash_select::objectives::spectra;
@@ -39,6 +37,11 @@ USAGE:
       smoke-run the concurrent serving front: N driven sessions plus one
       ad-hoc session, C sweep clients; prints request throughput and
       sweep-coalescing stats
+
+  dash serve --stdio [--max-sessions N]
+      speak the v1 JSON wire protocol over stdin/stdout: one request frame
+      per line ({"v":1,"id":N,"op":"open"|"list"|"sweep"|"insert"|"step"|
+      "finish"|"metrics",...}), one reply frame per request, until EOF
 
   dash artifacts          show the AOT artifact inventory
   dash spectra --dataset <D> --k <K>   sampled γ / α = γ² estimates
@@ -69,7 +72,9 @@ fn main() {
             println!("{USAGE}");
             Ok(())
         }
-        Some(other) => Err(format!("unknown subcommand '{other}'\n{USAGE}")),
+        Some(other) => {
+            Err(SelectError::InvalidSpec(format!("unknown subcommand '{other}'\n{USAGE}")))
+        }
     };
     if let Err(e) = code {
         eprintln!("error: {e}");
@@ -77,11 +82,13 @@ fn main() {
     }
 }
 
-fn dataset_for(args: &Args) -> Result<(DatasetId, Scale), String> {
-    let id = DatasetId::parse(args.get_or("dataset", "d1"))
-        .ok_or_else(|| format!("unknown dataset '{}'", args.get_or("dataset", "d1")))?;
-    let scale = Scale::parse(args.get_or("scale", "quick"))
-        .ok_or_else(|| format!("unknown scale '{}'", args.get_or("scale", "quick")))?;
+fn dataset_for(args: &Args) -> Result<(DatasetId, Scale), SelectError> {
+    let id = DatasetId::parse(args.get_or("dataset", "d1")).ok_or_else(|| {
+        SelectError::InvalidSpec(format!("unknown dataset '{}'", args.get_or("dataset", "d1")))
+    })?;
+    let scale = Scale::parse(args.get_or("scale", "quick")).ok_or_else(|| {
+        SelectError::InvalidSpec(format!("unknown scale '{}'", args.get_or("scale", "quick")))
+    })?;
     Ok((id, scale))
 }
 
@@ -95,53 +102,35 @@ fn objective_for(id: DatasetId) -> ObjectiveChoice {
     }
 }
 
-fn cmd_run(args: &Args) -> Result<(), String> {
+fn cmd_run(args: &Args) -> Result<(), SelectError> {
     let (id, scale) = dataset_for(args)?;
     let seed = args.get_u64("seed", 1)?;
     let k = args.get_usize("k", 25)?;
-    let alpha = args.get_f64("alpha", 0.75)?;
-    let epsilon = args.get_f64("epsilon", 0.1)?;
-    let r = args.get_usize("r", 0)?;
-    let samples = args.get_usize("samples", 5)?;
-    let backend = match args.get_or("backend", "native") {
-        "native" => Backend::Native,
-        "xla" => Backend::Xla,
-        other => return Err(format!("unknown backend '{other}'")),
-    };
-    let dash_cfg = DashConfig { k, r, epsilon, alpha, samples, ..Default::default() };
-    let algorithm = match args.get_or("algo", "dash") {
-        "dash" => AlgorithmChoice::Dash(dash_cfg),
-        "greedy" => AlgorithmChoice::Greedy(GreedyConfig { k, ..Default::default() }),
-        "lazy-greedy" => {
-            AlgorithmChoice::Greedy(GreedyConfig { k, lazy: true, ..Default::default() })
-        }
-        "parallel-greedy" => AlgorithmChoice::ParallelGreedy {
-            cfg: GreedyConfig { k, ..Default::default() },
-            threads: args.get_usize("threads", 4)?,
-        },
-        "topk" => AlgorithmChoice::TopK,
-        "random" => AlgorithmChoice::Random { trials: args.get_usize("trials", 5)? },
-        "lasso" => AlgorithmChoice::Lasso(LassoConfig::default()),
-        "adaptive-sampling" => AlgorithmChoice::AdaptiveSampling(AdaptiveSamplingConfig {
-            k,
-            epsilon,
-            samples,
-            ..Default::default()
-        }),
-        "adaptive-seq" => AlgorithmChoice::AdaptiveSequencing(AdaptiveSequencingConfig {
-            k,
-            epsilon,
-            alpha,
-            ..Default::default()
-        }),
-        other => return Err(format!("unknown algorithm '{other}'")),
-    };
+    let backend = Backend::parse(args.get_or("backend", "native")).ok_or_else(|| {
+        SelectError::InvalidSpec(format!("unknown backend '{}'", args.get_or("backend", "native")))
+    })?;
+    // one construction path: parse the plan kind, apply the tuning knobs
+    // (knobs that do not apply to the chosen algorithm are ignored), and
+    // let the builders validate everything before the leader sees the job
+    let plan = PlanSpec::parse(args.get_or("algo", "dash"))?
+        .epsilon(args.get_f64("epsilon", 0.1)?)
+        .alpha(args.get_f64("alpha", 0.75)?)
+        .r(args.get_usize("r", 0)?)
+        .samples(args.get_usize("samples", 5)?)
+        .threads(args.get_usize("threads", 4)?)
+        .trials(args.get_usize("trials", 5)?)
+        .build()?;
 
     let ds = Arc::new(id.build(scale, seed));
     eprintln!("dataset {} ({} samples × {} selectable)", ds.name, ds.d(), ds.n());
+    let problem = ProblemSpec::builder(Arc::clone(&ds))
+        .objective(objective_for(id))
+        .backend(backend)
+        .k(k)
+        .seed(seed)
+        .build()?;
     let leader = Leader::new();
-    let job = SelectionJob { dataset: ds, objective: objective_for(id), backend, algorithm, k, seed };
-    let report = leader.run(&job)?;
+    let report = leader.run(&problem.job(&plan))?;
     if args.get_flag("json") {
         println!("{}", report.to_json().to_string_pretty());
     } else {
@@ -160,14 +149,15 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_experiment(args: &Args) -> Result<(), String> {
-    let which = args
-        .positional
-        .get(1)
-        .map(|s| s.as_str())
-        .ok_or("experiment name required (fig1|fig2|fig3|fig4|appendix-a|topk-bound)")?;
-    let scale = Scale::parse(args.get_or("scale", "quick"))
-        .ok_or_else(|| format!("unknown scale '{}'", args.get_or("scale", "quick")))?;
+fn cmd_experiment(args: &Args) -> Result<(), SelectError> {
+    let which = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
+        SelectError::InvalidSpec(
+            "experiment name required (fig1|fig2|fig3|fig4|appendix-a|topk-bound)".into(),
+        )
+    })?;
+    let scale = Scale::parse(args.get_or("scale", "quick")).ok_or_else(|| {
+        SelectError::InvalidSpec(format!("unknown scale '{}'", args.get_or("scale", "quick")))
+    })?;
     let seed = args.get_u64("seed", 1)?;
     match which {
         "fig1" => {
@@ -184,13 +174,16 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
         }
         "fig2" | "fig3" | "fig4" => {
             let figure = figs::FigureId::parse(which).unwrap();
-            let panel = figs::Panel::parse(args.get_or("panel", "all"))
-                .ok_or_else(|| format!("unknown panel '{}'", args.get_or("panel", "all")))?;
-            let backend = match args.get_or("backend", "native") {
-                "native" => Backend::Native,
-                "xla" => Backend::Xla,
-                other => return Err(format!("unknown backend '{other}'")),
-            };
+            let panel = figs::Panel::parse(args.get_or("panel", "all")).ok_or_else(|| {
+                SelectError::InvalidSpec(format!("unknown panel '{}'", args.get_or("panel", "all")))
+            })?;
+            let backend =
+                Backend::parse(args.get_or("backend", "native")).ok_or_else(|| {
+                    SelectError::InvalidSpec(format!(
+                        "unknown backend '{}'",
+                        args.get_or("backend", "native")
+                    ))
+                })?;
             let cfg = figs::FigureConfig {
                 figure,
                 scale,
@@ -230,7 +223,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
             println!("{}", table.to_pretty());
             println!("bound violations: {violations}");
         }
-        other => return Err(format!("unknown experiment '{other}'")),
+        other => return Err(SelectError::InvalidSpec(format!("unknown experiment '{other}'"))),
     }
     let _ = experiments::results_dir();
     Ok(())
@@ -238,7 +231,10 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
 
 /// Smoke-run the serving front: driven sessions racing ad-hoc sweep
 /// traffic over one bounded queue, with throughput + coalescing stats.
-fn cmd_serve(args: &Args) -> Result<(), String> {
+fn cmd_serve(args: &Args) -> Result<(), SelectError> {
+    if args.get_flag("stdio") {
+        return cmd_serve_stdio(args);
+    }
     let (id, scale) = dataset_for(args)?;
     let seed = args.get_u64("seed", 1)?;
     let k = args.get_usize("k", 10)?;
@@ -250,32 +246,23 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let objective = objective_for(id);
     let leader = Leader::new();
     // driven lanes alternate greedy / dash; one ad-hoc lane takes the raw
-    // sweep + insert traffic
-    let mut specs: Vec<ServeSpec> = (0..sessions)
-        .map(|i| {
-            let algorithm = if i % 2 == 0 {
-                AlgorithmChoice::Greedy(GreedyConfig { k, ..Default::default() })
-            } else {
-                AlgorithmChoice::Dash(DashConfig { k, ..Default::default() })
-            };
-            ServeSpec::driven(SelectionJob {
-                dataset: Arc::clone(&ds),
-                objective: objective.clone(),
-                backend: Backend::Native,
-                algorithm,
-                k,
-                seed: seed + i as u64,
-            })
-        })
-        .collect();
-    specs.push(ServeSpec::adhoc(SelectionJob {
-        dataset: Arc::clone(&ds),
-        objective: objective.clone(),
-        backend: Backend::Native,
-        algorithm: AlgorithmChoice::TopK,
-        k,
-        seed,
-    }));
+    // sweep + insert traffic — all assembled through the v1 builders
+    let problem = |seed_offset: u64| {
+        ProblemSpec::builder(Arc::clone(&ds))
+            .objective(objective.clone())
+            .k(k)
+            .seed(seed + seed_offset)
+            .build()
+    };
+    let greedy = PlanSpec::greedy().build()?;
+    let dash = PlanSpec::dash().build()?;
+    let topk = PlanSpec::topk().build()?;
+    let mut specs: Vec<ServeSpec> = Vec::with_capacity(sessions + 1);
+    for i in 0..sessions {
+        let plan = if i % 2 == 0 { &greedy } else { &dash };
+        specs.push(ServeSpec::driven(problem(i as u64)?.job(plan)));
+    }
+    specs.push(ServeSpec::adhoc(problem(0)?.job(&topk)));
     eprintln!(
         "serving {sessions} driven + 1 ad-hoc session over {} ({n} candidates); \
          {readers} sweep clients × {sweeps} sweeps",
@@ -339,9 +326,36 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_artifacts() -> Result<(), String> {
+/// The v1 wire front: newline-delimited JSON request/reply frames over
+/// stdin/stdout against the deterministic serving core, until EOF.
+fn cmd_serve_stdio(args: &Args) -> Result<(), SelectError> {
+    let server = StdioServer::new(Leader::new())
+        .with_max_sessions(args.get_usize("max-sessions", 64)?);
+    let stdin = std::io::stdin().lock();
+    let mut stdout = std::io::stdout().lock();
+    let summary = server
+        .run(stdin, &mut stdout)
+        .map_err(|e| SelectError::Protocol(format!("stdio transport: {e}")))?;
+    let m = &summary.metrics;
+    eprintln!(
+        "stdio serve: {} requests over {} turns; {} sweeps → {} coalesced rounds; \
+         {} inserts, {} steps, {} finishes, {} rejected",
+        m.requests,
+        m.turns,
+        m.sweep_requests,
+        m.coalesced_rounds,
+        m.inserts,
+        m.steps,
+        m.finishes,
+        m.rejected
+    );
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<(), SelectError> {
     let dir = default_artifacts_dir();
-    let manifest = Manifest::load(&dir).map_err(|e| format!("{e} (run `make artifacts`)"))?;
+    let manifest = Manifest::load(&dir)
+        .map_err(|e| SelectError::Backend(format!("{e} (run `make artifacts`)")))?;
     println!("artifacts in {:?}:", manifest.dir);
     for a in &manifest.artifacts {
         println!(
@@ -357,7 +371,7 @@ fn cmd_artifacts() -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_spectra(args: &Args) -> Result<(), String> {
+fn cmd_spectra(args: &Args) -> Result<(), SelectError> {
     let (id, scale) = dataset_for(args)?;
     let k = args.get_usize("k", 25)?;
     let seed = args.get_u64("seed", 1)?;

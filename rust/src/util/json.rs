@@ -67,7 +67,9 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                // -0.0 must keep its sign ("-0" is a valid JSON number and
+                // parses back to -0.0) so floats round-trip bit-exactly
+                if n.fract() == 0.0 && n.abs() < 9e15 && !n.is_sign_negative() {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -119,10 +121,29 @@ impl Json {
         }
     }
 
+    /// Largest integer JSON can carry faithfully: from 2^53 upward the
+    /// f64 parse may already have rounded the written digits (2^53 + 1
+    /// parses to exactly 2^53), so the typed integer accessors refuse
+    /// rather than silently return a neighbor. Exclusive at 2^53.
+    const MAX_EXACT_INT: f64 = 9007199254740991.0; // 2^53 - 1
+
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
-            if n.fract() == 0.0 && n >= 0.0 {
+            if n.fract() == 0.0 && n >= 0.0 && n <= Self::MAX_EXACT_INT {
                 Some(n as usize)
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Non-negative integer as u64, exact or nothing: values above 2^53
+    /// are rejected (`None`) because the f64 representation can no longer
+    /// prove what the sender wrote.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|n| {
+            if n.fract() == 0.0 && n >= 0.0 && n <= Self::MAX_EXACT_INT {
+                Some(n as u64)
             } else {
                 None
             }
@@ -190,6 +211,16 @@ impl From<f64> for Json {
 impl From<usize> for Json {
     fn from(n: usize) -> Self {
         Json::Num(n as f64)
+    }
+}
+impl From<u64> for Json {
+    fn from(n: u64) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Self {
+        Json::Str(s)
     }
 }
 impl From<bool> for Json {
@@ -466,6 +497,15 @@ mod tests {
     fn typed_accessors() {
         let v = Json::parse(r#"{"n": 5, "f": 1.5, "s": "x", "b": true}"#).unwrap();
         assert_eq!(v.get("n").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("n").unwrap().as_u64(), Some(5));
+        assert_eq!(v.get("f").unwrap().as_u64(), None);
+        // up to 2^53 - 1 the mapping is provably exact; at 2^53 a written
+        // neighbor (2^53 + 1) would already have rounded onto it, so the
+        // accessors refuse from there on instead of silently substituting
+        assert_eq!(Json::Num(9007199254740991.0).as_u64(), Some(9007199254740991));
+        assert_eq!(Json::Num(9007199254740992.0).as_u64(), None);
+        assert_eq!(Json::Num(9007199254740994.0).as_u64(), None);
+        assert_eq!(Json::Num(9007199254740992.0).as_usize(), None);
         assert_eq!(v.get("f").unwrap().as_usize(), None);
         assert_eq!(v.get("f").unwrap().as_f64(), Some(1.5));
         assert_eq!(v.get("b").unwrap().as_bool(), Some(true));
@@ -477,6 +517,17 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string_compact(), "42");
         assert_eq!(Json::Num(42.5).to_string_compact(), "42.5");
+        assert_eq!(Json::Num(-42.0).to_string_compact(), "-42");
+    }
+
+    #[test]
+    fn negative_zero_round_trips_bit_exactly() {
+        let s = Json::Num(-0.0).to_string_compact();
+        assert_eq!(s, "-0");
+        match Json::parse(&s).unwrap() {
+            Json::Num(n) => assert_eq!(n.to_bits(), (-0.0f64).to_bits()),
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

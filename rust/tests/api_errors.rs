@@ -1,0 +1,266 @@
+//! Malformed specs and requests return `Err` — never panic — through
+//! every public entry point: `Leader::run`, `run_many`, `serve`, the
+//! deterministic serving core, and the v1 wire front. Companion to the
+//! panic audit of `coordinator/`: every user-input-reachable failure is a
+//! typed [`SelectError`].
+
+use dash_select::coordinator::serve::{ServeConfig, ServeReply, ServeRequest, SessionServer};
+use dash_select::coordinator::{
+    AlgorithmChoice, Backend, Leader, ObjectiveChoice, PlanSpec, ProblemSpec, SelectError,
+    SelectionJob, ServeSpec, StdioServer, WirePlan, WireProblem,
+};
+use dash_select::data::{synthetic, Dataset};
+use dash_select::objectives::LinearRegressionObjective;
+use dash_select::oracle::BatchExecutor;
+use dash_select::rng::Pcg64;
+use std::sync::Arc;
+
+fn dataset() -> Arc<Dataset> {
+    let mut rng = Pcg64::seed_from(5);
+    Arc::new(synthetic::regression_d1(&mut rng, 60, 24, 8, 0.3))
+}
+
+fn valid_job(ds: &Arc<Dataset>) -> SelectionJob {
+    let problem = ProblemSpec::builder(Arc::clone(ds)).k(4).seed(1).build().unwrap();
+    problem.job(&PlanSpec::greedy().build().unwrap())
+}
+
+/// Malformed jobs that must surface as `InvalidSpec`, never a panic.
+fn malformed_jobs(ds: &Arc<Dataset>) -> Vec<SelectionJob> {
+    let base = valid_job(ds);
+    let with = |f: &dyn Fn(&mut SelectionJob)| {
+        let mut j = base.clone();
+        f(&mut j);
+        j
+    };
+    vec![
+        with(&|j| j.k = 0),
+        with(&|j| j.k = j.dataset.n() + 1),
+        with(&|j| {
+            j.algorithm = AlgorithmChoice::Dash(dash_select::algorithms::DashConfig {
+                epsilon: 0.0,
+                ..Default::default()
+            })
+        }),
+        with(&|j| {
+            j.algorithm = AlgorithmChoice::Dash(dash_select::algorithms::DashConfig {
+                alpha: 1.5,
+                ..Default::default()
+            })
+        }),
+        with(&|j| j.algorithm = AlgorithmChoice::Random { trials: 0 }),
+        with(&|j| {
+            j.algorithm =
+                AlgorithmChoice::ParallelGreedy { cfg: Default::default(), threads: 0 }
+        }),
+        with(&|j| j.objective = ObjectiveChoice::Aopt { beta_sq: -1.0, sigma_sq: 1.0 }),
+    ]
+}
+
+#[test]
+fn malformed_jobs_err_through_run() {
+    let ds = dataset();
+    let leader = Leader::new();
+    for job in malformed_jobs(&ds) {
+        let err = leader.run(&job).unwrap_err();
+        assert!(matches!(err, SelectError::InvalidSpec(_)), "{err:?}");
+    }
+}
+
+#[test]
+fn malformed_jobs_fail_their_lane_in_run_many_without_sinking_others() {
+    let ds = dataset();
+    let leader = Leader::new();
+    let good = valid_job(&ds);
+    let mut jobs = vec![good.clone()];
+    jobs.extend(malformed_jobs(&ds));
+    jobs.push(good.clone());
+    let results = leader.run_many(&jobs);
+    assert_eq!(results.len(), jobs.len());
+    // the valid lanes still run, byte-identical to solo
+    let solo = leader.run(&good).unwrap();
+    for idx in [0, results.len() - 1] {
+        let r = results[idx].as_ref().unwrap();
+        assert_eq!(r.result.set, solo.result.set);
+        assert_eq!(r.result.value.to_bits(), solo.result.value.to_bits());
+    }
+    for r in &results[1..results.len() - 1] {
+        assert!(matches!(r, Err(SelectError::InvalidSpec(_))), "{r:?}");
+    }
+}
+
+#[test]
+fn malformed_specs_err_through_serve() {
+    let ds = dataset();
+    let leader = Leader::new();
+    let mut bad = valid_job(&ds);
+    bad.k = 0;
+    let err = leader
+        .serve(&[ServeSpec::driven(bad)], ServeConfig::default(), |clients| drop(clients))
+        .unwrap_err();
+    assert!(matches!(err, SelectError::InvalidSpec(_)), "{err:?}");
+}
+
+#[test]
+fn serve_client_panic_is_an_error_not_a_crash() {
+    let ds = dataset();
+    let leader = Leader::new();
+    let specs = vec![ServeSpec::driven(valid_job(&ds))];
+    let err = leader
+        .serve(&specs, ServeConfig::default(), |clients| {
+            drop(clients);
+            panic!("client bug");
+        })
+        .unwrap_err();
+    // the dedicated variant carries the panic payload, distinct from
+    // per-request rejections
+    match &err {
+        SelectError::ClientPanic(msg) => assert!(msg.contains("client bug"), "{msg}"),
+        other => panic!("expected ClientPanic, got {other:?}"),
+    }
+    // the leader still serves afterwards
+    let (result, _) = leader
+        .serve(&specs, ServeConfig::default(), |clients| clients[0].drive().unwrap())
+        .unwrap();
+    assert!(!result.set.is_empty() && result.set.len() <= 4, "{:?}", result.set);
+}
+
+#[test]
+fn serving_core_rejects_invalid_traffic_with_typed_errors() {
+    let mut rng = Pcg64::seed_from(9);
+    let ds = synthetic::regression_d1(&mut rng, 50, 16, 6, 0.3);
+    let o = LinearRegressionObjective::new(&ds);
+    let mut server = SessionServer::new();
+    let lane = server.open(&o, BatchExecutor::sequential());
+
+    // unknown session
+    let rx = server.submit(dash_select::coordinator::SessionId(7), ServeRequest::Metrics);
+    server.turn();
+    assert!(matches!(rx.recv().unwrap(), Err(SelectError::UnknownSession(7))));
+
+    // no driver to step
+    let rx = server.submit(lane, ServeRequest::Step);
+    server.turn();
+    assert!(matches!(rx.recv().unwrap(), Err(SelectError::Rejected(_))));
+
+    // two writers race one generation pin: first wins, second observes a
+    // typed stale-generation rejection and the set is NOT double-grown
+    let rx1 =
+        server.submit(lane, ServeRequest::Insert { item: 0, if_generation: Some(0) });
+    let rx2 =
+        server.submit(lane, ServeRequest::Insert { item: 1, if_generation: Some(0) });
+    server.turn();
+    match rx1.recv().unwrap().unwrap() {
+        ServeReply::Insert { grew, generation } => {
+            assert!(grew);
+            assert_eq!(generation, 1);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    match rx2.recv().unwrap() {
+        Err(SelectError::StaleGeneration { pinned: 0, actual: 1 }) => {}
+        other => panic!("expected stale generation, got {other:?}"),
+    }
+    assert_eq!(server.session(lane).unwrap().set(), &[0]);
+
+    // a correctly re-pinned insert applies
+    let rx = server.submit(lane, ServeRequest::Insert { item: 1, if_generation: Some(1) });
+    server.turn();
+    assert!(matches!(
+        rx.recv().unwrap().unwrap(),
+        ServeReply::Insert { grew: true, generation: 2 }
+    ));
+}
+
+#[test]
+fn insert_at_races_surface_as_stale_generation_through_clients() {
+    let ds = dataset();
+    let leader = Leader::new();
+    let spec = ServeSpec::adhoc(valid_job(&ds));
+    let ((), _) = leader
+        .serve(&[spec], ServeConfig::default(), |clients| {
+            let c = &clients[0];
+            let sw = c.sweep(&[0, 1, 2]).unwrap();
+            assert_eq!(sw.generation, 0);
+            // pin to the sweep's stamp: applies
+            let (grew, generation) = c.insert_at(1, sw.generation).unwrap();
+            assert!(grew);
+            assert_eq!(generation, 1);
+            // the old stamp is now stale: typed rejection, nothing mutates
+            match c.insert_at(2, sw.generation) {
+                Err(SelectError::StaleGeneration { pinned: 0, actual: 1 }) => {}
+                other => panic!("expected stale generation, got {other:?}"),
+            }
+            assert_eq!(c.metrics().unwrap().set, vec![1]);
+        })
+        .unwrap();
+}
+
+#[test]
+fn wire_front_answers_malformed_requests_with_error_replies() {
+    let mut server = StdioServer::new(Leader::new()).with_max_sessions(1);
+
+    // bad JSON: protocol error with id 0 (id unreadable)
+    let reply = server.line("this is not json");
+    assert!(reply.contains("\"op\":\"error\""), "{reply}");
+    assert!(reply.contains("\"kind\":\"protocol\""), "{reply}");
+    assert!(reply.contains("\"id\":0"), "{reply}");
+
+    // wrong version: protocol error, but the readable id is still echoed
+    // so pipelined clients can correlate the rejection
+    let reply = server.line(r#"{"v":9,"id":4,"op":"list"}"#);
+    assert!(reply.contains("\"kind\":\"protocol\""), "{reply}");
+    assert!(reply.contains("\"id\":4"), "{reply}");
+
+    // open with an invalid spec: typed invalid_spec reply, id echoed
+    let open = r#"{"v":1,"id":5,"op":"open","problem":{"dataset":"d1","k":0,"seed":1},"plan":{"algo":"greedy"}}"#;
+    let reply = server.line(open);
+    assert!(reply.contains("\"kind\":\"invalid_spec\""), "{reply}");
+    assert!(reply.contains("\"id\":5"), "{reply}");
+
+    // traffic for a session that was never opened
+    let reply = server.line(r#"{"v":1,"id":6,"op":"step","session":3}"#);
+    assert!(reply.contains("\"kind\":\"unknown_session\""), "{reply}");
+
+    // a valid open still works after all those rejections...
+    let err = server
+        .open_spec(&WireProblem::new("d1", 5, 1), &WirePlan::new("warp-drive"), true)
+        .unwrap_err();
+    assert!(matches!(err, SelectError::InvalidSpec(_)), "{err:?}");
+    let lane = server
+        .open_spec(&WireProblem::new("d1", 5, 1), &WirePlan::new("greedy"), true)
+        .unwrap();
+    assert_eq!(lane, 0);
+    // ...and the session budget is enforced with backpressure
+    let err = server
+        .open_spec(&WireProblem::new("d1", 5, 1), &WirePlan::new("greedy"), true)
+        .unwrap_err();
+    assert!(matches!(err, SelectError::Backpressure(_)), "{err:?}");
+}
+
+#[test]
+fn xla_without_artifacts_is_a_backend_error() {
+    let leader = Leader::new();
+    if leader.has_artifacts() {
+        eprintln!("skipping: artifacts present, the error path is unreachable here");
+        return;
+    }
+    let ds = dataset();
+    let problem = ProblemSpec::builder(Arc::clone(&ds))
+        .backend(Backend::Xla)
+        .k(4)
+        .build()
+        .unwrap();
+    let err = leader.run(&problem.job(&PlanSpec::topk().build().unwrap())).unwrap_err();
+    assert!(matches!(err, SelectError::Backend(_)), "{err:?}");
+}
+
+#[test]
+fn cli_args_share_the_unified_error() {
+    use dash_select::cli::Args;
+    let err = Args::parse(vec!["--".to_string()]).unwrap_err();
+    assert!(matches!(err, SelectError::InvalidSpec(_)), "{err:?}");
+    let args = Args::parse(["run", "--k", "many"].iter().map(|s| s.to_string())).unwrap();
+    let err = args.get_usize("k", 1).unwrap_err();
+    assert!(matches!(err, SelectError::InvalidSpec(_)), "{err:?}");
+}

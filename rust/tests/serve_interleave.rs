@@ -30,8 +30,9 @@
 
 use dash_select::algorithms::{DashConfig, DashDriver, Greedy, GreedyConfig, SelectionResult};
 use dash_select::coordinator::serve::{
-    ServeConfig, ServeError, ServeReply, ServeRequest, SessionId, SessionServer,
+    ServeConfig, ServeReply, ServeRequest, SessionId, SessionServer,
 };
+use dash_select::coordinator::SelectError;
 use dash_select::coordinator::session::{drive, SelectionSession};
 use dash_select::coordinator::{
     AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, ServeSpec,
@@ -177,7 +178,7 @@ fn solo_adhoc(obj: &ScalarObjective, k: usize) -> (Vec<usize>, Vec<Vec<f64>>) {
 // Client scripts: small state machines the virtual scheduler interleaves.
 // ---------------------------------------------------------------------------
 
-type Reply = Result<ServeReply, ServeError>;
+type Reply = Result<ServeReply, SelectError>;
 
 trait ClientScript {
     /// Next request to submit, or `None` when the script is complete.
@@ -275,7 +276,7 @@ impl ClientScript for Writer {
         if self.complete {
             None
         } else if let Some(item) = self.next_insert {
-            Some((self.lane, ServeRequest::Insert { item }))
+            Some((self.lane, ServeRequest::Insert { item, if_generation: None }))
         } else {
             Some((self.lane, ServeRequest::Sweep { candidates: self.all.clone() }))
         }
@@ -596,7 +597,7 @@ fn concurrent_same_generation_sweeps_coalesce_into_one_round() {
     let sweep_rxs: Vec<_> = (0..5)
         .map(|i| server.submit(lane, ServeRequest::Sweep { candidates: vec![i, i + 1, i + 2] }))
         .collect();
-    let insert_rx = server.submit(lane, ServeRequest::Insert { item: 0 });
+    let insert_rx = server.submit(lane, ServeRequest::Insert { item: 0, if_generation: None });
     server.turn();
 
     // ONE pooled round served all five requests: session metrics, server

@@ -1,0 +1,191 @@
+//! The v1 stdio front is the same API as in-process serving, provably:
+//! a full session driven through the JSON codec (against the
+//! deterministic `submit`+`turn` core — no child process, no threads)
+//! produces byte-identical selections to solo `Leader::run`, and its
+//! self-reported query accounting equals the oracle-observed count
+//! (`CountingObjective` served through `StdioServer::open_objective`).
+
+use dash_select::algorithms::{Greedy, GreedyConfig};
+use dash_select::coordinator::session::SelectionSession;
+use dash_select::coordinator::{
+    ApiReply, ApiRequest, Leader, SelectionJob, StdioServer, WirePlan, WireProblem,
+};
+use dash_select::objectives::{LinearRegressionObjective, Objective};
+use dash_select::oracle::CountingObjective;
+use std::sync::Arc;
+
+/// Drive one request line through the codec and decode the reply frame.
+fn roundtrip(server: &mut StdioServer, id: u64, line: &str) -> ApiReply {
+    let reply_line = server.line(line);
+    let (got_id, reply) = ApiReply::decode(&reply_line)
+        .unwrap_or_else(|e| panic!("undecodable reply {reply_line}: {e}"));
+    assert_eq!(got_id, id, "reply id must echo the request id");
+    reply
+}
+
+/// Step a driven lane to termination over the wire, then finish it.
+fn drive_over_wire(server: &mut StdioServer, session: usize) -> dash_select::algorithms::SelectionResult {
+    let mut id = 100;
+    for _ in 0..200 {
+        id += 1;
+        let line = ApiRequest::Step { session }.encode(id);
+        match roundtrip(server, id, &line) {
+            ApiReply::Stepped { done, .. } => {
+                if done {
+                    let fin = ApiRequest::Finish { session }.encode(id + 1);
+                    match roundtrip(server, id + 1, &fin) {
+                        ApiReply::Finished { result } => return result,
+                        other => panic!("unexpected finish reply {other:?}"),
+                    }
+                }
+            }
+            other => panic!("unexpected step reply {other:?}"),
+        }
+    }
+    panic!("driver did not terminate within 200 wire steps");
+}
+
+#[test]
+fn stdio_driven_session_is_byte_identical_to_solo_run() {
+    let mut server = StdioServer::new(Leader::with_threads(2));
+
+    // open a driven greedy lane purely over the wire
+    let open = r#"{"v":1,"id":1,"op":"open","driven":true,"problem":{"dataset":"d1","k":8,"seed":3},"plan":{"algo":"greedy"}}"#;
+    let session = match roundtrip(&mut server, 1, open) {
+        ApiReply::Opened { session } => session,
+        other => panic!("unexpected open reply {other:?}"),
+    };
+    assert_eq!(session, 0);
+
+    // the same specs, resolved in-process, run solo on the same leader
+    let problem = WireProblem::new("d1", 8, 3).resolve().unwrap();
+    let plan = WirePlan::new("greedy").resolve().unwrap();
+    let job = SelectionJob::new(&problem, &plan);
+    let solo = server.leader().run(&job).unwrap().result;
+
+    let served = drive_over_wire(&mut server, session);
+    assert_eq!(served.set, solo.set, "selections diverged across the wire");
+    assert_eq!(
+        served.value.to_bits(),
+        solo.value.to_bits(),
+        "value not byte-identical across the wire"
+    );
+    assert_eq!(served.queries, solo.queries, "query accounting diverged");
+    assert_eq!(served.rounds, solo.rounds);
+    assert_eq!(served.algorithm, solo.algorithm);
+    // the history rode the wire losslessly (wall-clock aside, which is
+    // measured per run and compared per field here)
+    assert_eq!(served.history.len(), solo.history.len());
+    for (a, b) in served.history.iter().zip(&solo.history) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+        assert_eq!(a.queries, b.queries);
+        assert_eq!(a.set_size, b.set_size);
+    }
+
+    // finish is idempotent over the wire, and `list` reports the frozen lane
+    let fin = ApiRequest::Finish { session }.encode(900);
+    match roundtrip(&mut server, 900, &fin) {
+        ApiReply::Finished { result } => assert_eq!(result.set, served.set),
+        other => panic!("unexpected {other:?}"),
+    }
+    match roundtrip(&mut server, 901, &ApiRequest::List.encode(901)) {
+        ApiReply::Sessions { sessions } => {
+            assert_eq!(sessions.len(), 1);
+            assert!(sessions[0].finished);
+            assert!(sessions[0].driven);
+            assert_eq!(sessions[0].set_len, served.set.len());
+            assert_eq!(sessions[0].generation, served.set.len() as u64);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn stdio_adhoc_sweeps_match_in_process_sessions_bitwise() {
+    let mut server = StdioServer::new(Leader::with_threads(2));
+    let open = r#"{"v":1,"id":1,"op":"open","driven":false,"problem":{"dataset":"d1","k":8,"seed":3},"plan":{"algo":"topk"}}"#;
+    let session = match roundtrip(&mut server, 1, open) {
+        ApiReply::Opened { session } => session,
+        other => panic!("unexpected open reply {other:?}"),
+    };
+
+    // the reference: an in-process session over the identical objective and
+    // the same shared engine
+    let problem = WireProblem::new("d1", 8, 3).resolve().unwrap();
+    let obj = LinearRegressionObjective::new(&problem.dataset);
+    let cand: Vec<usize> = (0..obj.n()).collect();
+    let mut reference = SelectionSession::new(&obj, server.leader().executor().clone());
+    let expect = reference.sweep(&cand).gains;
+
+    let sweep = ApiRequest::Sweep { session, candidates: cand.clone() }.encode(2);
+    match roundtrip(&mut server, 2, &sweep) {
+        ApiReply::Swept { gains, generation, fresh } => {
+            assert_eq!(generation, 0);
+            assert_eq!(fresh, cand.len(), "first sweep is all fresh queries");
+            assert_eq!(gains.len(), expect.len());
+            for (i, (a, b)) in gains.iter().zip(&expect).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "gain {i} diverged across the wire");
+            }
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // grow over the wire with a generation pin, then observe read-your-writes
+    let ins = ApiRequest::Insert { session, item: 5, if_generation: Some(0) }.encode(3);
+    match roundtrip(&mut server, 3, &ins) {
+        ApiReply::Inserted { grew, generation } => {
+            assert!(grew);
+            assert_eq!(generation, 1);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    reference.insert(5);
+    let expect = reference.sweep(&cand).gains;
+    let sweep = ApiRequest::Sweep { session, candidates: cand.clone() }.encode(4);
+    match roundtrip(&mut server, 4, &sweep) {
+        ApiReply::Swept { gains, generation, .. } => {
+            assert_eq!(generation, 1);
+            for (a, b) in gains.iter().zip(&expect) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn stdio_reported_queries_equal_observed_queries() {
+    // an instrumented objective served through the wire codec: the
+    // driver's self-reported query count must equal what the oracle saw
+    let problem = WireProblem::new("d1", 6, 11).resolve().unwrap();
+    let counting = CountingObjective::new(LinearRegressionObjective::new(&problem.dataset));
+    let stats = Arc::clone(&counting.stats);
+
+    let mut server = StdioServer::new(Leader::with_threads(2));
+    let session = server
+        .open_objective(
+            Box::new(counting),
+            Some(Greedy::driver(GreedyConfig { k: 6, ..Default::default() }, "sds_ma")),
+            0,
+            "sds_ma",
+        )
+        .unwrap();
+    let served = drive_over_wire(&mut server, session);
+    assert_eq!(
+        served.queries,
+        stats.total_oracle_queries(),
+        "reported queries must equal oracle-observed queries through the wire front"
+    );
+    assert!(served.queries > 0);
+
+    // the metrics snapshot agrees with the final state
+    let m = ApiRequest::Metrics { session }.encode(50);
+    match roundtrip(&mut server, 50, &m) {
+        ApiReply::Snapshot { snapshot } => {
+            assert_eq!(snapshot.set, served.set);
+            assert_eq!(snapshot.metrics.inserts, served.set.len());
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}

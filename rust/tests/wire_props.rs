@@ -1,0 +1,396 @@
+//! v1 wire protocol invariants: round-trip property tests over every
+//! `ApiRequest`/`ApiReply` variant (random values → encode → decode →
+//! equal) and the golden-file schema pin (`tests/golden/api_v1.jsonl`) so
+//! an accidental wire break — renamed field, changed framing, reordered
+//! keys — fails CI before any external client notices.
+
+use dash_select::algorithms::{RoundRecord, SelectionResult};
+use dash_select::coordinator::session::{Generation, SessionMetrics, SessionSnapshot};
+use dash_select::coordinator::{
+    ApiReply, ApiRequest, SelectError, SessionInfo, WirePlan, WireProblem,
+};
+use dash_select::util::proptest::{check, Gen};
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+/// Strings that exercise the JSON escaper: quotes, backslashes, control
+/// characters, non-ASCII.
+fn gen_string(g: &mut Gen) -> String {
+    const PALETTE: &[char] =
+        &['a', 'B', '3', '_', '-', ' ', '"', '\\', '\n', '\t', '\u{1}', 'é', 'λ', '→'];
+    let len = g.usize_in(0, 12);
+    (0..len).map(|_| PALETTE[g.usize_in(0, PALETTE.len() - 1)]).collect()
+}
+
+/// Finite f64s across both serialization paths (integral → i64 form,
+/// fractional → shortest round-tripping decimal).
+fn gen_f64(g: &mut Gen) -> f64 {
+    if g.bool() {
+        g.usize_in(0, 1 << 20) as f64 - (1 << 19) as f64
+    } else {
+        g.f64_in(-1e6, 1e6)
+    }
+}
+
+fn gen_u64(g: &mut Gen) -> u64 {
+    g.u64() % 1_000_000
+}
+
+fn gen_opt<T>(g: &mut Gen, f: impl FnOnce(&mut Gen) -> T) -> Option<T> {
+    if g.bool() {
+        Some(f(g))
+    } else {
+        None
+    }
+}
+
+fn gen_problem(g: &mut Gen) -> WireProblem {
+    WireProblem {
+        dataset: gen_string(g),
+        scale: gen_opt(g, gen_string),
+        objective: gen_opt(g, gen_string),
+        beta_sq: gen_opt(g, gen_f64),
+        sigma_sq: gen_opt(g, gen_f64),
+        backend: gen_opt(g, gen_string),
+        k: g.usize_in(0, 5000),
+        seed: gen_u64(g),
+    }
+}
+
+fn gen_plan(g: &mut Gen) -> WirePlan {
+    WirePlan {
+        algo: gen_string(g),
+        epsilon: gen_opt(g, gen_f64),
+        alpha: gen_opt(g, gen_f64),
+        samples: gen_opt(g, |g| g.usize_in(0, 100)),
+        r: gen_opt(g, |g| g.usize_in(0, 100)),
+        max_rounds: gen_opt(g, |g| g.usize_in(0, 10_000)),
+        threads: gen_opt(g, |g| g.usize_in(0, 64)),
+        trials: gen_opt(g, |g| g.usize_in(0, 64)),
+        serial_prefix: gen_opt(g, |g| g.bool()),
+        min_gain: gen_opt(g, gen_f64),
+        opt: gen_opt(g, gen_f64),
+        path_len: gen_opt(g, |g| g.usize_in(0, 200)),
+        lambda_min_ratio: gen_opt(g, gen_f64),
+        max_iters: gen_opt(g, |g| g.usize_in(0, 1000)),
+        tol: gen_opt(g, gen_f64),
+    }
+}
+
+fn gen_request(g: &mut Gen) -> ApiRequest {
+    let session = g.usize_in(0, 7);
+    match g.usize_in(0, 6) {
+        0 => ApiRequest::Open { problem: gen_problem(g), plan: gen_plan(g), driven: g.bool() },
+        1 => ApiRequest::List,
+        2 => {
+            let n = g.usize_in(0, g.size());
+            ApiRequest::Sweep {
+                session,
+                candidates: (0..n).map(|_| g.usize_in(0, 10_000)).collect(),
+            }
+        }
+        3 => ApiRequest::Insert {
+            session,
+            item: g.usize_in(0, 10_000),
+            if_generation: gen_opt(g, gen_u64),
+        },
+        4 => ApiRequest::Step { session },
+        5 => ApiRequest::Finish { session },
+        _ => ApiRequest::Metrics { session },
+    }
+}
+
+fn gen_error(g: &mut Gen) -> SelectError {
+    match g.usize_in(0, 8) {
+        0 => SelectError::InvalidSpec(gen_string(g)),
+        1 => SelectError::UnknownSession(g.usize_in(0, 1000)),
+        2 => SelectError::StaleGeneration { pinned: gen_u64(g), actual: gen_u64(g) },
+        3 => SelectError::Backpressure(gen_string(g)),
+        4 => SelectError::Backend(gen_string(g)),
+        5 => SelectError::Rejected(gen_string(g)),
+        6 => SelectError::Disconnected,
+        7 => SelectError::ClientPanic(gen_string(g)),
+        _ => SelectError::Protocol(gen_string(g)),
+    }
+}
+
+fn gen_result(g: &mut Gen) -> SelectionResult {
+    let rounds = g.usize_in(0, 6);
+    SelectionResult {
+        algorithm: gen_string(g),
+        set: (0..g.usize_in(0, 10)).map(|_| g.usize_in(0, 10_000)).collect(),
+        value: gen_f64(g),
+        rounds,
+        queries: g.usize_in(0, 1 << 20),
+        wall_s: g.f64_in(0.0, 100.0),
+        history: (0..rounds)
+            .map(|r| RoundRecord {
+                round: r + 1,
+                value: gen_f64(g),
+                queries: g.usize_in(0, 1 << 16),
+                wall_s: g.f64_in(0.0, 10.0),
+                set_size: g.usize_in(0, 100),
+            })
+            .collect(),
+        hit_iteration_cap: g.bool(),
+    }
+}
+
+fn gen_snapshot(g: &mut Gen) -> SessionSnapshot {
+    SessionSnapshot {
+        generation: Generation(gen_u64(g)),
+        set: (0..g.usize_in(0, 10)).map(|_| g.usize_in(0, 10_000)).collect(),
+        value: gen_f64(g),
+        metrics: SessionMetrics {
+            sweeps: g.usize_in(0, 1000),
+            swept_candidates: g.usize_in(0, 100_000),
+            cache_hits: g.usize_in(0, 100_000),
+            fresh_queries: g.usize_in(0, 100_000),
+            inserts: g.usize_in(0, 1000),
+            sample_rounds: g.usize_in(0, 1000),
+            prefix_rounds: g.usize_in(0, 1000),
+            fork_sweeps: g.usize_in(0, 1000),
+        },
+    }
+}
+
+fn gen_reply(g: &mut Gen) -> ApiReply {
+    match g.usize_in(0, 7) {
+        0 => ApiReply::Opened { session: g.usize_in(0, 100) },
+        1 => ApiReply::Sessions {
+            sessions: (0..g.usize_in(0, 4))
+                .map(|i| SessionInfo {
+                    session: i,
+                    algorithm: gen_string(g),
+                    driven: g.bool(),
+                    finished: g.bool(),
+                    generation: gen_u64(g),
+                    set_len: g.usize_in(0, 100),
+                })
+                .collect(),
+        },
+        2 => ApiReply::Swept {
+            gains: (0..g.usize_in(0, g.size())).map(|_| gen_f64(g)).collect(),
+            generation: gen_u64(g),
+            fresh: g.usize_in(0, 10_000),
+        },
+        3 => ApiReply::Inserted { grew: g.bool(), generation: gen_u64(g) },
+        4 => ApiReply::Stepped { done: g.bool(), generation: gen_u64(g) },
+        5 => ApiReply::Finished { result: gen_result(g) },
+        6 => ApiReply::Snapshot { snapshot: gen_snapshot(g) },
+        _ => ApiReply::Error { error: gen_error(g) },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Round-trip properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn request_frames_round_trip_for_random_values() {
+    check("request round trip", 256, |g| {
+        let req = gen_request(g);
+        let id = gen_u64(g);
+        let line = req.encode(id);
+        if line.contains('\n') {
+            return Err(format!("frame contains a newline: {line}"));
+        }
+        let (id2, back) = ApiRequest::decode(&line).map_err(|e| format!("{e} in {line}"))?;
+        if id2 != id {
+            return Err(format!("id {id} -> {id2}"));
+        }
+        if back != req {
+            return Err(format!("{req:?} -> {line} -> {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reply_frames_round_trip_for_random_values() {
+    check("reply round trip", 256, |g| {
+        let reply = gen_reply(g);
+        let id = gen_u64(g);
+        let line = reply.encode(id);
+        if line.contains('\n') {
+            return Err(format!("frame contains a newline: {line}"));
+        }
+        let (id2, back) = ApiReply::decode(&line).map_err(|e| format!("{e} in {line}"))?;
+        if id2 != id {
+            return Err(format!("id {id} -> {id2}"));
+        }
+        if back != reply {
+            return Err(format!("{reply:?} -> {line} -> {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gains_round_trip_bit_exactly() {
+    // f64 payloads survive the wire to the bit: integral values take the
+    // integer form, everything else the shortest round-tripping decimal
+    check("gain bits", 128, |g| {
+        let gains: Vec<f64> = (0..g.usize_in(1, 32)).map(|_| gen_f64(g)).collect();
+        let reply = ApiReply::Swept { gains: gains.clone(), generation: 0, fresh: 0 };
+        let (_, back) = ApiReply::decode(&reply.encode(0)).map_err(|e| e.to_string())?;
+        match back {
+            ApiReply::Swept { gains: decoded, .. } => {
+                for (a, b) in gains.iter().zip(&decoded) {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("{a} ({:#x}) != {b} ({:#x})", a.to_bits(), b.to_bits()));
+                    }
+                }
+                Ok(())
+            }
+            other => Err(format!("unexpected {other:?}")),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Golden schema pin
+// ---------------------------------------------------------------------------
+
+/// The typed frames corresponding 1:1 to the non-comment lines of
+/// `tests/golden/api_v1.jsonl`, with their frame ids.
+fn golden_requests() -> Vec<(u64, ApiRequest)> {
+    let mut problem = WireProblem::new("d1", 8, 3);
+    problem.scale = Some("quick".into());
+    problem.objective = Some("lreg".into());
+    problem.backend = Some("native".into());
+    vec![
+        (1, ApiRequest::Open { problem, plan: WirePlan::new("greedy"), driven: true }),
+        (2, ApiRequest::List),
+        (3, ApiRequest::Sweep { session: 0, candidates: vec![0, 2, 5] }),
+        (4, ApiRequest::Insert { session: 0, item: 7, if_generation: Some(2) }),
+        (5, ApiRequest::Insert { session: 1, item: 3, if_generation: None }),
+        (6, ApiRequest::Step { session: 0 }),
+        (7, ApiRequest::Finish { session: 0 }),
+        (8, ApiRequest::Metrics { session: 0 }),
+    ]
+}
+
+fn golden_replies() -> Vec<(u64, ApiReply)> {
+    vec![
+        (1, ApiReply::Opened { session: 0 }),
+        (
+            2,
+            ApiReply::Sessions {
+                sessions: vec![SessionInfo {
+                    session: 0,
+                    algorithm: "sds_ma".into(),
+                    driven: true,
+                    finished: false,
+                    generation: 2,
+                    set_len: 2,
+                }],
+            },
+        ),
+        (3, ApiReply::Swept { gains: vec![0.5, 1.25], generation: 2, fresh: 3 }),
+        (4, ApiReply::Inserted { grew: true, generation: 3 }),
+        (6, ApiReply::Stepped { done: false, generation: 1 }),
+        (
+            7,
+            ApiReply::Finished {
+                result: SelectionResult {
+                    algorithm: "sds_ma".into(),
+                    set: vec![3, 1],
+                    value: 1.5,
+                    rounds: 2,
+                    queries: 40,
+                    wall_s: 0.25,
+                    history: vec![RoundRecord {
+                        round: 1,
+                        value: 0.75,
+                        queries: 20,
+                        wall_s: 0.125,
+                        set_size: 1,
+                    }],
+                    hit_iteration_cap: false,
+                },
+            },
+        ),
+        (
+            8,
+            ApiReply::Snapshot {
+                snapshot: SessionSnapshot {
+                    generation: Generation(2),
+                    set: vec![4, 7],
+                    value: 1.25,
+                    metrics: SessionMetrics {
+                        sweeps: 2,
+                        swept_candidates: 20,
+                        cache_hits: 1,
+                        fresh_queries: 19,
+                        inserts: 2,
+                        sample_rounds: 0,
+                        prefix_rounds: 0,
+                        fork_sweeps: 0,
+                    },
+                },
+            },
+        ),
+        (
+            9,
+            ApiReply::Error { error: SelectError::StaleGeneration { pinned: 3, actual: 4 } },
+        ),
+        (
+            10,
+            ApiReply::Error {
+                error: SelectError::Rejected("session has no driver to step".into()),
+            },
+        ),
+    ]
+}
+
+fn golden_lines() -> Vec<String> {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/api_v1.jsonl");
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {path:?}: {e}"))
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .map(|l| l.to_string())
+        .collect()
+}
+
+#[test]
+fn golden_file_pins_the_wire_schema() {
+    let requests = golden_requests();
+    let replies = golden_replies();
+    let lines = golden_lines();
+    assert_eq!(
+        lines.len(),
+        requests.len() + replies.len(),
+        "golden file must hold one line per frame"
+    );
+    let (req_lines, reply_lines) = lines.split_at(requests.len());
+
+    for ((id, req), line) in requests.iter().zip(req_lines) {
+        assert_eq!(
+            &req.encode(*id),
+            line,
+            "request schema drift for op '{}' — if intentional, bump the \
+             protocol and regenerate tests/golden/api_v1.jsonl",
+            req.op()
+        );
+        let (got_id, got) = ApiRequest::decode(line).expect("golden request decodes");
+        assert_eq!(got_id, *id);
+        assert_eq!(&got, req);
+    }
+    for ((id, reply), line) in replies.iter().zip(reply_lines) {
+        assert_eq!(
+            &reply.encode(*id),
+            line,
+            "reply schema drift for op '{}' — if intentional, bump the \
+             protocol and regenerate tests/golden/api_v1.jsonl",
+            reply.op()
+        );
+        let (got_id, got) = ApiReply::decode(line).expect("golden reply decodes");
+        assert_eq!(got_id, *id);
+        assert_eq!(&got, reply);
+    }
+}
