@@ -15,7 +15,7 @@ use dash_select::bench::Bench;
 use dash_select::coordinator::session::SelectionSession;
 use dash_select::coordinator::{
     AlgorithmChoice, ApiReply, ApiRequest, Backend, Leader, ObjectiveChoice, SelectionJob,
-    ServeConfig, ServeSpec,
+    ServeConfig, ServeSpec, SessionStore, StdioServer, WirePlan, WireProblem,
 };
 use dash_select::data::synthetic;
 use dash_select::objectives::{
@@ -310,6 +310,53 @@ fn main() {
     let api_frames_per_s =
         if api_round_trip_s > 0.0 { 1.0 / api_round_trip_s } else { 0.0 };
 
+    // ---- session lifecycle: open/close churn + evict/restore latency ----
+    // churn: open_spec + close through an 8-slot budget — the admission
+    // and retirement cost of one wire session (the dataset build is
+    // amortized by the front's cache, so this isolates lifecycle cost)
+    let lc_problem = WireProblem::new("d1", 5, 3);
+    let lc_plan = WirePlan::new("greedy");
+    let mut churn_server = StdioServer::new(Leader::with_threads(1)).with_max_sessions(8);
+    let warm = churn_server.open_spec(&lc_problem, &lc_plan, false, None).expect("bench open");
+    churn_server.close_session(warm).expect("bench close");
+    let churn_cycles = if fast { 16usize } else { 64 };
+    let churn_batch_s = bench
+        .run("lifecycle open+close churn (8-slot budget)", || {
+            for _ in 0..churn_cycles {
+                let s = churn_server
+                    .open_spec(&lc_problem, &lc_plan, false, None)
+                    .expect("bench open");
+                churn_server.close_session(s).expect("bench close");
+            }
+        })
+        .mean_s;
+    let open_close_s = churn_batch_s / churn_cycles as f64;
+    let opens_per_s = if open_close_s > 0.0 { 1.0 / open_close_s } else { 0.0 };
+
+    // evict/restore: a one-slot budget over a session store makes every
+    // touch of the cold session one full snapshot→persist→restore round
+    // trip (restoring it evicts the other session)
+    let lc_dir =
+        std::env::temp_dir().join(format!("dash-bench-lifecycle-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&lc_dir);
+    let mut swap_server = StdioServer::new(Leader::with_threads(1))
+        .with_max_sessions(1)
+        .with_store(SessionStore::open(&lc_dir).expect("bench store"));
+    let swap_a = swap_server.open_spec(&lc_problem, &lc_plan, false, None).expect("bench open");
+    let swap_b = swap_server.open_spec(&lc_problem, &lc_plan, false, None).expect("bench open");
+    let mut cold = swap_a;
+    let evict_restore_s = bench
+        .run("lifecycle evict+restore swap (one-slot budget)", || {
+            match swap_server.handle(ApiRequest::Metrics { session: cold }).expect("bench swap") {
+                ApiReply::Snapshot { .. } => {}
+                other => panic!("unexpected {other:?}"),
+            }
+            cold = if cold == swap_a { swap_b } else { swap_a };
+        })
+        .mean_s;
+    let lifecycle_restores = swap_server.restores;
+    let _ = std::fs::remove_dir_all(&lc_dir);
+
     // ---- report ----
     println!();
     let mut obj_entries = Vec::new();
@@ -386,6 +433,11 @@ fn main() {
         api_req_line.len(),
         api_reply_line.len()
     );
+    println!(
+        "lifecycle: open+close {open_close_s:.6}s ({opens_per_s:.0} opens/s through an \
+         8-slot budget); evict+restore swap {evict_restore_s:.6}s \
+         ({lifecycle_restores} restores measured)"
+    );
     let doc = Json::obj(vec![
         ("suite", "executor".into()),
         ("threads", threads.into()),
@@ -436,6 +488,16 @@ fn main() {
                 ("frames_per_s", api_frames_per_s.into()),
                 ("request_bytes", api_req_line.len().into()),
                 ("reply_bytes", api_reply_line.len().into()),
+            ]),
+        ),
+        (
+            "lifecycle",
+            Json::obj(vec![
+                ("churn_cycles", churn_cycles.into()),
+                ("open_close_s", open_close_s.into()),
+                ("opens_per_s", opens_per_s.into()),
+                ("evict_restore_s", evict_restore_s.into()),
+                ("restores", lifecycle_restores.into()),
             ]),
         ),
         ("reports", Json::Arr(reports)),

@@ -276,8 +276,10 @@ impl SessionDriver for DashDriver {
                 let opt = self.guesses[gi];
                 let mut guess_rng =
                     Pcg64::seed_from(crate::rng::split_seed(rng.next_u64(), gi as u64));
-                let mut child =
-                    SelectionSession::new(session.objective(), session.executor().clone());
+                let mut child = SelectionSession::with_handle(
+                    session.objective_handle(),
+                    session.executor().clone(),
+                );
                 let res = drive(
                     Box::new(GuessDriver::new(self.params_for(opt), self.label)),
                     &mut child,

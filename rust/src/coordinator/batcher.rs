@@ -15,13 +15,32 @@
 //!
 //! Telemetry (`flushes`, the last-flush deadline stamp) is kept in atomics;
 //! the hot submit/flush path takes no lock beyond the pending queue itself.
+//!
+//! Failure containment: the flush function is caller-supplied code. If it
+//! panics, or returns the wrong number of results for the batch it was
+//! handed, every submitter waiting on that batch gets a typed
+//! [`SelectError`] reply instead of a hung channel or a silently dropped
+//! answer — and the queue itself stays serviceable for the next batch
+//! (poisoned internal locks are recovered, since every guarded region
+//! leaves the data structurally valid).
 
+use crate::coordinator::api::SelectError;
 use crate::objectives::ObjectiveState;
 use crate::oracle::{BatchExecutor, GainCache};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
+
+/// Lock with poison recovery: a panic in a previous holder (the
+/// caller-supplied flush function, most likely) leaves the data intact —
+/// every guarded region here either fully completes or mutates nothing —
+/// so the queue keeps serving rather than cascading the panic to every
+/// later submitter.
+fn recover<T>(lock: &Mutex<T>) -> MutexGuard<'_, T> {
+    lock.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Configuration for [`BatchQueue`].
 #[derive(Debug, Clone)]
@@ -40,7 +59,7 @@ impl Default for BatchQueueConfig {
 
 struct Pending {
     item: usize,
-    reply: Sender<f64>,
+    reply: Sender<Result<f64, SelectError>>,
 }
 
 /// The served state behind a [`BatchQueue::for_state`] queue. Lock order
@@ -111,8 +130,8 @@ impl BatchQueue {
         let served_for_flush = Arc::clone(&served);
         let mut queue = Self::new(cfg, move |items: &[usize]| {
             // lock order: state → cache (matches `insert`)
-            let st = served_for_flush.state.lock().unwrap();
-            let mut memo = served_for_flush.cache.lock().unwrap();
+            let st = recover(&served_for_flush.state);
+            let mut memo = recover(&served_for_flush.cache);
             let (vals, _fresh) = exec.cached_gains(&mut memo, &**st, items);
             vals
         });
@@ -140,9 +159,9 @@ impl BatchQueue {
         // answer the backlog against the state it was submitted under
         self.flush();
         // lock order: state → cache (matches the flush closure)
-        let mut st = served.state.lock().unwrap();
+        let mut st = recover(&served.state);
         st.insert(a);
-        served.cache.lock().unwrap().invalidate();
+        recover(&served.cache).invalidate();
         served.generation.fetch_add(1, Ordering::Relaxed) + 1
     }
 
@@ -159,7 +178,7 @@ impl BatchQueue {
         self.served
             .as_ref()
             .map(|s| {
-                let c = s.cache.lock().unwrap();
+                let c = recover(&s.cache);
                 (c.hits, c.misses)
             })
             .unwrap_or((0, 0))
@@ -179,10 +198,17 @@ impl BatchQueue {
     /// returns its gain. Deadline-based flushing happens opportunistically
     /// on submit (no background thread needed for the synchronous callers
     /// this library has).
-    pub fn submit(&self, item: usize) -> f64 {
-        let (tx, rx): (Sender<f64>, Receiver<f64>) = channel();
+    ///
+    /// A panicking flush function surfaces as
+    /// [`SelectError::ClientPanic`]; a flush function that returns the
+    /// wrong number of results for its batch surfaces as
+    /// [`SelectError::Backend`]. Either way every waiter on that batch is
+    /// answered and the queue keeps serving.
+    pub fn submit(&self, item: usize) -> Result<f64, SelectError> {
+        let (tx, rx): (Sender<Result<f64, SelectError>>, Receiver<Result<f64, SelectError>>) =
+            channel();
         let should_flush = {
-            let mut q = self.queue.lock().unwrap();
+            let mut q = recover(&self.queue);
             q.push(Pending { item, reply: tx });
             q.len() >= self.cfg.max_batch || self.deadline_expired()
         };
@@ -196,25 +222,54 @@ impl BatchQueue {
             Ok(v) => v,
             Err(_) => {
                 self.flush();
-                rx.recv().expect("batch flush must answer")
+                rx.recv().unwrap_or_else(|_| {
+                    Err(SelectError::Backend("batch flush dropped a reply".into()))
+                })
             }
         }
     }
 
     /// Submit many candidates at once (bypasses the queue when the batch is
-    /// already full-size).
-    pub fn submit_many(&self, items: &[usize]) -> Vec<f64> {
+    /// already full-size). Fails as a unit: one flush error fails the
+    /// whole call.
+    pub fn submit_many(&self, items: &[usize]) -> Result<Vec<f64>, SelectError> {
         if items.len() >= self.cfg.max_batch {
             self.flushes.fetch_add(1, Ordering::Relaxed);
-            return (self.flush_fn)(items);
+            return Self::evaluate(&self.flush_fn, items);
         }
         items.iter().map(|&i| self.submit(i)).collect()
     }
 
-    /// Drain and evaluate the queue.
+    /// Run the flush function over one batch, containing panics and
+    /// validating the result length against the batch it was handed.
+    fn evaluate(
+        flush_fn: &Arc<dyn Fn(&[usize]) -> Vec<f64> + Send + Sync>,
+        items: &[usize],
+    ) -> Result<Vec<f64>, SelectError> {
+        let results = catch_unwind(AssertUnwindSafe(|| flush_fn(items))).map_err(|payload| {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".to_string());
+            SelectError::ClientPanic(msg)
+        })?;
+        if results.len() != items.len() {
+            return Err(SelectError::Backend(format!(
+                "batch flush returned {} results for {} items",
+                results.len(),
+                items.len()
+            )));
+        }
+        Ok(results)
+    }
+
+    /// Drain and evaluate the queue. Every drained submitter is answered:
+    /// with its gain on success, or with the batch's typed error when the
+    /// flush function panicked or returned a short/long result vector.
     pub fn flush(&self) {
         let pending: Vec<Pending> = {
-            let mut q = self.queue.lock().unwrap();
+            let mut q = recover(&self.queue);
             std::mem::take(&mut *q)
         };
         if pending.is_empty() {
@@ -223,10 +278,17 @@ impl BatchQueue {
         self.last_flush_nanos.store(self.nanos_since_epoch(), Ordering::Relaxed);
         self.flushes.fetch_add(1, Ordering::Relaxed);
         let items: Vec<usize> = pending.iter().map(|p| p.item).collect();
-        let results = (self.flush_fn)(&items);
-        debug_assert_eq!(results.len(), items.len());
-        for (p, v) in pending.into_iter().zip(results) {
-            let _ = p.reply.send(v);
+        match Self::evaluate(&self.flush_fn, &items) {
+            Ok(results) => {
+                for (p, v) in pending.into_iter().zip(results) {
+                    let _ = p.reply.send(Ok(v));
+                }
+            }
+            Err(e) => {
+                for p in pending {
+                    let _ = p.reply.send(Err(e.clone()));
+                }
+            }
         }
     }
 
@@ -235,7 +297,7 @@ impl BatchQueue {
     }
 
     pub fn queued(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        recover(&self.queue).len()
     }
 }
 
@@ -256,7 +318,7 @@ mod tests {
                 items.iter().map(|&i| i as f64 * 2.0).collect()
             },
         );
-        let out = q.submit_many(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let out = q.submit_many(&[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
         assert_eq!(out, vec![2.0, 4.0, 6.0, 8.0, 10.0, 12.0, 14.0, 16.0]);
         // full-size batches bypass: exactly one flush for 8 >= max_batch
         assert_eq!(calls.load(Ordering::SeqCst), 1);
@@ -268,8 +330,8 @@ mod tests {
             BatchQueueConfig { max_batch: 100, max_wait: Duration::from_millis(0) },
             |items| items.iter().map(|&i| i as f64 + 0.5).collect(),
         );
-        assert_eq!(q.submit(7), 7.5);
-        assert_eq!(q.submit(9), 9.5);
+        assert_eq!(q.submit(7).unwrap(), 7.5);
+        assert_eq!(q.submit(9).unwrap(), 9.5);
         assert!(q.flush_count() >= 2);
         assert_eq!(q.queued(), 0);
     }
@@ -287,7 +349,7 @@ mod tests {
         ));
         let pool = ThreadPool::new(4);
         let q2 = Arc::clone(&q);
-        let results = pool.parallel_map(64, move |i| q2.submit(i));
+        let results = pool.parallel_map(64, move |i| q2.submit(i).unwrap());
         for (i, v) in results.iter().enumerate() {
             assert_eq!(*v, (i * i) as f64, "item {i}");
         }
@@ -309,7 +371,7 @@ mod tests {
             obj.n(),
         );
         // first wave: every candidate is a miss
-        let out = q.submit_many(&(0..20).collect::<Vec<_>>());
+        let out = q.submit_many(&(0..20).collect::<Vec<_>>()).unwrap();
         for (o, e) in out.iter().zip(&expected) {
             assert!((o - e).abs() < 1e-14);
         }
@@ -317,7 +379,7 @@ mod tests {
         assert_eq!(misses_after_first, 20);
         // second wave over the same state generation: all hits, no new
         // oracle work
-        let again = q.submit_many(&[3, 7, 11]);
+        let again = q.submit_many(&[3, 7, 11]).unwrap();
         assert!((again[0] - expected[3]).abs() < 1e-14);
         let (hits, misses) = q.cache_stats();
         assert_eq!(misses, 20, "repeat requests must not re-query");
@@ -338,11 +400,11 @@ mod tests {
         );
         assert_eq!(q.generation(), 0);
         let all: Vec<usize> = (0..obj.n()).collect();
-        let before = q.submit_many(&all);
+        let before = q.submit_many(&all).unwrap();
         assert_eq!(before, obj.empty_state().gains(&all));
         // grow the served state: the SAME queue must answer for S = {4}
         assert_eq!(q.insert(4), 1);
-        let after = q.submit_many(&all);
+        let after = q.submit_many(&all).unwrap();
         let expected = obj.state_for(&[4]).gains(&all);
         for (a, e) in after.iter().zip(&expected) {
             assert!((a - e).abs() < 1e-14, "stale-generation answer served");
@@ -368,5 +430,69 @@ mod tests {
         });
         q.flush();
         assert_eq!(q.flush_count(), 0);
+    }
+
+    #[test]
+    fn short_flush_results_fail_every_waiter_typed() {
+        // flush function drops the last result on its first batch, then
+        // behaves: waiters on the bad batch must all get a typed Backend
+        // error (not a hang, not a silently missing reply), and the queue
+        // must keep serving afterwards.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&calls);
+        let q = BatchQueue::new(
+            BatchQueueConfig { max_batch: 100, max_wait: Duration::from_millis(0) },
+            move |items| {
+                let first = c2.fetch_add(1, Ordering::SeqCst) == 0;
+                let keep = if first { items.len() - 1 } else { items.len() };
+                items.iter().take(keep).map(|&i| i as f64).collect()
+            },
+        );
+        let err = q.submit(5).unwrap_err();
+        match &err {
+            SelectError::Backend(m) => {
+                assert!(m.contains("0 results for 1 items"), "got: {m}")
+            }
+            other => panic!("expected Backend, got {other:?}"),
+        }
+        assert_eq!(q.queued(), 0, "failed batch must still drain");
+        assert_eq!(q.submit(5).unwrap(), 5.0, "queue must keep serving");
+        // the full-size bypass path validates lengths too
+        let calls2 = Arc::new(AtomicUsize::new(0));
+        let c3 = Arc::clone(&calls2);
+        let q2 = BatchQueue::new(
+            BatchQueueConfig { max_batch: 2, max_wait: Duration::from_secs(60) },
+            move |_items| {
+                c3.fetch_add(1, Ordering::SeqCst);
+                vec![1.0] // always short for a 2+ batch
+            },
+        );
+        assert!(matches!(q2.submit_many(&[0, 1, 2]), Err(SelectError::Backend(_))));
+        assert_eq!(calls2.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn panicking_flush_is_contained_as_client_panic() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&calls);
+        let q = BatchQueue::new(
+            BatchQueueConfig { max_batch: 100, max_wait: Duration::from_millis(0) },
+            move |items| {
+                if c2.fetch_add(1, Ordering::SeqCst) == 0 {
+                    panic!("flush backend fell over");
+                }
+                items.iter().map(|&i| i as f64).collect()
+            },
+        );
+        let err = q.submit(3).unwrap_err();
+        match &err {
+            SelectError::ClientPanic(m) => {
+                assert!(m.contains("fell over"), "panic message must ride along: {m}")
+            }
+            other => panic!("expected ClientPanic, got {other:?}"),
+        }
+        // the panic must not poison the queue: later submits still work
+        assert_eq!(q.submit(4).unwrap(), 4.0);
+        assert_eq!(q.queued(), 0);
     }
 }

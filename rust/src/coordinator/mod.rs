@@ -34,6 +34,7 @@ mod leader;
 mod metrics;
 pub mod serve;
 pub mod session;
+pub mod store;
 pub mod wire;
 
 pub use api::{
@@ -50,10 +51,11 @@ pub use serve::{
     SessionServer, SweptGains,
 };
 pub use session::{
-    drive, Generation, SelectionSession, SessionDriver, SessionMetrics, SessionSnapshot,
-    SessionSweep, StepOutcome,
+    drive, Generation, ObjectiveHandle, SelectionSession, SessionDriver, SessionMetrics,
+    SessionSnapshot, SessionSweep, StepOutcome,
 };
+pub use store::{SessionRecord, SessionStore};
 pub use wire::{
     ApiReply, ApiRequest, DatasetCache, SessionInfo, StdioServer, WirePlan, WireProblem,
-    MAX_WIRE_INT, WIRE_VERSION,
+    DEFAULT_TENANT, MAX_WIRE_INT, WIRE_VERSION,
 };

@@ -71,13 +71,14 @@
 use crate::algorithms::SelectionResult;
 use crate::coordinator::api::SelectError;
 use crate::coordinator::session::{
-    SelectionSession, SessionDriver, SessionSnapshot, StepOutcome,
+    ObjectiveHandle, SelectionSession, SessionDriver, SessionSnapshot, StepOutcome,
 };
 use crate::coordinator::wire::{ApiReply, ApiRequest};
 use crate::objectives::Objective;
 use crate::oracle::BatchExecutor;
 use crate::rng::Pcg64;
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
 
 /// Index of one session inside a [`SessionServer`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -104,6 +105,10 @@ pub enum ServeRequest {
     Finish,
     /// Point-in-time [`SessionSnapshot`] of the session.
     Metrics,
+    /// Close the session: the lane (session state, driver, and the lane's
+    /// share of the objective) is dropped and its slot freed for reuse.
+    /// Later requests against the id are [`SelectError::UnknownSession`].
+    Close,
 }
 
 /// Reply to one [`ServeRequest`].
@@ -120,6 +125,8 @@ pub enum ServeReply {
     Step { done: bool, generation: u64 },
     Finish { result: SelectionResult },
     Metrics { snapshot: SessionSnapshot },
+    /// The session was closed and its slot freed.
+    Closed { session: usize },
 }
 
 /// One queued request plus its reply slot. Serving failures are the
@@ -163,6 +170,8 @@ pub struct ServeMetrics {
     pub finishes: usize,
     /// `Metrics` requests answered
     pub metrics_reads: usize,
+    /// `Close` requests applied (lanes dropped, slots freed)
+    pub closes: usize,
     /// requests answered with [`SelectError::Rejected`]
     pub rejected: usize,
     /// serving turns (batches drained)
@@ -205,21 +214,34 @@ struct Lane<'o> {
 /// The serving actor: owns every lane (session + optional driver + rng)
 /// and services queued requests in deterministic turns. See the module
 /// docs for the two-phase turn order and the generation contract.
+///
+/// Lanes live in slots: [`SessionServer::close`] (or a
+/// [`ServeRequest::Close`]) drops a lane — including its share of the
+/// objective, for lanes opened through the `Arc`-owning constructors —
+/// and pushes the slot onto a free list, so an open/close churn reuses
+/// slots instead of growing the lane table. Slot ids are therefore
+/// reused after close, like file descriptors.
 #[derive(Default)]
 pub struct SessionServer<'o> {
-    lanes: Vec<Lane<'o>>,
+    lanes: Vec<Option<Lane<'o>>>,
+    free: Vec<usize>,
     pending: Vec<Envelope>,
     pub metrics: ServeMetrics,
 }
 
 impl<'o> SessionServer<'o> {
     pub fn new() -> Self {
-        SessionServer { lanes: Vec::new(), pending: Vec::new(), metrics: ServeMetrics::default() }
+        SessionServer {
+            lanes: Vec::new(),
+            free: Vec::new(),
+            pending: Vec::new(),
+            metrics: ServeMetrics::default(),
+        }
     }
 
     /// Open an ad-hoc session (raw sweep/insert traffic, no driver).
     pub fn open(&mut self, obj: &'o dyn Objective, exec: BatchExecutor) -> SessionId {
-        self.open_lane(obj, exec, None, 0)
+        self.open_lane(ObjectiveHandle::Borrowed(obj), exec, None, 0)
     }
 
     /// Open a session with an attached stepwise driver; `Step` requests
@@ -232,34 +254,102 @@ impl<'o> SessionServer<'o> {
         driver: Box<dyn SessionDriver>,
         seed: u64,
     ) -> SessionId {
-        self.open_lane(obj, exec, Some(driver), seed)
+        self.open_lane(ObjectiveHandle::Borrowed(obj), exec, Some(driver), seed)
+    }
+
+    /// Open an ad-hoc session that co-owns its objective: the `Arc` is
+    /// dropped with the lane on [`SessionServer::close`]. This is the wire
+    /// front's open path — no borrow ties the lane to a caller scope, so
+    /// lanes can come and go for the life of the server.
+    pub fn open_shared(&mut self, obj: Arc<dyn Objective>, exec: BatchExecutor) -> SessionId {
+        self.open_lane(ObjectiveHandle::Shared(obj), exec, None, 0)
+    }
+
+    /// [`SessionServer::open_driven`] with a co-owned objective.
+    pub fn open_driven_shared(
+        &mut self,
+        obj: Arc<dyn Objective>,
+        exec: BatchExecutor,
+        driver: Box<dyn SessionDriver>,
+        seed: u64,
+    ) -> SessionId {
+        self.open_lane(ObjectiveHandle::Shared(obj), exec, Some(driver), seed)
+    }
+
+    /// Reopen a lane from a persisted snapshot: the session state is
+    /// rebuilt by replaying the snapshot's set (byte-identical by the
+    /// insertion-order contract, see [`SelectionSession::restore`]), and a
+    /// persisted final result — for a driven lane that finished before it
+    /// was evicted — freezes the lane exactly as a served `Finish` would
+    /// have left it.
+    pub fn open_restored(
+        &mut self,
+        obj: ObjectiveHandle<'o>,
+        exec: BatchExecutor,
+        snapshot: &SessionSnapshot,
+        result: Option<SelectionResult>,
+    ) -> Result<SessionId, SelectError> {
+        let session = SelectionSession::restore(obj, exec, snapshot)?;
+        let done = result.is_some();
+        Ok(self.install(Lane { session, driver: None, rng: Pcg64::seed_from(0), done, result }))
     }
 
     fn open_lane(
         &mut self,
-        obj: &'o dyn Objective,
+        obj: ObjectiveHandle<'o>,
         exec: BatchExecutor,
         driver: Option<Box<dyn SessionDriver>>,
         seed: u64,
     ) -> SessionId {
-        self.lanes.push(Lane {
-            session: SelectionSession::new(obj, exec),
+        self.install(Lane {
+            session: SelectionSession::with_handle(obj, exec),
             driver,
             rng: Pcg64::seed_from(seed),
             done: false,
             result: None,
-        });
-        SessionId(self.lanes.len() - 1)
+        })
     }
 
-    /// Number of open sessions.
+    fn install(&mut self, lane: Lane<'o>) -> SessionId {
+        match self.free.pop() {
+            Some(slot) => {
+                self.lanes[slot] = Some(lane);
+                SessionId(slot)
+            }
+            None => {
+                self.lanes.push(Some(lane));
+                SessionId(self.lanes.len() - 1)
+            }
+        }
+    }
+
+    /// Close a session now: drop the lane and free its slot. The serving
+    /// equivalent is a [`ServeRequest::Close`], which applies in the write
+    /// phase of a turn; this direct form is for single-owner callers (the
+    /// wire front) that sequence requests themselves.
+    pub fn close(&mut self, id: SessionId) -> Result<(), SelectError> {
+        self.close_slot(id).map(|_| ())
+    }
+
+    fn close_slot(&mut self, id: SessionId) -> Result<ServeReply, SelectError> {
+        let slot = self.lanes.get_mut(id.0).ok_or(SelectError::UnknownSession(id.0))?;
+        if slot.take().is_none() {
+            return Err(SelectError::UnknownSession(id.0));
+        }
+        self.free.push(id.0);
+        self.metrics.closes += 1;
+        Ok(ServeReply::Closed { session: id.0 })
+    }
+
+    /// Number of live (open, un-closed) sessions.
     pub fn sessions(&self) -> usize {
-        self.lanes.len()
+        self.lanes.iter().flatten().count()
     }
 
-    /// Read access to one served session (assertions, snapshots).
+    /// Read access to one served session (assertions, snapshots); `None`
+    /// for unknown or closed ids.
     pub fn session(&self, id: SessionId) -> Option<&SelectionSession<'o>> {
-        self.lanes.get(id.0).map(|l| &l.session)
+        self.lanes.get(id.0).and_then(|l| l.as_ref()).map(|l| &l.session)
     }
 
     /// Requests queued for the next turn.
@@ -268,9 +358,15 @@ impl<'o> SessionServer<'o> {
     }
 
     /// Whether the lane's driver has been finalized (`None` for an unknown
-    /// session) — the wire front's `list` op reads this.
+    /// or closed session) — the wire front's `list` op reads this.
     pub fn finished(&self, id: SessionId) -> Option<bool> {
-        self.lanes.get(id.0).map(|l| l.result.is_some())
+        self.lanes.get(id.0).and_then(|l| l.as_ref()).map(|l| l.result.is_some())
+    }
+
+    /// The lane's finalized result, if its driver has finished — what the
+    /// wire front persists when it evicts a finished driven lane.
+    pub fn result(&self, id: SessionId) -> Option<&SelectionResult> {
+        self.lanes.get(id.0).and_then(|l| l.as_ref()).and_then(|l| l.result.as_ref())
     }
 
     /// Queue a request, returning the receiver its reply arrives on after
@@ -302,11 +398,12 @@ impl<'o> SessionServer<'o> {
         let batch = std::mem::take(&mut self.pending);
 
         // partition: reads grouped per lane (coalescing unit), writes in
-        // arrival order; unknown sessions rejected immediately
+        // arrival order; unknown (or already-closed) sessions rejected
+        // immediately
         let mut reads: Vec<Vec<Envelope>> = (0..self.lanes.len()).map(|_| Vec::new()).collect();
         let mut writes: Vec<Envelope> = Vec::new();
         for env in batch {
-            if env.session.0 >= self.lanes.len() {
+            if self.lanes.get(env.session.0).map_or(true, |l| l.is_none()) {
                 self.metrics.rejected += 1;
                 let _ = env.reply.send(Err(SelectError::UnknownSession(env.session.0)));
                 continue;
@@ -331,9 +428,22 @@ impl<'o> SessionServer<'o> {
             // round/coalescing accounting; sweeps on a still-running
             // driven lane are rejected — client cache traffic would
             // silently perturb the driver's byte-identical-to-solo run
-            let n = self.lanes[lane_idx].session.objective().n();
-            let generation = self.lanes[lane_idx].session.generation().0;
-            let driver_owned = self.lanes[lane_idx].driver.is_some();
+            // the slot is still live here: closes are writes, and writes
+            // apply after the read phase
+            let (n, generation, driver_owned) = match self.lanes[lane_idx].as_ref() {
+                Some(lane) => (
+                    lane.session.objective().n(),
+                    lane.session.generation().0,
+                    lane.driver.is_some(),
+                ),
+                None => {
+                    for env in lane_reads {
+                        self.metrics.rejected += 1;
+                        let _ = env.reply.send(Err(SelectError::UnknownSession(lane_idx)));
+                    }
+                    continue;
+                }
+            };
             let mut valid: Vec<Envelope> = Vec::with_capacity(lane_reads.len());
             for env in lane_reads {
                 if let ServeRequest::Sweep { candidates } = &env.req {
@@ -374,7 +484,11 @@ impl<'o> SessionServer<'o> {
             }
             union.sort_unstable();
             union.dedup();
-            let lane = &mut self.lanes[lane_idx];
+            let Some(lane) = self.lanes[lane_idx].as_mut() else {
+                // unreachable by the read-before-write turn order; dropping
+                // the envelopes surfaces as Disconnected, never a panic
+                continue;
+            };
             let round = if nsweeps > 0 {
                 self.metrics.sweep_requests += nsweeps;
                 self.metrics.coalesced_rounds += 1;
@@ -415,7 +529,21 @@ impl<'o> SessionServer<'o> {
 
         // phase B — writes, in arrival order.
         for env in writes {
-            let lane = &mut self.lanes[env.session.0];
+            // a close earlier in this turn's write order frees the slot;
+            // later writes against the same id reject as unknown
+            if matches!(env.req, ServeRequest::Close) {
+                let reply = self.close_slot(env.session);
+                if reply.is_err() {
+                    self.metrics.rejected += 1;
+                }
+                let _ = env.reply.send(reply);
+                continue;
+            }
+            let Some(lane) = self.lanes.get_mut(env.session.0).and_then(|l| l.as_mut()) else {
+                self.metrics.rejected += 1;
+                let _ = env.reply.send(Err(SelectError::UnknownSession(env.session.0)));
+                continue;
+            };
             let reply = match env.req {
                 ServeRequest::Insert { item, if_generation } => {
                     let n = lane.session.objective().n();
@@ -501,11 +629,12 @@ impl<'o> SessionServer<'o> {
         }
     }
 
-    /// Traffic counters plus a snapshot of every session.
+    /// Traffic counters plus a snapshot of every live session (closed
+    /// lanes left no state to snapshot).
     pub fn summary(&self) -> ServeSummary {
         ServeSummary {
             metrics: self.metrics.clone(),
-            sessions: self.lanes.iter().map(|l| l.session.snapshot()).collect(),
+            sessions: self.lanes.iter().flatten().map(|l| l.session.snapshot()).collect(),
         }
     }
 
@@ -641,6 +770,17 @@ impl SessionClient {
     pub fn drive(&self) -> Result<SelectionResult, SelectError> {
         while !self.step()? {}
         self.finish()
+    }
+
+    /// Close the session: its lane (state, driver, and the lane's share of
+    /// the objective) is dropped and the slot freed for reuse. Every later
+    /// request against this id — from this handle or any clone — is
+    /// answered with [`SelectError::UnknownSession`].
+    pub fn close(&self) -> Result<(), SelectError> {
+        match self.api(ApiRequest::Close { session: self.session.0 })? {
+            ApiReply::Closed { .. } => Ok(()),
+            other => Err(SelectError::Protocol(format!("unexpected reply {other:?}"))),
+        }
     }
 
     /// Point-in-time snapshot of the session.
@@ -841,6 +981,95 @@ mod tests {
             rx.recv().unwrap().unwrap(),
             ServeReply::Insert { grew: true, generation: 1 }
         ));
+    }
+
+    #[test]
+    fn close_frees_the_slot_and_later_requests_reject() {
+        let o = obj();
+        let mut server = SessionServer::new();
+        let a = server.open(&o, BatchExecutor::sequential());
+        let b = server.open(&o, BatchExecutor::sequential());
+        assert_eq!(server.sessions(), 2);
+        // a close is a write: reads queued in the same turn are served
+        // first, writes after the close in arrival order reject as unknown
+        let rx_sweep = server.submit(a, ServeRequest::Sweep { candidates: vec![0, 1] });
+        let rx_close = server.submit(a, ServeRequest::Close);
+        let rx_ins = server.submit(a, ServeRequest::Insert { item: 0, if_generation: None });
+        server.turn();
+        assert!(matches!(rx_sweep.recv().unwrap(), Ok(ServeReply::Sweep { .. })));
+        assert!(
+            matches!(rx_close.recv().unwrap(), Ok(ServeReply::Closed { session }) if session == a.0)
+        );
+        assert!(matches!(rx_ins.recv().unwrap(), Err(SelectError::UnknownSession(_))));
+        assert_eq!(server.sessions(), 1);
+        assert!(server.session(a).is_none());
+        assert!(server.session(b).is_some());
+        // the closed id stays unknown; a double close rejects, not panics
+        let rx = server.submit(a, ServeRequest::Metrics);
+        let rx2 = server.submit(a, ServeRequest::Close);
+        server.turn();
+        assert!(matches!(rx.recv().unwrap(), Err(SelectError::UnknownSession(_))));
+        assert!(matches!(rx2.recv().unwrap(), Err(SelectError::UnknownSession(_))));
+        // the freed slot is reused by the next open (fd-style), so churn
+        // does not grow the lane table
+        let c = server.open(&o, BatchExecutor::sequential());
+        assert_eq!(c, a);
+        assert_eq!(server.sessions(), 2);
+        assert_eq!(server.metrics.closes, 1);
+        let rx = server.submit(c, ServeRequest::Insert { item: 2, if_generation: None });
+        server.turn();
+        assert!(matches!(
+            rx.recv().unwrap().unwrap(),
+            ServeReply::Insert { grew: true, generation: 1 }
+        ));
+        // the summary covers only live lanes
+        assert_eq!(server.summary().sessions.len(), 2);
+    }
+
+    #[test]
+    fn shared_lane_drops_its_objective_share_on_close() {
+        let o: Arc<dyn Objective> = Arc::new(obj());
+        let mut server = SessionServer::new();
+        let lane = server.open_shared(Arc::clone(&o), BatchExecutor::sequential());
+        assert_eq!(Arc::strong_count(&o), 2);
+        server.close(lane).unwrap();
+        assert_eq!(
+            Arc::strong_count(&o),
+            1,
+            "closing the lane must drop its objective share"
+        );
+        assert_eq!(server.sessions(), 0);
+        assert!(matches!(server.close(lane), Err(SelectError::UnknownSession(_))));
+    }
+
+    #[test]
+    fn restored_lane_matches_the_snapshot_bitwise() {
+        let o = obj();
+        let exec = BatchExecutor::sequential();
+        let mut server = SessionServer::new();
+        let a = server.open(&o, exec.clone());
+        for item in [4usize, 9, 2] {
+            let rx = server.submit(a, ServeRequest::Insert { item, if_generation: None });
+            server.turn();
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let snap = server.session(a).unwrap().snapshot();
+        server.close(a).unwrap();
+        let b = server
+            .open_restored(ObjectiveHandle::Borrowed(&o), exec, &snap, None)
+            .unwrap();
+        let restored = server.session(b).unwrap().snapshot();
+        assert_eq!(restored.set, snap.set);
+        assert_eq!(restored.generation, snap.generation);
+        assert_eq!(restored.value.to_bits(), snap.value.to_bits());
+        assert_eq!(restored.metrics, snap.metrics);
+        // a corrupted snapshot set is a typed error, not a panic
+        let mut bad = snap.clone();
+        bad.set.push(o.n() + 7);
+        let err = server
+            .open_restored(ObjectiveHandle::Borrowed(&o), BatchExecutor::sequential(), &bad, None)
+            .unwrap_err();
+        assert!(matches!(err, SelectError::Backend(_)), "{err:?}");
     }
 
     #[test]

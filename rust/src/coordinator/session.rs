@@ -58,9 +58,11 @@
 //! bitwise-identical states, so their results are identical to the bit.
 
 use crate::algorithms::SelectionResult;
+use crate::coordinator::api::SelectError;
 use crate::objectives::{Objective, ObjectiveState};
 use crate::oracle::{BatchExecutor, GainCache};
 use crate::rng::Pcg64;
+use std::sync::Arc;
 
 /// Monotonically increasing version of a session's solution state. Bumped
 /// by every successful [`SelectionSession::insert`]; gains computed at one
@@ -135,11 +137,56 @@ pub struct SessionSweep {
     pub generation: Generation,
 }
 
+/// How a session holds its objective: a caller-owned borrow (algorithms,
+/// scoped serving) or a shared owner (`Arc`) for lanes whose objective must
+/// live and die with the lane (the wire front's open/close lifecycle).
+/// Cloning is cheap — a copy of the borrow, or an `Arc` bump — so drivers
+/// can open child sessions on the same objective (DASH's
+/// logically-parallel OPT guesses) regardless of which way the parent
+/// holds it.
+pub enum ObjectiveHandle<'o> {
+    /// borrowed from the caller; the session must not outlive it
+    Borrowed(&'o dyn Objective),
+    /// shared ownership; dropped with the last session holding it
+    Shared(Arc<dyn Objective>),
+}
+
+impl<'o> ObjectiveHandle<'o> {
+    /// The objective behind the handle.
+    pub fn get(&self) -> &dyn Objective {
+        match self {
+            ObjectiveHandle::Borrowed(o) => *o,
+            ObjectiveHandle::Shared(o) => &**o,
+        }
+    }
+}
+
+impl<'o> Clone for ObjectiveHandle<'o> {
+    fn clone(&self) -> Self {
+        match self {
+            ObjectiveHandle::Borrowed(o) => ObjectiveHandle::Borrowed(*o),
+            ObjectiveHandle::Shared(o) => ObjectiveHandle::Shared(Arc::clone(o)),
+        }
+    }
+}
+
+impl<'o> From<&'o dyn Objective> for ObjectiveHandle<'o> {
+    fn from(o: &'o dyn Objective) -> Self {
+        ObjectiveHandle::Borrowed(o)
+    }
+}
+
+impl From<Arc<dyn Objective>> for ObjectiveHandle<'static> {
+    fn from(o: Arc<dyn Objective>) -> Self {
+        ObjectiveHandle::Shared(o)
+    }
+}
+
 /// One live selection: an objective state behind a generation, its gain
 /// cache, and the shared batched-gain engine. See the module docs for the
 /// generation contract.
 pub struct SelectionSession<'o> {
-    obj: &'o dyn Objective,
+    obj: ObjectiveHandle<'o>,
     state: Box<dyn ObjectiveState>,
     generation: Generation,
     cache: GainCache,
@@ -151,8 +198,22 @@ impl<'o> SelectionSession<'o> {
     /// Open a session over `obj` with an empty solution set, served by
     /// `exec` (clone of the process-shared engine).
     pub fn new(obj: &'o dyn Objective, exec: BatchExecutor) -> Self {
-        let state = obj.empty_state();
-        let cache = GainCache::new(obj.n());
+        Self::with_handle(ObjectiveHandle::Borrowed(obj), exec)
+    }
+
+    /// Open a session that co-owns its objective. The `Shared` handle
+    /// carries no borrow, so the session is free of the caller's lifetime
+    /// (`'o` is unconstrained) and the objective is dropped with the last
+    /// session (or handle clone) holding it — this is what lets serving
+    /// lanes be closed instead of leaking their objectives.
+    pub fn shared(obj: Arc<dyn Objective>, exec: BatchExecutor) -> Self {
+        Self::with_handle(ObjectiveHandle::Shared(obj), exec)
+    }
+
+    /// Open a session over an existing handle (borrowed or shared).
+    pub fn with_handle(obj: ObjectiveHandle<'o>, exec: BatchExecutor) -> Self {
+        let state = obj.get().empty_state();
+        let cache = GainCache::new(obj.get().n());
         SelectionSession {
             obj,
             state,
@@ -163,11 +224,56 @@ impl<'o> SelectionSession<'o> {
         }
     }
 
-    /// The objective this session optimizes. Returns the session's `'o`
-    /// borrow (not tied to `&self`), so drivers can open child sessions on
-    /// the same objective (DASH's logically-parallel OPT guesses).
-    pub fn objective(&self) -> &'o dyn Objective {
-        self.obj
+    /// Rebuild a session from a [`SessionSnapshot`]: replay the snapshot's
+    /// set in insertion order onto a fresh state — insertion order fully
+    /// determines the state bits, so the rebuilt state is byte-identical
+    /// to the one snapshotted — then install the snapshot's generation and
+    /// counters. Fails with [`SelectError::Backend`] when the replayed
+    /// value diverges from the snapshot's (a corrupted record, or an
+    /// objective that is not the one snapshotted).
+    pub fn restore(
+        obj: ObjectiveHandle<'o>,
+        exec: BatchExecutor,
+        snap: &SessionSnapshot,
+    ) -> Result<Self, SelectError> {
+        let mut s = Self::with_handle(obj, exec);
+        let n = s.obj.get().n();
+        if let Some(&bad) = snap.set.iter().find(|&&a| a >= n) {
+            return Err(SelectError::Backend(format!(
+                "session restore diverged: snapshot element {bad} outside ground set of {n}"
+            )));
+        }
+        for &a in &snap.set {
+            s.state.insert(a);
+        }
+        if s.state.set() != snap.set.as_slice() {
+            return Err(SelectError::Backend(
+                "session restore diverged: snapshot set has duplicate elements".into(),
+            ));
+        }
+        if s.state.value().to_bits() != snap.value.to_bits() {
+            return Err(SelectError::Backend(format!(
+                "session restore diverged: replayed value {} != snapshot value {}",
+                s.state.value(),
+                snap.value
+            )));
+        }
+        s.generation = snap.generation;
+        s.metrics = snap.metrics.clone();
+        Ok(s)
+    }
+
+    /// The objective this session optimizes.
+    pub fn objective(&self) -> &dyn Objective {
+        self.obj.get()
+    }
+
+    /// A clone of the session's objective handle (a copied borrow or an
+    /// `Arc` bump), free of the `&self` borrow — drivers use this to open
+    /// child sessions on the same objective (DASH's logically-parallel
+    /// OPT guesses).
+    pub fn objective_handle(&self) -> ObjectiveHandle<'o> {
+        self.obj.clone()
     }
 
     /// The batched-gain engine serving this session.
@@ -218,7 +324,7 @@ impl<'o> SelectionSession<'o> {
     /// Ground-set elements not yet selected, in index order.
     pub fn remaining(&self) -> Vec<usize> {
         let set = self.state.set();
-        (0..self.obj.n()).filter(|a| !set.contains(a)).collect()
+        (0..self.obj.get().n()).filter(|a| !set.contains(a)).collect()
     }
 
     /// Cached marginal-gain sweep over the current state. Candidates whose
@@ -252,7 +358,7 @@ impl<'o> SelectionSession<'o> {
         blocks: &[Vec<usize>],
     ) -> Vec<(f64, Box<dyn ObjectiveState>)> {
         self.metrics.sample_rounds += 1;
-        self.exec.sample_blocks(self.obj, &*self.state, blocks)
+        self.exec.sample_blocks(self.obj.get(), &*self.state, blocks)
     }
 
     /// Grow `S ← S ∪ {a}`. On success (the element was not already

@@ -1,0 +1,249 @@
+//! Durable session records: the wire front's snapshot-to-disk layer.
+//!
+//! A [`SessionStore`] is a directory of JSON files, one per wire session
+//! id. The [`StdioServer`](crate::coordinator::wire::StdioServer) writes a
+//! [`SessionRecord`] when it evicts an idle lane past its resident budget
+//! and reads it back on the next request addressed to that session; the
+//! record carries everything a restore needs:
+//!
+//! - the **wire specs** ([`WireProblem`], [`WirePlan`]) to rebuild the
+//!   objective — datasets are synthesized deterministically from
+//!   `(dataset, scale, seed)`, so the rebuilt objective is bit-identical
+//!   to the evicted one;
+//! - the **snapshot** ([`SessionSnapshot`]) whose set, replayed in
+//!   insertion order, reproduces the session state byte-for-byte
+//!   ([`SelectionSession::restore`](crate::coordinator::session::SelectionSession::restore)
+//!   verifies the replayed value bits against the recorded ones);
+//! - the **final result**, when a driven lane finished before eviction,
+//!   so a restored lane answers `finish` exactly as the live one would
+//!   have.
+//!
+//! Records are written atomically (temp file + rename), so a reader never
+//! observes a half-written record. Everything rides the same codecs as
+//! the v1 wire protocol (`wire::snapshot_to_json`, `wire::result_to_json`),
+//! keeping disk and wire provably one schema.
+
+use crate::algorithms::SelectionResult;
+use crate::coordinator::api::SelectError;
+use crate::coordinator::session::SessionSnapshot;
+use crate::coordinator::wire::{
+    need, need_bool, need_str, need_u64, need_usize, result_from_json, result_to_json,
+    snapshot_from_json, snapshot_to_json, WirePlan, WireProblem,
+};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Everything needed to restore one evicted wire session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionRecord {
+    /// public wire session id (stable across evict/restore)
+    pub session: usize,
+    /// quota bucket the session is charged to
+    pub tenant: String,
+    /// result-label of the lane's algorithm (`sds_ma`, `dash`, …)
+    pub algorithm: String,
+    pub driven: bool,
+    /// driver RNG seed the lane was opened with
+    pub seed: u64,
+    pub problem: WireProblem,
+    pub plan: WirePlan,
+    pub snapshot: SessionSnapshot,
+    /// final result, iff the lane's driver finished before eviction
+    pub result: Option<SelectionResult>,
+}
+
+impl SessionRecord {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("session", self.session.into()),
+            ("tenant", self.tenant.as_str().into()),
+            ("algorithm", self.algorithm.as_str().into()),
+            ("driven", self.driven.into()),
+            ("seed", self.seed.into()),
+            ("problem", self.problem.to_json()),
+            ("plan", self.plan.to_json()),
+            ("snapshot", snapshot_to_json(&self.snapshot)),
+        ];
+        if let Some(r) = &self.result {
+            pairs.push(("result", result_to_json(r)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionRecord, SelectError> {
+        let result = match j.get("result") {
+            Some(r) => Some(result_from_json(r)?),
+            None => None,
+        };
+        Ok(SessionRecord {
+            session: need_usize(j, "session")?,
+            tenant: need_str(j, "tenant")?.to_string(),
+            algorithm: need_str(j, "algorithm")?.to_string(),
+            driven: need_bool(j, "driven")?,
+            seed: need_u64(j, "seed")?,
+            problem: WireProblem::from_json(need(j, "problem")?)?,
+            plan: WirePlan::from_json(need(j, "plan")?)?,
+            snapshot: snapshot_from_json(need(j, "snapshot")?)?,
+            result,
+        })
+    }
+}
+
+/// A directory of [`SessionRecord`]s, one file per wire session id.
+/// Filesystem failures surface as [`SelectError::Backend`] — an open that
+/// triggered an eviction whose persist failed is answered with the error,
+/// and the victim lane stays resident.
+#[derive(Debug)]
+pub struct SessionStore {
+    dir: PathBuf,
+}
+
+impl SessionStore {
+    /// Open (creating if needed) the store directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<SessionStore, SelectError> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).map_err(|e| {
+            SelectError::Backend(format!("session store: create {}: {e}", dir.display()))
+        })?;
+        Ok(SessionStore { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The record file backing one session id.
+    pub fn path(&self, session: usize) -> PathBuf {
+        self.dir.join(format!("session-{session}.json"))
+    }
+
+    /// Persist one record atomically (temp file + rename): a crash or a
+    /// concurrent reader never observes a half-written record.
+    pub fn save(&self, record: &SessionRecord) -> Result<(), SelectError> {
+        let path = self.path(record.session);
+        let tmp = self.dir.join(format!("session-{}.json.tmp", record.session));
+        let text = record.to_json().to_string_pretty();
+        std::fs::write(&tmp, text).map_err(|e| {
+            SelectError::Backend(format!("session store: write {}: {e}", tmp.display()))
+        })?;
+        std::fs::rename(&tmp, &path).map_err(|e| {
+            SelectError::Backend(format!("session store: rename {}: {e}", path.display()))
+        })?;
+        Ok(())
+    }
+
+    /// Load the record for one session id.
+    pub fn load(&self, session: usize) -> Result<SessionRecord, SelectError> {
+        let path = self.path(session);
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            SelectError::Backend(format!("session store: read {}: {e}", path.display()))
+        })?;
+        let j = Json::parse(&text).map_err(|e| {
+            SelectError::Backend(format!("session store: parse {}: {e}", path.display()))
+        })?;
+        let record = SessionRecord::from_json(&j)?;
+        if record.session != session {
+            return Err(SelectError::Backend(format!(
+                "session store: {} records session {}, expected {session}",
+                path.display(),
+                record.session
+            )));
+        }
+        Ok(record)
+    }
+
+    /// Whether a record exists for one session id.
+    pub fn contains(&self, session: usize) -> bool {
+        self.path(session).is_file()
+    }
+
+    /// Delete the record for one session id (idempotent; a missing file
+    /// is not an error — close after restore is the common case).
+    pub fn remove(&self, session: usize) {
+        let _ = std::fs::remove_file(self.path(session));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::{Generation, SessionMetrics};
+
+    fn record(session: usize) -> SessionRecord {
+        SessionRecord {
+            session,
+            tenant: "acme".into(),
+            algorithm: "sds_ma".into(),
+            driven: false,
+            seed: 7,
+            problem: WireProblem::new("d1", 5, 1),
+            plan: WirePlan::new("greedy"),
+            snapshot: SessionSnapshot {
+                generation: Generation(3),
+                set: vec![4, 9, 2],
+                value: 1.25,
+                metrics: SessionMetrics {
+                    sweeps: 2,
+                    swept_candidates: 10,
+                    cache_hits: 1,
+                    fresh_queries: 9,
+                    inserts: 3,
+                    sample_rounds: 0,
+                    prefix_rounds: 0,
+                    fork_sweeps: 0,
+                },
+            },
+            result: None,
+        }
+    }
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dash-store-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn records_round_trip_through_the_store() {
+        let store = SessionStore::open(tempdir("roundtrip")).unwrap();
+        let mut rec = record(3);
+        store.save(&rec).unwrap();
+        assert!(store.contains(3));
+        assert_eq!(store.load(3).unwrap(), rec);
+        // value bits survive the trip exactly
+        rec.snapshot.value = 0.1 + 0.2;
+        store.save(&rec).unwrap();
+        assert_eq!(
+            store.load(3).unwrap().snapshot.value.to_bits(),
+            rec.snapshot.value.to_bits()
+        );
+        // a finished driven lane rides its result along
+        rec.result = Some(SelectionResult {
+            algorithm: "sds_ma".into(),
+            set: vec![4, 9, 2],
+            value: rec.snapshot.value,
+            rounds: 3,
+            queries: 12,
+            wall_s: 0.5,
+            hit_iteration_cap: false,
+            history: Vec::new(),
+        });
+        store.save(&rec).unwrap();
+        assert_eq!(store.load(3).unwrap(), rec);
+        store.remove(3);
+        assert!(!store.contains(3));
+        assert!(store.load(3).is_err());
+        store.remove(3); // idempotent
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn mismatched_record_ids_are_backend_errors() {
+        let store = SessionStore::open(tempdir("mismatch")).unwrap();
+        let rec = record(2);
+        // write under a different id than the record claims
+        std::fs::write(store.path(5), rec.to_json().to_string_pretty()).unwrap();
+        assert!(matches!(store.load(5).unwrap_err(), SelectError::Backend(_)));
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+}

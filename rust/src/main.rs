@@ -10,7 +10,7 @@
 use dash_select::cli::Args;
 use dash_select::coordinator::{
     Backend, Leader, ObjectiveChoice, PlanSpec, ProblemSpec, SelectError, ServeConfig, ServeSpec,
-    StdioServer,
+    SessionStore, StdioServer,
 };
 use dash_select::experiments::{self, fig1, figs, appendix, DatasetId, Scale};
 use dash_select::objectives::spectra;
@@ -19,8 +19,7 @@ use dash_select::runtime::{default_artifacts_dir, Manifest};
 use dash_select::util::logging::{set_level, Level};
 use std::sync::Arc;
 
-const USAGE: &str = "\
-dash — Fast Parallel Algorithms for Statistical Subset Selection (DASH)
+const USAGE: &str = r#"dash — Fast Parallel Algorithms for Statistical Subset Selection (DASH)
 
 USAGE:
   dash run --algo <A> --dataset <D> --k <K> [options]
@@ -38,16 +37,20 @@ USAGE:
       ad-hoc session, C sweep clients; prints request throughput and
       sweep-coalescing stats
 
-  dash serve --stdio [--max-sessions N]
+  dash serve --stdio [--max-sessions N] [--store DIR] [--tenant-quota Q]
       speak the v1 JSON wire protocol over stdin/stdout: one request frame
       per line ({"v":1,"id":N,"op":"open"|"list"|"sweep"|"insert"|"step"|
-      "finish"|"metrics",...}), one reply frame per request, until EOF
+      "finish"|"metrics"|"close",...}), one reply frame per request, until
+      EOF. --store DIR makes sessions durable: opens past the resident
+      budget snapshot the least-recently-used idle session to DIR and it
+      is restored transparently on its next request. --tenant-quota caps
+      open sessions per tenant (the open frame's optional "tenant" field)
 
   dash artifacts          show the AOT artifact inventory
   dash spectra --dataset <D> --k <K>   sampled γ / α = γ² estimates
 
   global: --log error|warn|info|debug
-";
+"#;
 
 fn main() {
     let args = match Args::from_env() {
@@ -329,8 +332,15 @@ fn cmd_serve(args: &Args) -> Result<(), SelectError> {
 /// The v1 wire front: newline-delimited JSON request/reply frames over
 /// stdin/stdout against the deterministic serving core, until EOF.
 fn cmd_serve_stdio(args: &Args) -> Result<(), SelectError> {
-    let server = StdioServer::new(Leader::new())
+    let mut server = StdioServer::new(Leader::new())
         .with_max_sessions(args.get_usize("max-sessions", 64)?);
+    if let Some(dir) = args.get("store") {
+        server = server.with_store(SessionStore::open(dir)?);
+    }
+    let quota = args.get_usize("tenant-quota", 0)?;
+    if quota > 0 {
+        server = server.with_tenant_quota(quota);
+    }
     let stdin = std::io::stdin().lock();
     let mut stdout = std::io::stdout().lock();
     let summary = server

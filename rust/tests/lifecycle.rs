@@ -1,0 +1,206 @@
+//! Session lifecycle integration: open/close churn under a fixed resident
+//! budget, and evict→restore durability proven byte-identical against an
+//! uninterrupted reference run driving the same request sequence.
+//!
+//! The reference and durable runs submit *identical* wire-level request
+//! sequences (same problem seed, same sweeps, same inserts); the durable
+//! run additionally ping-pongs its two sessions through a one-slot
+//! resident budget so every round crosses an evict→persist→restore cycle.
+//! Byte-identity of the final snapshots (set, value bits, generation,
+//! metrics) is the acceptance bar: durability must be invisible to the
+//! selection math.
+
+use dash_select::coordinator::{
+    ApiReply, ApiRequest, Leader, SelectError, SessionStore, StdioServer, WirePlan, WireProblem,
+};
+use std::path::PathBuf;
+
+fn tempdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dash-lifecycle-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn open(server: &mut StdioServer, problem: &WireProblem, plan: &WirePlan) -> usize {
+    let req = ApiRequest::Open {
+        problem: problem.clone(),
+        plan: plan.clone(),
+        driven: false,
+        tenant: None,
+    };
+    match server.handle(req).unwrap() {
+        ApiReply::Opened { session } => session,
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+fn sweep(server: &mut StdioServer, session: usize, candidates: &[usize]) -> Vec<f64> {
+    let req = ApiRequest::Sweep { session, candidates: candidates.to_vec() };
+    match server.handle(req).unwrap() {
+        ApiReply::Swept { gains, .. } => gains,
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+fn insert(server: &mut StdioServer, session: usize, item: usize) {
+    let req = ApiRequest::Insert { session, item, if_generation: None };
+    match server.handle(req).unwrap() {
+        ApiReply::Inserted { .. } => {}
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+fn snapshot(
+    server: &mut StdioServer,
+    session: usize,
+) -> dash_select::coordinator::SessionSnapshot {
+    match server.handle(ApiRequest::Metrics { session }).unwrap() {
+        ApiReply::Snapshot { snapshot } => snapshot,
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+fn argmax(candidates: &[usize], gains: &[f64]) -> usize {
+    let mut best = 0;
+    for i in 1..gains.len() {
+        if gains[i] > gains[best] {
+            best = i;
+        }
+    }
+    candidates[best]
+}
+
+/// Open/close/reopen churn at a tiny resident budget: the budget counts
+/// *live* sessions, so closing always makes room and the front never
+/// wedges — the failure mode of the old leak-as-ownership front, where
+/// every open consumed budget forever.
+#[test]
+fn churn_at_max_sessions_never_wedges() {
+    let mut server = StdioServer::new(Leader::with_threads(1)).with_max_sessions(2);
+    let problem = WireProblem::new("d1", 4, 1);
+    let plan = WirePlan::new("greedy");
+    let a = open(&mut server, &problem, &plan);
+    let b = open(&mut server, &problem, &plan);
+    assert_eq!((a, b), (0, 1));
+    // full budget, no store to evict into: typed backpressure, not a panic
+    let req = ApiRequest::Open {
+        problem: problem.clone(),
+        plan: plan.clone(),
+        driven: false,
+        tenant: None,
+    };
+    match server.handle(req) {
+        Err(SelectError::Backpressure(_)) => {}
+        other => panic!("expected backpressure, got {other:?}"),
+    }
+    // 50 open/close cycles through the full budget: ids recycle, the
+    // live count stays flat, and surviving sessions keep serving
+    let cands: Vec<usize> = (0..6).collect();
+    for round in 0..50 {
+        let victim = if round % 2 == 0 { a } else { b };
+        match server.handle(ApiRequest::Close { session: victim }).unwrap() {
+            ApiReply::Closed { session } => assert_eq!(session, victim),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(server.live_sessions(), 1);
+        // a closed session is gone: requests to it are typed errors
+        match server.handle(ApiRequest::Metrics { session: victim }) {
+            Err(SelectError::UnknownSession(s)) => assert_eq!(s, victim),
+            other => panic!("expected unknown session, got {other:?}"),
+        }
+        let reopened = open(&mut server, &problem, &plan);
+        assert_eq!(reopened, victim, "closed wire ids are recycled");
+        assert_eq!(server.live_sessions(), 2);
+        // the other lane kept its state through the churn
+        let gains = sweep(&mut server, if victim == a { b } else { a }, &cands);
+        assert_eq!(gains.len(), cands.len());
+    }
+    assert_eq!(server.live_sessions(), 2);
+}
+
+/// The durability acceptance bar: a session that is evicted to disk and
+/// restored (repeatedly — every round of the loop crosses a full
+/// evict→persist→restore cycle) finishes byte-identical to the same
+/// session driven without interruption.
+#[test]
+fn evicted_then_restored_selection_is_byte_identical() {
+    let problem = WireProblem::new("d1", 4, 7);
+    let plan = WirePlan::new("greedy");
+    let cands: Vec<usize> = (0..10).collect();
+    let rounds = 4;
+
+    // reference: one server, no store, both sessions resident throughout
+    let mut reference = StdioServer::new(Leader::with_threads(1));
+    let ref_a = open(&mut reference, &problem, &plan);
+    let ref_b = open(&mut reference, &problem, &plan);
+    for _ in 0..rounds {
+        let gains = sweep(&mut reference, ref_a, &cands);
+        insert(&mut reference, ref_a, argmax(&cands, &gains));
+        let _ = snapshot(&mut reference, ref_b);
+    }
+    let want = snapshot(&mut reference, ref_a);
+    assert_eq!(want.set.len(), rounds, "reference run must actually select");
+
+    // durable: same request sequence through a ONE-slot budget, so every
+    // touch of one session evicts the other
+    let dir = tempdir("identity");
+    let mut server = StdioServer::new(Leader::with_threads(1))
+        .with_max_sessions(1)
+        .with_store(SessionStore::open(&dir).unwrap());
+    let a = open(&mut server, &problem, &plan);
+    let b = open(&mut server, &problem, &plan); // evicts a
+    assert_eq!((a, b), (ref_a, ref_b));
+    assert_eq!(server.evictions, 1);
+    assert!(server.store().unwrap().contains(a), "evicted session persisted");
+    for round in 0..rounds {
+        // touching a restores it from disk (and evicts b)
+        let gains = sweep(&mut server, a, &cands);
+        insert(&mut server, a, argmax(&cands, &gains));
+        // ...and touching b swaps them back
+        let _ = snapshot(&mut server, b);
+        assert_eq!(server.restores as usize, 2 * round + 2);
+        assert!(server.store().unwrap().contains(a));
+    }
+    // final state: identical to the uninterrupted run, bit for bit
+    let got = snapshot(&mut server, a);
+    assert_eq!(got.value.to_bits(), want.value.to_bits(), "value bits must survive");
+    assert_eq!(got, want, "restored session diverged from the reference");
+
+    // close releases the durable record as well as the live lane
+    match server.handle(ApiRequest::Close { session: a }).unwrap() {
+        ApiReply::Closed { session } => assert_eq!(session, a),
+        other => panic!("unexpected {other:?}"),
+    }
+    assert!(!server.store().unwrap().contains(a), "close must drop the record");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// While evicted, `list` reports the session from its stored record
+/// (`resident: false`) without restoring it — listing is a read of the
+/// front's own bookkeeping, never a disk round-trip per row.
+#[test]
+fn list_reports_evicted_sessions_without_restoring() {
+    let dir = tempdir("list");
+    let mut server = StdioServer::new(Leader::with_threads(1))
+        .with_max_sessions(1)
+        .with_store(SessionStore::open(&dir).unwrap());
+    let problem = WireProblem::new("d1", 3, 2);
+    let plan = WirePlan::new("greedy");
+    let a = open(&mut server, &problem, &plan);
+    insert(&mut server, a, 5);
+    let b = open(&mut server, &problem, &plan); // evicts a (set = [5])
+    let restores_before = server.restores;
+    match server.handle(ApiRequest::List).unwrap() {
+        ApiReply::Sessions { sessions } => {
+            assert_eq!(sessions.len(), 2);
+            let row_a = sessions.iter().find(|s| s.session == a).unwrap();
+            let row_b = sessions.iter().find(|s| s.session == b).unwrap();
+            assert!(!row_a.resident);
+            assert_eq!(row_a.set_len, 1, "evicted row reports its stored set");
+            assert!(row_b.resident);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(server.restores, restores_before, "list must not restore");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -81,8 +81,13 @@ fn gen_plan(g: &mut Gen) -> WirePlan {
 
 fn gen_request(g: &mut Gen) -> ApiRequest {
     let session = g.usize_in(0, 7);
-    match g.usize_in(0, 6) {
-        0 => ApiRequest::Open { problem: gen_problem(g), plan: gen_plan(g), driven: g.bool() },
+    match g.usize_in(0, 7) {
+        0 => ApiRequest::Open {
+            problem: gen_problem(g),
+            plan: gen_plan(g),
+            driven: g.bool(),
+            tenant: gen_opt(g, gen_string),
+        },
         1 => ApiRequest::List,
         2 => {
             let n = g.usize_in(0, g.size());
@@ -98,6 +103,7 @@ fn gen_request(g: &mut Gen) -> ApiRequest {
         },
         4 => ApiRequest::Step { session },
         5 => ApiRequest::Finish { session },
+        6 => ApiRequest::Close { session },
         _ => ApiRequest::Metrics { session },
     }
 }
@@ -157,8 +163,9 @@ fn gen_snapshot(g: &mut Gen) -> SessionSnapshot {
 }
 
 fn gen_reply(g: &mut Gen) -> ApiReply {
-    match g.usize_in(0, 7) {
+    match g.usize_in(0, 8) {
         0 => ApiReply::Opened { session: g.usize_in(0, 100) },
+        8 => ApiReply::Closed { session: g.usize_in(0, 100) },
         1 => ApiReply::Sessions {
             sessions: (0..g.usize_in(0, 4))
                 .map(|i| SessionInfo {
@@ -168,6 +175,8 @@ fn gen_reply(g: &mut Gen) -> ApiReply {
                     finished: g.bool(),
                     generation: gen_u64(g),
                     set_len: g.usize_in(0, 100),
+                    tenant: gen_string(g),
+                    resident: g.bool(),
                 })
                 .collect(),
         },
@@ -262,7 +271,15 @@ fn golden_requests() -> Vec<(u64, ApiRequest)> {
     problem.objective = Some("lreg".into());
     problem.backend = Some("native".into());
     vec![
-        (1, ApiRequest::Open { problem, plan: WirePlan::new("greedy"), driven: true }),
+        (
+            1,
+            ApiRequest::Open {
+                problem,
+                plan: WirePlan::new("greedy"),
+                driven: true,
+                tenant: Some("acme".into()),
+            },
+        ),
         (2, ApiRequest::List),
         (3, ApiRequest::Sweep { session: 0, candidates: vec![0, 2, 5] }),
         (4, ApiRequest::Insert { session: 0, item: 7, if_generation: Some(2) }),
@@ -270,6 +287,7 @@ fn golden_requests() -> Vec<(u64, ApiRequest)> {
         (6, ApiRequest::Step { session: 0 }),
         (7, ApiRequest::Finish { session: 0 }),
         (8, ApiRequest::Metrics { session: 0 }),
+        (9, ApiRequest::Close { session: 0 }),
     ]
 }
 
@@ -286,6 +304,8 @@ fn golden_replies() -> Vec<(u64, ApiReply)> {
                     finished: false,
                     generation: 2,
                     set_len: 2,
+                    tenant: "acme".into(),
+                    resident: true,
                 }],
             },
         ),
@@ -343,6 +363,7 @@ fn golden_replies() -> Vec<(u64, ApiReply)> {
                 error: SelectError::Rejected("session has no driver to step".into()),
             },
         ),
+        (11, ApiReply::Closed { session: 0 }),
     ]
 }
 
