@@ -14,8 +14,9 @@
 use dash_select::bench::Bench;
 use dash_select::coordinator::session::SelectionSession;
 use dash_select::coordinator::{
-    AlgorithmChoice, ApiReply, ApiRequest, Backend, Leader, ObjectiveChoice, SelectionJob,
-    ServeConfig, ServeSpec, SessionStore, StdioServer, WirePlan, WireProblem,
+    AlgorithmChoice, ApiReply, ApiRequest, Backend, Leader, NetConfig, NetServer, ObjectiveChoice,
+    RetryPolicy, SelectionJob, ServeConfig, ServeSpec, SessionStore, StdioServer, WireClient,
+    WirePlan, WireProblem,
 };
 use dash_select::data::synthetic;
 use dash_select::objectives::{
@@ -357,6 +358,67 @@ fn main() {
     let lifecycle_restores = swap_server.restores;
     let _ = std::fs::remove_dir_all(&lc_dir);
 
+    // ---- socket front: requests/s + reconnect-and-restore latency ----
+    // a real WireClient sweeping over a real socket measures the full
+    // per-request stack (codec + kernel + supervision); the second half
+    // drains the server, restarts it on the same store and socket path,
+    // and times one request through redial + store restore
+    let net_dir = std::env::temp_dir().join(format!("dash-bench-net-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&net_dir);
+    std::fs::create_dir_all(&net_dir).expect("bench net dir");
+    let net_sock = format!("unix:{}", net_dir.join("bench.sock").display());
+    let net_store = net_dir.join("store");
+    let net_config = NetConfig { poll_tick: std::time::Duration::from_millis(1), ..NetConfig::default() };
+    let start_net_server = |stop: &'static std::sync::atomic::AtomicBool| {
+        let sock = net_sock.clone();
+        let store = net_store.clone();
+        let server = NetServer::bind(&sock)
+            .expect("bench net bind")
+            .with_config(net_config)
+            .with_stop_flag(stop);
+        std::thread::spawn(move || {
+            server
+                .serve(
+                    StdioServer::new(Leader::with_threads(1))
+                        .with_store(SessionStore::open(&store).expect("bench net store"))
+                        .into_core(),
+                )
+                .expect("bench net serve")
+        })
+    };
+    let net_stop: &'static std::sync::atomic::AtomicBool =
+        Box::leak(Box::new(std::sync::atomic::AtomicBool::new(false)));
+    let net_handle = start_net_server(net_stop);
+    let mut net_client = WireClient::connect(&net_sock, 7).with_policy(RetryPolicy {
+        max_attempts: 200,
+        base_backoff: std::time::Duration::from_millis(1),
+        max_backoff: std::time::Duration::from_millis(20),
+    });
+    let net_session = net_client
+        .open(WireProblem::new("d1", 5, 3), WirePlan::new("greedy"), false, None)
+        .expect("bench net open");
+    let net_cand: Vec<usize> = (0..64).collect();
+    let net_requests = if fast { 64usize } else { 512 };
+    let net_t0 = std::time::Instant::now();
+    for _ in 0..net_requests {
+        net_client.sweep(net_session, net_cand.clone()).expect("bench net sweep");
+    }
+    let net_elapsed = net_t0.elapsed().as_secs_f64().max(1e-12);
+    let net_rps = net_requests as f64 / net_elapsed;
+    // drain, restart on the same socket + store, and time the resume
+    net_stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    net_handle.join().expect("bench net drain");
+    let net_stop2: &'static std::sync::atomic::AtomicBool =
+        Box::leak(Box::new(std::sync::atomic::AtomicBool::new(false)));
+    let net_handle2 = start_net_server(net_stop2);
+    let reconnect_t0 = std::time::Instant::now();
+    let snap = net_client.metrics(net_session).expect("bench net resume");
+    let reconnect_restore_s = reconnect_t0.elapsed().as_secs_f64();
+    assert_eq!(snap.generation.0, 0, "resumed session must be the stored one");
+    net_stop2.store(true, std::sync::atomic::Ordering::SeqCst);
+    net_handle2.join().expect("bench net drain 2");
+    let _ = std::fs::remove_dir_all(&net_dir);
+
     // ---- report ----
     println!();
     let mut obj_entries = Vec::new();
@@ -438,6 +500,10 @@ fn main() {
          8-slot budget); evict+restore swap {evict_restore_s:.6}s \
          ({lifecycle_restores} restores measured)"
     );
+    println!(
+        "serve_net: {net_requests} socket sweeps in {net_elapsed:.3}s ({net_rps:.0} req/s); \
+         reconnect+restore after restart {reconnect_restore_s:.6}s"
+    );
     let doc = Json::obj(vec![
         ("suite", "executor".into()),
         ("threads", threads.into()),
@@ -498,6 +564,16 @@ fn main() {
                 ("opens_per_s", opens_per_s.into()),
                 ("evict_restore_s", evict_restore_s.into()),
                 ("restores", lifecycle_restores.into()),
+            ]),
+        ),
+        (
+            "serve_net",
+            Json::obj(vec![
+                ("requests", net_requests.into()),
+                ("candidates", 64usize.into()),
+                ("elapsed_s", net_elapsed.into()),
+                ("requests_per_s", net_rps.into()),
+                ("reconnect_restore_s", reconnect_restore_s.into()),
             ]),
         ),
         ("reports", Json::Arr(reports)),

@@ -88,6 +88,11 @@ pub enum SelectError {
     /// distinct from per-request `Rejected` so retry/alerting logic never
     /// mistakes it for routine traffic rejection.
     ClientPanic(String),
+    /// A request exceeded its per-request deadline, or a connection sat
+    /// idle past the server's idle timeout. The request fails; the session
+    /// itself is untouched and a retry (or a fresh connection) proceeds
+    /// normally.
+    Deadline(String),
     /// The server loop is gone; all requests fail cleanly, none hang.
     Disconnected,
     /// A wire frame could not be decoded (bad JSON, missing field,
@@ -112,6 +117,7 @@ impl SelectError {
             SelectError::Backend(_) => "backend",
             SelectError::Rejected(_) => "rejected",
             SelectError::ClientPanic(_) => "client_panic",
+            SelectError::Deadline(_) => "deadline",
             SelectError::Disconnected => "disconnected",
             SelectError::Protocol(_) => "protocol",
         }
@@ -131,6 +137,7 @@ impl fmt::Display for SelectError {
             SelectError::Backend(m) => write!(f, "backend error: {m}"),
             SelectError::Rejected(m) => write!(f, "request rejected: {m}"),
             SelectError::ClientPanic(m) => write!(f, "serve client closure panicked: {m}"),
+            SelectError::Deadline(m) => write!(f, "deadline exceeded: {m}"),
             SelectError::Disconnected => write!(f, "session server disconnected"),
             SelectError::Protocol(m) => write!(f, "protocol error: {m}"),
         }

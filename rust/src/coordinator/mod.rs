@@ -32,6 +32,7 @@ pub mod api;
 mod batcher;
 mod leader;
 mod metrics;
+pub mod net;
 pub mod serve;
 pub mod session;
 pub mod store;
@@ -54,8 +55,12 @@ pub use session::{
     drive, Generation, ObjectiveHandle, SelectionSession, SessionDriver, SessionMetrics,
     SessionSnapshot, SessionSweep, StepOutcome,
 };
+pub use net::{
+    drain_flag, install_drain_signals, ChaosConfig, ChaosProxy, NetConfig, NetServer, NetSummary,
+    RetryPolicy, WireClient,
+};
 pub use store::{SessionRecord, SessionStore};
 pub use wire::{
-    ApiReply, ApiRequest, DatasetCache, SessionInfo, StdioServer, WirePlan, WireProblem,
+    ApiReply, ApiRequest, DatasetCache, SessionInfo, StdioServer, WireCore, WirePlan, WireProblem,
     DEFAULT_TENANT, MAX_WIRE_INT, WIRE_VERSION,
 };

@@ -1,0 +1,949 @@
+//! Fault-tolerant socket front for the v1 wire protocol.
+//!
+//! [`coordinator::wire`](crate::coordinator::wire) defines the protocol
+//! and the transport-agnostic [`WireCore`]; this module puts the core on a
+//! real socket so selections can be served across process boundaries:
+//!
+//! - **[`NetServer`]** — a TCP or Unix-socket listener
+//!   ([`NetServer::bind`] parses `host:port` and `unix:/path`) serving the
+//!   newline-delimited v1 JSON frames. One supervised handler thread per
+//!   connection reads frames and forwards them to the single service loop
+//!   that owns the [`WireCore`]; replies flow back per-connection, in
+//!   order. The core never crosses a thread boundary, so the socket front
+//!   and the stdio front are byte-for-byte one code path.
+//! - **[`WireClient`]** — a reconnecting client: on a transport fault
+//!   (connection refused, reset, truncated reply) it redials with capped
+//!   exponential backoff plus seeded jitter and replays the request.
+//!   Because wire session ids survive a server restart (the store-backed
+//!   core adopts its records on startup), a client that reconnects after a
+//!   crash resumes its sessions transparently — selections finish
+//!   byte-identical to an uninterrupted run (`tests/net_chaos.rs`,
+//!   `tests/net_restart.rs`).
+//! - **[`ChaosProxy`]** — a fault-injection TCP forwarder for the test
+//!   harness: PCG-seeded schedules of frame truncation, delays, and
+//!   mid-request disconnects between a real client and a real server.
+//!
+//! # Supervision tree and fault model
+//!
+//! ```text
+//! serve() caller thread ── service loop ── owns WireCore (lanes, store)
+//!   ├── accept thread ──── nonblocking accept + drain-flag poll
+//!   │     ├── handler #1 ─ catch_unwind; frame deadlines; idle timeout
+//!   │     ├── handler #2 ─ …
+//!   │     └── …
+//!   └── mpsc jobs ←──────── (request line, per-request reply channel)
+//! ```
+//!
+//! Per-connection faults are contained at the nearest layer: a malformed
+//! frame is answered with a typed `protocol` error; a panic inside request
+//! handling is caught by [`WireCore::line`] and answered as `client_panic`;
+//! a panic in the handler thread itself is caught by the supervisor
+//! wrapper and closes only that connection. A connection that feeds bytes
+//! slower than [`NetConfig::request_deadline`] (slow-loris) or goes silent
+//! past [`NetConfig::idle_timeout`] is dropped without touching any lane —
+//! driven-unfinished lanes stay pinned exactly as under the stdio front.
+//!
+//! Graceful drain: a `shutdown` frame (or the process's drain flag, see
+//! [`drain_flag`]) finishes the in-flight turn, snapshots every evictable
+//! lane to the session store, stops accepting, lets each handler finish
+//! its current request, and returns — the process exits 0. A fresh server
+//! on the same store restores the drained sessions with identical `list`
+//! metadata.
+
+use crate::coordinator::api::SelectError;
+use crate::coordinator::serve::ServeSummary;
+use crate::coordinator::wire::{
+    readable_frame_id, ApiReply, ApiRequest, SessionInfo, WireCore, WirePlan, WireProblem,
+};
+use crate::algorithms::SelectionResult;
+use crate::coordinator::session::SessionSnapshot;
+use crate::rng::Pcg64;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Address parsing + the transport enums
+// ---------------------------------------------------------------------------
+
+/// A bound listening socket: TCP (`host:port`) or Unix (`unix:/path`).
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener, PathBuf),
+}
+
+/// One accepted (or dialed) connection over either transport.
+enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> std::io::Result<Stream> {
+        match self {
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+        }
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t),
+            Stream::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+
+    fn set_write_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(t),
+            Stream::Unix(s) => s.set_write_timeout(t),
+        }
+    }
+
+    fn shutdown(&self) {
+        let _ = match self {
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            Stream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Dial one connection to `addr` (`host:port` or `unix:/path`).
+fn dial(addr: &str) -> std::io::Result<Stream> {
+    match addr.strip_prefix("unix:") {
+        Some(path) => UnixStream::connect(path).map(Stream::Unix),
+        None => TcpStream::connect(addr).map(Stream::Tcp),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration, counters, summary
+// ---------------------------------------------------------------------------
+
+/// Robustness knobs of the socket front.
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// Per-request budget, applied twice per request: a frame whose bytes
+    /// trickle in slower than this is dropped (slow-loris), and a request
+    /// whose reply takes longer than this is answered with a typed
+    /// `deadline` error.
+    pub request_deadline: Duration,
+    /// A connection with no traffic (not even partial frames) for this
+    /// long is closed. Lanes are untouched; the client reconnects and
+    /// resumes by session id.
+    pub idle_timeout: Duration,
+    /// Frames larger than this are answered with a `protocol` error and
+    /// the connection is dropped — a byte-flood cannot balloon memory.
+    pub max_frame_len: usize,
+    /// Poll granularity of the accept loop, handler read loops, and the
+    /// service loop's drain check.
+    pub poll_tick: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            request_deadline: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(60),
+            max_frame_len: 1 << 20,
+            poll_tick: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Shared traffic counters (handlers increment, summary reads).
+#[derive(Default)]
+struct NetCounters {
+    connections: AtomicU64,
+    requests: AtomicU64,
+    deadlines: AtomicU64,
+    handler_panics: AtomicU64,
+}
+
+/// What a [`NetServer::serve`] loop did before it drained.
+#[derive(Debug)]
+pub struct NetSummary {
+    /// connections accepted over the server's lifetime
+    pub connections: u64,
+    /// request frames forwarded to the core
+    pub requests: u64,
+    /// requests answered with a typed `deadline` error (reply overran
+    /// the budget) plus slow-loris frame drops
+    pub deadlines: u64,
+    /// handler threads that panicked and were reaped by the supervisor
+    /// (connection closed, server intact)
+    pub handler_panics: u64,
+    /// panics contained inside request handling ([`WireCore::line`])
+    pub contained_panics: u64,
+    /// lane evictions over the core's lifetime (drain included)
+    pub evictions: u64,
+    /// lane restores over the core's lifetime
+    pub restores: u64,
+    /// the serving core's own traffic summary
+    pub serve: ServeSummary,
+}
+
+/// The job a handler forwards to the service loop: one raw request line
+/// plus the channel its reply line goes back on.
+struct Job {
+    line: String,
+    reply: mpsc::Sender<String>,
+}
+
+// ---------------------------------------------------------------------------
+// Drain signal plumbing
+// ---------------------------------------------------------------------------
+
+static DRAIN: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn drain_on_signal(_sig: i32) {
+    DRAIN.store(true, Ordering::SeqCst);
+}
+
+/// The process-wide drain flag. [`NetServer::serve`] polls it; once set,
+/// the server stops accepting, finishes in-flight turns, snapshots every
+/// evictable lane to the store, and returns.
+pub fn drain_flag() -> &'static AtomicBool {
+    &DRAIN
+}
+
+/// Install SIGINT/SIGTERM handlers that set [`drain_flag`] — the signal
+/// half of graceful drain (`kill -TERM` behaves like a `shutdown` frame).
+/// Uses the raw libc `signal` entry point so no new dependency is needed.
+pub fn install_drain_signals() -> &'static AtomicBool {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    let handler = drain_on_signal as extern "C" fn(i32) as usize;
+    unsafe {
+        signal(2, handler); // SIGINT
+        signal(15, handler); // SIGTERM
+    }
+    &DRAIN
+}
+
+// ---------------------------------------------------------------------------
+// NetServer
+// ---------------------------------------------------------------------------
+
+/// The socket serving front: accepts TCP or Unix-socket connections and
+/// pumps their frames through one [`WireCore`] under per-connection
+/// supervision — see the module docs for the full fault model.
+pub struct NetServer {
+    listener: Listener,
+    config: NetConfig,
+    stop: &'static AtomicBool,
+}
+
+impl NetServer {
+    /// Bind a listener. `unix:/path` binds a Unix socket (an existing
+    /// socket file is replaced — stale files from a killed process must
+    /// not block restart); anything else is a TCP `host:port` (port `0`
+    /// picks a free port; see [`NetServer::local_addr`]).
+    pub fn bind(addr: &str) -> std::io::Result<NetServer> {
+        let listener = match addr.strip_prefix("unix:") {
+            Some(path) => {
+                let path = PathBuf::from(path);
+                if path.exists() {
+                    let _ = std::fs::remove_file(&path);
+                }
+                Listener::Unix(UnixListener::bind(&path)?, path)
+            }
+            None => Listener::Tcp(TcpListener::bind(addr)?),
+        };
+        Ok(NetServer { listener, config: NetConfig::default(), stop: drain_flag() })
+    }
+
+    /// Replace the robustness knobs (deadlines, idle timeout, frame cap).
+    pub fn with_config(mut self, config: NetConfig) -> NetServer {
+        self.config = config;
+        self
+    }
+
+    /// Use a caller-owned drain flag instead of the process-wide
+    /// [`drain_flag`] — tests leak one `AtomicBool` per server so
+    /// concurrent servers drain independently.
+    pub fn with_stop_flag(mut self, stop: &'static AtomicBool) -> NetServer {
+        self.stop = stop;
+        self
+    }
+
+    /// The bound address in dialable form: `127.0.0.1:PORT` for TCP
+    /// (resolving a port-0 bind), `unix:/path` for Unix sockets.
+    pub fn local_addr(&self) -> String {
+        match &self.listener {
+            Listener::Tcp(l) => match l.local_addr() {
+                Ok(a) => a.to_string(),
+                Err(_) => "<unbound>".to_string(),
+            },
+            Listener::Unix(_, path) => format!("unix:{}", path.display()),
+        }
+    }
+
+    /// Serve until drained: accept connections, pump every frame through
+    /// `core`, and stop on a `shutdown` frame or the drain flag. The core
+    /// lives on this caller thread for the whole serve — handlers only
+    /// ever exchange strings with it — so objective state never crosses a
+    /// thread boundary. Returns once every handler has finished its
+    /// in-flight request and all evictable lanes are snapshotted.
+    pub fn serve(self, mut core: WireCore) -> std::io::Result<NetSummary> {
+        let NetServer { listener, config, stop } = self;
+        let counters = Arc::new(NetCounters::default());
+        let stopping = Arc::new(AtomicBool::new(false));
+        let (jobs_tx, jobs_rx) = mpsc::channel::<Job>();
+
+        let accept_counters = Arc::clone(&counters);
+        let accept_stopping = Arc::clone(&stopping);
+        let accept = std::thread::spawn(move || {
+            accept_loop(listener, config, jobs_tx, accept_stopping, accept_counters);
+        });
+
+        // the service loop: the single thread that touches the core
+        loop {
+            if stop.load(Ordering::SeqCst) && !core.draining() {
+                core.drain();
+            }
+            if core.draining() {
+                stopping.store(true, Ordering::SeqCst);
+            }
+            match jobs_rx.recv_timeout(config.poll_tick) {
+                Ok(job) => {
+                    counters.requests.fetch_add(1, Ordering::Relaxed);
+                    let reply = core.line(&job.line);
+                    // a dropped receiver (deadline fired, handler gone) is
+                    // routine: the reply is stale and falls on the floor
+                    let _ = job.reply.send(reply);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                // all handler + accept senders gone: every in-flight turn
+                // is finished and queued work is drained
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let _ = accept.join();
+        core.drain();
+
+        Ok(NetSummary {
+            connections: counters.connections.load(Ordering::Relaxed),
+            requests: counters.requests.load(Ordering::Relaxed),
+            deadlines: counters.deadlines.load(Ordering::Relaxed),
+            handler_panics: counters.handler_panics.load(Ordering::Relaxed),
+            contained_panics: core.contained_panics,
+            evictions: core.evictions,
+            restores: core.restores,
+            serve: core.summary(),
+        })
+    }
+}
+
+/// Accept loop: nonblocking accept, polling the stop flag between
+/// attempts, one supervised handler thread per connection. Exits (and
+/// drops its job sender) once stopping is set.
+fn accept_loop(
+    listener: Listener,
+    config: NetConfig,
+    jobs_tx: mpsc::Sender<Job>,
+    stopping: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+) {
+    match &listener {
+        Listener::Tcp(l) => l.set_nonblocking(true).ok(),
+        Listener::Unix(l, _) => l.set_nonblocking(true).ok(),
+    };
+    let mut handlers = Vec::new();
+    while !stopping.load(Ordering::SeqCst) {
+        let accepted = match &listener {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            Listener::Unix(l, _) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        };
+        match accepted {
+            Ok(stream) => {
+                counters.connections.fetch_add(1, Ordering::Relaxed);
+                let tx = jobs_tx.clone();
+                let stop = Arc::clone(&stopping);
+                let ctr = Arc::clone(&counters);
+                handlers.push(std::thread::spawn(move || {
+                    // supervision: a panic in our own handler code reaps
+                    // this connection only — the listener, the service
+                    // loop, and every other connection keep serving
+                    let supervised = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || handle_connection(stream, config, tx, stop, Arc::clone(&ctr)),
+                    ));
+                    if supervised.is_err() {
+                        ctr.handler_panics.fetch_add(1, Ordering::Relaxed);
+                    }
+                }));
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                std::thread::sleep(config.poll_tick);
+            }
+            // a failed accept (fd pressure, aborted handshake) must not
+            // kill the listener; back off one tick and keep accepting
+            Err(_) => std::thread::sleep(config.poll_tick),
+        }
+        handlers.retain(|h| !h.is_finished());
+    }
+    // stop observed: wait for every handler to finish its in-flight
+    // request before releasing the job channel
+    for h in handlers {
+        let _ = h.join();
+    }
+    if let Listener::Unix(_, path) = &listener {
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+/// One connection: read newline-delimited frames under the idle/deadline
+/// budget, forward each to the service loop, write back one reply line
+/// per frame, in order.
+fn handle_connection(
+    stream: Stream,
+    config: NetConfig,
+    jobs_tx: mpsc::Sender<Job>,
+    stopping: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+) {
+    let _ = stream.set_read_timeout(Some(config.poll_tick));
+    let _ = stream.set_write_timeout(Some(config.request_deadline));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut frame_started: Option<Instant> = None;
+    let mut last_activity = Instant::now();
+
+    // answer with a typed error frame, then drop the connection
+    let refuse = |writer: &mut Stream, buf: &[u8], error: SelectError| {
+        let id = readable_frame_id(&String::from_utf8_lossy(buf));
+        let line = ApiReply::Error { error }.encode(id);
+        let _ = writeln!(writer, "{line}").and_then(|_| writer.flush());
+    };
+
+    loop {
+        if stopping.load(Ordering::SeqCst) && buf.is_empty() {
+            break; // graceful drain: no frame in flight, close
+        }
+        let before = buf.len();
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => break, // EOF (a trailing partial frame is dropped)
+            Ok(_) if buf.ends_with(b"\n") => {
+                last_activity = Instant::now();
+                frame_started = None;
+                if buf.len() > config.max_frame_len {
+                    refuse(
+                        &mut writer,
+                        &buf,
+                        SelectError::Protocol(format!(
+                            "frame of {} bytes exceeds the {}-byte cap",
+                            buf.len(),
+                            config.max_frame_len
+                        )),
+                    );
+                    break;
+                }
+                let line = String::from_utf8_lossy(&buf).trim().to_string();
+                if !line.is_empty() {
+                    let (reply_tx, reply_rx) = mpsc::channel();
+                    if jobs_tx.send(Job { line: line.clone(), reply: reply_tx }).is_err() {
+                        break; // service loop gone (drained)
+                    }
+                    match reply_rx.recv_timeout(config.request_deadline) {
+                        Ok(reply) => {
+                            if writeln!(writer, "{reply}").and_then(|_| writer.flush()).is_err() {
+                                break; // client gone mid-reply
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            counters.deadlines.fetch_add(1, Ordering::Relaxed);
+                            refuse(
+                                &mut writer,
+                                line.as_bytes(),
+                                SelectError::Deadline(format!(
+                                    "request exceeded the {:?} deadline",
+                                    config.request_deadline
+                                )),
+                            );
+                            // the late reply, when it lands, hits a dropped
+                            // channel and falls on the floor; this client's
+                            // view stays frame-aligned
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                buf.clear();
+            }
+            Ok(_) => {
+                // partial frame (no delimiter yet, not EOF); clock it
+                if frame_started.is_none() && buf.len() > before {
+                    frame_started = Some(Instant::now());
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if !buf.is_empty() && frame_started.is_none() {
+                    frame_started = Some(Instant::now());
+                }
+                if buf.len() > config.max_frame_len {
+                    refuse(
+                        &mut writer,
+                        &buf,
+                        SelectError::Protocol(format!(
+                            "frame of {} bytes exceeds the {}-byte cap",
+                            buf.len(),
+                            config.max_frame_len
+                        )),
+                    );
+                    break;
+                }
+                // slow-loris: a frame trickling in past the deadline is
+                // refused; the lane it would have addressed is untouched
+                if let Some(t0) = frame_started {
+                    if t0.elapsed() > config.request_deadline {
+                        counters.deadlines.fetch_add(1, Ordering::Relaxed);
+                        refuse(
+                            &mut writer,
+                            &buf,
+                            SelectError::Deadline(format!(
+                                "frame incomplete after the {:?} deadline",
+                                config.request_deadline
+                            )),
+                        );
+                        break;
+                    }
+                }
+                if buf.is_empty() && last_activity.elapsed() > config.idle_timeout {
+                    break; // idle connection: close without a reply owed
+                }
+            }
+            Err(_) => break, // reset, aborted, …: the connection is gone
+        }
+    }
+    reader.into_inner().shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// WireClient — reconnecting client with capped backoff + jitter
+// ---------------------------------------------------------------------------
+
+/// Retry policy of a [`WireClient`].
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Transport-fault attempts per request before giving up
+    /// ([`SelectError::Disconnected`]).
+    pub max_attempts: usize,
+    /// First backoff sleep; doubles per attempt.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 10,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_secs(1),
+        }
+    }
+}
+
+/// A v1 wire client over TCP or Unix sockets that treats transport faults
+/// as retryable: a refused dial, a reset, a truncated or garbled reply
+/// each tear the connection down, back off (exponential, capped, with
+/// PCG-seeded jitter so reconnect stampedes decorrelate), redial, and
+/// replay the request.
+///
+/// Replay gives **at-least-once** delivery: a request whose reply was lost
+/// may have applied. Every v1 op is safe under that contract except
+/// `step` — reads (`sweep`/`metrics`/`list`/`ping`) are pure, unpinned
+/// `insert` is a set-union no-op on replay, pinned `insert` answers the
+/// replay with a typed `stale_generation`, `close` answers
+/// `unknown_session`, and `finish` re-serves the recorded result — while a
+/// replayed `step` could advance the driver twice. Clients stepping driven
+/// lanes through chaos should treat a `step` retry as forking the
+/// schedule (the chaos harness drives undriven lanes for exactly this
+/// reason).
+pub struct WireClient {
+    addr: String,
+    conn: Option<BufReader<Stream>>,
+    next_id: u64,
+    policy: RetryPolicy,
+    rng: Pcg64,
+    /// reconnects performed over this client's lifetime (observability
+    /// for the chaos harness and the soak)
+    pub reconnects: u64,
+}
+
+impl WireClient {
+    /// Create a client for `addr` (`host:port` or `unix:/path`). Dialing
+    /// is lazy — the first request connects, with the same backoff as any
+    /// reconnect, so a client racing a restarting server just works.
+    pub fn connect(addr: &str, seed: u64) -> WireClient {
+        WireClient {
+            addr: addr.to_string(),
+            conn: None,
+            next_id: 0,
+            policy: RetryPolicy::default(),
+            rng: Pcg64::seed_from(seed ^ 0x57ff_c1e7),
+            reconnects: 0,
+        }
+    }
+
+    /// Replace the retry policy.
+    pub fn with_policy(mut self, policy: RetryPolicy) -> WireClient {
+        self.policy = policy;
+        self
+    }
+
+    /// Sleep the capped-exponential backoff for `attempt` (0-based), with
+    /// multiplicative jitter in `[0.5, 1.0)`.
+    fn backoff(&mut self, attempt: usize) {
+        let exp = self.policy.base_backoff.as_secs_f64() * (1u64 << attempt.min(20)) as f64;
+        let capped = exp.min(self.policy.max_backoff.as_secs_f64());
+        let jittered = capped * self.rng.gen_range_f64(0.5, 1.0);
+        std::thread::sleep(Duration::from_secs_f64(jittered));
+    }
+
+    fn ensure_conn(&mut self) -> std::io::Result<&mut BufReader<Stream>> {
+        if self.conn.is_none() {
+            let stream = dial(&self.addr)?;
+            self.conn = Some(BufReader::new(stream));
+        }
+        Ok(self.conn.as_mut().expect("just connected"))
+    }
+
+    /// One send/receive attempt over the current connection.
+    fn attempt(&mut self, line: &str, id: u64) -> Result<ApiReply, std::io::Error> {
+        let conn = self.ensure_conn()?;
+        let stream = conn.get_mut();
+        writeln!(stream, "{line}")?;
+        stream.flush()?;
+        let mut reply = String::new();
+        let n = self.conn.as_mut().expect("connected").read_line(&mut reply)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection before replying",
+            ));
+        }
+        let garbled = |what: String| std::io::Error::new(std::io::ErrorKind::InvalidData, what);
+        let (reply_id, reply) =
+            ApiReply::decode(&reply).map_err(|e| garbled(format!("garbled reply: {e}")))?;
+        if reply_id != id {
+            // can only happen if a previous reply was half-consumed; the
+            // stream is no longer frame-aligned, so treat it as transport
+            return Err(garbled(format!("reply id {reply_id} for request {id}")));
+        }
+        Ok(reply)
+    }
+
+    /// Send one request, reconnect-and-replay on transport faults, and
+    /// return the server's typed reply (or the error the server answered
+    /// with). Exhausted retries are [`SelectError::Disconnected`].
+    pub fn request(&mut self, req: &ApiRequest) -> Result<ApiReply, SelectError> {
+        self.next_id += 1;
+        let id = self.next_id;
+        let line = req.encode(id);
+        for attempt in 0..self.policy.max_attempts {
+            if attempt > 0 {
+                self.backoff(attempt - 1);
+            }
+            match self.attempt(&line, id) {
+                Ok(ApiReply::Error { error }) => return Err(error),
+                Ok(reply) => return Ok(reply),
+                Err(_) => {
+                    // transport fault: the connection is suspect; drop it
+                    // so the next attempt redials
+                    if let Some(conn) = self.conn.take() {
+                        conn.into_inner().shutdown();
+                    }
+                    self.reconnects += 1;
+                }
+            }
+        }
+        Err(SelectError::Disconnected)
+    }
+
+    /// `ping` → liveness.
+    pub fn ping(&mut self) -> Result<(), SelectError> {
+        match self.request(&ApiRequest::Ping)? {
+            ApiReply::Pong => Ok(()),
+            other => Err(unexpected("pong", &other)),
+        }
+    }
+
+    /// `open` → new session id.
+    pub fn open(
+        &mut self,
+        problem: WireProblem,
+        plan: WirePlan,
+        driven: bool,
+        tenant: Option<String>,
+    ) -> Result<usize, SelectError> {
+        match self.request(&ApiRequest::Open { problem, plan, driven, tenant })? {
+            ApiReply::Opened { session } => Ok(session),
+            other => Err(unexpected("opened", &other)),
+        }
+    }
+
+    /// `list` → rows for every open session.
+    pub fn list(&mut self) -> Result<Vec<SessionInfo>, SelectError> {
+        match self.request(&ApiRequest::List)? {
+            ApiReply::Sessions { sessions } => Ok(sessions),
+            other => Err(unexpected("sessions", &other)),
+        }
+    }
+
+    /// `close` → drop the session.
+    pub fn close(&mut self, session: usize) -> Result<(), SelectError> {
+        match self.request(&ApiRequest::Close { session })? {
+            ApiReply::Closed { .. } => Ok(()),
+            other => Err(unexpected("closed", &other)),
+        }
+    }
+
+    /// `sweep` → `(gains, generation, fresh)`.
+    pub fn sweep(
+        &mut self,
+        session: usize,
+        candidates: Vec<usize>,
+    ) -> Result<(Vec<f64>, u64, usize), SelectError> {
+        match self.request(&ApiRequest::Sweep { session, candidates })? {
+            ApiReply::Swept { gains, generation, fresh } => Ok((gains, generation, fresh)),
+            other => Err(unexpected("swept", &other)),
+        }
+    }
+
+    /// `insert` → `(grew, generation)`.
+    pub fn insert(
+        &mut self,
+        session: usize,
+        item: usize,
+        if_generation: Option<u64>,
+    ) -> Result<(bool, u64), SelectError> {
+        match self.request(&ApiRequest::Insert { session, item, if_generation })? {
+            ApiReply::Inserted { grew, generation } => Ok((grew, generation)),
+            other => Err(unexpected("inserted", &other)),
+        }
+    }
+
+    /// `step` → `(done, generation)`. Not replay-safe; see the type docs.
+    pub fn step(&mut self, session: usize) -> Result<(bool, u64), SelectError> {
+        match self.request(&ApiRequest::Step { session })? {
+            ApiReply::Stepped { done, generation } => Ok((done, generation)),
+            other => Err(unexpected("stepped", &other)),
+        }
+    }
+
+    /// `finish` → the session's final [`SelectionResult`].
+    pub fn finish(&mut self, session: usize) -> Result<SelectionResult, SelectError> {
+        match self.request(&ApiRequest::Finish { session })? {
+            ApiReply::Finished { result } => Ok(result),
+            other => Err(unexpected("finished", &other)),
+        }
+    }
+
+    /// `metrics` → the session's [`SessionSnapshot`].
+    pub fn metrics(&mut self, session: usize) -> Result<SessionSnapshot, SelectError> {
+        match self.request(&ApiRequest::Metrics { session })? {
+            ApiReply::Snapshot { snapshot } => Ok(snapshot),
+            other => Err(unexpected("snapshot", &other)),
+        }
+    }
+
+    /// `shutdown` → graceful drain; returns how many lanes the server
+    /// persisted.
+    pub fn shutdown(&mut self) -> Result<usize, SelectError> {
+        match self.request(&ApiRequest::Shutdown)? {
+            ApiReply::Stopping { persisted } => Ok(persisted),
+            other => Err(unexpected("stopping", &other)),
+        }
+    }
+}
+
+fn unexpected(wanted: &str, got: &ApiReply) -> SelectError {
+    SelectError::Protocol(format!("expected '{wanted}' reply, got '{}'", got.op()))
+}
+
+// ---------------------------------------------------------------------------
+// ChaosProxy — fault-injection forwarder for the test harness
+// ---------------------------------------------------------------------------
+
+/// Fault probabilities of a [`ChaosProxy`], applied independently per
+/// forwarded chunk in each direction.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosConfig {
+    /// chance to truncate the chunk (forward a prefix, then drop the
+    /// connection) — produces exactly the half-written frames the server
+    /// must refuse or time out
+    pub p_truncate: f64,
+    /// chance to drop the connection before forwarding the chunk
+    /// (mid-request disconnect)
+    pub p_disconnect: f64,
+    /// chance to delay the chunk
+    pub p_delay: f64,
+    /// delay magnitude ceiling, milliseconds
+    pub max_delay_ms: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig { p_truncate: 0.05, p_disconnect: 0.05, p_delay: 0.15, max_delay_ms: 5 }
+    }
+}
+
+/// A PCG-seeded fault-injection TCP proxy: accepts connections and pumps
+/// bytes to `target`, injecting truncation, delays, and disconnects per
+/// [`ChaosConfig`]. The schedule is fully determined by the seed and the
+/// connection order, so a failing chaos run replays from its seed.
+pub struct ChaosProxy {
+    addr: String,
+    stopping: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Start a proxy on an ephemeral localhost port forwarding to
+    /// `target` (TCP `host:port`).
+    pub fn start(target: &str, seed: u64, config: ChaosConfig) -> std::io::Result<ChaosProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let stopping = Arc::new(AtomicBool::new(false));
+        let stop = Arc::clone(&stopping);
+        let target = target.to_string();
+        let accept = std::thread::spawn(move || {
+            let mut conn_seq: u64 = 0;
+            let mut pumps = Vec::new();
+            while !stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((client, _)) => {
+                        conn_seq += 1;
+                        let Ok(server) = TcpStream::connect(&target) else {
+                            continue; // server down: refuse by dropping
+                        };
+                        // independent deterministic schedules per
+                        // connection and direction
+                        let tx_rng = Pcg64::seed_from(seed ^ (conn_seq << 1));
+                        let rx_rng = Pcg64::seed_from(seed ^ (conn_seq << 1) ^ 1);
+                        let (Ok(c2), Ok(s2)) = (client.try_clone(), server.try_clone()) else {
+                            continue;
+                        };
+                        pumps.push(std::thread::spawn(move || {
+                            pump(client, server, config, tx_rng);
+                        }));
+                        pumps.push(std::thread::spawn(move || {
+                            pump(s2, c2, config, rx_rng);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+                pumps.retain(|p| !p.is_finished());
+            }
+            for p in pumps {
+                let _ = p.join();
+            }
+        });
+        Ok(ChaosProxy { addr, stopping, accept: Some(accept) })
+    }
+
+    /// The proxy's dialable `host:port`.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting and reap the pump threads. In-flight connections
+    /// are cut.
+    pub fn stop(&mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Pump bytes `from` → `to`, rolling the fault dice per chunk.
+fn pump(from: TcpStream, mut to: TcpStream, config: ChaosConfig, mut rng: Pcg64) {
+    let mut from = from;
+    let _ = from.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut chunk = [0u8; 4096];
+    loop {
+        match from.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                if rng.bernoulli(config.p_disconnect) {
+                    break; // cut before the bytes land: mid-request loss
+                }
+                if rng.bernoulli(config.p_delay) {
+                    let ms = rng.gen_range_usize(0, config.max_delay_ms.max(1) as usize + 1);
+                    std::thread::sleep(Duration::from_millis(ms as u64));
+                }
+                if rng.bernoulli(config.p_truncate) {
+                    // forward a strict prefix, then cut: a half-frame
+                    let cut = rng.gen_range_usize(0, n);
+                    if cut > 0 && to.write_all(&chunk[..cut]).is_ok() {
+                        let _ = to.flush();
+                    }
+                    break;
+                }
+                if to.write_all(&chunk[..n]).is_err() {
+                    break;
+                }
+                let _ = to.flush();
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+    }
+    let _ = from.shutdown(std::net::Shutdown::Both);
+    let _ = to.shutdown(std::net::Shutdown::Both);
+}

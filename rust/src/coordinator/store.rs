@@ -43,6 +43,11 @@ pub struct SessionRecord {
     /// result-label of the lane's algorithm (`sds_ma`, `dash`, …)
     pub algorithm: String,
     pub driven: bool,
+    /// the lane's driver had stepped to done when the record was written
+    /// (kept explicit so a restarted server's `list` metadata matches the
+    /// pre-crash server's exactly — a driver can be done before `finish`
+    /// materializes its result)
+    pub finished: bool,
     /// driver RNG seed the lane was opened with
     pub seed: u64,
     pub problem: WireProblem,
@@ -59,6 +64,7 @@ impl SessionRecord {
             ("tenant", self.tenant.as_str().into()),
             ("algorithm", self.algorithm.as_str().into()),
             ("driven", self.driven.into()),
+            ("finished", self.finished.into()),
             ("seed", self.seed.into()),
             ("problem", self.problem.to_json()),
             ("plan", self.plan.to_json()),
@@ -80,6 +86,12 @@ impl SessionRecord {
             tenant: need_str(j, "tenant")?.to_string(),
             algorithm: need_str(j, "algorithm")?.to_string(),
             driven: need_bool(j, "driven")?,
+            // absent in records written before the flag existed: a result
+            // is the only evidence of a finished driver
+            finished: match j.get("finished") {
+                Some(_) => need_bool(j, "finished")?,
+                None => result.is_some(),
+            },
             seed: need_u64(j, "seed")?,
             problem: WireProblem::from_json(need(j, "problem")?)?,
             plan: WirePlan::from_json(need(j, "plan")?)?,
@@ -99,12 +111,22 @@ pub struct SessionStore {
 }
 
 impl SessionStore {
-    /// Open (creating if needed) the store directory.
+    /// Open (creating if needed) the store directory. Stray `.json.tmp`
+    /// files — leftovers of a crash mid-[`SessionStore::save`], before the
+    /// atomic rename — are swept here: they were never observable as
+    /// records and keeping them would only shadow the next save's temp.
     pub fn open(dir: impl Into<PathBuf>) -> Result<SessionStore, SelectError> {
         let dir = dir.into();
         std::fs::create_dir_all(&dir).map_err(|e| {
             SelectError::Backend(format!("session store: create {}: {e}", dir.display()))
         })?;
+        if let Ok(entries) = std::fs::read_dir(&dir) {
+            for entry in entries.flatten() {
+                if entry.file_name().to_string_lossy().ends_with(".json.tmp") {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
         Ok(SessionStore { dir })
     }
 
@@ -133,23 +155,74 @@ impl SessionStore {
     }
 
     /// Load the record for one session id.
+    ///
+    /// A record that exists but cannot be decoded — truncated by a crash
+    /// mid-write, hand-edited, or claiming a different session id — is
+    /// **quarantined**: moved to the `.quarantine/` side-directory for
+    /// post-mortem and answered with a typed [`SelectError::Backend`] for
+    /// *this id only*. The rest of the store keeps serving; the corrupt
+    /// record can never wedge every restore behind it.
     pub fn load(&self, session: usize) -> Result<SessionRecord, SelectError> {
         let path = self.path(session);
         let text = std::fs::read_to_string(&path).map_err(|e| {
             SelectError::Backend(format!("session store: read {}: {e}", path.display()))
         })?;
-        let j = Json::parse(&text).map_err(|e| {
-            SelectError::Backend(format!("session store: parse {}: {e}", path.display()))
-        })?;
-        let record = SessionRecord::from_json(&j)?;
+        let corrupt = |why: String| -> SelectError {
+            let note = match self.quarantine(session) {
+                Some(dest) => format!("; record quarantined to {}", dest.display()),
+                None => String::new(),
+            };
+            SelectError::Backend(format!("session store: {why}{note}"))
+        };
+        let j = match Json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => return Err(corrupt(format!("parse {}: {e}", path.display()))),
+        };
+        let record = match SessionRecord::from_json(&j) {
+            Ok(r) => r,
+            Err(e) => return Err(corrupt(format!("decode {}: {e}", path.display()))),
+        };
         if record.session != session {
-            return Err(SelectError::Backend(format!(
-                "session store: {} records session {}, expected {session}",
+            return Err(corrupt(format!(
+                "{} records session {}, expected {session}",
                 path.display(),
                 record.session
             )));
         }
         Ok(record)
+    }
+
+    /// Move one record into the `.quarantine/` side-directory, returning
+    /// the destination (best-effort: `None` if the move failed — the
+    /// caller's typed error stands either way).
+    fn quarantine(&self, session: usize) -> Option<PathBuf> {
+        let qdir = self.dir.join(".quarantine");
+        std::fs::create_dir_all(&qdir).ok()?;
+        let dest = qdir.join(format!("session-{session}.json"));
+        std::fs::rename(self.path(session), &dest).ok()?;
+        Some(dest)
+    }
+
+    /// Session ids with a record on disk, ascending. Used by
+    /// [`WireCore::with_store`](crate::coordinator::wire::WireCore::with_store)
+    /// to adopt a previous process's sessions on startup.
+    pub fn list(&self) -> Vec<usize> {
+        let mut ids = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if let Some(id) = name
+                    .strip_prefix("session-")
+                    .and_then(|rest| rest.strip_suffix(".json"))
+                    .and_then(|id| id.parse::<usize>().ok())
+                {
+                    ids.push(id);
+                }
+            }
+        }
+        ids.sort_unstable();
+        ids
     }
 
     /// Whether a record exists for one session id.
@@ -175,6 +248,7 @@ mod tests {
             tenant: "acme".into(),
             algorithm: "sds_ma".into(),
             driven: false,
+            finished: false,
             seed: 7,
             problem: WireProblem::new("d1", 5, 1),
             plan: WirePlan::new("greedy"),
@@ -244,6 +318,64 @@ mod tests {
         // write under a different id than the record claims
         std::fs::write(store.path(5), rec.to_json().to_string_pretty()).unwrap();
         assert!(matches!(store.load(5).unwrap_err(), SelectError::Backend(_)));
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn truncated_records_quarantine_and_fail_typed_for_that_id_only() {
+        let store = SessionStore::open(tempdir("quarantine")).unwrap();
+        store.save(&record(0)).unwrap();
+        store.save(&record(1)).unwrap();
+        // hand-truncate record 0: the classic crash-during-write leftover
+        let full = std::fs::read_to_string(store.path(0)).unwrap();
+        std::fs::write(store.path(0), &full[..full.len() / 2]).unwrap();
+        // the corrupt id fails typed and its record moves to .quarantine/
+        let err = store.load(0).unwrap_err();
+        assert!(matches!(err, SelectError::Backend(_)), "{err:?}");
+        assert!(err.to_string().contains("quarantined"), "{err}");
+        assert!(!store.contains(0), "corrupt record is out of the store");
+        let quarantined = store.dir().join(".quarantine").join("session-0.json");
+        assert!(quarantined.is_file(), "record kept for post-mortem");
+        // a second load of the same id is a plain missing-record error,
+        // not a second quarantine
+        assert!(store.load(0).is_err());
+        // the neighbor record is untouched
+        assert_eq!(store.load(1).unwrap(), record(1));
+        // list() no longer reports the quarantined id
+        assert_eq!(store.list(), vec![1]);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn decode_failures_quarantine_too() {
+        let store = SessionStore::open(tempdir("decode-quarantine")).unwrap();
+        // valid JSON, invalid record (missing every field)
+        std::fs::write(store.path(4), "{\"session\": 4}").unwrap();
+        let err = store.load(4).unwrap_err();
+        assert!(err.to_string().contains("quarantined"), "{err}");
+        assert!(store.dir().join(".quarantine").join("session-4.json").is_file());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn list_reports_record_ids_and_open_sweeps_stale_tmps() {
+        let dir = tempdir("list");
+        let store = SessionStore::open(&dir).unwrap();
+        assert_eq!(store.list(), Vec::<usize>::new());
+        store.save(&record(3)).unwrap();
+        store.save(&record(0)).unwrap();
+        store.save(&record(11)).unwrap();
+        // non-record files are ignored
+        std::fs::write(dir.join("notes.txt"), "x").unwrap();
+        std::fs::write(dir.join("session-bad.json"), "x").unwrap();
+        assert_eq!(store.list(), vec![0, 3, 11]);
+        // a crash between write and rename leaves a .json.tmp; reopening
+        // the store sweeps it
+        let tmp = dir.join("session-7.json.tmp");
+        std::fs::write(&tmp, "half a reco").unwrap();
+        let store = SessionStore::open(&dir).unwrap();
+        assert!(!tmp.exists(), "stale tmp swept on open");
+        assert_eq!(store.list(), vec![0, 3, 11]);
         let _ = std::fs::remove_dir_all(store.dir());
     }
 }

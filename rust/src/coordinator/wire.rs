@@ -20,11 +20,21 @@
 //!   (`util::json` uses a BTreeMap), so frames are byte-deterministic —
 //!   `tests/wire_props.rs` pins the schema against
 //!   `tests/golden/api_v1.jsonl`.
-//! - **[`StdioServer`]** — the transport: reads request lines, drives the
-//!   deterministic [`SessionServer`] core (`submit` + `turn`), writes one
-//!   reply line per request in order. `dash serve --stdio` wires it to
-//!   stdin/stdout; any process that can spawn a child and speak JSON can
-//!   drive selections with exact, generation-stamped semantics.
+//! - **[`WireCore`]** — the transport-agnostic engine: decodes request
+//!   lines, drives the deterministic [`SessionServer`] core
+//!   (`submit` + `turn`), encodes one reply line per request in order,
+//!   and owns the lane table, dataset cache, tenant quotas, and session
+//!   store. Panics inside request handling are contained to a typed
+//!   `client_panic` error frame ([`WireCore::line`]); the `shutdown` op
+//!   drains every evictable lane to the store and ends the front's loop.
+//! - **The fronts** — thin pumps over one core. [`StdioServer`] reads
+//!   stdin and writes stdout (`dash serve --stdio`); the socket front
+//!   ([`NetServer`](crate::coordinator::net::NetServer), `dash serve
+//!   --listen`) accepts TCP or Unix-socket connections and pumps each
+//!   through the same core under per-connection supervision, deadlines,
+//!   and idle timeouts. Any process that can speak newline-delimited JSON
+//!   over any of these transports drives selections with exact,
+//!   generation-stamped semantics.
 //!
 //! # Protocol (v1)
 //!
@@ -73,7 +83,7 @@
 //! state *byte-identically* (insertion order fully determines the state
 //! bits — `tests/lifecycle.rs` proves resumed selections equal an
 //! uninterrupted run). Lanes that cannot be rebuilt from specs — embedded
-//! [`StdioServer::open_objective`] lanes and driven lanes still mid-run
+//! [`WireCore::open_objective`] lanes and driven lanes still mid-run
 //! (driver state is not snapshottable) — are pinned resident and never
 //! evicted.
 //!
@@ -472,6 +482,18 @@ pub enum ApiRequest {
     Finish { session: usize },
     /// Point-in-time session snapshot.
     Metrics { session: usize },
+    /// Liveness probe: answered with [`ApiReply::Pong`] and no side
+    /// effects. Reconnecting clients use it to confirm a fresh transport
+    /// before resuming session traffic.
+    Ping,
+    /// Graceful drain: snapshot every evictable lane to the session store,
+    /// stop taking new work, and answer [`ApiReply::Stopping`]. The front
+    /// exits after the in-flight turn completes.
+    Shutdown,
+    /// Test-only fault injection: panic inside the request handler.
+    /// Rejected unless the front opted in ([`WireCore::with_fault_ops`]);
+    /// the chaos harness uses it to prove panic containment.
+    Crash { message: String },
 }
 
 /// Summary row of one open session ([`ApiReply::Sessions`]).
@@ -506,6 +528,11 @@ pub enum ApiReply {
     Stepped { done: bool, generation: u64 },
     Finished { result: SelectionResult },
     Snapshot { snapshot: SessionSnapshot },
+    /// Liveness probe answer.
+    Pong,
+    /// Graceful-drain acknowledgment: `persisted` evictable lanes were
+    /// snapshotted to the store before the front stopped.
+    Stopping { persisted: usize },
     Error { error: SelectError },
 }
 
@@ -521,6 +548,9 @@ impl ApiRequest {
             ApiRequest::Step { .. } => "step",
             ApiRequest::Finish { .. } => "finish",
             ApiRequest::Metrics { .. } => "metrics",
+            ApiRequest::Ping => "ping",
+            ApiRequest::Shutdown => "shutdown",
+            ApiRequest::Crash { .. } => "crash",
         }
     }
 
@@ -539,8 +569,14 @@ impl ApiRequest {
             ApiRequest::Finish { session } => Ok((SessionId(session), ServeRequest::Finish)),
             ApiRequest::Metrics { session } => Ok((SessionId(session), ServeRequest::Metrics)),
             ApiRequest::Close { session } => Ok((SessionId(session), ServeRequest::Close)),
-            ApiRequest::Open { .. } | ApiRequest::List => Err(SelectError::Rejected(
-                "open/list are server-level requests, not addressed to a session".into(),
+            ApiRequest::Open { .. }
+            | ApiRequest::List
+            | ApiRequest::Ping
+            | ApiRequest::Shutdown
+            | ApiRequest::Crash { .. } => Err(SelectError::Rejected(
+                "open/list/ping/shutdown/crash are server-level requests, not addressed to a \
+                 session"
+                    .into(),
             )),
         }
     }
@@ -580,6 +616,12 @@ impl ApiRequest {
             | ApiRequest::Metrics { session } => {
                 pairs.push(("session", (*session).into()));
             }
+            ApiRequest::Ping | ApiRequest::Shutdown => {}
+            ApiRequest::Crash { message } => {
+                if !message.is_empty() {
+                    pairs.push(("message", message.as_str().into()));
+                }
+            }
         }
         Json::obj(pairs).to_string_compact()
     }
@@ -618,6 +660,11 @@ impl ApiRequest {
             "step" => ApiRequest::Step { session: need_usize(&j, "session")? },
             "finish" => ApiRequest::Finish { session: need_usize(&j, "session")? },
             "metrics" => ApiRequest::Metrics { session: need_usize(&j, "session")? },
+            "ping" => ApiRequest::Ping,
+            "shutdown" => ApiRequest::Shutdown,
+            "crash" => ApiRequest::Crash {
+                message: opt_str(&j, "message")?.unwrap_or_default(),
+            },
             other => return Err(SelectError::Protocol(format!("unknown op '{other}'"))),
         };
         Ok((id, req))
@@ -636,6 +683,8 @@ impl ApiReply {
             ApiReply::Stepped { .. } => "stepped",
             ApiReply::Finished { .. } => "finished",
             ApiReply::Snapshot { .. } => "snapshot",
+            ApiReply::Pong => "pong",
+            ApiReply::Stopping { .. } => "stopping",
             ApiReply::Error { .. } => "error",
         }
     }
@@ -688,6 +737,8 @@ impl ApiReply {
             ApiReply::Snapshot { snapshot } => {
                 pairs.push(("snapshot", snapshot_to_json(snapshot)))
             }
+            ApiReply::Pong => {}
+            ApiReply::Stopping { persisted } => pairs.push(("persisted", (*persisted).into())),
             ApiReply::Error { error } => pairs.push(("error", error_to_json(error))),
         }
         Json::obj(pairs).to_string_compact()
@@ -732,6 +783,8 @@ impl ApiReply {
             "snapshot" => {
                 ApiReply::Snapshot { snapshot: snapshot_from_json(need(&j, "snapshot")?)? }
             }
+            "pong" => ApiReply::Pong,
+            "stopping" => ApiReply::Stopping { persisted: need_usize(&j, "persisted")? },
             "error" => ApiReply::Error { error: error_from_json(need(&j, "error")?)? },
             other => return Err(SelectError::Protocol(format!("unknown op '{other}'"))),
         };
@@ -882,6 +935,7 @@ pub fn error_to_json(e: &SelectError) -> Json {
         | SelectError::Backend(m)
         | SelectError::Rejected(m)
         | SelectError::ClientPanic(m)
+        | SelectError::Deadline(m)
         | SelectError::Protocol(m) => pairs.push(("reason", m.as_str().into())),
         SelectError::UnknownSession(s) => pairs.push(("session", (*s).into())),
         SelectError::StaleGeneration { pinned, actual } => {
@@ -907,6 +961,7 @@ pub fn error_from_json(j: &Json) -> Result<SelectError, SelectError> {
         "backend" => Ok(SelectError::Backend(reason()?)),
         "rejected" => Ok(SelectError::Rejected(reason()?)),
         "client_panic" => Ok(SelectError::ClientPanic(reason()?)),
+        "deadline" => Ok(SelectError::Deadline(reason()?)),
         "disconnected" => Ok(SelectError::Disconnected),
         "protocol" => Ok(SelectError::Protocol(reason()?)),
         other => Err(SelectError::Protocol(format!("unknown error kind '{other}'"))),
@@ -1019,7 +1074,7 @@ fn opt_bool(j: &Json, key: &str) -> Result<Option<bool>, SelectError> {
 /// Best-effort id of a frame that failed to decode: a malformed frame
 /// with a perfectly readable `id` (missing field, unknown op, wrong
 /// version) still gets its error reply correlated to the request.
-fn readable_frame_id(line: &str) -> u64 {
+pub(crate) fn readable_frame_id(line: &str) -> u64 {
     Json::parse(line.trim())
         .ok()
         .and_then(|j| j.get("id").and_then(Json::as_u64))
@@ -1039,7 +1094,7 @@ struct LaneMeta {
     tenant: String,
     seed: u64,
     /// wire specs to rebuild the objective from on restore; `None` for
-    /// embedded [`StdioServer::open_objective`] lanes, which are pinned
+    /// embedded [`WireCore::open_objective`] lanes, which are pinned
     /// resident (nothing to rebuild them from)
     specs: Option<(WireProblem, WirePlan)>,
     /// LRU stamp: the front's logical clock at the lane's last request
@@ -1068,18 +1123,29 @@ enum WireLane {
     Closed,
 }
 
-/// The v1 wire front: decodes request frames, drives the deterministic
-/// [`SessionServer`] core (`submit` + `turn`), and encodes one reply frame
-/// per request, in order. Used by `dash serve --stdio` over
-/// stdin/stdout and driven directly (no process, no threads) by the
-/// protocol tests.
+/// The transport-agnostic v1 wire core: decodes request frames, drives the
+/// deterministic [`SessionServer`] core (`submit` + `turn`), and encodes
+/// one reply frame per request, in order. Both serving fronts are thin
+/// loops over it — [`StdioServer`] pumps stdin/stdout, the socket front
+/// ([`NetServer`](crate::coordinator::net::NetServer)) pumps connection
+/// handlers through one core — so the two transports are provably one
+/// code path. The protocol tests drive it directly (no process, no
+/// threads).
 ///
 /// Sessions opened over the wire resolve their dataset/objective through
 /// the leader ([`Leader::objective`]) and are **owned by their lane**: the
 /// `close` op drops them, and with a session store attached
-/// ([`StdioServer::with_store`]) idle lanes are evicted to disk and
+/// ([`WireCore::with_store`]) idle lanes are evicted to disk and
 /// restored on demand — see the module docs for the full lifecycle.
-pub struct StdioServer {
+///
+/// # Fault containment
+///
+/// [`WireCore::line`] catches panics raised inside request handling and
+/// answers with a typed [`SelectError::ClientPanic`] frame instead of
+/// unwinding through the serving loop — one poisoned request cannot take
+/// down the front or the other lanes. The test-only `crash` op (gated by
+/// [`WireCore::with_fault_ops`]) exists to prove exactly that.
+pub struct WireCore {
     leader: Leader,
     server: SessionServer<'static>,
     /// wire id → lifecycle state; indices are the public session ids
@@ -1093,15 +1159,23 @@ pub struct StdioServer {
     store: Option<SessionStore>,
     /// logical LRU clock, bumped once per session-addressed request
     clock: u64,
+    /// `shutdown` op (or a drain signal) was observed: the owning front
+    /// stops its loop after the in-flight reply
+    draining: bool,
+    /// serve the test-only `crash` fault-injection op
+    fault_ops: bool,
     /// lifetime eviction / restore counters (observability for benches
     /// and soaks)
     pub evictions: u64,
     pub restores: u64,
+    /// requests answered with [`SelectError::ClientPanic`] after a
+    /// contained handler panic
+    pub contained_panics: u64,
 }
 
-impl StdioServer {
-    pub fn new(leader: Leader) -> StdioServer {
-        StdioServer {
+impl WireCore {
+    pub fn new(leader: Leader) -> WireCore {
+        WireCore {
             leader,
             server: SessionServer::new(),
             lanes: Vec::new(),
@@ -1110,21 +1184,47 @@ impl StdioServer {
             max_per_tenant: usize::MAX,
             store: None,
             clock: 0,
+            draining: false,
+            fault_ops: false,
             evictions: 0,
             restores: 0,
+            contained_panics: 0,
         }
     }
 
     /// Cap on *live* sessions. Without a store, opens beyond it are
     /// answered with [`SelectError::Backpressure`]; with one, they evict
     /// the least-recently-used idle lane first.
-    pub fn with_max_sessions(mut self, max_sessions: usize) -> StdioServer {
+    pub fn with_max_sessions(mut self, max_sessions: usize) -> WireCore {
         self.max_sessions = max_sessions.max(1);
         self
     }
 
-    /// Attach a session store, enabling evict/restore durability.
-    pub fn with_store(mut self, store: SessionStore) -> StdioServer {
+    /// Attach a session store, enabling evict/restore durability. Records
+    /// already in the store — left by a previous process's drain, or by
+    /// write-through persistence before a crash — are adopted as evicted
+    /// lanes, so a restarted server resumes the same session ids
+    /// transparently. Records that fail to load are quarantined by the
+    /// store and skipped; they never poison adoption of their neighbors.
+    pub fn with_store(mut self, store: SessionStore) -> WireCore {
+        for id in store.list() {
+            let Ok(record) = store.load(id) else {
+                // load() has quarantined the corrupt record; the id stays
+                // closed (recyclable) instead of wedging the whole store
+                continue;
+            };
+            while self.lanes.len() <= id {
+                self.lanes.push(WireLane::Closed);
+            }
+            self.lanes[id] = WireLane::Evicted(EvictedMeta {
+                algorithm: record.algorithm,
+                driven: record.driven,
+                tenant: record.tenant,
+                finished: record.finished,
+                generation: record.snapshot.generation.0,
+                set_len: record.snapshot.set.len(),
+            });
+        }
         self.store = Some(store);
         self
     }
@@ -1132,8 +1232,17 @@ impl StdioServer {
     /// Cap on sessions (live + evicted) any one tenant may own; opens
     /// beyond it are answered with [`SelectError::Rejected`]. Unlimited
     /// by default.
-    pub fn with_tenant_quota(mut self, max_per_tenant: usize) -> StdioServer {
+    pub fn with_tenant_quota(mut self, max_per_tenant: usize) -> WireCore {
         self.max_per_tenant = max_per_tenant.max(1);
+        self
+    }
+
+    /// Serve the test-only `crash` op (panic inside the handler). Off by
+    /// default: production fronts reject the op as
+    /// [`SelectError::Rejected`]; the fault-injection harness turns it on
+    /// to prove panic containment.
+    pub fn with_fault_ops(mut self, fault_ops: bool) -> WireCore {
+        self.fault_ops = fault_ops;
         self
     }
 
@@ -1219,7 +1328,7 @@ impl StdioServer {
 
     /// Hand an owned objective to the serving core and record the lane —
     /// the choke point every open (spec or embedded, fresh or restored
-    /// via [`StdioServer::restore_lane`]'s own path) funnels through.
+    /// via [`WireCore::restore_lane`]'s own path) funnels through.
     fn install_lane(
         &mut self,
         objective: Arc<dyn Objective>,
@@ -1260,6 +1369,9 @@ impl StdioServer {
                 self.lanes.len() - 1
             }
         };
+        // write-through: the lane is durable from birth, so a hard kill
+        // right after the open still restores it on restart
+        self.persist_lane(wire_id);
         Ok(wire_id)
     }
 
@@ -1332,51 +1444,72 @@ impl StdioServer {
         }
     }
 
-    /// Snapshot one live lane to the store and drop it from the core. A
-    /// failed persist keeps the lane resident (the error propagates to
-    /// the open that wanted the slot).
-    fn evict_lane(&mut self, wire_id: usize) -> Result<(), SelectError> {
-        let (slot, tenant, algorithm, driven, seed, specs) = match &self.lanes[wire_id] {
-            WireLane::Live(m) => (
-                m.slot,
-                m.tenant.clone(),
-                m.algorithm.clone(),
-                m.driven,
-                m.seed,
-                m.specs.clone(),
-            ),
-            _ => return Err(SelectError::UnknownSession(wire_id)),
+    /// Build the durable [`SessionRecord`] of one live lane, or `None`
+    /// when the lane has nothing durable: embedded lanes (no wire specs
+    /// to rebuild from) and driven lanes still mid-run (driver state is
+    /// not snapshottable). The one record-assembly path shared by
+    /// eviction, write-through persistence, and graceful drain.
+    fn record_for(&self, wire_id: usize) -> Option<SessionRecord> {
+        let m = match self.lanes.get(wire_id) {
+            Some(WireLane::Live(m)) => m,
+            _ => return None,
         };
-        let Some((problem, plan)) = specs else {
-            return Err(SelectError::Rejected(format!(
-                "session {wire_id} is pinned resident (no wire specs to restore from)"
-            )));
-        };
-        let snapshot = self
-            .server
-            .session(slot)
-            .ok_or(SelectError::UnknownSession(wire_id))?
-            .snapshot();
-        let result = self.server.result(slot).cloned();
-        let finished = self.server.finished(slot).unwrap_or(false);
-        let evicted = EvictedMeta {
-            algorithm: algorithm.clone(),
-            driven,
-            tenant: tenant.clone(),
-            finished,
-            generation: snapshot.generation.0,
-            set_len: snapshot.set.len(),
-        };
-        let record = SessionRecord {
+        let (problem, plan) = m.specs.clone()?;
+        let finished = self.server.finished(m.slot).unwrap_or(false);
+        if m.driven && !finished {
+            return None;
+        }
+        let snapshot = self.server.session(m.slot)?.snapshot();
+        let result = self.server.result(m.slot).cloned();
+        Some(SessionRecord {
             session: wire_id,
-            tenant,
-            algorithm,
-            driven,
-            seed,
+            tenant: m.tenant.clone(),
+            algorithm: m.algorithm.clone(),
+            driven: m.driven,
+            finished,
+            seed: m.seed,
             problem,
             plan,
             snapshot,
             result,
+        })
+    }
+
+    /// Write-through persistence: with a store attached, mirror one live
+    /// lane's state to its disk record after a state-changing request, so
+    /// a hard kill (SIGKILL, power loss) loses at most the in-flight
+    /// request. Best-effort by design: the live lane is authoritative and
+    /// a failed mirror write must not fail the request that already
+    /// applied — the eviction path still surfaces persist errors typed.
+    fn persist_lane(&mut self, wire_id: usize) {
+        let Some(store) = self.store.as_ref() else { return };
+        if let Some(record) = self.record_for(wire_id) {
+            let _ = store.save(&record);
+        }
+    }
+
+    /// Snapshot one live lane to the store and drop it from the core. A
+    /// failed persist keeps the lane resident (the error propagates to
+    /// the open that wanted the slot).
+    fn evict_lane(&mut self, wire_id: usize) -> Result<(), SelectError> {
+        let record = self.record_for(wire_id).ok_or_else(|| match self.lanes.get(wire_id) {
+            Some(WireLane::Live(_)) => SelectError::Rejected(format!(
+                "session {wire_id} is pinned resident (no wire specs to restore from, or \
+                 driver mid-run)"
+            )),
+            _ => SelectError::UnknownSession(wire_id),
+        })?;
+        let slot = match &self.lanes[wire_id] {
+            WireLane::Live(m) => m.slot,
+            _ => return Err(SelectError::UnknownSession(wire_id)),
+        };
+        let evicted = EvictedMeta {
+            algorithm: record.algorithm.clone(),
+            driven: record.driven,
+            tenant: record.tenant.clone(),
+            finished: record.finished,
+            generation: record.snapshot.generation.0,
+            set_len: record.snapshot.set.len(),
         };
         let store = self.store.as_ref().ok_or_else(|| {
             SelectError::Backend("no session store configured for eviction".into())
@@ -1386,6 +1519,34 @@ impl StdioServer {
         self.lanes[wire_id] = WireLane::Evicted(evicted);
         self.evictions += 1;
         Ok(())
+    }
+
+    /// Graceful drain (the `shutdown` op or a drain signal): snapshot
+    /// every evictable live lane to the store, then mark the core
+    /// draining so the owning front stops its loop after the in-flight
+    /// reply. Returns the number of lanes persisted by this call. Lanes
+    /// that cannot be persisted — embedded, driver mid-run, or a failing
+    /// disk — stay live until the process exits; already-evicted lanes
+    /// are durable without further work. Idempotent.
+    pub fn drain(&mut self) -> usize {
+        self.draining = true;
+        let mut persisted = 0;
+        if self.store.is_some() {
+            for wire_id in 0..self.lanes.len() {
+                if matches!(self.lanes[wire_id], WireLane::Live(_))
+                    && self.evict_lane(wire_id).is_ok()
+                {
+                    persisted += 1;
+                }
+            }
+        }
+        persisted
+    }
+
+    /// Whether a graceful drain was requested ([`WireCore::drain`] ran);
+    /// the owning front's loop exits once this is set.
+    pub fn draining(&self) -> bool {
+        self.draining
     }
 
     /// Bring an evicted session back: rebuild the objective from its
@@ -1462,7 +1623,7 @@ impl StdioServer {
         }
     }
 
-    /// Serve one typed request (shared by [`StdioServer::line`] and the
+    /// Serve one typed request (shared by [`WireCore::line`] and the
     /// protocol tests).
     pub fn handle(&mut self, req: ApiRequest) -> Result<ApiReply, SelectError> {
         match req {
@@ -1508,12 +1669,30 @@ impl StdioServer {
                 }
                 Ok(ApiReply::Sessions { sessions })
             }
+            ApiRequest::Ping => Ok(ApiReply::Pong),
+            ApiRequest::Shutdown => Ok(ApiReply::Stopping { persisted: self.drain() }),
+            ApiRequest::Crash { message } => {
+                if self.fault_ops {
+                    panic!("injected handler fault: {message}");
+                }
+                Err(SelectError::Rejected(
+                    "crash is a test-only fault-injection op; this server does not serve it"
+                        .into(),
+                ))
+            }
             other => {
+                let mutating = matches!(
+                    other,
+                    ApiRequest::Insert { .. } | ApiRequest::Step { .. } | ApiRequest::Finish { .. }
+                );
                 let (SessionId(wire_id), sreq) = other.into_serve()?;
                 let slot = self.resolve_session(wire_id)?;
                 let rx = self.server.submit(slot, sreq);
                 self.server.turn();
                 let reply = rx.recv().map_err(|_| SelectError::Disconnected)??;
+                if mutating {
+                    self.persist_lane(wire_id);
+                }
                 Ok(ApiReply::from_serve(reply))
             }
         }
@@ -1523,20 +1702,104 @@ impl StdioServer {
     /// errors echo the frame's `id` whenever it is readable (pipelined
     /// clients correlate replies by id even for rejected frames); only
     /// frames whose id cannot be parsed at all are answered with id 0.
+    ///
+    /// A panic raised inside request handling is **contained** here: it is
+    /// caught and answered as a typed [`SelectError::ClientPanic`] frame,
+    /// so one poisoned request can never unwind through — and take down —
+    /// the serving loop or the other lanes.
     pub fn line(&mut self, line: &str) -> String {
         match ApiRequest::decode(line) {
-            Ok((id, req)) => match self.handle(req) {
-                Ok(reply) => reply.encode(id),
-                Err(error) => ApiReply::Error { error }.encode(id),
-            },
+            Ok((id, req)) => {
+                let outcome =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.handle(req)));
+                match outcome {
+                    Ok(Ok(reply)) => reply.encode(id),
+                    Ok(Err(error)) => ApiReply::Error { error }.encode(id),
+                    Err(payload) => {
+                        self.contained_panics += 1;
+                        let error = SelectError::ClientPanic(panic_message(payload));
+                        ApiReply::Error { error }.encode(id)
+                    }
+                }
+            }
             Err(error) => ApiReply::Error { error }.encode(readable_frame_id(line)),
         }
     }
 
+    /// Traffic counters plus a snapshot of every session.
+    pub fn summary(&self) -> ServeSummary {
+        self.server.summary()
+    }
+}
+
+/// Render a caught panic payload (`&str` and `String` are what `panic!`
+/// produces) for the typed [`SelectError::ClientPanic`] reply.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StdioServer — the stdio front over the shared core
+// ---------------------------------------------------------------------------
+
+/// The stdio front: a [`WireCore`] pumped by a blocking line loop over any
+/// `BufRead`/`Write` pair — `dash serve --stdio` wires it to stdin/stdout.
+/// Dereferences to its [`WireCore`], so the protocol tests (and embedders)
+/// drive `handle`/`line` and read the counters directly; the socket front
+/// ([`NetServer`](crate::coordinator::net::NetServer)) serves the very
+/// same core over connections instead, keeping the two transports one
+/// code path.
+pub struct StdioServer {
+    core: WireCore,
+}
+
+impl StdioServer {
+    pub fn new(leader: Leader) -> StdioServer {
+        StdioServer { core: WireCore::new(leader) }
+    }
+
+    /// See [`WireCore::with_max_sessions`].
+    pub fn with_max_sessions(mut self, max_sessions: usize) -> StdioServer {
+        self.core = self.core.with_max_sessions(max_sessions);
+        self
+    }
+
+    /// See [`WireCore::with_store`].
+    pub fn with_store(mut self, store: SessionStore) -> StdioServer {
+        self.core = self.core.with_store(store);
+        self
+    }
+
+    /// See [`WireCore::with_tenant_quota`].
+    pub fn with_tenant_quota(mut self, max_per_tenant: usize) -> StdioServer {
+        self.core = self.core.with_tenant_quota(max_per_tenant);
+        self
+    }
+
+    /// See [`WireCore::with_fault_ops`].
+    pub fn with_fault_ops(mut self, fault_ops: bool) -> StdioServer {
+        self.core = self.core.with_fault_ops(fault_ops);
+        self
+    }
+
+    /// Unwrap into the transport-agnostic core (the socket front serves
+    /// it from there).
+    pub fn into_core(self) -> WireCore {
+        self.core
+    }
+
     /// The transport loop: one reply line per non-blank request line,
-    /// flushed as produced, until EOF. A client that closes its read end
-    /// early (broken pipe) is a routine disconnect, not a transport
-    /// error. Returns the serving summary.
+    /// flushed as produced, until EOF or a graceful drain (the `shutdown`
+    /// op answers `stopping`, persists every evictable lane, and ends the
+    /// loop). A client that closes its read end early (broken pipe) is a
+    /// routine disconnect, not a transport error. Returns the serving
+    /// summary.
     pub fn run<R, W>(mut self, input: R, out: &mut W) -> std::io::Result<ServeSummary>
     where
         R: std::io::BufRead,
@@ -1547,20 +1810,31 @@ impl StdioServer {
             if line.trim().is_empty() {
                 continue;
             }
-            let reply = self.line(&line);
+            let reply = self.core.line(&line);
             if let Err(e) = writeln!(out, "{reply}").and_then(|_| out.flush()) {
                 if e.kind() == std::io::ErrorKind::BrokenPipe {
                     break;
                 }
                 return Err(e);
             }
+            if self.core.draining() {
+                break;
+            }
         }
-        Ok(self.summary())
+        Ok(self.core.summary())
     }
+}
 
-    /// Traffic counters plus a snapshot of every session.
-    pub fn summary(&self) -> ServeSummary {
-        self.server.summary()
+impl std::ops::Deref for StdioServer {
+    type Target = WireCore;
+    fn deref(&self) -> &WireCore {
+        &self.core
+    }
+}
+
+impl std::ops::DerefMut for StdioServer {
+    fn deref_mut(&mut self) -> &mut WireCore {
+        &mut self.core
     }
 }
 
@@ -1920,5 +2194,137 @@ mod tests {
         let mut p = WireProblem::new("d1", 5, 1);
         p.backend = Some("tpu".into());
         assert!(p.resolve().is_err());
+    }
+
+    #[test]
+    fn ping_answers_pong_with_no_side_effects() {
+        let mut core = WireCore::new(Leader::with_threads(1));
+        assert!(matches!(core.handle(ApiRequest::Ping).unwrap(), ApiReply::Pong));
+        assert_eq!(core.live_sessions(), 0);
+        let line = core.line(&ApiRequest::Ping.encode(9));
+        assert_eq!(line, ApiReply::Pong.encode(9));
+    }
+
+    #[test]
+    fn crash_op_is_gated_and_contained() {
+        // production default: the op is refused, nothing panics
+        let mut core = WireCore::new(Leader::with_threads(1));
+        let err = core.handle(ApiRequest::Crash { message: "boom".into() }).unwrap_err();
+        assert!(matches!(err, SelectError::Rejected(_)), "{err:?}");
+        assert_eq!(core.contained_panics, 0);
+
+        // fault-ops front: the injected panic is contained to a typed
+        // client_panic reply and the core keeps serving
+        let mut core = WireCore::new(Leader::with_threads(1)).with_fault_ops(true);
+        let a = core
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .unwrap();
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // keep the injected panic quiet
+        let line = core.line(&ApiRequest::Crash { message: "boom".into() }.encode(3));
+        std::panic::set_hook(hook);
+        let (id, reply) = ApiReply::decode(&line).unwrap();
+        assert_eq!(id, 3);
+        match reply {
+            ApiReply::Error { error: SelectError::ClientPanic(m) } => {
+                assert!(m.contains("boom"), "{m}")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(core.contained_panics, 1);
+        // the lane opened before the contained panic still serves
+        match core.handle(ApiRequest::Metrics { session: a }).unwrap() {
+            ApiReply::Snapshot { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_evictable_lanes_and_ends_the_stdio_loop() {
+        let dir = std::env::temp_dir()
+            .join(format!("dash-wire-drain-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut server = StdioServer::new(Leader::with_threads(1))
+            .with_store(SessionStore::open(&dir).unwrap());
+        let a = server
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .unwrap();
+        server.handle(ApiRequest::Insert { session: a, item: 2, if_generation: None }).unwrap();
+        let want = match server.handle(ApiRequest::Metrics { session: a }).unwrap() {
+            ApiReply::Snapshot { snapshot } => snapshot,
+            other => panic!("unexpected {other:?}"),
+        };
+        // a shutdown frame persists the lane, answers stopping, and ends
+        // the loop — frames queued after it are never consumed
+        let input = format!(
+            "{}\n{}\n",
+            ApiRequest::Shutdown.encode(1),
+            ApiRequest::Metrics { session: a }.encode(2)
+        );
+        let mut out = Vec::new();
+        let _ = server.run(input.as_bytes(), &mut out).unwrap();
+        let out = String::from_utf8(out).unwrap();
+        let mut lines = out.lines();
+        let (id, reply) = ApiReply::decode(lines.next().unwrap()).unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(reply, ApiReply::Stopping { persisted: 1 });
+        assert!(lines.next().is_none(), "the loop must stop at the drain");
+
+        // a fresh core on the same store adopts the drained session with
+        // identical list metadata and byte-identical restored state
+        let mut core = WireCore::new(Leader::with_threads(1))
+            .with_store(SessionStore::open(&dir).unwrap());
+        match core.handle(ApiRequest::List).unwrap() {
+            ApiReply::Sessions { sessions } => {
+                assert_eq!(sessions.len(), 1);
+                assert_eq!(sessions[0].session, a);
+                assert!(!sessions[0].resident);
+                assert_eq!(sessions[0].set_len, 1);
+                assert_eq!(sessions[0].generation, want.generation.0);
+                assert!(!sessions[0].driven);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match core.handle(ApiRequest::Metrics { session: a }).unwrap() {
+            ApiReply::Snapshot { snapshot } => {
+                assert_eq!(snapshot.set, want.set);
+                assert_eq!(snapshot.generation, want.generation);
+                assert_eq!(snapshot.value.to_bits(), want.value.to_bits());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_through_persistence_survives_a_hard_kill() {
+        // a hard kill never runs drain; adoption must work from the
+        // write-through records alone (lane durable from birth and after
+        // every mutating op)
+        let dir = std::env::temp_dir()
+            .join(format!("dash-wire-writethrough-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut core = WireCore::new(Leader::with_threads(1))
+            .with_store(SessionStore::open(&dir).unwrap());
+        let a = core
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .unwrap();
+        assert!(core.store().unwrap().contains(a), "durable from birth");
+        core.handle(ApiRequest::Insert { session: a, item: 5, if_generation: None }).unwrap();
+        drop(core); // the "kill": no drain, no eviction
+
+        let mut core = WireCore::new(Leader::with_threads(1))
+            .with_store(SessionStore::open(&dir).unwrap());
+        match core.handle(ApiRequest::Metrics { session: a }).unwrap() {
+            ApiReply::Snapshot { snapshot } => assert_eq!(snapshot.set, vec![5]),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(core.restores, 1);
+        // adopted ids are reserved: a new open takes the next free id
+        let b = core
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .unwrap();
+        assert_ne!(a, b);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -9,8 +9,8 @@
 
 use dash_select::cli::Args;
 use dash_select::coordinator::{
-    Backend, Leader, ObjectiveChoice, PlanSpec, ProblemSpec, SelectError, ServeConfig, ServeSpec,
-    SessionStore, StdioServer,
+    install_drain_signals, Backend, Leader, NetConfig, NetServer, ObjectiveChoice, PlanSpec,
+    ProblemSpec, SelectError, ServeConfig, ServeSpec, SessionStore, StdioServer, WireCore,
 };
 use dash_select::experiments::{self, fig1, figs, appendix, DatasetId, Scale};
 use dash_select::objectives::spectra;
@@ -45,6 +45,16 @@ USAGE:
       budget snapshot the least-recently-used idle session to DIR and it
       is restored transparently on its next request. --tenant-quota caps
       open sessions per tenant (the open frame's optional "tenant" field)
+
+  dash serve --listen ADDR [--max-sessions N] [--store DIR] [--tenant-quota Q]
+             [--request-deadline-ms MS] [--idle-timeout-ms MS] [--fault-ops]
+      the same v1 protocol over a socket: ADDR is host:port (TCP; port 0
+      picks a free port, printed on stderr) or unix:/path. One supervised
+      handler per connection; slow or idle connections are dropped without
+      touching their sessions. SIGINT/SIGTERM or a "shutdown" frame drains
+      gracefully: in-flight turns finish, evictable sessions persist to
+      --store, exit 0 — a restarted server on the same store resumes the
+      same session ids. --fault-ops serves the test-only "crash" op
 
   dash artifacts          show the AOT artifact inventory
   dash spectra --dataset <D> --k <K>   sampled γ / α = γ² estimates
@@ -238,6 +248,9 @@ fn cmd_serve(args: &Args) -> Result<(), SelectError> {
     if args.get_flag("stdio") {
         return cmd_serve_stdio(args);
     }
+    if args.get("listen").is_some() {
+        return cmd_serve_listen(args);
+    }
     let (id, scale) = dataset_for(args)?;
     let seed = args.get_u64("seed", 1)?;
     let k = args.get_usize("k", 10)?;
@@ -358,6 +371,57 @@ fn cmd_serve_stdio(args: &Args) -> Result<(), SelectError> {
         m.steps,
         m.finishes,
         m.rejected
+    );
+    Ok(())
+}
+
+/// The v1 wire front over a real socket (`--listen host:port` or
+/// `--listen unix:/path`): supervised connection handlers over one
+/// [`WireCore`], graceful drain on SIGINT/SIGTERM or a `shutdown` frame.
+fn cmd_serve_listen(args: &Args) -> Result<(), SelectError> {
+    let addr = args.get("listen").expect("checked by caller");
+    let mut core = WireCore::new(Leader::new())
+        .with_max_sessions(args.get_usize("max-sessions", 64)?)
+        .with_fault_ops(args.get_flag("fault-ops"));
+    if let Some(dir) = args.get("store") {
+        core = core.with_store(SessionStore::open(dir)?);
+    }
+    let quota = args.get_usize("tenant-quota", 0)?;
+    if quota > 0 {
+        core = core.with_tenant_quota(quota);
+    }
+    let mut config = NetConfig::default();
+    let deadline_ms = args.get_u64("request-deadline-ms", 0)?;
+    if deadline_ms > 0 {
+        config.request_deadline = std::time::Duration::from_millis(deadline_ms);
+    }
+    let idle_ms = args.get_u64("idle-timeout-ms", 0)?;
+    if idle_ms > 0 {
+        config.idle_timeout = std::time::Duration::from_millis(idle_ms);
+    }
+    let stop = install_drain_signals();
+    let server = NetServer::bind(addr)
+        .map_err(|e| SelectError::Backend(format!("bind {addr}: {e}")))?
+        .with_config(config)
+        .with_stop_flag(stop);
+    eprintln!("listening on {}", server.local_addr());
+    let summary = server
+        .serve(core)
+        .map_err(|e| SelectError::Protocol(format!("socket transport: {e}")))?;
+    let m = &summary.serve.metrics;
+    eprintln!(
+        "socket serve: {} connections, {} requests ({} deadline-dropped); {} sweeps → \
+         {} coalesced rounds; {} evictions, {} restores; {} contained panics, \
+         {} handler panics",
+        summary.connections,
+        summary.requests,
+        summary.deadlines,
+        m.sweep_requests,
+        m.coalesced_rounds,
+        summary.evictions,
+        summary.restores,
+        summary.contained_panics,
+        summary.handler_panics
     );
     Ok(())
 }

@@ -18,11 +18,21 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Lock recovering from poisoning (the batcher's pattern). A thread that
+/// panicked while holding one of the pool's guards marks the mutex
+/// poisoned, but the protected state — a channel handle, a completion
+/// count — is still coherent; cascading the panic into every later
+/// `execute`/`scoped_map` caller would turn one contained fault into a
+/// wedged pool (and, served, a wedged drain path).
+fn recover<T>(lock: &Mutex<T>) -> MutexGuard<'_, T> {
+    lock.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Fixed-size worker pool. Dropping the pool joins all workers.
 ///
@@ -49,7 +59,7 @@ impl ThreadPool {
                 std::thread::Builder::new()
                     .name(format!("dash-worker-{i}"))
                     .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
+                        let job = { recover(&rx).recv() };
                         match job {
                             Ok(job) => run_job(job),
                             Err(_) => break, // sender dropped -> shut down
@@ -77,11 +87,7 @@ impl ThreadPool {
 
     /// Fire-and-forget job.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .lock()
-            .unwrap()
+        recover(self.tx.as_ref().expect("pool shut down"))
             .send(Box::new(job))
             .expect("worker channel closed");
     }
@@ -149,7 +155,7 @@ impl ThreadPool {
                     panicked.store(true, Ordering::SeqCst);
                 }
                 let (lock, cvar) = &*done;
-                *lock.lock().unwrap() += 1;
+                *recover(lock) += 1;
                 cvar.notify_all();
             });
             start = end;
@@ -162,7 +168,7 @@ impl ThreadPool {
         // would trade the condvar wait for a mutex wait — an idle worker
         // also means the queue will drain without our help.
         loop {
-            if *done.0.lock().unwrap() >= dispatched {
+            if *recover(&done.0) >= dispatched {
                 break;
             }
             let job = match self.rx.try_lock() {
@@ -173,11 +179,15 @@ impl ThreadPool {
                 Some(job) => run_job(job),
                 None => {
                     let (lock, cvar) = &*done;
-                    let completed = lock.lock().unwrap();
+                    let completed = recover(lock);
                     if *completed >= dispatched {
                         break;
                     }
-                    let _ = cvar.wait_timeout(completed, Duration::from_millis(1)).unwrap();
+                    // recover here too: waking to a poisoned mutex is the
+                    // one spot that used to panic the *drain* path
+                    let _ = cvar
+                        .wait_timeout(completed, Duration::from_millis(1))
+                        .unwrap_or_else(PoisonError::into_inner);
                 }
             }
         }
@@ -428,6 +438,32 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn pool_recovers_poisoned_lock_guards() {
+        // regression: a thread panicking while holding a pool mutex used
+        // to cascade `PoisonError` panics into every later caller via the
+        // barrier's `cvar.wait_timeout(..).unwrap()` — one contained
+        // worker fault became a wedged drain path
+        let pool = Arc::new(ThreadPool::new(2));
+        let p = Arc::clone(&pool);
+        let _ = std::thread::spawn(move || {
+            let _guard = p.tx.as_ref().expect("pool live").lock().unwrap();
+            panic!("poison the sender mutex");
+        })
+        .join();
+        assert!(
+            pool.tx.as_ref().expect("pool live").lock().is_err(),
+            "mutex must be poisoned for the regression to bite"
+        );
+        // dispatch and the completion barrier must recover the guards
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(pool.scoped_map(8, |i| i), (0..8).collect::<Vec<usize>>());
     }
 
     #[test]

@@ -1,0 +1,502 @@
+//! Fault-injection harness for the socket serving front.
+//!
+//! A real `NetServer` serves a shared `WireCore` while a PCG-seeded
+//! [`ChaosProxy`] sits between it and a reconnecting [`WireClient`],
+//! truncating frames, delaying chunks, and cutting connections
+//! mid-request; seeded schedules also inject handler panics through the
+//! test-only `crash` op. The acceptance bar: across every schedule the
+//! server never wedges or leaks a lane, and the retrying client's
+//! selections finish byte-identical (set, generation, `value.to_bits()`)
+//! to an uninterrupted in-process reference run.
+//!
+//! Retried sweeps legitimately bump `SessionMetrics` counters, so the
+//! byte-identity comparison is over selection state only — never over
+//! whole snapshots.
+
+use dash_select::coordinator::{
+    ApiReply, ApiRequest, ChaosConfig, ChaosProxy, Leader, NetConfig, NetServer, NetSummary,
+    RetryPolicy, SelectError, SessionStore, WireClient, WireCore, WirePlan, WireProblem,
+};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Harness plumbing
+// ---------------------------------------------------------------------------
+
+fn tempdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dash-net-chaos-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Each test server drains on its own leaked flag so concurrent tests in
+/// this binary never stop each other.
+fn leak_flag() -> &'static AtomicBool {
+    Box::leak(Box::new(AtomicBool::new(false)))
+}
+
+struct TestServer {
+    addr: String,
+    stop: &'static AtomicBool,
+    handle: Option<JoinHandle<NetSummary>>,
+}
+
+/// Bind on an ephemeral port and serve `build()` on a spawned thread.
+/// `WireCore` is deliberately not `Send` (lanes never cross threads), so
+/// the core is constructed *inside* the serve thread.
+fn start_server<F>(addr: &str, config: NetConfig, build: F) -> TestServer
+where
+    F: FnOnce() -> WireCore + Send + 'static,
+{
+    let stop = leak_flag();
+    let server =
+        NetServer::bind(addr).expect("bind").with_config(config).with_stop_flag(stop);
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.serve(build()).expect("serve"));
+    TestServer { addr, stop, handle: Some(handle) }
+}
+
+impl TestServer {
+    /// Drain via the stop flag and join the serve thread.
+    fn stop(&mut self) -> NetSummary {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handle.take().expect("not yet joined").join().expect("serve thread")
+    }
+}
+
+/// Keep injected `crash` panics out of the test output without hiding real
+/// panics: the hook forwards everything that is not an injected fault.
+fn quiet_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if !msg.contains("injected handler fault") {
+                default(info);
+            }
+        }));
+    });
+}
+
+/// A retry policy tuned for the harness: fast backoff, enough attempts
+/// that no seeded schedule can exhaust them.
+fn fast_retries() -> RetryPolicy {
+    RetryPolicy {
+        max_attempts: 16,
+        base_backoff: Duration::from_millis(2),
+        max_backoff: Duration::from_millis(50),
+    }
+}
+
+/// Snappy server knobs: deadlines generous enough that chaos delays never
+/// fire them spuriously, polling fast enough to keep the suite quick.
+fn snappy() -> NetConfig {
+    NetConfig {
+        request_deadline: Duration::from_secs(5),
+        idle_timeout: Duration::from_secs(30),
+        max_frame_len: 1 << 20,
+        poll_tick: Duration::from_millis(2),
+    }
+}
+
+fn argmax(candidates: &[usize], gains: &[f64]) -> usize {
+    let mut best = 0;
+    for i in 1..gains.len() {
+        if gains[i] > gains[best] {
+            best = i;
+        }
+    }
+    candidates[best]
+}
+
+const CANDS: usize = 6;
+const ROUNDS: usize = 3;
+
+/// The deterministic greedy procedure every schedule replays: open an
+/// undriven d1 lane, then `ROUNDS` sweep→argmax→insert rounds. Undriven
+/// on purpose — `step` is not replay-safe under at-least-once delivery.
+fn drive_selection(client: &mut WireClient) -> Result<(usize, Vec<usize>, u64, u64), SelectError> {
+    let problem = WireProblem::new("d1", ROUNDS, 1);
+    let plan = WirePlan::new("greedy");
+    let cands: Vec<usize> = (0..CANDS).collect();
+    let session = client.open(problem, plan, false, None)?;
+    for _ in 0..ROUNDS {
+        let (gains, _, _) = client.sweep(session, cands.clone())?;
+        client.insert(session, argmax(&cands, &gains), None)?;
+    }
+    let snap = client.metrics(session)?;
+    Ok((session, snap.set, snap.generation.0, snap.value.to_bits()))
+}
+
+/// The uninterrupted solo reference the chaos runs must match bit-for-bit.
+fn reference_selection() -> (Vec<usize>, u64, u64) {
+    let mut core = WireCore::new(Leader::with_threads(1));
+    let session = core
+        .open_spec(&WireProblem::new("d1", ROUNDS, 1), &WirePlan::new("greedy"), false, None)
+        .unwrap();
+    let cands: Vec<usize> = (0..CANDS).collect();
+    for _ in 0..ROUNDS {
+        let gains = match core.handle(ApiRequest::Sweep { session, candidates: cands.clone() }) {
+            Ok(ApiReply::Swept { gains, .. }) => gains,
+            other => panic!("unexpected {other:?}"),
+        };
+        let pick = argmax(&cands, &gains);
+        core.handle(ApiRequest::Insert { session, item: pick, if_generation: None }).unwrap();
+    }
+    match core.handle(ApiRequest::Metrics { session }).unwrap() {
+        ApiReply::Snapshot { snapshot } => {
+            (snapshot.set, snapshot.generation.0, snapshot.value.to_bits())
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+/// Close every open session (a retried `open` whose reply was lost leaks
+/// one — the at-least-once contract — so schedules sweep up after
+/// themselves through a chaos-free client).
+fn close_all(client: &mut WireClient) {
+    let sessions = client.list().expect("list");
+    for row in sessions {
+        let _ = client.close(row.session);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Direct (chaos-free) socket behavior
+// ---------------------------------------------------------------------------
+
+/// The socket front speaks the same typed v1 protocol as the stdio front:
+/// typed replies for good frames, typed errors (not disconnects) for bad
+/// requests, and a `protocol` error frame for unparseable bytes.
+#[test]
+fn socket_front_serves_typed_replies_and_errors() {
+    let mut server =
+        start_server("127.0.0.1:0", snappy(), || WireCore::new(Leader::with_threads(1)));
+    let mut client = WireClient::connect(&server.addr, 7).with_policy(fast_retries());
+
+    client.ping().unwrap();
+    let (_, set, generation, bits) = drive_selection(&mut client).unwrap();
+    let (want_set, want_gen, want_bits) = reference_selection();
+    assert_eq!(set, want_set);
+    assert_eq!(generation, want_gen);
+    assert_eq!(bits, want_bits);
+
+    // a request addressed to a session that never existed is a typed error
+    match client.metrics(9999) {
+        Err(SelectError::UnknownSession(s)) => assert_eq!(s, 9999),
+        other => panic!("expected unknown session, got {other:?}"),
+    }
+    // unparseable bytes get a typed protocol error frame, same connection
+    use std::io::{BufRead, BufReader, Write};
+    let mut raw = std::net::TcpStream::connect(&server.addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    writeln!(raw, "this is not a frame").unwrap();
+    raw.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(raw.try_clone().unwrap()).read_line(&mut line).unwrap();
+    match ApiReply::decode(&line) {
+        Ok((_, ApiReply::Error { error: SelectError::Protocol(_) })) => {}
+        other => panic!("expected protocol error frame, got {other:?}"),
+    }
+
+    close_all(&mut client);
+    assert!(client.list().unwrap().is_empty(), "no lanes may leak");
+    let summary = server.stop();
+    assert!(summary.requests > 0);
+    assert_eq!(summary.handler_panics, 0);
+}
+
+// ---------------------------------------------------------------------------
+// The seeded chaos schedules
+// ---------------------------------------------------------------------------
+
+/// ≥100 PCG-seeded fault schedules against one long-lived server: frame
+/// truncation, chunk delays, mid-request disconnects, and (every seventh
+/// seed) an injected handler panic. Every schedule must finish its
+/// selection byte-identical to the uninterrupted reference, and the server
+/// must end with zero open lanes and zero handler-thread panics.
+#[test]
+fn hundred_seeded_chaos_schedules_finish_byte_identical() {
+    quiet_injected_panics();
+    let (want_set, want_gen, want_bits) = reference_selection();
+    let mut server = start_server("127.0.0.1:0", snappy(), || {
+        WireCore::new(Leader::with_threads(1)).with_max_sessions(64).with_fault_ops(true)
+    });
+    // the chaos-free janitor connection: verifies + sweeps between schedules
+    let mut janitor = WireClient::connect(&server.addr, 1).with_policy(fast_retries());
+    let mut crash_injections = 0u64;
+
+    for seed in 0..100u64 {
+        let mut proxy =
+            ChaosProxy::start(&server.addr, 0x9e37_79b9 ^ seed, ChaosConfig::default())
+                .expect("proxy");
+        let mut client = WireClient::connect(proxy.addr(), seed).with_policy(fast_retries());
+
+        if seed % 7 == 0 {
+            // injected handler panic mid-schedule: the server must answer
+            // with a typed client_panic (or the chaos eats the reply and
+            // retries exhaust) and keep serving either way
+            crash_injections += 1;
+            match client.request(&ApiRequest::Crash { message: format!("seed {seed}") }) {
+                Err(SelectError::ClientPanic(_)) | Err(SelectError::Disconnected) => {}
+                other => panic!("seed {seed}: expected contained panic, got {other:?}"),
+            }
+        }
+
+        let (_, set, generation, bits) =
+            drive_selection(&mut client).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(set, want_set, "seed {seed}: selected set diverged");
+        assert_eq!(generation, want_gen, "seed {seed}: generation diverged");
+        assert_eq!(bits, want_bits, "seed {seed}: value bits diverged");
+
+        proxy.stop();
+        close_all(&mut janitor);
+        assert!(janitor.list().unwrap().is_empty(), "seed {seed}: leaked a lane");
+    }
+
+    janitor.ping().unwrap();
+    let summary = server.stop();
+    assert!(summary.connections >= 100, "one proxy-side connection per schedule at least");
+    assert_eq!(summary.handler_panics, 0, "handler threads must never panic");
+    assert!(
+        summary.contained_panics >= crash_injections,
+        "every injected crash must be contained in the core ({} < {crash_injections})",
+        summary.contained_panics
+    );
+    assert!(summary.serve.sessions.is_empty(), "no lanes may survive the drain");
+}
+
+/// Panic containment without chaos in the way: every injected crash is
+/// answered with a typed `client_panic`, counted, and the very same
+/// connection keeps serving.
+#[test]
+fn injected_handler_panics_are_contained() {
+    quiet_injected_panics();
+    let mut server = start_server("127.0.0.1:0", snappy(), || {
+        WireCore::new(Leader::with_threads(1)).with_fault_ops(true)
+    });
+    let mut client = WireClient::connect(&server.addr, 3).with_policy(fast_retries());
+    for i in 0..5 {
+        match client.request(&ApiRequest::Crash { message: format!("boom {i}") }) {
+            Err(SelectError::ClientPanic(m)) => assert!(m.contains(&format!("boom {i}")), "{m}"),
+            other => panic!("expected contained panic, got {other:?}"),
+        }
+    }
+    // the same client and the same core keep serving after five panics
+    let (_, set, ..) = drive_selection(&mut client).unwrap();
+    assert_eq!(set, reference_selection().0);
+    close_all(&mut client);
+    let summary = server.stop();
+    assert_eq!(summary.contained_panics, 5);
+    assert_eq!(summary.handler_panics, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Deadlines, idle reaping
+// ---------------------------------------------------------------------------
+
+/// A slow-loris connection — a frame trickling in forever without its
+/// newline — is refused with a typed `deadline` error and dropped, and no
+/// lane is touched.
+#[test]
+fn slow_loris_frames_are_refused_at_the_deadline() {
+    let config = NetConfig {
+        request_deadline: Duration::from_millis(150),
+        idle_timeout: Duration::from_secs(30),
+        max_frame_len: 1 << 20,
+        poll_tick: Duration::from_millis(5),
+    };
+    let mut server =
+        start_server("127.0.0.1:0", config, || WireCore::new(Leader::with_threads(1)));
+
+    use std::io::{BufRead, BufReader, Write};
+    let mut raw = std::net::TcpStream::connect(&server.addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    // half a frame, never the newline
+    raw.write_all(b"{\"v\":1,\"id\":42,\"op\"").unwrap();
+    raw.flush().unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    match ApiReply::decode(&line) {
+        Ok((_, ApiReply::Error { error: SelectError::Deadline(_) })) => {}
+        other => panic!("expected deadline error frame, got {other:?}"),
+    }
+    // and the connection is closed behind the refusal
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection must be dropped");
+
+    // a well-behaved client on a fresh connection is unaffected
+    let mut client = WireClient::connect(&server.addr, 9).with_policy(fast_retries());
+    client.ping().unwrap();
+    let summary = server.stop();
+    assert!(summary.deadlines >= 1);
+}
+
+/// A connection that goes fully silent is reaped at the idle timeout —
+/// closed without an error frame (none is owed) and without touching lanes.
+#[test]
+fn idle_connections_are_reaped() {
+    let config = NetConfig {
+        request_deadline: Duration::from_secs(5),
+        idle_timeout: Duration::from_millis(100),
+        max_frame_len: 1 << 20,
+        poll_tick: Duration::from_millis(5),
+    };
+    let mut server =
+        start_server("127.0.0.1:0", config, || WireCore::new(Leader::with_threads(1)));
+
+    use std::io::Read;
+    let mut raw = std::net::TcpStream::connect(&server.addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut byte = [0u8; 1];
+    assert_eq!(raw.read(&mut byte).unwrap(), 0, "silent connection must be closed");
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Graceful drain + restart resume
+// ---------------------------------------------------------------------------
+
+/// The `shutdown` frame drains gracefully: in-flight turns complete, every
+/// evictable lane is persisted, the serve loop returns — and a fresh
+/// server on the same store restores the sessions with identical `list`
+/// metadata and byte-identical state.
+#[test]
+fn graceful_drain_persists_lanes_a_fresh_server_restores() {
+    let dir = tempdir("drain");
+    let store_dir = dir.clone();
+    let mut server = start_server("127.0.0.1:0", snappy(), move || {
+        WireCore::new(Leader::with_threads(1))
+            .with_store(SessionStore::open(&store_dir).expect("store"))
+    });
+    let mut client = WireClient::connect(&server.addr, 11).with_policy(fast_retries());
+    let problem = WireProblem::new("d1", 4, 1);
+    let plan = WirePlan::new("greedy");
+    let a = client.open(problem.clone(), plan.clone(), false, None).unwrap();
+    let b = client.open(problem, plan, false, None).unwrap();
+    client.insert(a, 1, None).unwrap();
+    client.insert(a, 3, None).unwrap();
+    client.insert(b, 2, None).unwrap();
+    let before = client.list().unwrap();
+    let snap_a = client.metrics(a).unwrap();
+    let snap_b = client.metrics(b).unwrap();
+
+    // shutdown races a concurrent sweeper: its in-flight turn must
+    // complete or fail typed — never hang, never wedge the server
+    let sweeper_addr = server.addr.clone();
+    let sweeper = std::thread::spawn(move || {
+        let mut c = WireClient::connect(&sweeper_addr, 13).with_policy(RetryPolicy {
+            max_attempts: 2,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(5),
+        });
+        for _ in 0..50 {
+            if c.sweep(a, (0..6).collect()).is_err() {
+                break; // drained mid-loop: transport or typed error, both fine
+            }
+        }
+    });
+    let persisted = client.shutdown().unwrap();
+    assert_eq!(persisted, 2, "both lanes must be snapshotted on drain");
+    sweeper.join().expect("sweeper thread must finish");
+    let summary = server.handle.take().expect("running").join().expect("serve thread");
+    assert!(summary.serve.sessions.is_empty());
+
+    // fresh server, same store: identical list metadata, resident:false
+    let store_dir = dir.clone();
+    let mut server2 = start_server("127.0.0.1:0", snappy(), move || {
+        WireCore::new(Leader::with_threads(1))
+            .with_store(SessionStore::open(&store_dir).expect("store"))
+    });
+    let mut client2 = WireClient::connect(&server2.addr, 17).with_policy(fast_retries());
+    let after = client2.list().unwrap();
+    assert_eq!(after.len(), before.len());
+    for (was, now) in before.iter().zip(after.iter()) {
+        assert_eq!(now.session, was.session);
+        assert_eq!(now.algorithm, was.algorithm);
+        assert_eq!(now.driven, was.driven);
+        assert_eq!(now.finished, was.finished);
+        assert_eq!(now.generation, was.generation);
+        assert_eq!(now.set_len, was.set_len);
+        assert_eq!(now.tenant, was.tenant);
+        assert!(!now.resident, "restored lanes start evicted");
+    }
+    for (id, want) in [(a, snap_a), (b, snap_b)] {
+        let got = client2.metrics(id).unwrap();
+        assert_eq!(got.set, want.set);
+        assert_eq!(got.generation, want.generation);
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+    }
+    close_all(&mut client2);
+    server2.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Restart resume over a Unix socket: the server dies (drain), a new one
+/// binds the same path over the same store, and the *same* client — which
+/// only ever sees transport faults — redials transparently and finishes
+/// the selection byte-identical to an uninterrupted run.
+#[test]
+fn client_resumes_across_a_server_restart_byte_identical() {
+    let dir = tempdir("restart");
+    let sock = format!("unix:{}", dir.join("dash.sock").display());
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // uninterrupted reference: one core, open + four inserts
+    let (want_set, want_gen, want_bits) = {
+        let mut core = WireCore::new(Leader::with_threads(1));
+        let s = core
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .unwrap();
+        for item in [1, 4, 2, 5] {
+            core.handle(ApiRequest::Insert { session: s, item, if_generation: None }).unwrap();
+        }
+        match core.handle(ApiRequest::Metrics { session: s }).unwrap() {
+            ApiReply::Snapshot { snapshot } => {
+                (snapshot.set, snapshot.generation, snapshot.value.to_bits())
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    };
+
+    let store_dir = dir.join("store");
+    let sd = store_dir.clone();
+    let mut server = start_server(&sock, snappy(), move || {
+        WireCore::new(Leader::with_threads(1)).with_store(SessionStore::open(&sd).expect("store"))
+    });
+    let mut client = WireClient::connect(&server.addr, 19).with_policy(fast_retries());
+    let s = client.open(WireProblem::new("d1", 4, 1), WirePlan::new("greedy"), false, None).unwrap();
+    client.insert(s, 1, None).unwrap();
+    client.insert(s, 4, None).unwrap();
+
+    // the server goes away mid-session…
+    server.stop();
+    // …and a new one binds the same path over the same store
+    let sd = store_dir.clone();
+    let mut server2 = start_server(&sock, snappy(), move || {
+        WireCore::new(Leader::with_threads(1)).with_store(SessionStore::open(&sd).expect("store"))
+    });
+    // same client, same session id: the dead connection surfaces as a
+    // transport fault, the client redials, the store restores the lane
+    client.insert(s, 2, None).unwrap();
+    client.insert(s, 5, None).unwrap();
+    let snap = client.metrics(s).unwrap();
+    assert_eq!(snap.set, want_set);
+    assert_eq!(snap.generation, want_gen);
+    assert_eq!(snap.value.to_bits(), want_bits);
+
+    close_all(&mut client);
+    let summary = server2.stop();
+    assert!(summary.restores >= 1, "the resumed session must come from the store");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,129 @@
+//! Crash-recovery integration over the real `dash serve --listen` binary:
+//! a SIGKILLed server mid-session leaves only its write-through store
+//! records behind, a restarted server on the same `--store` adopts them,
+//! and the reconnecting client's finished selection is byte-identical
+//! (`value.to_bits()`) to an uninterrupted in-process reference run.
+//!
+//! The transport is a Unix socket so the restarted process can bind the
+//! exact same address (a stale socket file from the killed process must
+//! not block it).
+
+use dash_select::coordinator::{
+    ApiReply, ApiRequest, Leader, RetryPolicy, WireClient, WireCore, WirePlan, WireProblem,
+};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+fn tempdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dash-net-restart-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A spawned `dash serve` process, SIGKILLed on drop so a failing
+/// assertion never leaks a server.
+struct ServerProc {
+    child: Child,
+}
+
+impl ServerProc {
+    fn spawn(sock: &str, store: &Path) -> ServerProc {
+        let child = Command::new(env!("CARGO_BIN_EXE_dash"))
+            .args(["serve", "--listen", sock, "--store"])
+            .arg(store)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn dash serve");
+        ServerProc { child }
+    }
+
+    /// SIGKILL — no drain, no cleanup; write-through records are all that
+    /// survive.
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ServerProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Retries patient enough to ride out a server restart: the client keeps
+/// redialing the socket until the new process is listening.
+fn patient_retries() -> RetryPolicy {
+    RetryPolicy {
+        max_attempts: 60,
+        base_backoff: Duration::from_millis(10),
+        max_backoff: Duration::from_millis(200),
+    }
+}
+
+const ITEMS_BEFORE: [usize; 2] = [1, 4];
+const ITEMS_AFTER: [usize; 2] = [2, 5];
+
+#[test]
+fn sigkilled_server_restarts_and_selection_finishes_byte_identical() {
+    // uninterrupted reference: one in-process core, all four inserts
+    let (want_set, want_gen, want_bits) = {
+        let mut core = WireCore::new(Leader::with_threads(1));
+        let s = core
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .unwrap();
+        for item in ITEMS_BEFORE.into_iter().chain(ITEMS_AFTER) {
+            core.handle(ApiRequest::Insert { session: s, item, if_generation: None }).unwrap();
+        }
+        match core.handle(ApiRequest::Metrics { session: s }).unwrap() {
+            ApiReply::Snapshot { snapshot } => {
+                (snapshot.set, snapshot.generation, snapshot.value.to_bits())
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    };
+
+    let dir = tempdir("sigkill");
+    let sock = format!("unix:{}", dir.join("dash.sock").display());
+    let store = dir.join("store");
+
+    let mut server = ServerProc::spawn(&sock, &store);
+    let mut client = WireClient::connect(&sock, 23).with_policy(patient_retries());
+    client.ping().unwrap(); // waits out process startup via the retry loop
+    let s = client.open(WireProblem::new("d1", 4, 1), WirePlan::new("greedy"), false, None).unwrap();
+    for item in ITEMS_BEFORE {
+        client.insert(s, item, None).unwrap();
+    }
+
+    // SIGKILL mid-session: no drain ran; only write-through records remain
+    server.kill();
+    let mut server = ServerProc::spawn(&sock, &store);
+
+    // the same client resumes the same session id through redials
+    for item in ITEMS_AFTER {
+        client.insert(s, item, None).unwrap();
+    }
+    let snap = client.metrics(s).unwrap();
+    assert_eq!(snap.set, want_set, "selected set must survive the kill");
+    assert_eq!(snap.generation, want_gen, "generation must survive the kill");
+    assert_eq!(snap.value.to_bits(), want_bits, "value must be bit-identical");
+
+    // the restarted server lists the adopted session under its old id
+    let rows = client.list().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].session, s);
+    assert_eq!(rows[0].set_len, want_set.len());
+
+    // graceful drain this time: the shutdown frame persists the lane and
+    // the process exits 0
+    client.close(s).unwrap();
+    let persisted = client.shutdown().unwrap();
+    assert_eq!(persisted, 0, "the only lane was closed before the drain");
+    let status = server.child.wait().expect("wait");
+    assert!(status.success(), "drained server must exit 0, got {status:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

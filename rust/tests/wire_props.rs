@@ -81,7 +81,7 @@ fn gen_plan(g: &mut Gen) -> WirePlan {
 
 fn gen_request(g: &mut Gen) -> ApiRequest {
     let session = g.usize_in(0, 7);
-    match g.usize_in(0, 7) {
+    match g.usize_in(0, 10) {
         0 => ApiRequest::Open {
             problem: gen_problem(g),
             plan: gen_plan(g),
@@ -104,12 +104,15 @@ fn gen_request(g: &mut Gen) -> ApiRequest {
         4 => ApiRequest::Step { session },
         5 => ApiRequest::Finish { session },
         6 => ApiRequest::Close { session },
-        _ => ApiRequest::Metrics { session },
+        7 => ApiRequest::Metrics { session },
+        8 => ApiRequest::Ping,
+        9 => ApiRequest::Shutdown,
+        _ => ApiRequest::Crash { message: gen_string(g) },
     }
 }
 
 fn gen_error(g: &mut Gen) -> SelectError {
-    match g.usize_in(0, 8) {
+    match g.usize_in(0, 9) {
         0 => SelectError::InvalidSpec(gen_string(g)),
         1 => SelectError::UnknownSession(g.usize_in(0, 1000)),
         2 => SelectError::StaleGeneration { pinned: gen_u64(g), actual: gen_u64(g) },
@@ -118,6 +121,7 @@ fn gen_error(g: &mut Gen) -> SelectError {
         5 => SelectError::Rejected(gen_string(g)),
         6 => SelectError::Disconnected,
         7 => SelectError::ClientPanic(gen_string(g)),
+        8 => SelectError::Deadline(gen_string(g)),
         _ => SelectError::Protocol(gen_string(g)),
     }
 }
@@ -163,7 +167,7 @@ fn gen_snapshot(g: &mut Gen) -> SessionSnapshot {
 }
 
 fn gen_reply(g: &mut Gen) -> ApiReply {
-    match g.usize_in(0, 8) {
+    match g.usize_in(0, 10) {
         0 => ApiReply::Opened { session: g.usize_in(0, 100) },
         8 => ApiReply::Closed { session: g.usize_in(0, 100) },
         1 => ApiReply::Sessions {
@@ -189,7 +193,9 @@ fn gen_reply(g: &mut Gen) -> ApiReply {
         4 => ApiReply::Stepped { done: g.bool(), generation: gen_u64(g) },
         5 => ApiReply::Finished { result: gen_result(g) },
         6 => ApiReply::Snapshot { snapshot: gen_snapshot(g) },
-        _ => ApiReply::Error { error: gen_error(g) },
+        7 => ApiReply::Error { error: gen_error(g) },
+        9 => ApiReply::Pong,
+        _ => ApiReply::Stopping { persisted: g.usize_in(0, 1000) },
     }
 }
 
@@ -288,6 +294,9 @@ fn golden_requests() -> Vec<(u64, ApiRequest)> {
         (7, ApiRequest::Finish { session: 0 }),
         (8, ApiRequest::Metrics { session: 0 }),
         (9, ApiRequest::Close { session: 0 }),
+        (10, ApiRequest::Ping),
+        (11, ApiRequest::Shutdown),
+        (12, ApiRequest::Crash { message: "chaos".into() }),
     ]
 }
 
@@ -364,6 +373,14 @@ fn golden_replies() -> Vec<(u64, ApiReply)> {
             },
         ),
         (11, ApiReply::Closed { session: 0 }),
+        (12, ApiReply::Pong),
+        (13, ApiReply::Stopping { persisted: 2 }),
+        (
+            14,
+            ApiReply::Error {
+                error: SelectError::Deadline("request exceeded the 250ms deadline".into()),
+            },
+        ),
     ]
 }
 
