@@ -18,9 +18,12 @@ use dash_select::coordinator::{
     RetryPolicy, SelectionJob, ServeConfig, ServeSpec, SessionStore, StdioServer, WireClient,
     WirePlan, WireProblem,
 };
+use dash_select::data::gene_sim::{gene_d4, GeneConfig};
 use dash_select::data::synthetic;
+use dash_select::linalg::{self, simd, Matrix};
 use dash_select::objectives::{
-    AOptimalityObjective, LinearRegressionObjective, Objective, ObjectiveState,
+    AOptimalityObjective, DiverseObjective, GroupSqrtDiversity, LinearRegressionObjective,
+    Objective, ObjectiveState, OvrSoftmaxObjective,
 };
 use dash_select::oracle::{BatchExecutor, GainCache};
 use dash_select::rng::Pcg64;
@@ -61,6 +64,30 @@ struct SweepCase {
     blocked_s: f64,
     clone_shard_s: f64,
     zero_clone_shard_s: f64,
+    blocked_scalar_s: f64,
+    blocked_simd_s: f64,
+}
+
+/// Run the blocked sequential sweep once under the forced-scalar kernel
+/// table and once under auto dispatch; returns (scalar_s, simd_s). The
+/// override is process-wide, so this only runs from the single-threaded
+/// bench main, and auto dispatch is always restored before returning.
+fn blocked_scalar_vs_simd(
+    bench: &mut Bench,
+    label: &str,
+    st: &dyn ObjectiveState,
+    cand: &[usize],
+) -> (f64, f64) {
+    let seq = BatchExecutor::sequential();
+    assert!(simd::set_override(Some(simd::SimdLevel::Scalar)));
+    let scalar_s = bench
+        .run(&format!("{label} blocked forced-scalar"), || seq.gains(st, cand))
+        .mean_s;
+    simd::set_override(None);
+    let simd_s = bench
+        .run(&format!("{label} blocked {}", simd::active_name()), || seq.gains(st, cand))
+        .mean_s;
+    (scalar_s, simd_s)
 }
 
 /// Measure one objective at the acceptance shape: scalar per-candidate vs
@@ -96,6 +123,7 @@ fn sweep_case(
             par.gains(st, &cand)
         })
         .mean_s;
+    let (blocked_scalar_s, blocked_simd_s) = blocked_scalar_vs_simd(bench, &label, st, &cand);
     SweepCase {
         objective,
         d,
@@ -105,6 +133,8 @@ fn sweep_case(
         blocked_s,
         clone_shard_s,
         zero_clone_shard_s,
+        blocked_scalar_s,
+        blocked_simd_s,
     }
 }
 
@@ -133,6 +163,147 @@ fn main() {
     let aopt_big = AOptimalityObjective::new(&ds_aopt, 1.0, 1.0);
     let aopt_st = aopt_big.state_for(&lreg_set);
     cases.push(sweep_case(&mut bench, "aopt", &*aopt_st, d, n, s, &pool));
+
+    // ---- SIMD speedup record at the acceptance shape (ISSUE 8) ----
+    // diversity and softmax skip the scalar-per-candidate / clone-shard
+    // baselines (a Newton refit per candidate at n=2048 would dominate the
+    // suite); they record only blocked forced-scalar vs dispatched SIMD
+    let mut simd_cases: Vec<(&'static str, usize, usize, usize, f64, f64)> = Vec::new();
+    let cand_big: Vec<usize> = (0..n).collect();
+    let div_big = DiverseObjective::new(
+        LinearRegressionObjective::new(&ds_big),
+        GroupSqrtDiversity::round_robin(n, 16, 0.1),
+    );
+    let div_st = div_big.state_for(&lreg_set);
+    let (div_scalar_s, div_simd_s) = blocked_scalar_vs_simd(
+        &mut bench,
+        &format!("lreg+div d={d} n={n} |S|={s}"),
+        &*div_st,
+        &cand_big,
+    );
+    simd_cases.push(("lreg+div", d, n, s, div_scalar_s, div_simd_s));
+    let ds_sm = gene_d4(
+        &mut rng,
+        &GeneConfig {
+            samples: d,
+            genes: n,
+            classes: 3,
+            informative_per_class: 16,
+            ..Default::default()
+        },
+    );
+    let sm_big = OvrSoftmaxObjective::new(&ds_sm);
+    let sm_st = sm_big.state_for(&lreg_set);
+    let (sm_scalar_s, sm_simd_s) = blocked_scalar_vs_simd(
+        &mut bench,
+        &format!("ovr-softmax d={d} n={n} |S|={s}"),
+        &*sm_st,
+        &cand_big,
+    );
+    simd_cases.push(("ovr-softmax", d, n, s, sm_scalar_s, sm_simd_s));
+
+    // ---- roofline: per-kernel GFLOP/s, forced-scalar vs dispatched ----
+    // flops are the exact multiply+add counts of each kernel; bytes are
+    // the compulsory traffic (operands read once + results written once),
+    // so ai = flops/bytes is the arithmetic intensity the roofline model
+    // plots against. gemm should sit in the compute-bound regime (ai ~ 8
+    // at the acceptance shape), dot/axpy pin the memory-bound floor.
+    struct RoofCell {
+        kernel: &'static str,
+        d: usize,
+        n: usize,
+        flops: f64,
+        bytes: f64,
+        scalar_s: f64,
+        simd_s: f64,
+    }
+    let mut roof: Vec<RoofCell> = Vec::new();
+    let simd_level = simd::active_name();
+    for &(rd, rn) in &[(64usize, 256usize), (256, 1024), (512, 2048)] {
+        let len = rd * rn;
+        let xv: Vec<f64> = (0..len).map(|_| rng.next_gaussian()).collect();
+        let yv: Vec<f64> = (0..len).map(|_| rng.next_gaussian()).collect();
+        let mut ra = Matrix::zeros(rd, rn);
+        for j in 0..rn {
+            for i in 0..rd {
+                ra.set(i, j, rng.next_gaussian());
+            }
+        }
+        let mut rb = Matrix::zeros(rn, 32);
+        for j in 0..32 {
+            for i in 0..rn {
+                rb.set(i, j, rng.next_gaussian());
+            }
+        }
+        let mut rat = Matrix::zeros(rd, 32);
+        for j in 0..32 {
+            for i in 0..rd {
+                rat.set(i, j, rng.next_gaussian());
+            }
+        }
+        let gx: Vec<f64> = (0..rn).map(|_| rng.next_gaussian()).collect();
+        let mut gy = vec![0.0f64; rd];
+        let mut rc = Matrix::zeros(rd, 32);
+        let mut rt = Matrix::zeros(32, 32);
+        let mut kernel_cells: Vec<(&'static str, f64, f64)> = Vec::new();
+        let mut measure = |bench: &mut Bench, forced: bool| {
+            let tag = if forced { "scalar" } else { simd_level };
+            let grid = format!("d={rd} n={rn} {tag}");
+            let dot_s = bench
+                .run(&format!("roofline dot len={len} {tag}"), || linalg::dot(&xv, &yv))
+                .mean_s;
+            let mut axpy_dst = yv.clone();
+            let axpy_s = bench
+                .run(&format!("roofline axpy len={len} {tag}"), || {
+                    linalg::axpy(1.0000001, &xv, &mut axpy_dst)
+                })
+                .mean_s;
+            let gemv_s = bench
+                .run(&format!("roofline gemv {grid}"), || linalg::gemv(&ra, &gx, &mut gy))
+                .mean_s;
+            let gemm_s = bench
+                .run(&format!("roofline gemm {grid} c=32"), || {
+                    linalg::gemm_into(&ra, &rb, &mut rc)
+                })
+                .mean_s;
+            let tn_s = bench
+                .run(&format!("roofline gemm_tn {grid} p=q=32"), || {
+                    linalg::gemm_tn_into(&rat, &rat, &mut rt)
+                })
+                .mean_s;
+            [dot_s, axpy_s, gemv_s, gemm_s, tn_s]
+        };
+        assert!(simd::set_override(Some(simd::SimdLevel::Scalar)));
+        let sc = measure(&mut bench, true);
+        simd::set_override(None);
+        let si = measure(&mut bench, false);
+        let fl = len as f64;
+        let (df, dn) = (rd as f64, rn as f64);
+        kernel_cells.push(("dot", 2.0 * fl, 16.0 * fl));
+        kernel_cells.push(("axpy", 2.0 * fl, 24.0 * fl));
+        kernel_cells.push(("gemv", 2.0 * df * dn, 8.0 * (df * dn + dn + 2.0 * df)));
+        kernel_cells.push((
+            "gemm",
+            2.0 * df * dn * 32.0,
+            8.0 * (df * dn + 32.0 * dn + 2.0 * 32.0 * df),
+        ));
+        kernel_cells.push((
+            "gemm_tn",
+            2.0 * df * 32.0 * 32.0,
+            8.0 * (df * 32.0 + 2.0 * 32.0 * 32.0),
+        ));
+        for (i, (kernel, flops, bytes)) in kernel_cells.into_iter().enumerate() {
+            roof.push(RoofCell {
+                kernel,
+                d: rd,
+                n: rn,
+                flops,
+                bytes,
+                scalar_s: sc[i],
+                simd_s: si[i],
+            });
+        }
+    }
 
     // ---- regression oracle sweeps (QR-projection gains) ----
     let ds = synthetic::regression_d1(&mut rng, 250, 500, 80, 0.4);
@@ -429,11 +600,14 @@ fn main() {
         } else {
             0.0
         };
+        let simd_speedup =
+            if c.blocked_simd_s > 0.0 { c.blocked_scalar_s / c.blocked_simd_s } else { 0.0 };
         println!(
             "{} d={} n={} |S|={}: scalar {:.6}s, blocked {:.6}s ({blocked_speedup:.2}x); \
-             clone-shard {:.6}s, zero-clone-shard {:.6}s ({shard_speedup:.2}x)",
+             clone-shard {:.6}s, zero-clone-shard {:.6}s ({shard_speedup:.2}x); \
+             blocked scalar-dispatch {:.6}s vs {simd_level} {:.6}s ({simd_speedup:.2}x)",
             c.objective, c.d, c.n, c.set_size, c.scalar_s, c.blocked_s, c.clone_shard_s,
-            c.zero_clone_shard_s,
+            c.zero_clone_shard_s, c.blocked_scalar_s, c.blocked_simd_s,
         );
         obj_entries.push(Json::obj(vec![
             ("objective", c.objective.into()),
@@ -446,6 +620,49 @@ fn main() {
             ("clone_shard_s", c.clone_shard_s.into()),
             ("zero_clone_shard_s", c.zero_clone_shard_s.into()),
             ("shard_speedup", shard_speedup.into()),
+            ("blocked_scalar_s", c.blocked_scalar_s.into()),
+            ("blocked_simd_s", c.blocked_simd_s.into()),
+            ("simd_speedup", simd_speedup.into()),
+        ]));
+    }
+    for &(objective, cd, cn, cs, scalar_s, simd_s) in &simd_cases {
+        let simd_speedup = if simd_s > 0.0 { scalar_s / simd_s } else { 0.0 };
+        println!(
+            "{objective} d={cd} n={cn} |S|={cs}: blocked scalar-dispatch {scalar_s:.6}s \
+             vs {simd_level} {simd_s:.6}s ({simd_speedup:.2}x)"
+        );
+        obj_entries.push(Json::obj(vec![
+            ("objective", objective.into()),
+            ("d", cd.into()),
+            ("n", cn.into()),
+            ("set_size", cs.into()),
+            ("blocked_scalar_s", scalar_s.into()),
+            ("blocked_simd_s", simd_s.into()),
+            ("simd_speedup", simd_speedup.into()),
+        ]));
+    }
+    let mut roof_entries = Vec::new();
+    for r in &roof {
+        let ai = if r.bytes > 0.0 { r.flops / r.bytes } else { 0.0 };
+        let gf_scalar = if r.scalar_s > 0.0 { r.flops / r.scalar_s / 1e9 } else { 0.0 };
+        let gf_simd = if r.simd_s > 0.0 { r.flops / r.simd_s / 1e9 } else { 0.0 };
+        let speedup = if r.simd_s > 0.0 { r.scalar_s / r.simd_s } else { 0.0 };
+        println!(
+            "roofline {:<8} d={:<4} n={:<5} ai={ai:>6.3} flop/byte: scalar \
+             {gf_scalar:>7.2} GF/s, {simd_level} {gf_simd:>7.2} GF/s ({speedup:.2}x)",
+            r.kernel, r.d, r.n
+        );
+        roof_entries.push(Json::obj(vec![
+            ("kernel", r.kernel.into()),
+            ("d", r.d.into()),
+            ("n", r.n.into()),
+            ("flops", r.flops.into()),
+            ("arithmetic_intensity", ai.into()),
+            ("scalar_s", r.scalar_s.into()),
+            ("simd_s", r.simd_s.into()),
+            ("gflops_scalar", gf_scalar.into()),
+            ("gflops_simd", gf_simd.into()),
+            ("simd_speedup", speedup.into()),
         ]));
     }
     let mut entries = Vec::new();
@@ -507,7 +724,9 @@ fn main() {
     let doc = Json::obj(vec![
         ("suite", "executor".into()),
         ("threads", threads.into()),
+        ("simd_level", simd_level.into()),
         ("objectives", Json::Arr(obj_entries)),
+        ("roofline", Json::Arr(roof_entries)),
         ("sweeps", Json::Arr(entries)),
         (
             "prefix",

@@ -1,40 +1,46 @@
 //! BLAS-like kernels: dot/axpy/norm (level 1), gemv (level 2), blocked
-//! gemm/syrk (level 3). Plain safe Rust, written so the autovectorizer can
-//! do its job (contiguous column access, 4-way unrolled dot).
+//! gemm/syrk (level 3). The inner loops dispatch through the runtime-
+//! selected SIMD table in [`super::simd`] (AVX2+FMA / SSE2 / scalar,
+//! chosen once per process; `DASH_FORCE_SCALAR=1` pins scalar). The
+//! blocking structure — 4-column gemm panels, 4×4 gemm_tn tiles, KB-sized
+//! k-blocks — lives here; the per-block arithmetic lives in the table.
 
+use super::simd;
 use super::Matrix;
 
-/// `xᵀy`; 8-way unrolled over slice chunks so the autovectorizer emits
-/// wide FMA sequences without bounds checks (perf iteration 3, see
-/// EXPERIMENTS.md §Perf).
+/// `xᵀy`; eight independent accumulators reduced by a fixed sum tree.
+/// Every SIMD level preserves that accumulation layout exactly, so the
+/// result is bit-identical regardless of dispatch (see [`super::simd`]).
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
-    let mut acc = [0.0f64; 8];
-    let xc = x.chunks_exact(8);
-    let yc = y.chunks_exact(8);
-    let rx = xc.remainder();
-    let ry = yc.remainder();
-    for (a, b) in xc.zip(yc) {
-        for l in 0..8 {
-            acc[l] += a[l] * b[l];
-        }
-    }
-    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
-        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for (a, b) in rx.iter().zip(ry) {
-        s += a * b;
-    }
-    s
+    (simd::kernels().dot)(x, y)
 }
 
-/// `y += alpha * x`.
+/// `(xᵀy, yᵀy)` in one pass — the fused tail reduction of the aopt sweep
+/// (`x = X_C` column, `y = M·x`). Each component is bit-identical to the
+/// corresponding [`dot`] at every SIMD level.
+#[inline]
+pub fn dot2(x: &[f64], y: &[f64]) -> (f64, f64) {
+    debug_assert_eq!(x.len(), y.len());
+    (simd::kernels().dot2)(x, y)
+}
+
+/// `y += alpha * x`. Elementwise mul+add at every SIMD level —
+/// bit-identical regardless of dispatch.
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    (simd::kernels().axpy)(alpha, x, y)
+}
+
+/// Narrow `src` into `dst` (`as f32` semantics, round-to-nearest) — the
+/// f64→f32 padding step of the XLA executor. Bit-identical at every SIMD
+/// level.
+#[inline]
+pub fn pack_f32(src: &[f64], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    (simd::kernels().pack_f32)(src, dst)
 }
 
 /// `x *= alpha`.
@@ -89,6 +95,11 @@ pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
 /// loaded once per *four* outputs instead of once per output — the memory
 /// traffic that dominates `M·X_C`-shaped products (d×d posterior times a
 /// candidate block) drops ~4×. K is additionally blocked for cache reuse.
+/// The per-block arithmetic dispatches through [`super::simd`]; remainder
+/// columns run the 1-column kernel with the identical per-element op
+/// sequence as the panels (zero weights multiply through — no skip), so
+/// panel and remainder columns agree bit-for-bit within one dispatch
+/// level.
 pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols(), b.rows(), "gemm inner dim");
     assert_eq!(c.rows(), a.rows(), "gemm output rows");
@@ -99,6 +110,8 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
         return;
     }
     const KB: usize = 64;
+    let ks = simd::kernels();
+    let adata = a.data();
     let cdata = c.data_mut();
     let mut j = 0;
     // 4-column panels: one pass over A updates four accumulating C columns
@@ -111,34 +124,25 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
         let mut p = 0;
         while p < k {
             let pe = (p + KB).min(k);
-            for l in p..pe {
-                let al = a.col(l);
-                let (w0, w1, w2, w3) = (b0[l], b1[l], b2[l], b3[l]);
-                for i in 0..m {
-                    let ai = al[i];
-                    c0[i] += ai * w0;
-                    c1[i] += ai * w1;
-                    c2[i] += ai * w2;
-                    c3[i] += ai * w3;
-                }
-            }
+            // columns p..pe of column-major A are one contiguous slab
+            (ks.gemm_panel4)(
+                &adata[p * m..pe * m],
+                m,
+                [&b0[p..pe], &b1[p..pe], &b2[p..pe], &b3[p..pe]],
+                [&mut c0[..], &mut c1[..], &mut c2[..], &mut c3[..]],
+            );
             p = pe;
         }
         j += 4;
     }
-    // remainder columns: the original axpy accumulation
+    // remainder columns: same kernel structure, one accumulator column
     while j < n {
         let bcol = b.col(j);
         let ccol = &mut cdata[j * m..(j + 1) * m];
         let mut p = 0;
         while p < k {
             let pe = (p + KB).min(k);
-            for l in p..pe {
-                let w = bcol[l];
-                if w != 0.0 {
-                    axpy(w, a.col(l), ccol);
-                }
-            }
+            (ks.gemm_col1)(&adata[p * m..pe * m], m, &bcol[p..pe], &mut ccol[..]);
             p = pe;
         }
         j += 1;
@@ -164,23 +168,17 @@ pub fn gemm_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.rows(), b.rows(), "gemm_tn inner dim");
     assert_eq!(c.rows(), a.cols(), "gemm_tn output rows");
     assert_eq!(c.cols(), b.cols(), "gemm_tn output cols");
-    let (m, p, q) = (a.rows(), a.cols(), b.cols());
+    let (_m, p, q) = (a.rows(), a.cols(), b.cols());
+    let ks = simd::kernels();
     let mut i = 0;
     while i + 4 <= p {
         let (a0, a1, a2, a3) = (a.col(i), a.col(i + 1), a.col(i + 2), a.col(i + 3));
         let mut j = 0;
         while j + 4 <= q {
-            let (b0, b1, b2, b3) = (b.col(j), b.col(j + 1), b.col(j + 2), b.col(j + 3));
-            let mut acc = [[0.0f64; 4]; 4];
-            for r in 0..m {
-                let av = [a0[r], a1[r], a2[r], a3[r]];
-                let bv = [b0[r], b1[r], b2[r], b3[r]];
-                for (ci, &avi) in av.iter().enumerate() {
-                    for (cj, &bvj) in bv.iter().enumerate() {
-                        acc[ci][cj] += avi * bvj;
-                    }
-                }
-            }
+            let acc = (ks.tn_tile4)(
+                [a0, a1, a2, a3],
+                [b.col(j), b.col(j + 1), b.col(j + 2), b.col(j + 3)],
+            );
             for (ci, row) in acc.iter().enumerate() {
                 for (cj, &v) in row.iter().enumerate() {
                     c.set(i + ci, j + cj, v);
@@ -376,6 +374,64 @@ mod tests {
         c2.set(0, 0, 4.0);
         gemm_into(&a2, &b2, &mut c2);
         assert_eq!(c2.get(0, 0), 0.0, "k=0 product is the zero matrix");
+    }
+
+    #[test]
+    fn dot2_components_bit_identical_to_dot() {
+        let mut rng = crate::rng::Pcg64::seed_from(21);
+        for n in [0usize, 1, 5, 8, 13, 64, 100] {
+            let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let (xy, yy) = dot2(&x, &y);
+            assert_eq!(xy.to_bits(), dot(&x, &y).to_bits(), "n={n}");
+            assert_eq!(yy.to_bits(), dot(&y, &y).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn pack_f32_matches_as_cast() {
+        let mut rng = crate::rng::Pcg64::seed_from(22);
+        for n in [0usize, 1, 3, 4, 7, 64, 101] {
+            let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian() * 1e3).collect();
+            let mut out = vec![0.0f32; n];
+            pack_f32(&x, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i].to_bits(), (x[i] as f32).to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn remainder_column_bitwise_matches_panel_column_with_zero_weights() {
+        // b has 5 columns: 0..4 go through the 4-column panel kernel,
+        // column 4 through the remainder kernel. Column 4 duplicates
+        // column 0 — with exact zeros sprinkled in — so the remainder
+        // path must reproduce the panel path bit-for-bit (ISSUE 8
+        // satellite 1: the old remainder path skipped zero weights and
+        // diverged from the panel flop pattern).
+        let mut rng = crate::rng::Pcg64::seed_from(23);
+        for (m, k) in [(7, 9), (16, 70), (5, 64), (1, 1)] {
+            let a = random(&mut rng, m, k);
+            let mut b = Matrix::zeros(k, 5);
+            for j in 0..4 {
+                for l in 0..k {
+                    let w = if (l + j) % 3 == 0 { 0.0 } else { rng.next_gaussian() };
+                    b.set(l, j, w);
+                }
+            }
+            for l in 0..k {
+                let v = b.get(l, 0);
+                b.set(l, 4, v);
+            }
+            let c = gemm(&a, &b);
+            for i in 0..m {
+                assert_eq!(
+                    c.get(i, 4).to_bits(),
+                    c.get(i, 0).to_bits(),
+                    "m={m} k={k} row {i}: remainder column diverged from panel"
+                );
+            }
+        }
     }
 
     fn random(rng: &mut crate::rng::Pcg64, r: usize, c: usize) -> Matrix {

@@ -1,7 +1,8 @@
 //! Dense linear algebra substrate (no external BLAS/LAPACK available):
-//! column-major [`Matrix`], blocked GEMM/GEMV, Cholesky with rank-1
-//! updates, Householder QR with incremental column appends, triangular
-//! solves, and a Jacobi symmetric eigensolver.
+//! column-major [`Matrix`], blocked GEMM/GEMV with runtime-dispatched
+//! SIMD inner kernels ([`simd`]), Cholesky with rank-1 updates,
+//! Householder QR with incremental column appends, triangular solves,
+//! and a Jacobi symmetric eigensolver.
 //!
 //! Feature matrices are stored **column-major** (`d × n`, one contiguous
 //! slice per feature column) because every objective in the paper sweeps
@@ -13,9 +14,13 @@ mod cholesky;
 mod qr;
 mod solve;
 mod eigen;
+pub mod simd;
 
 pub use matrix::Matrix;
-pub use blas::{dot, axpy, scal, nrm2, gemv, gemv_t, gemm, gemm_into, gemm_tn, gemm_tn_into, syrk};
+pub use blas::{
+    axpy, dot, dot2, gemm, gemm_into, gemm_tn, gemm_tn_into, gemv, gemv_t, nrm2, pack_f32, scal,
+    syrk,
+};
 pub use cholesky::{cholesky, cholesky_in_place, chol_rank1_update, CholeskyFactor};
 pub use qr::{qr_thin, IncrementalQr};
 pub use solve::{solve_lower, solve_upper, solve_lower_t, solve_spd, solve_lstsq};

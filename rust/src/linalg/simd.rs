@@ -1,0 +1,1166 @@
+//! Runtime-dispatched SIMD micro-kernels for the sweep hot path.
+//!
+//! One [`Kernels`] table per instruction-set level (scalar, SSE2, AVX2+FMA)
+//! holds function pointers for the level-1 primitives (`dot`, `dot2`,
+//! `axpy`, `pack_f32`) and the level-3 inner kernels consumed by
+//! [`gemm_into`](super::gemm_into) (4-column panels + 1-column remainder)
+//! and [`gemm_tn_into`](super::gemm_tn_into) (4×4 tiles). The active table
+//! is chosen **once per process**:
+//!
+//! - `DASH_FORCE_SCALAR=1` in the environment pins the scalar table
+//!   (read at first use, cached for the process lifetime);
+//! - otherwise `is_x86_feature_detected!` picks AVX2+FMA when both are
+//!   present, falling back to SSE2 (the x86_64 baseline), falling back to
+//!   scalar on non-x86_64 targets.
+//!
+//! Benches and the dedicated SIMD test binary may additionally force a
+//! level in-process via [`set_override`]; because dispatch is a single
+//! process-wide constant during normal operation, the engine's
+//! shard-count bit-identity contract (`tests/sweep_kernels.rs`) is
+//! unaffected by which level runs.
+//!
+//! # Determinism contract
+//!
+//! Two tiers, pinned by tests in this file and in `tests/simd_kernels.rs`:
+//!
+//! - **Bit-identical across levels**: `dot`, `dot2`, `axpy`, and
+//!   `pack_f32` preserve the scalar accumulation layout exactly. The
+//!   vector `dot` keeps the scalar kernel's eight independent
+//!   accumulators (two 4-lane registers on AVX2, four 2-lane registers on
+//!   SSE2), uses separate multiply and add (never FMA), and reduces with
+//!   the same `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))` tree, so every
+//!   level returns the same bits. `axpy` and `pack_f32` are elementwise.
+//! - **Tolerance across levels**: the gemm panel/tile kernels use FMA on
+//!   AVX2, which changes rounding versus scalar (tighter, one rounding
+//!   per multiply-add). Agreement with the scalar path is ≤1e-9 per the
+//!   sweep-kernel contract. *Within* one level, the 4-column panel and
+//!   the 1-column remainder kernel perform the identical per-element
+//!   operation sequence (ascending `l`, same op kind), so panel and
+//!   remainder columns agree bit-for-bit — including for zero weights,
+//!   which multiply through instead of being skipped.
+//!
+//! # Safety
+//!
+//! This module contains the crate's only `unsafe` SIMD code and is built
+//! with `deny(unsafe_op_in_unsafe_fn)`: every unsafe operation sits in an
+//! explicit `unsafe` block with a SAFETY comment. The contract common to
+//! all kernels:
+//!
+//! - raw pointer reads/writes are guarded by loop bounds checked against
+//!   the slice lengths taken *from the safe references* (`i + LANES <= n`
+//!   before touching lanes `i..i+LANES`);
+//! - `#[target_feature]` functions are reachable only through their
+//!   `*_entry` wrappers, which are stored exclusively in the table for
+//!   that level, and a table is only selectable when the feature check
+//!   for its level has passed (SSE2 is unconditionally part of the
+//!   x86_64 baseline).
+
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Instruction-set level of a kernel table.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimdLevel {
+    /// Portable scalar Rust (the autovectorizer may still use SIMD).
+    Scalar,
+    /// 128-bit SSE2 (x86_64 baseline), mul+add only — bit-identical to
+    /// scalar for every kernel.
+    Sse2,
+    /// 256-bit AVX2 with FMA in the gemm kernels.
+    Avx2,
+}
+
+impl SimdLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2+fma",
+        }
+    }
+}
+
+/// Dispatch table: one entry per kernel the sweep path consumes.
+///
+/// `gemm_panel4(ablock, m, w, c)` accumulates `c[t] += A_block · w[t]` for
+/// four output columns at once, where `ablock` is the contiguous
+/// column-major slab of `kk = w[0].len()` A-columns of height `m` and each
+/// `c[t]` has length `m`. `gemm_col1` is the single-column remainder with
+/// the identical per-element operation sequence. `tn_tile4(a, b)` returns
+/// the 4×4 tile of dot products `a[i]ᵀ b[j]`. `dot2(x, y)` returns
+/// `(x·y, y·y)` with each component bit-identical to `dot`. `pack_f32`
+/// narrows f64 → f32 with round-to-nearest (identical to `as f32`).
+pub struct Kernels {
+    pub level: SimdLevel,
+    pub dot: fn(&[f64], &[f64]) -> f64,
+    pub dot2: fn(&[f64], &[f64]) -> (f64, f64),
+    pub axpy: fn(f64, &[f64], &mut [f64]),
+    pub gemm_panel4: fn(&[f64], usize, [&[f64]; 4], [&mut [f64]; 4]),
+    pub gemm_col1: fn(&[f64], usize, &[f64], &mut [f64]),
+    pub tn_tile4: fn([&[f64]; 4], [&[f64]; 4]) -> [[f64; 4]; 4],
+    pub pack_f32: fn(&[f64], &mut [f32]),
+}
+
+// ---------------------------------------------------------------------------
+// dispatch
+
+/// 0 = auto (detected once), 1 = scalar, 2 = sse2, 3 = avx2.
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+static AUTO: OnceLock<&'static Kernels> = OnceLock::new();
+
+fn force_scalar_env() -> bool {
+    std::env::var("DASH_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn best_table() -> &'static Kernels {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        &AVX2_KERNELS
+    } else {
+        &SSE2_KERNELS
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn best_table() -> &'static Kernels {
+    &SCALAR_KERNELS
+}
+
+fn detect() -> &'static Kernels {
+    if force_scalar_env() {
+        return &SCALAR_KERNELS;
+    }
+    best_table()
+}
+
+/// The active kernel table. Reads one atomic (the test/bench override)
+/// and the once-cached detection result; callers may hold the reference
+/// for the duration of an operation.
+#[inline]
+pub fn kernels() -> &'static Kernels {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => &SCALAR_KERNELS,
+        #[cfg(target_arch = "x86_64")]
+        2 => &SSE2_KERNELS,
+        #[cfg(target_arch = "x86_64")]
+        3 => &AVX2_KERNELS,
+        _ => AUTO.get_or_init(detect),
+    }
+}
+
+/// Whether `level`'s table can run on this host.
+pub fn is_available(level: SimdLevel) -> bool {
+    match level {
+        SimdLevel::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => true,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => false,
+    }
+}
+
+/// Every level runnable on this host, scalar first.
+pub fn available_levels() -> Vec<SimdLevel> {
+    [SimdLevel::Scalar, SimdLevel::Sse2, SimdLevel::Avx2]
+        .into_iter()
+        .filter(|&l| is_available(l))
+        .collect()
+}
+
+/// The table for `level`, if the host supports it (for direct
+/// level-vs-level comparisons in tests/benches without touching global
+/// dispatch).
+pub fn table_for(level: SimdLevel) -> Option<&'static Kernels> {
+    if !is_available(level) {
+        return None;
+    }
+    match level {
+        SimdLevel::Scalar => Some(&SCALAR_KERNELS),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => Some(&SSE2_KERNELS),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => Some(&AVX2_KERNELS),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => None,
+    }
+}
+
+/// Force dispatch to `level` process-wide (`None` restores auto
+/// detection). Returns `false` (leaving dispatch unchanged) if the host
+/// cannot run `level`.
+///
+/// Benches and the dedicated SIMD test binary use this to compare paths
+/// in one process. It mutates global state: callers in multi-threaded
+/// test binaries must serialize around it (see `tests/simd_kernels.rs`),
+/// and production code must never call it.
+pub fn set_override(level: Option<SimdLevel>) -> bool {
+    let code = match level {
+        None => 0,
+        Some(l) => {
+            if !is_available(l) {
+                return false;
+            }
+            match l {
+                SimdLevel::Scalar => 1,
+                SimdLevel::Sse2 => 2,
+                SimdLevel::Avx2 => 3,
+            }
+        }
+    };
+    OVERRIDE.store(code, Ordering::Relaxed);
+    true
+}
+
+/// Name of the active level ("scalar", "sse2", "avx2+fma") — recorded by
+/// the roofline bench and useful in logs.
+pub fn active_name() -> &'static str {
+    kernels().level.name()
+}
+
+// ---------------------------------------------------------------------------
+// scalar kernels (the reference semantics every other level is pinned to)
+
+fn dot_scalar(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; 8];
+    let xc = x.chunks_exact(8);
+    let yc = y.chunks_exact(8);
+    let rx = xc.remainder();
+    let ry = yc.remainder();
+    for (a, b) in xc.zip(yc) {
+        for l in 0..8 {
+            acc[l] += a[l] * b[l];
+        }
+    }
+    let mut s =
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (a, b) in rx.iter().zip(ry) {
+        s += a * b;
+    }
+    s
+}
+
+fn dot2_scalar(x: &[f64], y: &[f64]) -> (f64, f64) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut axy = [0.0f64; 8];
+    let mut ayy = [0.0f64; 8];
+    let xc = x.chunks_exact(8);
+    let yc = y.chunks_exact(8);
+    let rx = xc.remainder();
+    let ry = yc.remainder();
+    for (a, b) in xc.zip(yc) {
+        for l in 0..8 {
+            axy[l] += a[l] * b[l];
+            ayy[l] += b[l] * b[l];
+        }
+    }
+    let mut sxy =
+        ((axy[0] + axy[1]) + (axy[2] + axy[3])) + ((axy[4] + axy[5]) + (axy[6] + axy[7]));
+    let mut syy =
+        ((ayy[0] + ayy[1]) + (ayy[2] + ayy[3])) + ((ayy[4] + ayy[5]) + (ayy[6] + ayy[7]));
+    for (a, b) in rx.iter().zip(ry) {
+        sxy += a * b;
+        syy += b * b;
+    }
+    (sxy, syy)
+}
+
+fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+fn gemm_panel4_scalar(ablock: &[f64], m: usize, w: [&[f64]; 4], c: [&mut [f64]; 4]) {
+    let [w0, w1, w2, w3] = w;
+    let [c0, c1, c2, c3] = c;
+    let kk = w0.len();
+    debug_assert!(ablock.len() >= kk * m);
+    for l in 0..kk {
+        let al = &ablock[l * m..(l + 1) * m];
+        let (b0, b1, b2, b3) = (w0[l], w1[l], w2[l], w3[l]);
+        for i in 0..m {
+            let ai = al[i];
+            c0[i] += ai * b0;
+            c1[i] += ai * b1;
+            c2[i] += ai * b2;
+            c3[i] += ai * b3;
+        }
+    }
+}
+
+fn gemm_col1_scalar(ablock: &[f64], m: usize, w: &[f64], c: &mut [f64]) {
+    debug_assert!(ablock.len() >= w.len() * m);
+    for (l, &wl) in w.iter().enumerate() {
+        let al = &ablock[l * m..(l + 1) * m];
+        // zero weights multiply through (no skip): the per-element op
+        // sequence must match the panel kernel's exactly
+        for (ci, &ai) in c.iter_mut().zip(al) {
+            *ci += ai * wl;
+        }
+    }
+}
+
+fn tn_tile4_scalar(a: [&[f64]; 4], b: [&[f64]; 4]) -> [[f64; 4]; 4] {
+    let m = a[0].len();
+    let mut acc = [[0.0f64; 4]; 4];
+    for r in 0..m {
+        let av = [a[0][r], a[1][r], a[2][r], a[3][r]];
+        let bv = [b[0][r], b[1][r], b[2][r], b[3][r]];
+        for (ci, &avi) in av.iter().enumerate() {
+            for (cj, &bvj) in bv.iter().enumerate() {
+                acc[ci][cj] += avi * bvj;
+            }
+        }
+    }
+    acc
+}
+
+fn pack_f32_scalar(src: &[f64], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s as f32;
+    }
+}
+
+static SCALAR_KERNELS: Kernels = Kernels {
+    level: SimdLevel::Scalar,
+    dot: dot_scalar,
+    dot2: dot2_scalar,
+    axpy: axpy_scalar,
+    gemm_panel4: gemm_panel4_scalar,
+    gemm_col1: gemm_col1_scalar,
+    tn_tile4: tn_tile4_scalar,
+    pack_f32: pack_f32_scalar,
+};
+
+// ---------------------------------------------------------------------------
+// SSE2 kernels (x86_64 baseline; mul+add only — bit-identical to scalar)
+
+#[cfg(target_arch = "x86_64")]
+mod sse2 {
+    use std::arch::x86_64::*;
+
+    pub(super) fn dot(x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len().min(y.len());
+        // SAFETY: SSE2 is unconditionally available on x86_64; every
+        // pointer read is guarded by `i + 8 <= n` (lanes i..i+8) against
+        // the lengths of the borrowed slices.
+        unsafe {
+            let (xp, yp) = (x.as_ptr(), y.as_ptr());
+            // four 2-lane accumulators = the scalar kernel's acc[0..8]
+            let mut a01 = _mm_setzero_pd();
+            let mut a23 = _mm_setzero_pd();
+            let mut a45 = _mm_setzero_pd();
+            let mut a67 = _mm_setzero_pd();
+            let mut i = 0;
+            while i + 8 <= n {
+                a01 = _mm_add_pd(a01, _mm_mul_pd(_mm_loadu_pd(xp.add(i)), _mm_loadu_pd(yp.add(i))));
+                a23 = _mm_add_pd(
+                    a23,
+                    _mm_mul_pd(_mm_loadu_pd(xp.add(i + 2)), _mm_loadu_pd(yp.add(i + 2))),
+                );
+                a45 = _mm_add_pd(
+                    a45,
+                    _mm_mul_pd(_mm_loadu_pd(xp.add(i + 4)), _mm_loadu_pd(yp.add(i + 4))),
+                );
+                a67 = _mm_add_pd(
+                    a67,
+                    _mm_mul_pd(_mm_loadu_pd(xp.add(i + 6)), _mm_loadu_pd(yp.add(i + 6))),
+                );
+                i += 8;
+            }
+            let mut acc = [0.0f64; 8];
+            _mm_storeu_pd(acc.as_mut_ptr(), a01);
+            _mm_storeu_pd(acc.as_mut_ptr().add(2), a23);
+            _mm_storeu_pd(acc.as_mut_ptr().add(4), a45);
+            _mm_storeu_pd(acc.as_mut_ptr().add(6), a67);
+            let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+                + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+            while i < n {
+                s += x[i] * y[i];
+                i += 1;
+            }
+            s
+        }
+    }
+
+    pub(super) fn dot2(x: &[f64], y: &[f64]) -> (f64, f64) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len().min(y.len());
+        // SAFETY: as in `dot` — baseline feature, reads guarded by
+        // `i + 8 <= n` against the borrowed slice lengths.
+        unsafe {
+            let (xp, yp) = (x.as_ptr(), y.as_ptr());
+            let mut xy01 = _mm_setzero_pd();
+            let mut xy23 = _mm_setzero_pd();
+            let mut xy45 = _mm_setzero_pd();
+            let mut xy67 = _mm_setzero_pd();
+            let mut yy01 = _mm_setzero_pd();
+            let mut yy23 = _mm_setzero_pd();
+            let mut yy45 = _mm_setzero_pd();
+            let mut yy67 = _mm_setzero_pd();
+            let mut i = 0;
+            while i + 8 <= n {
+                let (x0, y0) = (_mm_loadu_pd(xp.add(i)), _mm_loadu_pd(yp.add(i)));
+                let (x2, y2) = (_mm_loadu_pd(xp.add(i + 2)), _mm_loadu_pd(yp.add(i + 2)));
+                let (x4, y4) = (_mm_loadu_pd(xp.add(i + 4)), _mm_loadu_pd(yp.add(i + 4)));
+                let (x6, y6) = (_mm_loadu_pd(xp.add(i + 6)), _mm_loadu_pd(yp.add(i + 6)));
+                xy01 = _mm_add_pd(xy01, _mm_mul_pd(x0, y0));
+                yy01 = _mm_add_pd(yy01, _mm_mul_pd(y0, y0));
+                xy23 = _mm_add_pd(xy23, _mm_mul_pd(x2, y2));
+                yy23 = _mm_add_pd(yy23, _mm_mul_pd(y2, y2));
+                xy45 = _mm_add_pd(xy45, _mm_mul_pd(x4, y4));
+                yy45 = _mm_add_pd(yy45, _mm_mul_pd(y4, y4));
+                xy67 = _mm_add_pd(xy67, _mm_mul_pd(x6, y6));
+                yy67 = _mm_add_pd(yy67, _mm_mul_pd(y6, y6));
+                i += 8;
+            }
+            let mut axy = [0.0f64; 8];
+            let mut ayy = [0.0f64; 8];
+            _mm_storeu_pd(axy.as_mut_ptr(), xy01);
+            _mm_storeu_pd(axy.as_mut_ptr().add(2), xy23);
+            _mm_storeu_pd(axy.as_mut_ptr().add(4), xy45);
+            _mm_storeu_pd(axy.as_mut_ptr().add(6), xy67);
+            _mm_storeu_pd(ayy.as_mut_ptr(), yy01);
+            _mm_storeu_pd(ayy.as_mut_ptr().add(2), yy23);
+            _mm_storeu_pd(ayy.as_mut_ptr().add(4), yy45);
+            _mm_storeu_pd(ayy.as_mut_ptr().add(6), yy67);
+            let mut sxy = ((axy[0] + axy[1]) + (axy[2] + axy[3]))
+                + ((axy[4] + axy[5]) + (axy[6] + axy[7]));
+            let mut syy = ((ayy[0] + ayy[1]) + (ayy[2] + ayy[3]))
+                + ((ayy[4] + ayy[5]) + (ayy[6] + ayy[7]));
+            while i < n {
+                sxy += x[i] * y[i];
+                syy += y[i] * y[i];
+                i += 1;
+            }
+            (sxy, syy)
+        }
+    }
+
+    pub(super) fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len().min(y.len());
+        // SAFETY: baseline feature; reads/writes guarded by `i + 2 <= n`
+        // against the borrowed slice lengths; x and y cannot alias
+        // (&/&mut borrows).
+        unsafe {
+            let va = _mm_set1_pd(alpha);
+            let xp = x.as_ptr();
+            let yp = y.as_mut_ptr();
+            let mut i = 0;
+            while i + 2 <= n {
+                let v = _mm_add_pd(_mm_loadu_pd(yp.add(i)), _mm_mul_pd(va, _mm_loadu_pd(xp.add(i))));
+                _mm_storeu_pd(yp.add(i), v);
+                i += 2;
+            }
+            while i < n {
+                *yp.add(i) += alpha * *xp.add(i);
+                i += 1;
+            }
+        }
+    }
+
+    pub(super) fn gemm_panel4(ablock: &[f64], m: usize, w: [&[f64]; 4], c: [&mut [f64]; 4]) {
+        let [w0, w1, w2, w3] = w;
+        let [c0, c1, c2, c3] = c;
+        let kk = w0.len();
+        debug_assert!(ablock.len() >= kk * m);
+        debug_assert!(c0.len() == m && c1.len() == m && c2.len() == m && c3.len() == m);
+        // SAFETY: baseline feature; A reads stay inside `ablock[..kk*m]`
+        // (l < kk, i + 2 <= m), C reads/writes inside the four disjoint
+        // &mut slices of length m.
+        unsafe {
+            let ap = ablock.as_ptr();
+            let (p0, p1, p2, p3) =
+                (c0.as_mut_ptr(), c1.as_mut_ptr(), c2.as_mut_ptr(), c3.as_mut_ptr());
+            let mut i = 0;
+            while i + 2 <= m {
+                let mut v0 = _mm_loadu_pd(p0.add(i));
+                let mut v1 = _mm_loadu_pd(p1.add(i));
+                let mut v2 = _mm_loadu_pd(p2.add(i));
+                let mut v3 = _mm_loadu_pd(p3.add(i));
+                for l in 0..kk {
+                    let va = _mm_loadu_pd(ap.add(l * m + i));
+                    v0 = _mm_add_pd(v0, _mm_mul_pd(va, _mm_set1_pd(*w0.get_unchecked(l))));
+                    v1 = _mm_add_pd(v1, _mm_mul_pd(va, _mm_set1_pd(*w1.get_unchecked(l))));
+                    v2 = _mm_add_pd(v2, _mm_mul_pd(va, _mm_set1_pd(*w2.get_unchecked(l))));
+                    v3 = _mm_add_pd(v3, _mm_mul_pd(va, _mm_set1_pd(*w3.get_unchecked(l))));
+                }
+                _mm_storeu_pd(p0.add(i), v0);
+                _mm_storeu_pd(p1.add(i), v1);
+                _mm_storeu_pd(p2.add(i), v2);
+                _mm_storeu_pd(p3.add(i), v3);
+                i += 2;
+            }
+            while i < m {
+                let (mut t0, mut t1, mut t2, mut t3) =
+                    (*p0.add(i), *p1.add(i), *p2.add(i), *p3.add(i));
+                for l in 0..kk {
+                    let ai = *ap.add(l * m + i);
+                    t0 += ai * *w0.get_unchecked(l);
+                    t1 += ai * *w1.get_unchecked(l);
+                    t2 += ai * *w2.get_unchecked(l);
+                    t3 += ai * *w3.get_unchecked(l);
+                }
+                *p0.add(i) = t0;
+                *p1.add(i) = t1;
+                *p2.add(i) = t2;
+                *p3.add(i) = t3;
+                i += 1;
+            }
+        }
+    }
+
+    pub(super) fn gemm_col1(ablock: &[f64], m: usize, w: &[f64], c: &mut [f64]) {
+        let kk = w.len();
+        debug_assert!(ablock.len() >= kk * m);
+        debug_assert_eq!(c.len(), m);
+        // SAFETY: baseline feature; A reads inside `ablock[..kk*m]`,
+        // C reads/writes guarded by `i + 2 <= m` / `i < m`.
+        unsafe {
+            let ap = ablock.as_ptr();
+            let cp = c.as_mut_ptr();
+            let mut i = 0;
+            while i + 2 <= m {
+                let mut v = _mm_loadu_pd(cp.add(i));
+                for l in 0..kk {
+                    v = _mm_add_pd(
+                        v,
+                        _mm_mul_pd(_mm_loadu_pd(ap.add(l * m + i)), _mm_set1_pd(*w.get_unchecked(l))),
+                    );
+                }
+                _mm_storeu_pd(cp.add(i), v);
+                i += 2;
+            }
+            while i < m {
+                let mut t = *cp.add(i);
+                for l in 0..kk {
+                    t += *ap.add(l * m + i) * *w.get_unchecked(l);
+                }
+                *cp.add(i) = t;
+                i += 1;
+            }
+        }
+    }
+
+    pub(super) fn tn_tile4(a: [&[f64]; 4], b: [&[f64]; 4]) -> [[f64; 4]; 4] {
+        let m = a[0].len();
+        debug_assert!(a.iter().chain(b.iter()).all(|s| s.len() == m));
+        // SAFETY: baseline feature; reads guarded by `r + 2 <= m` /
+        // `r < m` against the common column length m.
+        unsafe {
+            let ap = [a[0].as_ptr(), a[1].as_ptr(), a[2].as_ptr(), a[3].as_ptr()];
+            let bp = [b[0].as_ptr(), b[1].as_ptr(), b[2].as_ptr(), b[3].as_ptr()];
+            let mut acc = [[_mm_setzero_pd(); 4]; 4];
+            let mut r = 0;
+            while r + 2 <= m {
+                let va = [
+                    _mm_loadu_pd(ap[0].add(r)),
+                    _mm_loadu_pd(ap[1].add(r)),
+                    _mm_loadu_pd(ap[2].add(r)),
+                    _mm_loadu_pd(ap[3].add(r)),
+                ];
+                let vb = [
+                    _mm_loadu_pd(bp[0].add(r)),
+                    _mm_loadu_pd(bp[1].add(r)),
+                    _mm_loadu_pd(bp[2].add(r)),
+                    _mm_loadu_pd(bp[3].add(r)),
+                ];
+                for ci in 0..4 {
+                    for cj in 0..4 {
+                        acc[ci][cj] = _mm_add_pd(acc[ci][cj], _mm_mul_pd(va[ci], vb[cj]));
+                    }
+                }
+                r += 2;
+            }
+            let mut out = [[0.0f64; 4]; 4];
+            for ci in 0..4 {
+                for cj in 0..4 {
+                    let mut lanes = [0.0f64; 2];
+                    _mm_storeu_pd(lanes.as_mut_ptr(), acc[ci][cj]);
+                    out[ci][cj] = lanes[0] + lanes[1];
+                }
+            }
+            while r < m {
+                for ci in 0..4 {
+                    let av = *ap[ci].add(r);
+                    for cj in 0..4 {
+                        out[ci][cj] += av * *bp[cj].add(r);
+                    }
+                }
+                r += 1;
+            }
+            out
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+static SSE2_KERNELS: Kernels = Kernels {
+    level: SimdLevel::Sse2,
+    dot: sse2::dot,
+    dot2: sse2::dot2,
+    axpy: sse2::axpy,
+    gemm_panel4: sse2::gemm_panel4,
+    gemm_col1: sse2::gemm_col1,
+    tn_tile4: sse2::tn_tile4,
+    // f64→f32 narrowing is elementwise and exact under round-to-nearest
+    // either way; the scalar loop is already optimal at 128 bits
+    pack_f32: pack_f32_scalar,
+};
+
+// ---------------------------------------------------------------------------
+// AVX2+FMA kernels. Each `#[target_feature] unsafe fn` is wrapped by a safe
+// `*_entry` that is stored only in AVX2_KERNELS, which is only selectable
+// after `is_x86_feature_detected!("avx2")` && `("fma")` both passed.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot_impl(x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len().min(y.len());
+        // SAFETY: the caller (entry wrapper) guarantees AVX2; every
+        // pointer read is guarded by `i + 8 <= n` (lanes i..i+8) against
+        // the borrowed slice lengths.
+        unsafe {
+            let (xp, yp) = (x.as_ptr(), y.as_ptr());
+            // two 4-lane accumulators = the scalar kernel's acc[0..8];
+            // mul+add (not FMA) keeps every lane bit-identical to scalar
+            let mut lo = _mm256_setzero_pd();
+            let mut hi = _mm256_setzero_pd();
+            let mut i = 0;
+            while i + 8 <= n {
+                lo = _mm256_add_pd(
+                    lo,
+                    _mm256_mul_pd(_mm256_loadu_pd(xp.add(i)), _mm256_loadu_pd(yp.add(i))),
+                );
+                hi = _mm256_add_pd(
+                    hi,
+                    _mm256_mul_pd(_mm256_loadu_pd(xp.add(i + 4)), _mm256_loadu_pd(yp.add(i + 4))),
+                );
+                i += 8;
+            }
+            let mut acc = [0.0f64; 8];
+            _mm256_storeu_pd(acc.as_mut_ptr(), lo);
+            _mm256_storeu_pd(acc.as_mut_ptr().add(4), hi);
+            let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+                + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+            while i < n {
+                s += x[i] * y[i];
+                i += 1;
+            }
+            s
+        }
+    }
+
+    pub(super) fn dot_entry(x: &[f64], y: &[f64]) -> f64 {
+        // SAFETY: this entry is reachable only through AVX2_KERNELS, which
+        // dispatch hands out only after the avx2+fma feature checks passed.
+        unsafe { dot_impl(x, y) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot2_impl(x: &[f64], y: &[f64]) -> (f64, f64) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len().min(y.len());
+        // SAFETY: as in `dot_impl` — reads guarded by `i + 8 <= n`.
+        unsafe {
+            let (xp, yp) = (x.as_ptr(), y.as_ptr());
+            let mut xy_lo = _mm256_setzero_pd();
+            let mut xy_hi = _mm256_setzero_pd();
+            let mut yy_lo = _mm256_setzero_pd();
+            let mut yy_hi = _mm256_setzero_pd();
+            let mut i = 0;
+            while i + 8 <= n {
+                let (x0, y0) = (_mm256_loadu_pd(xp.add(i)), _mm256_loadu_pd(yp.add(i)));
+                let (x4, y4) = (_mm256_loadu_pd(xp.add(i + 4)), _mm256_loadu_pd(yp.add(i + 4)));
+                xy_lo = _mm256_add_pd(xy_lo, _mm256_mul_pd(x0, y0));
+                yy_lo = _mm256_add_pd(yy_lo, _mm256_mul_pd(y0, y0));
+                xy_hi = _mm256_add_pd(xy_hi, _mm256_mul_pd(x4, y4));
+                yy_hi = _mm256_add_pd(yy_hi, _mm256_mul_pd(y4, y4));
+                i += 8;
+            }
+            let mut axy = [0.0f64; 8];
+            let mut ayy = [0.0f64; 8];
+            _mm256_storeu_pd(axy.as_mut_ptr(), xy_lo);
+            _mm256_storeu_pd(axy.as_mut_ptr().add(4), xy_hi);
+            _mm256_storeu_pd(ayy.as_mut_ptr(), yy_lo);
+            _mm256_storeu_pd(ayy.as_mut_ptr().add(4), yy_hi);
+            let mut sxy = ((axy[0] + axy[1]) + (axy[2] + axy[3]))
+                + ((axy[4] + axy[5]) + (axy[6] + axy[7]));
+            let mut syy = ((ayy[0] + ayy[1]) + (ayy[2] + ayy[3]))
+                + ((ayy[4] + ayy[5]) + (ayy[6] + ayy[7]));
+            while i < n {
+                sxy += x[i] * y[i];
+                syy += y[i] * y[i];
+                i += 1;
+            }
+            (sxy, syy)
+        }
+    }
+
+    pub(super) fn dot2_entry(x: &[f64], y: &[f64]) -> (f64, f64) {
+        // SAFETY: see `dot_entry`.
+        unsafe { dot2_impl(x, y) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn axpy_impl(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len().min(y.len());
+        // SAFETY: reads/writes guarded by `i + 4 <= n` / `i < n` against
+        // the borrowed slice lengths; x and y cannot alias (&/&mut).
+        unsafe {
+            // elementwise mul+add (not FMA): bit-identical to scalar
+            let va = _mm256_set1_pd(alpha);
+            let xp = x.as_ptr();
+            let yp = y.as_mut_ptr();
+            let mut i = 0;
+            while i + 4 <= n {
+                let v = _mm256_add_pd(
+                    _mm256_loadu_pd(yp.add(i)),
+                    _mm256_mul_pd(va, _mm256_loadu_pd(xp.add(i))),
+                );
+                _mm256_storeu_pd(yp.add(i), v);
+                i += 4;
+            }
+            while i < n {
+                *yp.add(i) += alpha * *xp.add(i);
+                i += 1;
+            }
+        }
+    }
+
+    pub(super) fn axpy_entry(alpha: f64, x: &[f64], y: &mut [f64]) {
+        // SAFETY: see `dot_entry`.
+        unsafe { axpy_impl(alpha, x, y) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn gemm_panel4_impl(ablock: &[f64], m: usize, w: [&[f64]; 4], c: [&mut [f64]; 4]) {
+        let [w0, w1, w2, w3] = w;
+        let [c0, c1, c2, c3] = c;
+        let kk = w0.len();
+        debug_assert!(ablock.len() >= kk * m);
+        debug_assert!(c0.len() == m && c1.len() == m && c2.len() == m && c3.len() == m);
+        // SAFETY: A reads stay inside `ablock[..kk*m]` (l < kk, lanes
+        // i..i+4 with i + 4 <= m), C reads/writes inside the four disjoint
+        // &mut slices of length m; weight reads are l < kk per the
+        // debug-asserted common length.
+        unsafe {
+            let ap = ablock.as_ptr();
+            let (p0, p1, p2, p3) =
+                (c0.as_mut_ptr(), c1.as_mut_ptr(), c2.as_mut_ptr(), c3.as_mut_ptr());
+            let mut i = 0;
+            while i + 4 <= m {
+                let mut v0 = _mm256_loadu_pd(p0.add(i));
+                let mut v1 = _mm256_loadu_pd(p1.add(i));
+                let mut v2 = _mm256_loadu_pd(p2.add(i));
+                let mut v3 = _mm256_loadu_pd(p3.add(i));
+                for l in 0..kk {
+                    let va = _mm256_loadu_pd(ap.add(l * m + i));
+                    v0 = _mm256_fmadd_pd(va, _mm256_set1_pd(*w0.get_unchecked(l)), v0);
+                    v1 = _mm256_fmadd_pd(va, _mm256_set1_pd(*w1.get_unchecked(l)), v1);
+                    v2 = _mm256_fmadd_pd(va, _mm256_set1_pd(*w2.get_unchecked(l)), v2);
+                    v3 = _mm256_fmadd_pd(va, _mm256_set1_pd(*w3.get_unchecked(l)), v3);
+                }
+                _mm256_storeu_pd(p0.add(i), v0);
+                _mm256_storeu_pd(p1.add(i), v1);
+                _mm256_storeu_pd(p2.add(i), v2);
+                _mm256_storeu_pd(p3.add(i), v3);
+                i += 4;
+            }
+            // row tail: f64::mul_add keeps the op sequence fused like the
+            // vector body, so all rows of a column agree bit-for-bit
+            while i < m {
+                let (mut t0, mut t1, mut t2, mut t3) =
+                    (*p0.add(i), *p1.add(i), *p2.add(i), *p3.add(i));
+                for l in 0..kk {
+                    let ai = *ap.add(l * m + i);
+                    t0 = ai.mul_add(*w0.get_unchecked(l), t0);
+                    t1 = ai.mul_add(*w1.get_unchecked(l), t1);
+                    t2 = ai.mul_add(*w2.get_unchecked(l), t2);
+                    t3 = ai.mul_add(*w3.get_unchecked(l), t3);
+                }
+                *p0.add(i) = t0;
+                *p1.add(i) = t1;
+                *p2.add(i) = t2;
+                *p3.add(i) = t3;
+                i += 1;
+            }
+        }
+    }
+
+    pub(super) fn gemm_panel4_entry(ablock: &[f64], m: usize, w: [&[f64]; 4], c: [&mut [f64]; 4]) {
+        // SAFETY: see `dot_entry`.
+        unsafe { gemm_panel4_impl(ablock, m, w, c) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn gemm_col1_impl(ablock: &[f64], m: usize, w: &[f64], c: &mut [f64]) {
+        let kk = w.len();
+        debug_assert!(ablock.len() >= kk * m);
+        debug_assert_eq!(c.len(), m);
+        // SAFETY: A reads inside `ablock[..kk*m]`, C reads/writes guarded
+        // by `i + 4 <= m` / `i < m` against the &mut slice length.
+        unsafe {
+            let ap = ablock.as_ptr();
+            let cp = c.as_mut_ptr();
+            let mut i = 0;
+            while i + 4 <= m {
+                let mut v = _mm256_loadu_pd(cp.add(i));
+                for l in 0..kk {
+                    v = _mm256_fmadd_pd(
+                        _mm256_loadu_pd(ap.add(l * m + i)),
+                        _mm256_set1_pd(*w.get_unchecked(l)),
+                        v,
+                    );
+                }
+                _mm256_storeu_pd(cp.add(i), v);
+                i += 4;
+            }
+            while i < m {
+                let mut t = *cp.add(i);
+                for l in 0..kk {
+                    t = (*ap.add(l * m + i)).mul_add(*w.get_unchecked(l), t);
+                }
+                *cp.add(i) = t;
+                i += 1;
+            }
+        }
+    }
+
+    pub(super) fn gemm_col1_entry(ablock: &[f64], m: usize, w: &[f64], c: &mut [f64]) {
+        // SAFETY: see `dot_entry`.
+        unsafe { gemm_col1_impl(ablock, m, w, c) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn tn_tile4_impl(a: [&[f64]; 4], b: [&[f64]; 4]) -> [[f64; 4]; 4] {
+        let m = a[0].len();
+        debug_assert!(a.iter().chain(b.iter()).all(|s| s.len() == m));
+        // SAFETY: reads guarded by `r + 4 <= m` / `r < m` against the
+        // common (debug-asserted) column length m.
+        unsafe {
+            let ap = [a[0].as_ptr(), a[1].as_ptr(), a[2].as_ptr(), a[3].as_ptr()];
+            let bp = [b[0].as_ptr(), b[1].as_ptr(), b[2].as_ptr(), b[3].as_ptr()];
+            let mut acc = [[_mm256_setzero_pd(); 4]; 4];
+            let mut r = 0;
+            while r + 4 <= m {
+                let va = [
+                    _mm256_loadu_pd(ap[0].add(r)),
+                    _mm256_loadu_pd(ap[1].add(r)),
+                    _mm256_loadu_pd(ap[2].add(r)),
+                    _mm256_loadu_pd(ap[3].add(r)),
+                ];
+                let vb = [
+                    _mm256_loadu_pd(bp[0].add(r)),
+                    _mm256_loadu_pd(bp[1].add(r)),
+                    _mm256_loadu_pd(bp[2].add(r)),
+                    _mm256_loadu_pd(bp[3].add(r)),
+                ];
+                for ci in 0..4 {
+                    for cj in 0..4 {
+                        acc[ci][cj] = _mm256_fmadd_pd(va[ci], vb[cj], acc[ci][cj]);
+                    }
+                }
+                r += 4;
+            }
+            let mut out = [[0.0f64; 4]; 4];
+            for ci in 0..4 {
+                for cj in 0..4 {
+                    let mut lanes = [0.0f64; 4];
+                    _mm256_storeu_pd(lanes.as_mut_ptr(), acc[ci][cj]);
+                    out[ci][cj] = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+                }
+            }
+            while r < m {
+                for ci in 0..4 {
+                    let av = *ap[ci].add(r);
+                    for cj in 0..4 {
+                        out[ci][cj] = av.mul_add(*bp[cj].add(r), out[ci][cj]);
+                    }
+                }
+                r += 1;
+            }
+            out
+        }
+    }
+
+    pub(super) fn tn_tile4_entry(a: [&[f64]; 4], b: [&[f64]; 4]) -> [[f64; 4]; 4] {
+        // SAFETY: see `dot_entry`.
+        unsafe { tn_tile4_impl(a, b) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn pack_f32_impl(src: &[f64], dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let n = src.len().min(dst.len());
+        // SAFETY: reads/writes guarded by `i + 4 <= n` / `i < n` against
+        // the borrowed slice lengths; vcvtpd2ps rounds to nearest exactly
+        // like `as f32`, so the narrowing is bit-identical to scalar.
+        unsafe {
+            let sp = src.as_ptr();
+            let dp = dst.as_mut_ptr();
+            let mut i = 0;
+            while i + 4 <= n {
+                _mm_storeu_ps(dp.add(i), _mm256_cvtpd_ps(_mm256_loadu_pd(sp.add(i))));
+                i += 4;
+            }
+            while i < n {
+                *dp.add(i) = *sp.add(i) as f32;
+                i += 1;
+            }
+        }
+    }
+
+    pub(super) fn pack_f32_entry(src: &[f64], dst: &mut [f32]) {
+        // SAFETY: see `dot_entry`.
+        unsafe { pack_f32_impl(src, dst) }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_KERNELS: Kernels = Kernels {
+    level: SimdLevel::Avx2,
+    dot: avx2::dot_entry,
+    dot2: avx2::dot2_entry,
+    axpy: avx2::axpy_entry,
+    gemm_panel4: avx2::gemm_panel4_entry,
+    gemm_col1: avx2::gemm_col1_entry,
+    tn_tile4: avx2::tn_tile4_entry,
+    pack_f32: avx2::pack_f32_entry,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn vecs(rng: &mut Pcg64, n: usize) -> (Vec<f64>, Vec<f64>) {
+        let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        (x, y)
+    }
+
+    /// every remainder class around the 8-lane dot body and 4/2-lane tails
+    const LENS: [usize; 10] = [0, 1, 2, 3, 7, 8, 9, 31, 64, 101];
+
+    #[test]
+    fn detection_reports_a_runnable_level() {
+        let ks = kernels();
+        assert!(is_available(ks.level), "active level {:?} must be runnable", ks.level);
+        assert!(available_levels().contains(&SimdLevel::Scalar));
+        assert_eq!(SimdLevel::Scalar.name(), "scalar");
+        assert!(!active_name().is_empty());
+    }
+
+    #[test]
+    fn table_for_unavailable_levels_is_none() {
+        for l in [SimdLevel::Scalar, SimdLevel::Sse2, SimdLevel::Avx2] {
+            assert_eq!(table_for(l).is_some(), is_available(l));
+            if let Some(t) = table_for(l) {
+                assert_eq!(t.level, l);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_and_dot2_bit_identical_across_levels() {
+        let mut rng = Pcg64::seed_from(11);
+        for n in LENS {
+            let (x, y) = vecs(&mut rng, n);
+            let want = dot_scalar(&x, &y);
+            let want2 = dot2_scalar(&x, &y);
+            assert_eq!(want2.0.to_bits(), want.to_bits(), "dot2.0 == dot, n={n}");
+            assert_eq!(want2.1.to_bits(), dot_scalar(&y, &y).to_bits(), "dot2.1 == y·y, n={n}");
+            for lvl in available_levels() {
+                let t = table_for(lvl).unwrap();
+                let got = (t.dot)(&x, &y);
+                assert_eq!(got.to_bits(), want.to_bits(), "dot {lvl:?} n={n}");
+                let got2 = (t.dot2)(&x, &y);
+                assert_eq!(got2.0.to_bits(), want2.0.to_bits(), "dot2.xy {lvl:?} n={n}");
+                assert_eq!(got2.1.to_bits(), want2.1.to_bits(), "dot2.yy {lvl:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_bit_identical_across_levels() {
+        let mut rng = Pcg64::seed_from(12);
+        for n in LENS {
+            let (x, y0) = vecs(&mut rng, n);
+            let alpha = rng.next_gaussian();
+            let mut want = y0.clone();
+            axpy_scalar(alpha, &x, &mut want);
+            for lvl in available_levels() {
+                let t = table_for(lvl).unwrap();
+                let mut got = y0.clone();
+                (t.axpy)(alpha, &x, &mut got);
+                for i in 0..n {
+                    assert_eq!(got[i].to_bits(), want[i].to_bits(), "axpy {lvl:?} n={n} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_f32_bit_identical_across_levels() {
+        let mut rng = Pcg64::seed_from(13);
+        for n in LENS {
+            let (x, _) = vecs(&mut rng, n);
+            let mut want = vec![0.0f32; n];
+            pack_f32_scalar(&x, &mut want);
+            for lvl in available_levels() {
+                let t = table_for(lvl).unwrap();
+                let mut got = vec![0.0f32; n];
+                (t.pack_f32)(&x, &mut got);
+                for i in 0..n {
+                    assert_eq!(got[i].to_bits(), want[i].to_bits(), "pack {lvl:?} n={n} i={i}");
+                }
+            }
+        }
+    }
+
+    fn panel_inputs(
+        rng: &mut Pcg64,
+        m: usize,
+        kk: usize,
+    ) -> (Vec<f64>, [Vec<f64>; 4], [Vec<f64>; 4]) {
+        let ablock: Vec<f64> = (0..m * kk).map(|_| rng.next_gaussian()).collect();
+        let mut w: [Vec<f64>; 4] = Default::default();
+        let mut c: [Vec<f64>; 4] = Default::default();
+        for t in 0..4 {
+            // sprinkle exact zeros into the weights: the remainder kernel
+            // must multiply them through, not skip them
+            w[t] = (0..kk)
+                .map(|l| if (l + t) % 3 == 0 { 0.0 } else { rng.next_gaussian() })
+                .collect();
+            c[t] = (0..m).map(|_| rng.next_gaussian()).collect();
+        }
+        (ablock, w, c)
+    }
+
+    #[test]
+    fn gemm_panel_matches_scalar_within_tolerance() {
+        let mut rng = Pcg64::seed_from(14);
+        for (m, kk) in [(1, 1), (2, 3), (5, 8), (8, 17), (13, 64), (64, 9)] {
+            let (ablock, w, c0) = panel_inputs(&mut rng, m, kk);
+            let wr: [&[f64]; 4] = [&w[0][..], &w[1][..], &w[2][..], &w[3][..]];
+            let mut want = c0.clone();
+            {
+                let [a, b, c, d] = &mut want;
+                gemm_panel4_scalar(&ablock, m, wr, [&mut a[..], &mut b[..], &mut c[..], &mut d[..]]);
+            }
+            for lvl in available_levels() {
+                let t = table_for(lvl).unwrap();
+                let mut got = c0.clone();
+                {
+                    let [a, b, c, d] = &mut got;
+                    (t.gemm_panel4)(&ablock, m, wr, [&mut a[..], &mut b[..], &mut c[..], &mut d[..]]);
+                }
+                for ti in 0..4 {
+                    for i in 0..m {
+                        let (g, s) = (got[ti][i], want[ti][i]);
+                        assert!(
+                            (g - s).abs() <= 1e-9 * (1.0 + s.abs()),
+                            "panel {lvl:?} m={m} kk={kk} col={ti} i={i}: {g} vs {s}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_col_bitwise_consistent_with_panel_per_level() {
+        // per level, the 1-column remainder kernel must produce bit-for-bit
+        // the panel kernel's columns — including for exact-zero weights
+        // (the old remainder path skipped them; see ISSUE 8 satellite 1)
+        let mut rng = Pcg64::seed_from(15);
+        for (m, kk) in [(1, 2), (3, 5), (7, 16), (12, 33), (30, 64)] {
+            let (ablock, w, c0) = panel_inputs(&mut rng, m, kk);
+            let wr: [&[f64]; 4] = [&w[0][..], &w[1][..], &w[2][..], &w[3][..]];
+            for lvl in available_levels() {
+                let t = table_for(lvl).unwrap();
+                let mut panel = c0.clone();
+                {
+                    let [a, b, c, d] = &mut panel;
+                    (t.gemm_panel4)(&ablock, m, wr, [&mut a[..], &mut b[..], &mut c[..], &mut d[..]]);
+                }
+                for ti in 0..4 {
+                    let mut col = c0[ti].clone();
+                    (t.gemm_col1)(&ablock, m, &w[ti][..], &mut col[..]);
+                    for i in 0..m {
+                        assert_eq!(
+                            col[i].to_bits(),
+                            panel[ti][i].to_bits(),
+                            "col-vs-panel {lvl:?} m={m} kk={kk} col={ti} i={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tn_tile_matches_scalar_within_tolerance() {
+        let mut rng = Pcg64::seed_from(16);
+        for m in [1usize, 2, 3, 4, 5, 9, 33, 64] {
+            let cols: Vec<Vec<f64>> =
+                (0..8).map(|_| (0..m).map(|_| rng.next_gaussian()).collect()).collect();
+            let a: [&[f64]; 4] = [&cols[0], &cols[1], &cols[2], &cols[3]];
+            let b: [&[f64]; 4] = [&cols[4], &cols[5], &cols[6], &cols[7]];
+            let want = tn_tile4_scalar(a, b);
+            for lvl in available_levels() {
+                let t = table_for(lvl).unwrap();
+                let got = (t.tn_tile4)(a, b);
+                for ci in 0..4 {
+                    for cj in 0..4 {
+                        let (g, s) = (got[ci][cj], want[ci][cj]);
+                        assert!(
+                            (g - s).abs() <= 1e-9 * (1.0 + s.abs()),
+                            "tile {lvl:?} m={m} [{ci}][{cj}]: {g} vs {s}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tn_tile_matches_dot_reference() {
+        let mut rng = Pcg64::seed_from(17);
+        let m = 29;
+        let cols: Vec<Vec<f64>> =
+            (0..8).map(|_| (0..m).map(|_| rng.next_gaussian()).collect()).collect();
+        let a: [&[f64]; 4] = [&cols[0], &cols[1], &cols[2], &cols[3]];
+        let b: [&[f64]; 4] = [&cols[4], &cols[5], &cols[6], &cols[7]];
+        for lvl in available_levels() {
+            let t = table_for(lvl).unwrap();
+            let got = (t.tn_tile4)(a, b);
+            for ci in 0..4 {
+                for cj in 0..4 {
+                    let want = dot_scalar(a[ci], b[cj]);
+                    assert!(
+                        (got[ci][cj] - want).abs() <= 1e-10 * (1.0 + want.abs()),
+                        "tile-vs-dot {lvl:?} [{ci}][{cj}]"
+                    );
+                }
+            }
+        }
+    }
+}

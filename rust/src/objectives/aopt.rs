@@ -28,7 +28,7 @@
 
 use super::{Objective, ObjectiveState, SweepScratch, SWEEP_BLOCK};
 use crate::data::Dataset;
-use crate::linalg::{dot, gemm_into, Matrix};
+use crate::linalg::{dot, dot2, gemm_into, Matrix};
 use std::sync::Arc;
 
 struct AoptProblem {
@@ -253,8 +253,10 @@ impl ObjectiveState for AoptState {
                 }
                 let x = scratch.xc.col(jj);
                 let mx = scratch.prod.col(jj);
-                let xmx = dot(x, mx);
-                let raw = s2 * dot(mx, mx) / (1.0 + s2 * xmx);
+                // fused columnwise tail: (xᵀMx, ‖Mx‖²) in one SIMD pass,
+                // each component bit-identical to the two separate dots
+                let (xmx, mm) = dot2(x, mx);
+                let raw = s2 * mm / (1.0 + s2 * xmx);
                 *o = (raw / self.p.prior_trace).max(0.0);
             }
         }

@@ -27,7 +27,7 @@
 
 use super::{Objective, ObjectiveState};
 use crate::data::Dataset;
-use crate::linalg::{dot, solve_spd, Matrix};
+use crate::linalg::{solve_spd, Matrix};
 use std::sync::Arc;
 
 /// Number of Newton iterations for a warm-started refit.
@@ -168,9 +168,8 @@ fn fit_support(
         let resid: Vec<f64> = p.y.iter().zip(&probs).map(|(y, pr)| y - pr).collect();
         let mut g = vec![0.0; s];
         crate::linalg::gemv_t(&xs, &resid, &mut g);
-        // H via weighted syrk
-        let mut h = Matrix::zeros(s, s);
-        // weighted columns: sqrt(w) * col
+        // H = (W^½ X_S)ᵀ (W^½ X_S) as one level-3 syrk over the weighted
+        // columns (the column dots inside ride the SIMD dispatch)
         let sw: Vec<f64> = probs.iter().map(|pr| (pr * (1.0 - pr)).max(1e-12).sqrt()).collect();
         let mut xw = Matrix::zeros(d, s);
         for j in 0..s {
@@ -180,13 +179,7 @@ fn fit_support(
                 dst[i] = src[i] * sw[i];
             }
         }
-        for j in 0..s {
-            for i in 0..=j {
-                let v = dot(xw.col(i), xw.col(j));
-                h.set(i, j, v);
-                h.set(j, i, v);
-            }
-        }
+        let mut h = crate::linalg::syrk(&xw);
         for i in 0..s {
             h.add_at(i, i, RIDGE * (1.0 + h.get(i, i).abs()));
         }

@@ -172,7 +172,11 @@ impl ObjectiveState for LregState {
                     *o = 0.0;
                     continue;
                 }
-                let proj: f64 = scratch.prod.col(jj).iter().map(|c| c * c).sum();
+                // columnwise ‖Qᵀx‖² via the SIMD dot (the per-block
+                // denominator tail); same dispatched kernel as the shard
+                // path, so sharding stays bit-identical
+                let pcol = scratch.prod.col(jj);
+                let proj: f64 = dot(pcol, pcol);
                 let num = scratch.r1[jj];
                 let norm_sq = self.p.col_sq[a];
                 let den = (norm_sq - proj).max(0.0);

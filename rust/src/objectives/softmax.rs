@@ -69,21 +69,28 @@ impl OvrSoftmaxObjective {
         }
         let d = x_eval.rows();
         let xs = x_eval.select_cols(set);
-        let mut scores = vec![vec![0.0; d]; self.classes];
+        // stack the per-class weight vectors into one |S| × C matrix and
+        // score every class in a single level-3 product X_S · W (d × C) —
+        // one pass over X_S through the SIMD gemm panels instead of C
+        // separate gemvs. A class whose refit produced mismatched weights
+        // keeps a zero column (score 0, as before).
+        let mut wmat = Matrix::zeros(set.len(), self.classes);
         for (c, obj) in self.per_class.iter().enumerate() {
             let st = obj.state_for(set);
             let w = st.as_logistic_weights().unwrap_or_default();
             if w.len() == set.len() {
-                crate::linalg::gemv(&xs, &w, &mut scores[c]);
+                wmat.col_mut(c).copy_from_slice(&w);
             }
         }
+        let scores = crate::linalg::gemm(&xs, &wmat);
         let mut correct = 0usize;
         for i in 0..d {
             let mut best = 0usize;
             let mut best_v = f64::NEG_INFINITY;
             for c in 0..self.classes {
-                if scores[c][i] > best_v {
-                    best_v = scores[c][i];
+                let v = scores.get(i, c);
+                if v > best_v {
+                    best_v = v;
                     best = c;
                 }
             }

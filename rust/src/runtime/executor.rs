@@ -84,9 +84,9 @@ impl GainExecutor {
             }
         }
         let mut r_pad = vec![0.0f32; a.d];
-        for (i, &v) in r.iter().enumerate() {
-            r_pad[i] = v as f32;
-        }
+        // contiguous narrowing rides the SIMD pack kernel (bit-identical
+        // to `as f32` at every dispatch level)
+        crate::linalg::pack_f32(r, &mut r_pad[..d]);
 
         let mut out = Vec::with_capacity(cand.len());
         for chunk in cand.chunks(a.nc) {
@@ -170,10 +170,8 @@ impl GainExecutor {
 
         let mut r_pad = vec![0.0f32; a.d];
         let mut w_pad = vec![0.0f32; a.d];
-        for i in 0..d {
-            r_pad[i] = resid[i] as f32;
-            w_pad[i] = w[i] as f32;
-        }
+        crate::linalg::pack_f32(resid, &mut r_pad[..d]);
+        crate::linalg::pack_f32(&w[..d], &mut w_pad[..d]);
 
         let mut out = Vec::with_capacity(cand.len());
         for chunk in cand.chunks(a.nc) {

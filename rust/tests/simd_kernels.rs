@@ -1,0 +1,232 @@
+//! Cross-level SIMD dispatch tests: force each available kernel table via
+//! `simd::set_override` and compare whole-sweep results between levels.
+//!
+//! The override is process-wide, so every test here serializes on one
+//! mutex and restores auto-detection on exit (panic included) through an
+//! RAII guard. This is the only test binary allowed to call
+//! `set_override` — tests/sweep_kernels.rs runs its threads under the
+//! ambient dispatch precisely so it stays race-free.
+
+use dash_select::data::gene_sim::{gene_d4, GeneConfig};
+use dash_select::data::synthetic;
+use dash_select::linalg::{self, simd, Matrix};
+use dash_select::objectives::{
+    AOptimalityObjective, DiverseObjective, GroupSqrtDiversity, LinearRegressionObjective,
+    Objective, OvrSoftmaxObjective,
+};
+use dash_select::oracle::BatchExecutor;
+use dash_select::rng::Pcg64;
+use std::sync::Mutex;
+
+/// Serializes every test in this binary: the dispatch override is global.
+static DISPATCH_LOCK: Mutex<()> = Mutex::new(());
+
+/// Restores auto-detection when dropped, even if the test panics while
+/// a level is forced.
+struct OverrideGuard;
+
+impl Drop for OverrideGuard {
+    fn drop(&mut self) {
+        simd::set_override(None);
+    }
+}
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    // a panicking test poisons the mutex but leaves the () state intact
+    DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+const TOL: f64 = 1e-9;
+
+#[test]
+fn override_semantics() {
+    let _l = locked();
+    let _g = OverrideGuard;
+    for level in [simd::SimdLevel::Scalar, simd::SimdLevel::Sse2, simd::SimdLevel::Avx2] {
+        let ok = simd::set_override(Some(level));
+        assert_eq!(ok, simd::is_available(level), "{level:?} accept/availability mismatch");
+        if ok {
+            assert_eq!(simd::kernels().level, level, "forced level must be active");
+        }
+    }
+    // scalar is always available and always accepted
+    assert!(simd::set_override(Some(simd::SimdLevel::Scalar)));
+    assert_eq!(simd::kernels().level, simd::SimdLevel::Scalar);
+    simd::set_override(None);
+    // back on auto: whatever detection picked must have a live table
+    let auto = simd::kernels().level;
+    assert!(simd::is_available(auto));
+    assert!(simd::table_for(auto).is_some());
+    // the levels list starts at scalar and only names live tables
+    let levels = simd::available_levels();
+    assert_eq!(levels[0], simd::SimdLevel::Scalar);
+    for l in levels {
+        assert!(simd::table_for(l).is_some());
+    }
+}
+
+/// Sweep `obj` over every candidate under the forced `level`, for each
+/// shard count, and return one gains vector per shard count.
+fn forced_sweep(obj: &dyn Objective, set: &[usize], level: simd::SimdLevel) -> Vec<Vec<f64>> {
+    assert!(simd::set_override(Some(level)));
+    let st = obj.state_for(set);
+    let cands: Vec<usize> = (0..obj.n()).collect();
+    SHARD_COUNTS
+        .iter()
+        .map(|&threads| {
+            let ex = if threads == 1 {
+                BatchExecutor::sequential()
+            } else {
+                BatchExecutor::new(threads).with_min_parallel(2)
+            };
+            ex.gains(&*st, &cands)
+        })
+        .collect()
+}
+
+fn check_levels_agree(name: &str, obj: &dyn Objective, sets: &[Vec<usize>]) {
+    let _l = locked();
+    let _g = OverrideGuard;
+    for set in sets {
+        let scalar = forced_sweep(obj, set, simd::SimdLevel::Scalar);
+        for level in simd::available_levels() {
+            if level == simd::SimdLevel::Scalar {
+                continue;
+            }
+            let got = forced_sweep(obj, set, level);
+            for (shard_idx, threads) in SHARD_COUNTS.iter().enumerate() {
+                for (i, (v, s)) in got[shard_idx].iter().zip(&scalar[shard_idx]).enumerate() {
+                    assert!(
+                        (v - s).abs() < TOL,
+                        "{name} level={level:?} shards={threads} set {set:?} cand {i}: \
+                         {v} vs scalar {s}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lreg_sweep_agrees_across_levels() {
+    let mut rng = Pcg64::seed_from(11);
+    let ds = synthetic::regression_d1(&mut rng, 50, 70, 12, 0.3);
+    let obj = LinearRegressionObjective::new(&ds);
+    let sets = [vec![], vec![3], vec![0, 17, 42, 69]];
+    check_levels_agree("lreg", &obj, &sets);
+}
+
+#[test]
+fn aopt_sweep_agrees_across_levels() {
+    let mut rng = Pcg64::seed_from(12);
+    let ds = synthetic::design_d1(&mut rng, 12, 70, 0.5);
+    let obj = AOptimalityObjective::new(&ds, 1.0, 1.0);
+    let sets = [vec![], vec![1, 33, 69]];
+    check_levels_agree("aopt", &obj, &sets);
+}
+
+#[test]
+fn diversity_sweep_agrees_across_levels() {
+    let mut rng = Pcg64::seed_from(13);
+    let ds = synthetic::regression_d1(&mut rng, 40, 48, 8, 0.3);
+    let obj = DiverseObjective::new(
+        LinearRegressionObjective::new(&ds),
+        GroupSqrtDiversity::round_robin(48, 5, 0.1),
+    );
+    let sets = [vec![], vec![2, 9, 31]];
+    check_levels_agree("lreg+div", &obj, &sets);
+}
+
+#[test]
+fn softmax_sweep_agrees_across_levels() {
+    let mut rng = Pcg64::seed_from(14);
+    let ds = gene_d4(
+        &mut rng,
+        &GeneConfig {
+            samples: 120,
+            genes: 10,
+            classes: 3,
+            informative_per_class: 2,
+            ..Default::default()
+        },
+    );
+    let obj = OvrSoftmaxObjective::new(&ds);
+    let sets = [vec![], vec![0, 5]];
+    check_levels_agree("ovr-softmax", &obj, &sets);
+}
+
+#[test]
+fn level1_kernels_bit_identical_across_levels() {
+    let _l = locked();
+    let _g = OverrideGuard;
+    let mut rng = Pcg64::seed_from(15);
+    for n in [0usize, 1, 3, 7, 8, 9, 31, 64, 101, 257] {
+        let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let alpha = rng.next_gaussian();
+        assert!(simd::set_override(Some(simd::SimdLevel::Scalar)));
+        let d0 = linalg::dot(&x, &y);
+        let (p0, q0) = linalg::dot2(&x, &y);
+        let mut a0 = y.clone();
+        linalg::axpy(alpha, &x, &mut a0);
+        let mut f0 = vec![0.0f32; n];
+        linalg::pack_f32(&x, &mut f0);
+        for level in simd::available_levels() {
+            assert!(simd::set_override(Some(level)));
+            assert_eq!(linalg::dot(&x, &y).to_bits(), d0.to_bits(), "dot n={n} {level:?}");
+            let (p, q) = linalg::dot2(&x, &y);
+            assert_eq!(p.to_bits(), p0.to_bits(), "dot2.0 n={n} {level:?}");
+            assert_eq!(q.to_bits(), q0.to_bits(), "dot2.1 n={n} {level:?}");
+            let mut a = y.clone();
+            linalg::axpy(alpha, &x, &mut a);
+            for i in 0..n {
+                assert_eq!(a[i].to_bits(), a0[i].to_bits(), "axpy n={n} i={i} {level:?}");
+            }
+            let mut f = vec![0.0f32; n];
+            linalg::pack_f32(&x, &mut f);
+            for i in 0..n {
+                assert_eq!(f[i].to_bits(), f0[i].to_bits(), "pack n={n} i={i} {level:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_forced_levels_agree_with_scalar() {
+    let _l = locked();
+    let _g = OverrideGuard;
+    let mut rng = Pcg64::seed_from(16);
+    for (m, k, n) in [(1usize, 1usize, 1usize), (5, 9, 4), (17, 70, 6), (64, 33, 13)] {
+        let mut mk = |r: usize, c: usize| {
+            let mut mat = Matrix::zeros(r, c);
+            for j in 0..c {
+                for i in 0..r {
+                    mat.set(i, j, rng.next_gaussian());
+                }
+            }
+            mat
+        };
+        let a = mk(m, k);
+        let b = mk(k, n);
+        let at = mk(k, m);
+        assert!(simd::set_override(Some(simd::SimdLevel::Scalar)));
+        let c0 = linalg::gemm(&a, &b);
+        let t0 = linalg::gemm_tn(&at, &b);
+        for level in simd::available_levels() {
+            assert!(simd::set_override(Some(level)));
+            let c = linalg::gemm(&a, &b);
+            assert!(
+                c.max_abs_diff(&c0) < TOL,
+                "gemm {m}x{k}x{n} {level:?}: {}",
+                c.max_abs_diff(&c0)
+            );
+            let t = linalg::gemm_tn(&at, &b);
+            assert!(
+                t.max_abs_diff(&t0) < TOL,
+                "gemm_tn {k}x{m}x{n} {level:?}: {}",
+                t.max_abs_diff(&t0)
+            );
+        }
+    }
+}
