@@ -15,8 +15,8 @@ use dash_select::bench::Bench;
 use dash_select::coordinator::session::SelectionSession;
 use dash_select::coordinator::{
     AlgorithmChoice, ApiReply, ApiRequest, Backend, Leader, NetConfig, NetServer, ObjectiveChoice,
-    RetryPolicy, SelectionJob, ServeConfig, ServeSpec, SessionStore, StdioServer, WireClient,
-    WirePlan, WireProblem,
+    RetryPolicy, Router, RouterConfig, SelectionJob, ServeConfig, ServeSpec, SessionStore,
+    StdioServer, WireClient, WirePlan, WireProblem,
 };
 use dash_select::data::gene_sim::{gene_d4, GeneConfig};
 use dash_select::data::synthetic;
@@ -489,14 +489,14 @@ fn main() {
     let lc_problem = WireProblem::new("d1", 5, 3);
     let lc_plan = WirePlan::new("greedy");
     let mut churn_server = StdioServer::new(Leader::with_threads(1)).with_max_sessions(8);
-    let warm = churn_server.open_spec(&lc_problem, &lc_plan, false, None).expect("bench open");
+    let warm = churn_server.open_spec(&lc_problem, &lc_plan, false, None, None).expect("bench open");
     churn_server.close_session(warm).expect("bench close");
     let churn_cycles = if fast { 16usize } else { 64 };
     let churn_batch_s = bench
         .run("lifecycle open+close churn (8-slot budget)", || {
             for _ in 0..churn_cycles {
                 let s = churn_server
-                    .open_spec(&lc_problem, &lc_plan, false, None)
+                    .open_spec(&lc_problem, &lc_plan, false, None, None)
                     .expect("bench open");
                 churn_server.close_session(s).expect("bench close");
             }
@@ -514,8 +514,8 @@ fn main() {
     let mut swap_server = StdioServer::new(Leader::with_threads(1))
         .with_max_sessions(1)
         .with_store(SessionStore::open(&lc_dir).expect("bench store"));
-    let swap_a = swap_server.open_spec(&lc_problem, &lc_plan, false, None).expect("bench open");
-    let swap_b = swap_server.open_spec(&lc_problem, &lc_plan, false, None).expect("bench open");
+    let swap_a = swap_server.open_spec(&lc_problem, &lc_plan, false, None, None).expect("bench open");
+    let swap_b = swap_server.open_spec(&lc_problem, &lc_plan, false, None, None).expect("bench open");
     let mut cold = swap_a;
     let evict_restore_s = bench
         .run("lifecycle evict+restore swap (one-slot budget)", || {
@@ -589,6 +589,92 @@ fn main() {
     net_stop2.store(true, std::sync::atomic::Ordering::SeqCst);
     net_handle2.join().expect("bench net drain 2");
     let _ = std::fs::remove_dir_all(&net_dir);
+
+    // ---- cluster front: concurrent clients through the router ----
+    // serve_net above is one sequential client against one worker, so its
+    // req/s is bounded by round-trip latency; here hundreds of concurrent
+    // clients push sweeps through one router over two workers — the number
+    // that must beat net_rps for the router hop to pay for itself
+    let cluster_dir =
+        std::env::temp_dir().join(format!("dash-bench-cluster-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cluster_dir);
+    std::fs::create_dir_all(&cluster_dir).expect("bench cluster dir");
+    let cluster_store = cluster_dir.join("store");
+    let cluster_workers = 2usize;
+    let worker_socks: Vec<String> = (0..cluster_workers)
+        .map(|w| format!("unix:{}", cluster_dir.join(format!("w{w}.sock")).display()))
+        .collect();
+    let mut worker_stops = Vec::new();
+    let mut worker_handles = Vec::new();
+    for sock in &worker_socks {
+        let stop: &'static std::sync::atomic::AtomicBool =
+            Box::leak(Box::new(std::sync::atomic::AtomicBool::new(false)));
+        let server = NetServer::bind(sock)
+            .expect("bench worker bind")
+            .with_config(net_config)
+            .with_stop_flag(stop);
+        let store = cluster_store.clone();
+        worker_stops.push(stop);
+        worker_handles.push(std::thread::spawn(move || {
+            server
+                .serve(
+                    StdioServer::new(Leader::with_threads(1))
+                        // budget above clients/worker: measure the request
+                        // stack, not evict/restore churn
+                        .with_max_sessions(256)
+                        .with_store(SessionStore::open(&store).expect("bench worker store"))
+                        .into_core(),
+                )
+                .expect("bench worker serve")
+        }));
+    }
+    let router_sock = format!("unix:{}", cluster_dir.join("router.sock").display());
+    let router_stop: &'static std::sync::atomic::AtomicBool =
+        Box::leak(Box::new(std::sync::atomic::AtomicBool::new(false)));
+    let worker_refs: Vec<&str> = worker_socks.iter().map(|s| s.as_str()).collect();
+    let router = Router::bind(&router_sock, &worker_refs)
+        .expect("bench router bind")
+        .with_config(RouterConfig { net: net_config, ..RouterConfig::default() })
+        .with_stop_flag(router_stop);
+    let router_handle = std::thread::spawn(move || router.serve().expect("bench router serve"));
+    let cluster_clients = if fast { 16usize } else { 200 };
+    let cluster_sweeps = if fast { 4usize } else { 8 };
+    let cluster_t0 = std::time::Instant::now();
+    let client_threads: Vec<_> = (0..cluster_clients)
+        .map(|c| {
+            let addr = router_sock.clone();
+            std::thread::spawn(move || {
+                let mut client =
+                    WireClient::connect(&addr, 900 + c as u64).with_policy(RetryPolicy {
+                        max_attempts: 200,
+                        base_backoff: std::time::Duration::from_millis(1),
+                        max_backoff: std::time::Duration::from_millis(20),
+                    });
+                let session = client
+                    .open(WireProblem::new("d1", 5, 3), WirePlan::new("greedy"), false, None)
+                    .expect("bench cluster open");
+                let cand: Vec<usize> = (0..64).collect();
+                for _ in 0..cluster_sweeps {
+                    client.sweep(session, cand.clone()).expect("bench cluster sweep");
+                }
+                1 + cluster_sweeps // requests this client pushed through
+            })
+        })
+        .collect();
+    let cluster_requests: usize =
+        client_threads.into_iter().map(|h| h.join().expect("bench cluster client")).sum();
+    let cluster_elapsed = cluster_t0.elapsed().as_secs_f64().max(1e-12);
+    let cluster_rps = cluster_requests as f64 / cluster_elapsed;
+    router_stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let router_summary = router_handle.join().expect("bench router drain");
+    assert_eq!(router_summary.worker_deaths, 0, "bench fleet must stay healthy");
+    for stop in &worker_stops {
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    for h in worker_handles {
+        h.join().expect("bench worker drain");
+    }
+    let _ = std::fs::remove_dir_all(&cluster_dir);
 
     // ---- report ----
     println!();
@@ -721,6 +807,12 @@ fn main() {
         "serve_net: {net_requests} socket sweeps in {net_elapsed:.3}s ({net_rps:.0} req/s); \
          reconnect+restore after restart {reconnect_restore_s:.6}s"
     );
+    println!(
+        "serve_cluster: {cluster_requests} requests from {cluster_clients} clients through \
+         the router over {cluster_workers} workers in {cluster_elapsed:.3}s \
+         ({cluster_rps:.0} req/s, {:.2}x serve_net)",
+        if net_rps > 0.0 { cluster_rps / net_rps } else { 0.0 }
+    );
     let doc = Json::obj(vec![
         ("suite", "executor".into()),
         ("threads", threads.into()),
@@ -793,6 +885,16 @@ fn main() {
                 ("elapsed_s", net_elapsed.into()),
                 ("requests_per_s", net_rps.into()),
                 ("reconnect_restore_s", reconnect_restore_s.into()),
+            ]),
+        ),
+        (
+            "serve_cluster",
+            Json::obj(vec![
+                ("workers", cluster_workers.into()),
+                ("clients", cluster_clients.into()),
+                ("requests", cluster_requests.into()),
+                ("elapsed_s", cluster_elapsed.into()),
+                ("requests_per_s", cluster_rps.into()),
             ]),
         ),
         ("reports", Json::Arr(reports)),

@@ -12,8 +12,10 @@ use std::collections::BTreeMap;
 pub struct Args {
     /// positional arguments in order (subcommand first)
     pub positional: Vec<String>,
-    /// `--key value` options; bare `--flag`s map to "true"
-    pub options: BTreeMap<String, String>,
+    /// `--key value` options in occurrence order; bare `--flag`s map to
+    /// "true". A repeated key keeps every value ([`Args::get_all`]); the
+    /// scalar accessors read the last occurrence, shell-style.
+    pub options: BTreeMap<String, Vec<String>>,
 }
 
 impl Args {
@@ -26,13 +28,14 @@ impl Args {
                 if key.is_empty() {
                     return Err(SelectError::InvalidSpec("empty option name".into()));
                 }
-                if let Some((k, v)) = key.split_once('=') {
-                    out.options.insert(k.to_string(), v.to_string());
+                let (k, v) = if let Some((k, v)) = key.split_once('=') {
+                    (k.to_string(), v.to_string())
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    out.options.insert(key.to_string(), it.next().unwrap());
+                    (key.to_string(), it.next().unwrap_or_default())
                 } else {
-                    out.options.insert(key.to_string(), "true".to_string());
-                }
+                    (key.to_string(), "true".to_string())
+                };
+                out.options.entry(k).or_default().push(v);
             } else {
                 out.positional.push(a);
             }
@@ -49,7 +52,23 @@ impl Args {
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.options.get(key).map(|s| s.as_str())
+        self.options.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Every value a repeated option was given, in occurrence order, with
+    /// comma-separated values within one occurrence split out —
+    /// `--worker a --worker b` and `--worker a,b` both yield `[a, b]`.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.options
+            .get(key)
+            .map(|vals| {
+                vals.iter()
+                    .flat_map(|v| v.split(','))
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
     }
 
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -132,5 +151,13 @@ mod tests {
     #[test]
     fn empty_option_rejected() {
         assert!(Args::parse(vec!["--".to_string()]).is_err());
+    }
+
+    #[test]
+    fn repeated_options_collect_and_scalar_reads_take_the_last() {
+        let a = parse(&["route", "--worker", "a:1", "--worker", "b:2,c:3", "--k", "1", "--k", "9"]);
+        assert_eq!(a.get_all("worker"), vec!["a:1", "b:2", "c:3"]);
+        assert_eq!(a.get_usize("k", 0).unwrap(), 9, "scalar reads take the last occurrence");
+        assert!(a.get_all("missing").is_empty());
     }
 }

@@ -153,16 +153,24 @@ impl BatchQueue {
     /// which generation answered must use the generation-stamped serving
     /// front ([`coordinator::serve`](crate::coordinator::serve)) instead.
     ///
-    /// Panics on queues not built with [`BatchQueue::for_state`].
-    pub fn insert(&self, a: usize) -> u64 {
-        let served = self.served.as_ref().expect("insert requires a for_state queue");
+    /// Queues not built with [`BatchQueue::for_state`] have no state to
+    /// grow; inserting into one is a typed [`SelectError::Rejected`], never
+    /// a panic — the serving stack routes arbitrary client traffic here.
+    pub fn insert(&self, a: usize) -> Result<u64, SelectError> {
+        let served = self.served.as_ref().ok_or_else(|| {
+            SelectError::Rejected(
+                "insert requires a for_state queue (this queue serves a bare flush function, \
+                 not a solution state)"
+                    .into(),
+            )
+        })?;
         // answer the backlog against the state it was submitted under
         self.flush();
         // lock order: state → cache (matches the flush closure)
         let mut st = recover(&served.state);
         st.insert(a);
         recover(&served.cache).invalidate();
-        served.generation.fetch_add(1, Ordering::Relaxed) + 1
+        Ok(served.generation.fetch_add(1, Ordering::Relaxed) + 1)
     }
 
     /// Current state generation (0 for plain queues or before any insert).
@@ -403,7 +411,7 @@ mod tests {
         let before = q.submit_many(&all).unwrap();
         assert_eq!(before, obj.empty_state().gains(&all));
         // grow the served state: the SAME queue must answer for S = {4}
-        assert_eq!(q.insert(4), 1);
+        assert_eq!(q.insert(4).unwrap(), 1);
         let after = q.submit_many(&all).unwrap();
         let expected = obj.state_for(&[4]).gains(&all);
         for (a, e) in after.iter().zip(&expected) {
@@ -415,12 +423,70 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "for_state")]
-    fn insert_on_plain_queue_panics() {
+    fn insert_on_plain_queue_is_a_typed_rejection() {
         let q = BatchQueue::new(BatchQueueConfig::default(), |items| {
             items.iter().map(|_| 0.0).collect()
         });
-        q.insert(3);
+        // no panic: the serving stack routes arbitrary traffic here, so a
+        // plain queue answers insert with a typed error and keeps serving
+        match q.insert(3) {
+            Err(SelectError::Rejected(msg)) => assert!(msg.contains("for_state"), "{msg}"),
+            other => panic!("expected typed rejection, got {other:?}"),
+        }
+        assert_eq!(q.generation(), 0, "a rejected insert must not bump the generation");
+        assert_eq!(q.submit(5).unwrap(), 0.0, "queue must keep serving after the rejection");
+    }
+
+    /// Pin the documented post-insert-answer race note on `insert`: a
+    /// submitter racing an insert — its own flush may drain the queue yet
+    /// reach the state lock only after the insert — is answered against
+    /// *either* the pre- or post-insert state. Always exactly one
+    /// generation's value: never a hang, never a panic, never a torn mix,
+    /// and once the insert has returned every later answer is post-insert.
+    #[test]
+    fn racing_inserts_answer_exactly_one_generation() {
+        let mut rng = crate::rng::Pcg64::seed_from(11);
+        let ds = crate::data::synthetic::regression_d1(&mut rng, 60, 20, 6, 0.2);
+        let obj = crate::objectives::LinearRegressionObjective::new(&ds);
+        use crate::objectives::Objective;
+        let all: Vec<usize> = (0..obj.n()).collect();
+        let pre = obj.empty_state().gains(&all);
+        let post = obj.state_for(&[4]).gains(&all);
+
+        let q = std::sync::Arc::new(BatchQueue::for_state(
+            BatchQueueConfig { max_batch: 2, max_wait: Duration::from_millis(0) },
+            crate::oracle::BatchExecutor::sequential(),
+            obj.empty_state(),
+            obj.n(),
+        ));
+        let racers: Vec<_> = (0..3)
+            .map(|t: usize| {
+                let q = std::sync::Arc::clone(&q);
+                std::thread::spawn(move || {
+                    (0..20)
+                        .map(|i| ((t + i) % 20, q.submit((t + i) % 20).unwrap()))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        assert_eq!(q.insert(4).unwrap(), 1);
+        for r in racers {
+            for (i, got) in r.join().unwrap() {
+                let ok = (got - pre[i]).abs() < 1e-14 || (got - post[i]).abs() < 1e-14;
+                assert!(
+                    ok,
+                    "candidate {i}: answer {got} matches neither the pre-insert ({}) nor \
+                     the post-insert ({}) generation",
+                    pre[i], post[i]
+                );
+            }
+        }
+        // the race window is closed once insert has returned: subsequent
+        // answers are all post-insert
+        let settled = q.submit_many(&all).unwrap();
+        for (i, got) in settled.iter().enumerate() {
+            assert!((got - post[i]).abs() < 1e-14, "candidate {i} answered stale after insert");
+        }
     }
 
     #[test]

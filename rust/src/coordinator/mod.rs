@@ -33,6 +33,7 @@ mod batcher;
 mod leader;
 mod metrics;
 pub mod net;
+pub mod router;
 pub mod serve;
 pub mod session;
 pub mod store;
@@ -59,6 +60,7 @@ pub use net::{
     drain_flag, install_drain_signals, ChaosConfig, ChaosProxy, NetConfig, NetServer, NetSummary,
     RetryPolicy, WireClient,
 };
+pub use router::{place, Router, RouterConfig, RouterSummary};
 pub use store::{SessionRecord, SessionStore};
 pub use wire::{
     ApiReply, ApiRequest, DatasetCache, SessionInfo, StdioServer, WireCore, WirePlan, WireProblem,

@@ -71,40 +71,97 @@ use std::time::{Duration, Instant};
 // ---------------------------------------------------------------------------
 
 /// A bound listening socket: TCP (`host:port`) or Unix (`unix:/path`).
-enum Listener {
+/// Shared by [`NetServer`] and the router front
+/// ([`crate::coordinator::router::Router`]) so both fronts bind, accept,
+/// and clean up identically.
+pub(crate) enum Listener {
     Tcp(TcpListener),
     Unix(UnixListener, PathBuf),
 }
 
+impl Listener {
+    /// Bind a listener. `unix:/path` binds a Unix socket (an existing
+    /// socket file is replaced — stale files from a killed process must
+    /// not block restart); anything else is a TCP `host:port` (port `0`
+    /// picks a free port).
+    pub(crate) fn bind(addr: &str) -> std::io::Result<Listener> {
+        match addr.strip_prefix("unix:") {
+            Some(path) => {
+                let path = PathBuf::from(path);
+                if path.exists() {
+                    let _ = std::fs::remove_file(&path);
+                }
+                Ok(Listener::Unix(UnixListener::bind(&path)?, path))
+            }
+            None => Ok(Listener::Tcp(TcpListener::bind(addr)?)),
+        }
+    }
+
+    /// The bound address in dialable form: `127.0.0.1:PORT` for TCP
+    /// (resolving a port-0 bind), `unix:/path` for Unix sockets.
+    pub(crate) fn local_addr(&self) -> String {
+        match self {
+            Listener::Tcp(l) => match l.local_addr() {
+                Ok(a) => a.to_string(),
+                Err(_) => "<unbound>".to_string(),
+            },
+            Listener::Unix(_, path) => format!("unix:{}", path.display()),
+        }
+    }
+
+    pub(crate) fn set_nonblocking(&self) {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(true).ok(),
+            Listener::Unix(l, _) => l.set_nonblocking(true).ok(),
+        };
+    }
+
+    pub(crate) fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            Listener::Unix(l, _) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        }
+    }
+
+    /// Remove the socket file of a Unix listener (no-op for TCP) — called
+    /// once the accept loop exits so a drained server leaves no stale
+    /// socket behind.
+    pub(crate) fn cleanup(&self) {
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
 /// One accepted (or dialed) connection over either transport.
-enum Stream {
+pub(crate) enum Stream {
     Tcp(TcpStream),
     Unix(UnixStream),
 }
 
 impl Stream {
-    fn try_clone(&self) -> std::io::Result<Stream> {
+    pub(crate) fn try_clone(&self) -> std::io::Result<Stream> {
         match self {
             Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
             Stream::Unix(s) => s.try_clone().map(Stream::Unix),
         }
     }
 
-    fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+    pub(crate) fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
         match self {
             Stream::Tcp(s) => s.set_read_timeout(t),
             Stream::Unix(s) => s.set_read_timeout(t),
         }
     }
 
-    fn set_write_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+    pub(crate) fn set_write_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
         match self {
             Stream::Tcp(s) => s.set_write_timeout(t),
             Stream::Unix(s) => s.set_write_timeout(t),
         }
     }
 
-    fn shutdown(&self) {
+    pub(crate) fn shutdown(&self) {
         let _ = match self {
             Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
             Stream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
@@ -137,7 +194,7 @@ impl Write for Stream {
 }
 
 /// Dial one connection to `addr` (`host:port` or `unix:/path`).
-fn dial(addr: &str) -> std::io::Result<Stream> {
+pub(crate) fn dial(addr: &str) -> std::io::Result<Stream> {
     match addr.strip_prefix("unix:") {
         Some(path) => UnixStream::connect(path).map(Stream::Unix),
         None => TcpStream::connect(addr).map(Stream::Tcp),
@@ -269,16 +326,7 @@ impl NetServer {
     /// not block restart); anything else is a TCP `host:port` (port `0`
     /// picks a free port; see [`NetServer::local_addr`]).
     pub fn bind(addr: &str) -> std::io::Result<NetServer> {
-        let listener = match addr.strip_prefix("unix:") {
-            Some(path) => {
-                let path = PathBuf::from(path);
-                if path.exists() {
-                    let _ = std::fs::remove_file(&path);
-                }
-                Listener::Unix(UnixListener::bind(&path)?, path)
-            }
-            None => Listener::Tcp(TcpListener::bind(addr)?),
-        };
+        let listener = Listener::bind(addr)?;
         Ok(NetServer { listener, config: NetConfig::default(), stop: drain_flag() })
     }
 
@@ -299,13 +347,7 @@ impl NetServer {
     /// The bound address in dialable form: `127.0.0.1:PORT` for TCP
     /// (resolving a port-0 bind), `unix:/path` for Unix sockets.
     pub fn local_addr(&self) -> String {
-        match &self.listener {
-            Listener::Tcp(l) => match l.local_addr() {
-                Ok(a) => a.to_string(),
-                Err(_) => "<unbound>".to_string(),
-            },
-            Listener::Unix(_, path) => format!("unix:{}", path.display()),
-        }
+        self.listener.local_addr()
     }
 
     /// Serve until drained: accept connections, pump every frame through
@@ -374,17 +416,10 @@ fn accept_loop(
     stopping: Arc<AtomicBool>,
     counters: Arc<NetCounters>,
 ) {
-    match &listener {
-        Listener::Tcp(l) => l.set_nonblocking(true).ok(),
-        Listener::Unix(l, _) => l.set_nonblocking(true).ok(),
-    };
+    listener.set_nonblocking();
     let mut handlers = Vec::new();
     while !stopping.load(Ordering::SeqCst) {
-        let accepted = match &listener {
-            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
-            Listener::Unix(l, _) => l.accept().map(|(s, _)| Stream::Unix(s)),
-        };
-        match accepted {
+        match listener.accept() {
             Ok(stream) => {
                 counters.connections.fetch_add(1, Ordering::Relaxed);
                 let tx = jobs_tx.clone();
@@ -419,9 +454,7 @@ fn accept_loop(
     for h in handlers {
         let _ = h.join();
     }
-    if let Listener::Unix(_, path) = &listener {
-        let _ = std::fs::remove_file(path);
-    }
+    listener.cleanup();
 }
 
 /// One connection: read newline-delimited frames under the idle/deadline
@@ -639,22 +672,19 @@ impl WireClient {
         std::thread::sleep(Duration::from_secs_f64(jittered));
     }
 
-    fn ensure_conn(&mut self) -> std::io::Result<&mut BufReader<Stream>> {
-        if self.conn.is_none() {
-            let stream = dial(&self.addr)?;
-            self.conn = Some(BufReader::new(stream));
-        }
-        Ok(self.conn.as_mut().expect("just connected"))
-    }
-
-    /// One send/receive attempt over the current connection.
-    fn attempt(&mut self, line: &str, id: u64) -> Result<ApiReply, std::io::Error> {
-        let conn = self.ensure_conn()?;
+    /// One full send/receive exchange over an established connection.
+    /// Takes the connection as one borrow for both the write and the read
+    /// halves, so there is no re-borrow (and no `expect`) between them.
+    fn exchange(
+        conn: &mut BufReader<Stream>,
+        line: &str,
+        id: u64,
+    ) -> Result<ApiReply, std::io::Error> {
         let stream = conn.get_mut();
         writeln!(stream, "{line}")?;
         stream.flush()?;
         let mut reply = String::new();
-        let n = self.conn.as_mut().expect("connected").read_line(&mut reply)?;
+        let n = conn.read_line(&mut reply)?;
         if n == 0 {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::UnexpectedEof,
@@ -672,6 +702,30 @@ impl WireClient {
         Ok(reply)
     }
 
+    /// One send/receive attempt: dial if disconnected, exchange, and on
+    /// **any** I/O or framing error — dial-side, write-side, or read-side
+    /// — tear the connection down before returning, so the next attempt
+    /// always redials instead of reusing a stream with a half-written
+    /// frame on it.
+    fn attempt(&mut self, line: &str, id: u64) -> Result<ApiReply, std::io::Error> {
+        let result = match self.conn.as_mut() {
+            Some(conn) => Self::exchange(conn, line, id),
+            None => match dial(&self.addr) {
+                Ok(stream) => {
+                    let conn = self.conn.insert(BufReader::new(stream));
+                    Self::exchange(conn, line, id)
+                }
+                Err(e) => Err(e),
+            },
+        };
+        if result.is_err() {
+            if let Some(conn) = self.conn.take() {
+                conn.into_inner().shutdown();
+            }
+        }
+        result
+    }
+
     /// Send one request, reconnect-and-replay on transport faults, and
     /// return the server's typed reply (or the error the server answered
     /// with). Exhausted retries are [`SelectError::Disconnected`].
@@ -687,16 +741,19 @@ impl WireClient {
                 Ok(ApiReply::Error { error }) => return Err(error),
                 Ok(reply) => return Ok(reply),
                 Err(_) => {
-                    // transport fault: the connection is suspect; drop it
-                    // so the next attempt redials
-                    if let Some(conn) = self.conn.take() {
-                        conn.into_inner().shutdown();
-                    }
+                    // transport fault: `attempt` already tore the
+                    // connection down, so the next loop iteration redials
                     self.reconnects += 1;
                 }
             }
         }
         Err(SelectError::Disconnected)
+    }
+
+    /// Whether the client currently holds an established connection
+    /// (observability for tests and the router's worker pool).
+    pub fn is_connected(&self) -> bool {
+        self.conn.is_some()
     }
 
     /// `ping` → liveness.
@@ -715,7 +772,25 @@ impl WireClient {
         driven: bool,
         tenant: Option<String>,
     ) -> Result<usize, SelectError> {
-        match self.request(&ApiRequest::Open { problem, plan, driven, tenant })? {
+        match self.request(&ApiRequest::Open { problem, plan, driven, tenant, session: None })? {
+            ApiReply::Opened { session } => Ok(session),
+            other => Err(unexpected("opened", &other)),
+        }
+    }
+
+    /// `open` pinned to an exact session id — the router's allocation
+    /// token: the server installs the session at `session` or rejects if
+    /// the id is already in use (see `ApiRequest::Open`).
+    pub fn open_pinned(
+        &mut self,
+        problem: WireProblem,
+        plan: WirePlan,
+        driven: bool,
+        tenant: Option<String>,
+        session: usize,
+    ) -> Result<usize, SelectError> {
+        let req = ApiRequest::Open { problem, plan, driven, tenant, session: Some(session) };
+        match self.request(&req)? {
             ApiReply::Opened { session } => Ok(session),
             other => Err(unexpected("opened", &other)),
         }

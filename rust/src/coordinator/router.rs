@@ -1,0 +1,796 @@
+//! Multi-worker session router: one process speaking plain v1 frames on
+//! both sides, placing sessions across N worker processes that each run
+//! the unchanged [`NetServer`](crate::coordinator::net::NetServer) front.
+//!
+//! # Placement
+//!
+//! A session's home worker is a pure function of `(session id, worker
+//! address)`: rendezvous (highest-random-weight) hashing over the
+//! currently-live workers — [`place`]. Because the hash is keyed by the
+//! worker's *address*, not its position on the command line, the mapping
+//! is stable across router restarts and across `--worker` reorderings,
+//! and removing one worker re-places only that worker's sessions (the
+//! classic rendezvous property). The router itself keeps **no session
+//! table**: every request re-derives the placement, so a freshly
+//! restarted router routes exactly like its predecessor.
+//!
+//! # Id allocation and translation
+//!
+//! The router allocates globally-unique session ids from a monotonic
+//! counter (seeded above every id the workers already hold) and forwards
+//! each `open` **pinned** to that exact id (the `session` field of the
+//! wire `open`); a worker installs the lane at the pinned index or
+//! rejects with an `already in use` marker, which makes the pin the
+//! allocation token — two racing opens can never share an id. Because
+//! the pinned id *is* the worker-local id, id translation between the
+//! client-facing and worker-facing frames is the identity by
+//! construction: session-addressed frames are forwarded verbatim.
+//!
+//! # Failover
+//!
+//! All workers share one session store directory, and every mutating
+//! request is written through to it by the owning worker. When a worker
+//! dies (a request exhausts its per-worker retries), the router marks it
+//! dead and re-derives the placement over the survivors; the next
+//! request for each of the dead worker's sessions lands on its new home,
+//! which **adopts** the session from the shared store at that moment —
+//! restoring the dead worker's last persisted write byte-identically
+//! (set, generation, value bits), the same evict→restore contract the
+//! single-server restart tests pin. A background probe re-pings dead
+//! workers and folds them back into the placement when they return.
+//!
+//! # What is *not* replicated
+//!
+//! The store holds one durable record per session; there is no log
+//! shipping and no consensus. Consequences worth knowing:
+//!
+//! - **In-flight state**: a request the dying worker had applied but not
+//!   yet written through is lost — at-least-once replay semantics, as on
+//!   single-server restart.
+//! - **Split brain on false death**: a worker the router *believed* dead
+//!   (e.g. a network partition) still holds its live lanes; if it
+//!   returns, two workers can briefly hold the same session. Unpinned
+//!   inserts through both could fork the selection. Generation-pinned
+//!   inserts (`if_generation`) are the cross-process concurrency token:
+//!   a write against a forked copy answers `stale_generation` instead of
+//!   applying, so pinned clients cannot diverge silently. For the same
+//!   reason, do not mix direct unpinned opens against a worker with
+//!   routed traffic — the router's id counter cannot see ids it did not
+//!   allocate until a collision heals it.
+//! - **Driver state**: driven sessions mid-run are not snapshottable
+//!   (same as single-server); their failover resumes from the last
+//!   persisted round.
+
+use super::api::SelectError;
+use super::net::{Listener, NetConfig, RetryPolicy, Stream, WireClient};
+use super::wire::{readable_frame_id, ApiReply, ApiRequest, SessionInfo, WirePlan, WireProblem};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Placement
+// ---------------------------------------------------------------------------
+
+/// Rendezvous weight of `(addr, session)`: FNV-1a over the address bytes,
+/// mixed with the session id through a splitmix64 finalizer. Pure and
+/// stable — the placement tests pin it across router restarts.
+fn rendezvous_weight(addr: &str, session: usize) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in addr.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut z = h ^ (session as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Place `session` among `addrs` by rendezvous hashing: the index of the
+/// address with the highest [`rendezvous_weight`] (ties broken by the
+/// lexicographically smaller address, so the choice is total). `None`
+/// only for an empty slice.
+pub fn place(session: usize, addrs: &[&str]) -> Option<usize> {
+    let mut best: Option<(u64, usize)> = None;
+    for (i, addr) in addrs.iter().enumerate() {
+        let w = rendezvous_weight(addr, session);
+        let wins = match best {
+            None => true,
+            Some((bw, bi)) => w > bw || (w == bw && *addr < addrs[bi]),
+        };
+        if wins {
+            best = Some((w, i));
+        }
+    }
+    best.map(|(_, i)| i)
+}
+
+// ---------------------------------------------------------------------------
+// Configuration, counters, summary
+// ---------------------------------------------------------------------------
+
+/// Robustness knobs of the router front.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Client-facing framing hygiene (frame cap, idle timeout, slow-loris
+    /// deadline, poll tick). The per-request *reply* deadline is enforced
+    /// by the workers, not re-imposed here.
+    pub net: NetConfig,
+    /// Per-request retry policy against one worker. Deliberately snappier
+    /// than [`RetryPolicy::default`]: exhausting it is the death signal
+    /// that triggers re-placement, so a long ladder here would stall
+    /// failover.
+    pub worker_retry: RetryPolicy,
+    /// Cadence of the dead-worker resurrection probe.
+    pub probe_interval: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            net: NetConfig::default(),
+            worker_retry: RetryPolicy {
+                max_attempts: 4,
+                base_backoff: Duration::from_millis(5),
+                max_backoff: Duration::from_millis(50),
+            },
+            probe_interval: Duration::from_millis(250),
+        }
+    }
+}
+
+/// What a [`Router::serve`] loop did before it drained.
+#[derive(Debug)]
+pub struct RouterSummary {
+    /// client connections accepted over the router's lifetime
+    pub connections: u64,
+    /// request frames decoded and dispatched
+    pub requests: u64,
+    /// sessions opened (ids allocated and pinned)
+    pub opens: u64,
+    /// requests re-placed after their worker was marked dead
+    pub failovers: u64,
+    /// live→dead worker transitions observed
+    pub worker_deaths: u64,
+    /// dead→live transitions (probe or in-line revival)
+    pub worker_revivals: u64,
+    /// handler threads reaped by the supervisor after a panic
+    pub handler_panics: u64,
+}
+
+#[derive(Default)]
+struct RouterCounters {
+    connections: AtomicU64,
+    requests: AtomicU64,
+    opens: AtomicU64,
+    failovers: AtomicU64,
+    worker_deaths: AtomicU64,
+    worker_revivals: AtomicU64,
+    handler_panics: AtomicU64,
+}
+
+struct WorkerState {
+    addr: String,
+    dead: AtomicBool,
+}
+
+/// State shared by every connection handler and the probe thread.
+struct RouterShared {
+    workers: Vec<WorkerState>,
+    /// next global session id; opens take `fetch_add` tickets
+    next_id: AtomicUsize,
+    /// router-initiated drain (a `shutdown` frame)
+    stopping: AtomicBool,
+    retry: RetryPolicy,
+    counters: RouterCounters,
+}
+
+impl RouterShared {
+    fn live_addrs(&self) -> Vec<(usize, &str)> {
+        self.workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| !w.dead.load(Ordering::SeqCst))
+            .map(|(i, w)| (i, w.addr.as_str()))
+            .collect()
+    }
+
+    /// Placement of `session` among the currently-live workers, as an
+    /// index into `self.workers`.
+    fn place_live(&self, session: usize) -> Option<usize> {
+        let live = self.live_addrs();
+        let addrs: Vec<&str> = live.iter().map(|(_, a)| *a).collect();
+        place(session, &addrs).map(|i| live[i].0)
+    }
+
+    fn mark_dead(&self, worker: usize) {
+        if !self.workers[worker].dead.swap(true, Ordering::SeqCst) {
+            self.counters.worker_deaths.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn mark_live(&self, worker: usize) {
+        if self.workers[worker].dead.swap(false, Ordering::SeqCst) {
+            self.counters.worker_revivals.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Ping every dead worker once; revive the ones that answer. Returns
+    /// how many came back.
+    fn probe_dead(&self, seed: u64) -> usize {
+        let once = RetryPolicy {
+            max_attempts: 1,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(1),
+        };
+        let mut revived = 0;
+        for (i, w) in self.workers.iter().enumerate() {
+            if !w.dead.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut probe = WireClient::connect(&w.addr, seed ^ i as u64).with_policy(once);
+            if probe.ping().is_ok() {
+                self.mark_live(i);
+                revived += 1;
+            }
+        }
+        revived
+    }
+
+    /// Advance the id counter past every session id `sessions` reports —
+    /// both the startup seeding pass and the collision-healing path on a
+    /// pinned-open rejection.
+    fn absorb_ids(&self, sessions: &[SessionInfo]) {
+        if let Some(max) = sessions.iter().map(|s| s.session).max() {
+            self.next_id.fetch_max(max + 1, Ordering::SeqCst);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
+/// The router front: binds a client-facing listener and forwards v1
+/// frames to the worker fleet per the module-level placement/failover
+/// contract. Construction mirrors [`NetServer`]: `bind` → builder knobs
+/// → [`Router::serve`].
+///
+/// [`NetServer`]: crate::coordinator::net::NetServer
+pub struct Router {
+    listener: Listener,
+    config: RouterConfig,
+    workers: Vec<String>,
+    stop: &'static AtomicBool,
+}
+
+impl Router {
+    /// Bind the client-facing listener (`host:port` or `unix:/path`) over
+    /// a non-empty worker address list.
+    pub fn bind(addr: &str, workers: &[&str]) -> std::io::Result<Router> {
+        if workers.is_empty() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "a router needs at least one --worker address",
+            ));
+        }
+        Ok(Router {
+            listener: Listener::bind(addr)?,
+            config: RouterConfig::default(),
+            workers: workers.iter().map(|w| w.to_string()).collect(),
+            stop: super::net::drain_flag(),
+        })
+    }
+
+    /// Replace the robustness knobs.
+    pub fn with_config(mut self, config: RouterConfig) -> Router {
+        self.config = config;
+        self
+    }
+
+    /// Use a caller-owned drain flag instead of the process-wide one —
+    /// tests leak one `AtomicBool` per router so concurrent routers drain
+    /// independently.
+    pub fn with_stop_flag(mut self, stop: &'static AtomicBool) -> Router {
+        self.stop = stop;
+        self
+    }
+
+    /// The bound address in dialable form: `127.0.0.1:PORT` for TCP
+    /// (resolving a port-0 bind), `unix:/path` for Unix sockets.
+    pub fn local_addr(&self) -> String {
+        self.listener.local_addr()
+    }
+
+    /// Serve until drained: accept client connections, forward frames per
+    /// placement, and stop on a `shutdown` frame or the drain flag.
+    /// Returns once every handler has finished its in-flight request.
+    pub fn serve(self) -> std::io::Result<RouterSummary> {
+        let Router { listener, config, workers, stop } = self;
+        let shared = Arc::new(RouterShared {
+            workers: workers
+                .into_iter()
+                .map(|addr| WorkerState { addr, dead: AtomicBool::new(false) })
+                .collect(),
+            next_id: AtomicUsize::new(0),
+            stopping: AtomicBool::new(false),
+            retry: config.worker_retry,
+            counters: RouterCounters::default(),
+        });
+
+        // Seed the id counter above everything the fleet already holds,
+        // so a restarted router never re-allocates a live id. Best-effort:
+        // a worker that is down now is healed later by the `already in
+        // use` rejection path.
+        for (i, w) in shared.workers.iter().enumerate() {
+            let mut c =
+                WireClient::connect(&w.addr, 0x5eed ^ i as u64).with_policy(shared.retry);
+            if let Ok(sessions) = c.list() {
+                shared.absorb_ids(&sessions);
+            }
+        }
+
+        // resurrection probe: fold dead workers back in as they return
+        let probe_shared = Arc::clone(&shared);
+        let probe_interval = config.probe_interval;
+        let probe = std::thread::spawn(move || {
+            let mut tick = 0u64;
+            while !stop.load(Ordering::SeqCst)
+                && !probe_shared.stopping.load(Ordering::SeqCst)
+            {
+                std::thread::sleep(probe_interval);
+                tick += 1;
+                probe_shared.probe_dead(0x5eed_0000 ^ tick);
+            }
+        });
+
+        listener.set_nonblocking();
+        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut conn_seq = 0u64;
+        while !stop.load(Ordering::SeqCst) && !shared.stopping.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok(stream) => {
+                    conn_seq += 1;
+                    shared.counters.connections.fetch_add(1, Ordering::Relaxed);
+                    let shared = Arc::clone(&shared);
+                    let net = config.net;
+                    let seq = conn_seq;
+                    handlers.push(std::thread::spawn(move || {
+                        // supervision: a panic in forwarding code reaps
+                        // this connection only — the listener and every
+                        // other connection keep serving
+                        let supervised = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                handle_client(stream, net, &shared, seq);
+                            }),
+                        );
+                        if supervised.is_err() {
+                            shared.counters.handler_panics.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }));
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    std::thread::sleep(config.net.poll_tick);
+                }
+                // a failed accept must not kill the router; back off one
+                // tick and keep accepting
+                Err(_) => std::thread::sleep(config.net.poll_tick),
+            }
+            handlers.retain(|h| !h.is_finished());
+        }
+        // stop observed: tell the handlers (they break between frames),
+        // then wait for each to finish its in-flight request
+        shared.stopping.store(true, Ordering::SeqCst);
+        for h in handlers {
+            let _ = h.join();
+        }
+        let _ = probe.join();
+        listener.cleanup();
+
+        let c = &shared.counters;
+        Ok(RouterSummary {
+            connections: c.connections.load(Ordering::Relaxed),
+            requests: c.requests.load(Ordering::Relaxed),
+            opens: c.opens.load(Ordering::Relaxed),
+            failovers: c.failovers.load(Ordering::Relaxed),
+            worker_deaths: c.worker_deaths.load(Ordering::Relaxed),
+            worker_revivals: c.worker_revivals.load(Ordering::Relaxed),
+            handler_panics: c.handler_panics.load(Ordering::Relaxed),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection forwarding
+// ---------------------------------------------------------------------------
+
+/// One client connection's forwarding state: lazily-dialed worker clients
+/// (each with the full reconnect/backoff machinery of `WireClient`),
+/// owned by this handler thread — handlers never contend on a shared
+/// connection pool, which is what lets concurrent clients saturate
+/// multiple workers at once.
+struct Forwarder<'a> {
+    shared: &'a RouterShared,
+    clients: HashMap<usize, WireClient>,
+    seed: u64,
+}
+
+impl<'a> Forwarder<'a> {
+    fn new(shared: &'a RouterShared, seed: u64) -> Forwarder<'a> {
+        Forwarder { shared, clients: HashMap::new(), seed }
+    }
+
+    fn client(&mut self, worker: usize) -> &mut WireClient {
+        let shared = self.shared;
+        let seed = self.seed;
+        self.clients.entry(worker).or_insert_with(|| {
+            WireClient::connect(&shared.workers[worker].addr, seed ^ ((worker as u64) << 32))
+                .with_policy(shared.retry)
+        })
+    }
+
+    /// Mark `worker` dead and drop its pooled client so a revival starts
+    /// from a fresh dial.
+    fn bury(&mut self, worker: usize) {
+        self.shared.mark_dead(worker);
+        self.clients.remove(&worker);
+        self.shared.counters.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Forward a session-addressed request to the session's placed
+    /// worker. A transport-dead worker is buried and the request is
+    /// re-placed among the survivors — the failover path; with every
+    /// worker dead, one in-line revival probe gives the fleet a last
+    /// chance before the typed `disconnected` gives up.
+    fn forward_placed(
+        &mut self,
+        session: usize,
+        req: &ApiRequest,
+    ) -> Result<ApiReply, SelectError> {
+        let mut probed = false;
+        let mut attempts = 0;
+        while attempts <= self.shared.workers.len() {
+            let Some(worker) = self.shared.place_live(session) else {
+                if probed {
+                    break;
+                }
+                probed = true;
+                if self.shared.probe_dead(self.seed) == 0 {
+                    break;
+                }
+                continue;
+            };
+            attempts += 1;
+            match self.client(worker).request(req) {
+                Err(SelectError::Disconnected) => self.bury(worker),
+                other => return other,
+            }
+        }
+        Err(SelectError::Disconnected)
+    }
+
+    /// Allocate a global id, place it, and forward the open pinned to
+    /// that id. An `already in use` rejection (the id raced a session the
+    /// counter had not seen — e.g. after a partial startup seeding)
+    /// absorbs the colliding worker's id space and takes a fresh ticket.
+    fn open(
+        &mut self,
+        problem: WireProblem,
+        plan: WirePlan,
+        driven: bool,
+        tenant: Option<String>,
+    ) -> Result<ApiReply, SelectError> {
+        for _ in 0..(8 + self.shared.workers.len()) {
+            let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
+            let Some(worker) = self.shared.place_live(id) else {
+                return Err(SelectError::Disconnected);
+            };
+            match self.client(worker).open_pinned(
+                problem.clone(),
+                plan.clone(),
+                driven,
+                tenant.clone(),
+                id,
+            ) {
+                Ok(session) => {
+                    self.shared.counters.opens.fetch_add(1, Ordering::Relaxed);
+                    return Ok(ApiReply::Opened { session });
+                }
+                Err(SelectError::Rejected(msg)) if msg.contains("already in use") => {
+                    if let Ok(sessions) = self.client(worker).list() {
+                        self.shared.absorb_ids(&sessions);
+                    }
+                }
+                Err(SelectError::Disconnected) => self.bury(worker),
+                Err(other) => return Err(other),
+            }
+        }
+        Err(SelectError::Rejected(
+            "open gave up: could not allocate a fresh session id across the fleet".into(),
+        ))
+    }
+
+    /// Broadcast a close: the placed owner holds the live lane, but after
+    /// failovers other workers may hold adopted copies, so every live
+    /// worker gets the frame (closing also removes the shared durable
+    /// record). Any success closes; all-unknown is the typed
+    /// unknown-session.
+    fn close(&mut self, session: usize) -> Result<ApiReply, SelectError> {
+        let mut closed = false;
+        let mut hard_error: Option<SelectError> = None;
+        for (worker, _) in self.shared.live_addrs() {
+            match self.client(worker).request(&ApiRequest::Close { session }) {
+                Ok(ApiReply::Closed { .. }) => closed = true,
+                Ok(_) => {}
+                Err(SelectError::UnknownSession(_)) => {}
+                Err(SelectError::Disconnected) => self.bury(worker),
+                Err(e) => hard_error = Some(e),
+            }
+        }
+        if closed {
+            Ok(ApiReply::Closed { session })
+        } else if let Some(e) = hard_error {
+            Err(e)
+        } else {
+            Err(SelectError::UnknownSession(session))
+        }
+    }
+
+    /// Fan a `list` out to every live worker and merge: one row per
+    /// session id, preferring the resident (live-lane) row — a worker
+    /// that merely adopted the session at startup still reports a stale
+    /// evicted snapshot — then the freshest generation.
+    fn list(&mut self) -> Result<ApiReply, SelectError> {
+        let mut merged: HashMap<usize, SessionInfo> = HashMap::new();
+        let mut reached = 0usize;
+        for (worker, _) in self.shared.live_addrs() {
+            match self.client(worker).list() {
+                Ok(sessions) => {
+                    reached += 1;
+                    for s in sessions {
+                        match merged.get(&s.session) {
+                            Some(seen)
+                                if (seen.resident, seen.generation)
+                                    >= (s.resident, s.generation) => {}
+                            _ => {
+                                merged.insert(s.session, s);
+                            }
+                        }
+                    }
+                }
+                Err(SelectError::Disconnected) => self.bury(worker),
+                Err(e) => return Err(e),
+            }
+        }
+        if reached == 0 {
+            return Err(SelectError::Disconnected);
+        }
+        let mut sessions: Vec<SessionInfo> = merged.into_values().collect();
+        sessions.sort_by_key(|s| s.session);
+        Ok(ApiReply::Sessions { sessions })
+    }
+
+    /// Forward a shutdown to every live worker (summing their persisted
+    /// counts), then drain the router itself.
+    fn shutdown(&mut self) -> Result<ApiReply, SelectError> {
+        let mut persisted = 0usize;
+        for (worker, _) in self.shared.live_addrs() {
+            match self.client(worker).shutdown() {
+                Ok(n) => persisted += n,
+                Err(_) => self.bury(worker),
+            }
+        }
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        Ok(ApiReply::Stopping { persisted })
+    }
+
+    /// Dispatch one decoded request.
+    fn dispatch(&mut self, req: ApiRequest) -> Result<ApiReply, SelectError> {
+        match req {
+            ApiRequest::Ping => Ok(ApiReply::Pong),
+            ApiRequest::Open { session: Some(_), .. } => Err(SelectError::Rejected(
+                "the router allocates session ids; open without a session pin".into(),
+            )),
+            ApiRequest::Open { problem, plan, driven, tenant, session: None } => {
+                self.open(problem, plan, driven, tenant)
+            }
+            ApiRequest::List => self.list(),
+            ApiRequest::Close { session } => self.close(session),
+            ApiRequest::Shutdown => self.shutdown(),
+            ApiRequest::Crash { .. } => Err(SelectError::Rejected(
+                "crash is a test-only fault-injection op; the router does not serve it".into(),
+            )),
+            other @ (ApiRequest::Sweep { .. }
+            | ApiRequest::Insert { .. }
+            | ApiRequest::Step { .. }
+            | ApiRequest::Finish { .. }
+            | ApiRequest::Metrics { .. }) => {
+                // session-addressed: forward verbatim to the placed worker
+                let session = match &other {
+                    ApiRequest::Sweep { session, .. }
+                    | ApiRequest::Insert { session, .. }
+                    | ApiRequest::Step { session }
+                    | ApiRequest::Finish { session }
+                    | ApiRequest::Metrics { session } => *session,
+                    _ => return Err(SelectError::Protocol("unroutable request".into())),
+                };
+                self.forward_placed(session, &other)
+            }
+        }
+    }
+}
+
+/// One client connection: read newline-delimited frames under the
+/// idle/frame-cap budget, dispatch each through the [`Forwarder`], write
+/// back one reply line per frame, in order. The same framing hygiene as
+/// the worker front's handler — the router must shrug off the same slow,
+/// huge, or garbled frames.
+fn handle_client(stream: Stream, config: NetConfig, shared: &RouterShared, seq: u64) {
+    let _ = stream.set_read_timeout(Some(config.poll_tick));
+    let _ = stream.set_write_timeout(Some(config.request_deadline));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut fwd = Forwarder::new(shared, 0xc0de_0000 ^ seq);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut frame_started: Option<Instant> = None;
+    let mut last_activity = Instant::now();
+
+    // answer with a typed error frame, then drop the connection
+    let refuse = |writer: &mut Stream, buf: &[u8], error: SelectError| {
+        let id = readable_frame_id(&String::from_utf8_lossy(buf));
+        let line = ApiReply::Error { error }.encode(id);
+        let _ = writeln!(writer, "{line}").and_then(|_| writer.flush());
+    };
+
+    loop {
+        if shared.stopping.load(Ordering::SeqCst) && buf.is_empty() {
+            break; // graceful drain: no frame in flight, close
+        }
+        let before = buf.len();
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => break, // EOF (a trailing partial frame is dropped)
+            Ok(_) if buf.ends_with(b"\n") => {
+                last_activity = Instant::now();
+                frame_started = None;
+                if buf.len() > config.max_frame_len {
+                    refuse(
+                        &mut writer,
+                        &buf,
+                        SelectError::Protocol(format!(
+                            "frame of {} bytes exceeds the {}-byte cap",
+                            buf.len(),
+                            config.max_frame_len
+                        )),
+                    );
+                    break;
+                }
+                let line = String::from_utf8_lossy(&buf).trim().to_string();
+                if !line.is_empty() {
+                    shared.counters.requests.fetch_add(1, Ordering::Relaxed);
+                    let reply = match ApiRequest::decode(&line) {
+                        Ok((id, req)) => match fwd.dispatch(req) {
+                            Ok(reply) => reply.encode(id),
+                            Err(error) => ApiReply::Error { error }.encode(id),
+                        },
+                        Err(error) => {
+                            ApiReply::Error { error }.encode(readable_frame_id(&line))
+                        }
+                    };
+                    if writeln!(writer, "{reply}").and_then(|_| writer.flush()).is_err() {
+                        break; // client gone mid-reply
+                    }
+                }
+                buf.clear();
+            }
+            Ok(_) => {
+                // partial frame (no delimiter yet, not EOF); clock it
+                if frame_started.is_none() && buf.len() > before {
+                    frame_started = Some(Instant::now());
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if !buf.is_empty() && frame_started.is_none() {
+                    frame_started = Some(Instant::now());
+                }
+                if buf.len() > config.max_frame_len {
+                    refuse(
+                        &mut writer,
+                        &buf,
+                        SelectError::Protocol(format!(
+                            "frame of {} bytes exceeds the {}-byte cap",
+                            buf.len(),
+                            config.max_frame_len
+                        )),
+                    );
+                    break;
+                }
+                // slow-loris: a frame trickling in past the deadline is
+                // refused without ever reaching a worker
+                if let Some(t0) = frame_started {
+                    if t0.elapsed() > config.request_deadline {
+                        refuse(
+                            &mut writer,
+                            &buf,
+                            SelectError::Deadline(format!(
+                                "frame incomplete after the {:?} deadline",
+                                config.request_deadline
+                            )),
+                        );
+                        break;
+                    }
+                }
+                if buf.is_empty() && last_activity.elapsed() > config.idle_timeout {
+                    break; // idle connection: close without a reply owed
+                }
+            }
+            Err(_) => break, // reset, aborted, …: the connection is gone
+        }
+    }
+    reader.into_inner().shutdown();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_deterministic_and_stable_under_reordering() {
+        let a = ["127.0.0.1:7001", "127.0.0.1:7002", "127.0.0.1:7003"];
+        let b = ["127.0.0.1:7003", "127.0.0.1:7001", "127.0.0.1:7002"];
+        for session in 0..200 {
+            let pa = place(session, &a).unwrap();
+            let pb = place(session, &b).unwrap();
+            // keyed by address, not by position: the chosen *address* is
+            // identical however the worker list is ordered
+            assert_eq!(a[pa], b[pb], "session {session} moved on reorder");
+            // and a second evaluation (a restarted router) agrees
+            assert_eq!(pa, place(session, &a).unwrap());
+        }
+    }
+
+    #[test]
+    fn removing_one_worker_only_replaces_its_own_sessions() {
+        let full = ["u:alpha", "u:beta", "u:gamma"];
+        let without_beta = ["u:alpha", "u:gamma"];
+        for session in 0..300 {
+            let home = full[place(session, &full).unwrap()];
+            let fallback = without_beta[place(session, &without_beta).unwrap()];
+            if home != "u:beta" {
+                // the rendezvous property: survivors keep their sessions
+                assert_eq!(home, fallback, "session {session} moved without cause");
+            }
+        }
+    }
+
+    #[test]
+    fn placement_spreads_sessions_across_workers() {
+        let addrs = ["127.0.0.1:7001", "127.0.0.1:7002"];
+        let mut counts = [0usize; 2];
+        for session in 0..1000 {
+            counts[place(session, &addrs).unwrap()] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert!(
+                (200..=800).contains(c),
+                "worker {i} got {c}/1000 sessions — placement is pathologically skewed"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_fleet_has_no_placement() {
+        assert_eq!(place(7, &[]), None);
+    }
+}

@@ -500,21 +500,27 @@ impl<'o> SessionServer<'o> {
             for env in lane_reads {
                 match env.req {
                     ServeRequest::Sweep { candidates } => {
-                        let round = round.as_ref().expect("sweep round was issued");
-                        let gains: Vec<f64> = candidates
-                            .iter()
-                            .map(|a| {
-                                let i = union
-                                    .binary_search(a)
-                                    .expect("requested candidate is in the union");
-                                round.gains[i]
-                            })
-                            .collect();
-                        let _ = env.reply.send(Ok(ServeReply::Sweep {
-                            gains,
-                            generation: round.generation.0,
-                            round_fresh: round.fresh,
-                        }));
+                        // a coalescing miss (candidate absent from the
+                        // union, or a round that was never issued) costs
+                        // this one request a typed rejection — never the
+                        // serve loop
+                        let reply = match round.as_ref() {
+                            Some(round) => slice_gains(&candidates, &union, &round.gains).map(
+                                |gains| ServeReply::Sweep {
+                                    gains,
+                                    generation: round.generation.0,
+                                    round_fresh: round.fresh,
+                                },
+                            ),
+                            None => Err(SelectError::Rejected(
+                                "sweep request reached the reply loop without a pooled round"
+                                    .into(),
+                            )),
+                        };
+                        if reply.is_err() {
+                            self.metrics.rejected += 1;
+                        }
+                        let _ = env.reply.send(reply);
                     }
                     ServeRequest::Metrics => {
                         self.metrics.metrics_reads += 1;
@@ -522,7 +528,13 @@ impl<'o> SessionServer<'o> {
                             .reply
                             .send(Ok(ServeReply::Metrics { snapshot: lane.session.snapshot() }));
                     }
-                    _ => unreachable!("read bucket holds only sweep/metrics"),
+                    ref other => {
+                        self.metrics.rejected += 1;
+                        let _ = env.reply.send(Err(SelectError::Rejected(format!(
+                            "{other:?} is not a read request; the read bucket holds only \
+                             sweep/metrics"
+                        ))));
+                    }
                 }
             }
         }
@@ -620,7 +632,10 @@ impl<'o> SessionServer<'o> {
                         }
                     }
                 }
-                _ => unreachable!("write bucket holds only insert/step/finish"),
+                ref other => Err(SelectError::Rejected(format!(
+                    "{other:?} is not a write request; the write bucket holds only \
+                     insert/step/finish"
+                ))),
             };
             if reply.is_err() {
                 self.metrics.rejected += 1;
@@ -652,6 +667,36 @@ impl<'o> SessionServer<'o> {
         }
         self.summary()
     }
+}
+
+/// Slice one request's gains back out of a pooled round. `union` is the
+/// sorted, deduped candidate union the round was issued over; every
+/// requested candidate must appear in it and the round must carry one gain
+/// per union entry. A miss means the coalescing bookkeeping is wrong for
+/// this request — that is a typed [`SelectError::Rejected`] for the one
+/// caller, never a panic that would tear down every other client's lane.
+fn slice_gains(
+    candidates: &[usize],
+    union: &[usize],
+    gains: &[f64],
+) -> Result<Vec<f64>, SelectError> {
+    candidates
+        .iter()
+        .map(|a| {
+            let i = union.binary_search(a).map_err(|_| {
+                SelectError::Rejected(format!(
+                    "candidate {a} missing from the coalesced sweep union"
+                ))
+            })?;
+            gains.get(i).copied().ok_or_else(|| {
+                SelectError::Rejected(format!(
+                    "pooled round carries {} gains for a union of {} candidates",
+                    gains.len(),
+                    union.len()
+                ))
+            })
+        })
+        .collect()
 }
 
 /// Gains slice of one coalesced round, as seen by a single client.
@@ -852,6 +897,42 @@ mod tests {
             ServeReply::Sweep { generation, .. } => assert_eq!(generation, 1),
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    /// The reply loop's gain slicing is a typed rejection on any
+    /// malformed candidate — a request whose candidate misses the
+    /// coalesced union, or a round carrying too few gains, costs that one
+    /// request an `Err`, never a serve-loop panic.
+    #[test]
+    fn malformed_candidates_slice_to_typed_rejections() {
+        let union = vec![2usize, 5, 9];
+        let gains = vec![0.25, 0.5, 0.75];
+        // the good path round-trips in request order
+        let ok = slice_gains(&[9, 2], &union, &gains).unwrap();
+        assert_eq!(ok[0].to_bits(), 0.75f64.to_bits());
+        assert_eq!(ok[1].to_bits(), 0.25f64.to_bits());
+        // candidate absent from the union
+        match slice_gains(&[2, 7], &union, &gains) {
+            Err(SelectError::Rejected(msg)) => assert!(msg.contains("7"), "got: {msg}"),
+            other => panic!("expected a typed rejection, got {other:?}"),
+        }
+        // round shorter than the union it claims to cover
+        match slice_gains(&[9], &union, &gains[..2]) {
+            Err(SelectError::Rejected(msg)) => assert!(msg.contains("union"), "got: {msg}"),
+            other => panic!("expected a typed rejection, got {other:?}"),
+        }
+        // out-of-range candidates through the public server front reject
+        // per-request while the loop keeps serving the lane
+        let o = obj();
+        let mut server = SessionServer::new();
+        let lane = server.open(&o, BatchExecutor::sequential());
+        let n = o.n();
+        let rx_bad = server.submit(lane, ServeRequest::Sweep { candidates: vec![0, n + 3] });
+        let rx_ok = server.submit(lane, ServeRequest::Sweep { candidates: vec![0] });
+        server.turn();
+        assert!(matches!(rx_bad.recv().unwrap(), Err(SelectError::Rejected(_))));
+        assert!(rx_ok.recv().unwrap().is_ok(), "one bad request must not poison the round");
+        assert_eq!(server.metrics.rejected, 1);
     }
 
     #[test]

@@ -194,11 +194,20 @@ impl SessionStore {
 
     /// Move one record into the `.quarantine/` side-directory, returning
     /// the destination (best-effort: `None` if the move failed — the
-    /// caller's typed error stands either way).
+    /// caller's typed error stands either way). Destination names are
+    /// collision-free: a session id that corrupts again after its slot was
+    /// rewritten gets a numbered suffix (`session-N.json`,
+    /// `session-N.1.json`, …) instead of silently overwriting the first
+    /// piece of evidence.
     fn quarantine(&self, session: usize) -> Option<PathBuf> {
         let qdir = self.dir.join(".quarantine");
         std::fs::create_dir_all(&qdir).ok()?;
-        let dest = qdir.join(format!("session-{session}.json"));
+        let dest = (0u32..)
+            .map(|attempt| match attempt {
+                0 => qdir.join(format!("session-{session}.json")),
+                n => qdir.join(format!("session-{session}.{n}.json")),
+            })
+            .find(|candidate| !candidate.exists())?;
         std::fs::rename(self.path(session), &dest).ok()?;
         Some(dest)
     }
@@ -343,6 +352,38 @@ mod tests {
         assert_eq!(store.load(1).unwrap(), record(1));
         // list() no longer reports the quarantined id
         assert_eq!(store.list(), vec![1]);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn double_corruption_quarantines_both_copies() {
+        let store = SessionStore::open(tempdir("double-quarantine")).unwrap();
+        // first corruption: hand-written garbage under id 6
+        std::fs::write(store.path(6), "not json at all").unwrap();
+        let first = store.load(6).unwrap_err().to_string();
+        assert!(first.contains("quarantined"), "{first}");
+        // the slot is rewritten with a good record, then corrupts again
+        store.save(&record(6)).unwrap();
+        std::fs::write(store.path(6), "{\"session\": 6").unwrap();
+        let second = store.load(6).unwrap_err().to_string();
+        assert!(second.contains("quarantined"), "{second}");
+        // both pieces of evidence survive under distinct names
+        let qdir = store.dir().join(".quarantine");
+        assert_eq!(
+            std::fs::read_to_string(qdir.join("session-6.json")).unwrap(),
+            "not json at all",
+            "the first corruption must not be overwritten"
+        );
+        assert_eq!(
+            std::fs::read_to_string(qdir.join("session-6.1.json")).unwrap(),
+            "{\"session\": 6",
+            "the second corruption gets a numbered suffix"
+        );
+        // a third corruption keeps counting
+        store.save(&record(6)).unwrap();
+        std::fs::write(store.path(6), "third").unwrap();
+        assert!(store.load(6).is_err());
+        assert!(qdir.join("session-6.2.json").is_file());
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

@@ -461,8 +461,17 @@ pub enum ApiRequest {
     /// Create a session from wire specs; `driven` attaches the plan's
     /// stepwise driver (`step`/`finish`), otherwise the lane takes raw
     /// sweep/insert traffic. `tenant` names the quota bucket the session
-    /// is charged to (absent = the `"default"` tenant).
-    Open { problem: WireProblem, plan: WirePlan, driven: bool, tenant: Option<String> },
+    /// is charged to (absent = the `"default"` tenant). `session` pins
+    /// the new session to an exact id: the open is rejected if that id is
+    /// already in use — the router's global-id allocation token (plain
+    /// clients leave it absent and take whatever id the server picks).
+    Open {
+        problem: WireProblem,
+        plan: WirePlan,
+        driven: bool,
+        tenant: Option<String>,
+        session: Option<usize>,
+    },
     /// Enumerate open sessions (resident and evicted).
     List,
     /// Close a session: drop its lane — objective, state, driver — and
@@ -588,12 +597,15 @@ impl ApiRequest {
         let mut pairs: Vec<(&str, Json)> =
             vec![("v", WIRE_VERSION.into()), ("id", id.into()), ("op", self.op().into())];
         match self {
-            ApiRequest::Open { problem, plan, driven, tenant } => {
+            ApiRequest::Open { problem, plan, driven, tenant, session } => {
                 pairs.push(("driven", (*driven).into()));
                 pairs.push(("problem", problem.to_json()));
                 pairs.push(("plan", plan.to_json()));
                 if let Some(t) = tenant {
                     pairs.push(("tenant", t.as_str().into()));
+                }
+                if let Some(s) = session {
+                    pairs.push(("session", (*s).into()));
                 }
             }
             ApiRequest::List => {}
@@ -645,6 +657,7 @@ impl ApiRequest {
                 plan: WirePlan::from_json(need(&j, "plan")?)?,
                 driven: opt_bool(&j, "driven")?.unwrap_or(false),
                 tenant: opt_str(&j, "tenant")?,
+                session: opt_usize(&j, "session")?,
             },
             "list" => ApiRequest::List,
             "close" => ApiRequest::Close { session: need_usize(&j, "session")? },
@@ -1262,19 +1275,27 @@ impl WireCore {
         self.server.sessions()
     }
 
-    /// Open a lane from wire specs (the `open` op).
+    /// Open a lane from wire specs (the `open` op). `pin` demands an
+    /// exact wire id for the new session — the router's global-id
+    /// allocation: the open is rejected if the id is already in use here
+    /// or in the shared session store (unpinned opens take the first
+    /// recyclable id as before).
     pub fn open_spec(
         &mut self,
         problem: &WireProblem,
         plan: &WirePlan,
         driven: bool,
         tenant: Option<&str>,
+        pin: Option<usize>,
     ) -> Result<usize, SelectError> {
-        // cheap rejections first: an over-quota or malformed-plan open
-        // must not pay for the dataset build and objective construction
-        // it is about to throw away
+        // cheap rejections first: an over-quota, malformed-plan, or
+        // id-colliding open must not pay for the dataset build and
+        // objective construction it is about to throw away
         let tenant = tenant.unwrap_or(DEFAULT_TENANT).to_string();
         self.check_tenant_quota(&tenant)?;
+        if let Some(id) = pin {
+            self.check_pin_free(id)?;
+        }
         let plan_spec = plan.resolve()?;
         if driven && !plan_spec.kind().has_driver() {
             return Err(SelectError::invalid(format!(
@@ -1306,7 +1327,23 @@ impl WireCore {
             &label,
             tenant,
             Some((problem.clone(), plan.clone())),
+            pin,
         )
+    }
+
+    /// Reject a pinned open whose id is already claimed — by a lane here
+    /// (live or evicted) or by a record in the shared session store
+    /// (another worker's session). The `already in use` marker in the
+    /// message is the router's retry signal.
+    fn check_pin_free(&self, id: usize) -> Result<(), SelectError> {
+        let lane_free =
+            self.lanes.get(id).map_or(true, |l| matches!(l, WireLane::Closed));
+        let store_free = self.store.as_ref().map_or(true, |s| !s.contains(id));
+        if lane_free && store_free {
+            Ok(())
+        } else {
+            Err(SelectError::Rejected(format!("session id {id} is already in use")))
+        }
     }
 
     /// Open a lane over an already-built objective — the embedding hook
@@ -1323,12 +1360,23 @@ impl WireCore {
     ) -> Result<usize, SelectError> {
         self.check_tenant_quota(DEFAULT_TENANT)?;
         self.ensure_capacity()?;
-        self.install_lane(Arc::from(objective), driver, seed, label, DEFAULT_TENANT.to_string(), None)
+        self.install_lane(
+            Arc::from(objective),
+            driver,
+            seed,
+            label,
+            DEFAULT_TENANT.to_string(),
+            None,
+            None,
+        )
     }
 
     /// Hand an owned objective to the serving core and record the lane —
     /// the choke point every open (spec or embedded, fresh or restored
-    /// via [`WireCore::restore_lane`]'s own path) funnels through.
+    /// via [`WireCore::restore_lane`]'s own path) funnels through. `pin`
+    /// installs at that exact wire id (rejecting a raced-away id) instead
+    /// of recycling the first closed slot.
+    #[allow(clippy::too_many_arguments)]
     fn install_lane(
         &mut self,
         objective: Arc<dyn Objective>,
@@ -1337,7 +1385,14 @@ impl WireCore {
         label: &str,
         tenant: String,
         specs: Option<(WireProblem, WirePlan)>,
+        pin: Option<usize>,
     ) -> Result<usize, SelectError> {
+        // re-check the pin under the same borrow that installs: an open
+        // can restore/adopt sessions between the cheap early check and
+        // here, and a conflicting install would orphan a server slot
+        if let Some(id) = pin {
+            self.check_pin_free(id)?;
+        }
         let driven = driver.is_some();
         let slot = match driver {
             Some(driver) => self.server.open_driven_shared(
@@ -1358,16 +1413,26 @@ impl WireCore {
             specs,
             last_used: self.clock,
         };
-        // closed ids are recycled fd-style; evicted ids stay reserved
-        let wire_id = match self.lanes.iter().position(|l| matches!(l, WireLane::Closed)) {
-            Some(i) => {
-                self.lanes[i] = WireLane::Live(meta);
-                i
+        // closed ids are recycled fd-style; evicted ids stay reserved;
+        // pinned ids land exactly where asked, padding with closed slots
+        let wire_id = match pin {
+            Some(id) => {
+                while self.lanes.len() <= id {
+                    self.lanes.push(WireLane::Closed);
+                }
+                self.lanes[id] = WireLane::Live(meta);
+                id
             }
-            None => {
-                self.lanes.push(WireLane::Live(meta));
-                self.lanes.len() - 1
-            }
+            None => match self.lanes.iter().position(|l| matches!(l, WireLane::Closed)) {
+                Some(i) => {
+                    self.lanes[i] = WireLane::Live(meta);
+                    i
+                }
+                None => {
+                    self.lanes.push(WireLane::Live(meta));
+                    self.lanes.len() - 1
+                }
+            },
         };
         // write-through: the lane is durable from birth, so a hard kill
         // right after the open still restores it on restart
@@ -1597,7 +1662,20 @@ impl WireCore {
                 self.server.close(slot)?;
             }
             Some(WireLane::Evicted(_)) => {}
-            _ => return Err(SelectError::UnknownSession(wire_id)),
+            _ => {
+                // shared-store close: an id this core never adopted but
+                // whose record lives in the store (written by another
+                // worker, or by a previous life of this one) is closed by
+                // deleting the record — the router broadcasts closes, so
+                // any worker must be able to retire any stored session
+                if self.store.as_ref().is_some_and(|s| s.contains(wire_id)) {
+                    if let Some(store) = self.store.as_ref() {
+                        store.remove(wire_id);
+                    }
+                    return Ok(());
+                }
+                return Err(SelectError::UnknownSession(wire_id));
+            }
         }
         if let Some(store) = self.store.as_ref() {
             store.remove(wire_id);
@@ -1608,9 +1686,38 @@ impl WireCore {
 
     /// Map a public wire id to its live serving-core slot, restoring the
     /// session first if it sits evicted. Bumps the LRU stamp.
+    ///
+    /// An id this core has never seen (or saw closed) whose record exists
+    /// in the attached store is **adopted**: marked evicted and restored
+    /// on the spot. Adoption is how failover works on a shared store — a
+    /// session written through by a worker that later died is picked up
+    /// lazily, at first request, by whichever worker the router re-placed
+    /// it on; `restore_lane` reads the record from disk at that moment,
+    /// so the adopting worker resumes from the dead worker's last
+    /// persisted write.
     fn resolve_session(&mut self, wire_id: usize) -> Result<SessionId, SelectError> {
         if matches!(self.lanes.get(wire_id), Some(WireLane::Evicted(_))) {
             return self.restore_lane(wire_id);
+        }
+        let adoptable = self.lanes.get(wire_id).map_or(true, |l| matches!(l, WireLane::Closed));
+        if adoptable {
+            if let Some(store) = self.store.as_ref() {
+                if store.contains(wire_id) {
+                    let record = store.load(wire_id)?;
+                    while self.lanes.len() <= wire_id {
+                        self.lanes.push(WireLane::Closed);
+                    }
+                    self.lanes[wire_id] = WireLane::Evicted(EvictedMeta {
+                        algorithm: record.algorithm,
+                        driven: record.driven,
+                        tenant: record.tenant,
+                        finished: record.finished,
+                        generation: record.snapshot.generation.0,
+                        set_len: record.snapshot.set.len(),
+                    });
+                    return self.restore_lane(wire_id);
+                }
+            }
         }
         self.clock += 1;
         let clock = self.clock;
@@ -1627,8 +1734,8 @@ impl WireCore {
     /// protocol tests).
     pub fn handle(&mut self, req: ApiRequest) -> Result<ApiReply, SelectError> {
         match req {
-            ApiRequest::Open { problem, plan, driven, tenant } => self
-                .open_spec(&problem, &plan, driven, tenant.as_deref())
+            ApiRequest::Open { problem, plan, driven, tenant, session } => self
+                .open_spec(&problem, &plan, driven, tenant.as_deref(), session)
                 .map(|session| ApiReply::Opened { session }),
             ApiRequest::Close { session } => {
                 self.close_session(session).map(|()| ApiReply::Closed { session })
@@ -1852,12 +1959,21 @@ mod tests {
                 plan: WirePlan::new("greedy"),
                 driven: true,
                 tenant: None,
+                session: None,
             },
             ApiRequest::Open {
                 problem: WireProblem::new("d1", 8, 3),
                 plan: WirePlan::new("greedy"),
                 driven: false,
                 tenant: Some("acme".into()),
+                session: None,
+            },
+            ApiRequest::Open {
+                problem: WireProblem::new("d1", 8, 3),
+                plan: WirePlan::new("greedy"),
+                driven: false,
+                tenant: None,
+                session: Some(7),
             },
             ApiRequest::List,
             ApiRequest::Sweep { session: 0, candidates: vec![0, 2, 5] },
@@ -2013,7 +2129,7 @@ mod tests {
     fn driven_open_without_driver_rejects_cheaply() {
         let mut server = StdioServer::new(Leader::with_threads(1));
         let err = server
-            .open_spec(&WireProblem::new("d1", 5, 1), &WirePlan::new("lasso"), true, None)
+            .open_spec(&WireProblem::new("d1", 5, 1), &WirePlan::new("lasso"), true, None, None)
             .unwrap_err();
         assert!(err.to_string().contains("no stepwise driver"), "{err}");
         assert_eq!(server.summary().sessions.len(), 0);
@@ -2024,11 +2140,11 @@ mod tests {
         let mut server = StdioServer::new(Leader::with_threads(1)).with_max_sessions(2);
         let problem = WireProblem::new("d1", 4, 1);
         let plan = WirePlan::new("greedy");
-        let a = server.open_spec(&problem, &plan, false, None).unwrap();
-        let b = server.open_spec(&problem, &plan, false, None).unwrap();
+        let a = server.open_spec(&problem, &plan, false, None, None).unwrap();
+        let b = server.open_spec(&problem, &plan, false, None, None).unwrap();
         assert_eq!((a, b), (0, 1));
         // budget full, no store: the third open is typed backpressure
-        let err = server.open_spec(&problem, &plan, false, None).unwrap_err();
+        let err = server.open_spec(&problem, &plan, false, None, None).unwrap_err();
         assert!(matches!(err, SelectError::Backpressure(_)), "{err:?}");
         // churn open/close under the full budget: live count stays flat
         // and closed ids are recycled, so this can run forever
@@ -2038,7 +2154,7 @@ mod tests {
                 other => panic!("unexpected {other:?}"),
             }
             assert_eq!(server.live_sessions(), 1);
-            let reopened = server.open_spec(&problem, &plan, false, None).unwrap();
+            let reopened = server.open_spec(&problem, &plan, false, None, None).unwrap();
             assert_eq!(reopened, a, "closed ids are recycled fd-style");
             assert_eq!(server.live_sessions(), 2);
         }
@@ -2059,18 +2175,18 @@ mod tests {
         let mut server = StdioServer::new(Leader::with_threads(1)).with_tenant_quota(2);
         let problem = WireProblem::new("d1", 4, 1);
         let plan = WirePlan::new("greedy");
-        let a = server.open_spec(&problem, &plan, false, Some("acme")).unwrap();
-        server.open_spec(&problem, &plan, false, Some("acme")).unwrap();
+        let a = server.open_spec(&problem, &plan, false, Some("acme"), None).unwrap();
+        server.open_spec(&problem, &plan, false, Some("acme"), None).unwrap();
         // third session for the same tenant: typed rejection
-        let err = server.open_spec(&problem, &plan, false, Some("acme")).unwrap_err();
+        let err = server.open_spec(&problem, &plan, false, Some("acme"), None).unwrap_err();
         assert!(matches!(err, SelectError::Rejected(_)), "{err:?}");
         assert!(err.to_string().contains("acme"), "{err}");
         // other tenants (and the default bucket) are unaffected
-        server.open_spec(&problem, &plan, false, Some("zen")).unwrap();
-        server.open_spec(&problem, &plan, false, None).unwrap();
+        server.open_spec(&problem, &plan, false, Some("zen"), None).unwrap();
+        server.open_spec(&problem, &plan, false, None, None).unwrap();
         // closing frees the tenant's claim
         server.close_session(a).unwrap();
-        server.open_spec(&problem, &plan, false, Some("acme")).unwrap();
+        server.open_spec(&problem, &plan, false, Some("acme"), None).unwrap();
         // list reports each lane's tenant
         match server.handle(ApiRequest::List).unwrap() {
             ApiReply::Sessions { sessions } => {
@@ -2097,8 +2213,8 @@ mod tests {
             .with_store(store);
         let problem = WireProblem::new("d1", 4, 1);
         let plan = WirePlan::new("greedy");
-        let a = server.open_spec(&problem, &plan, false, None).unwrap();
-        let b = server.open_spec(&problem, &plan, false, None).unwrap();
+        let a = server.open_spec(&problem, &plan, false, None, None).unwrap();
+        let b = server.open_spec(&problem, &plan, false, None, None).unwrap();
         // grow session a so its restored state is distinguishable
         let (grew, generation) = match server
             .handle(ApiRequest::Insert { session: a, item: 3, if_generation: None })
@@ -2110,7 +2226,7 @@ mod tests {
         assert!(grew);
         // touch b last so a... no: a was touched by the insert, so b is
         // the LRU victim for the next over-budget open
-        let c = server.open_spec(&problem, &plan, false, None).unwrap();
+        let c = server.open_spec(&problem, &plan, false, None, None).unwrap();
         assert_eq!(server.evictions, 1);
         assert_eq!(server.live_sessions(), 2);
         assert!(server.store().unwrap().contains(b), "victim persisted");
@@ -2175,7 +2291,7 @@ mod tests {
         let obj = LinearRegressionObjective::new(&ds);
         server.open_objective(Box::new(obj), None, 0, "lreg").unwrap();
         let err = server
-            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None, None)
             .unwrap_err();
         assert!(matches!(err, SelectError::Backpressure(_)), "{err:?}");
         assert!(err.to_string().contains("pinned"), "{err}");
@@ -2217,7 +2333,7 @@ mod tests {
         // client_panic reply and the core keeps serving
         let mut core = WireCore::new(Leader::with_threads(1)).with_fault_ops(true);
         let a = core
-            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None, None)
             .unwrap();
         let hook = std::panic::take_hook();
         std::panic::set_hook(Box::new(|_| {})); // keep the injected panic quiet
@@ -2247,7 +2363,7 @@ mod tests {
         let mut server = StdioServer::new(Leader::with_threads(1))
             .with_store(SessionStore::open(&dir).unwrap());
         let a = server
-            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None, None)
             .unwrap();
         server.handle(ApiRequest::Insert { session: a, item: 2, if_generation: None }).unwrap();
         let want = match server.handle(ApiRequest::Metrics { session: a }).unwrap() {
@@ -2307,7 +2423,7 @@ mod tests {
         let mut core = WireCore::new(Leader::with_threads(1))
             .with_store(SessionStore::open(&dir).unwrap());
         let a = core
-            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None, None)
             .unwrap();
         assert!(core.store().unwrap().contains(a), "durable from birth");
         core.handle(ApiRequest::Insert { session: a, item: 5, if_generation: None }).unwrap();
@@ -2322,7 +2438,7 @@ mod tests {
         assert_eq!(core.restores, 1);
         // adopted ids are reserved: a new open takes the next free id
         let b = core
-            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None, None)
             .unwrap();
         assert_ne!(a, b);
         let _ = std::fs::remove_dir_all(&dir);

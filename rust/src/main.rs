@@ -10,7 +10,8 @@
 use dash_select::cli::Args;
 use dash_select::coordinator::{
     install_drain_signals, Backend, Leader, NetConfig, NetServer, ObjectiveChoice, PlanSpec,
-    ProblemSpec, SelectError, ServeConfig, ServeSpec, SessionStore, StdioServer, WireCore,
+    ProblemSpec, Router, RouterConfig, SelectError, ServeConfig, ServeSpec, SessionStore,
+    StdioServer, WireCore,
 };
 use dash_select::experiments::{self, fig1, figs, appendix, DatasetId, Scale};
 use dash_select::objectives::spectra;
@@ -56,6 +57,17 @@ USAGE:
       --store, exit 0 — a restarted server on the same store resumes the
       same session ids. --fault-ops serves the test-only "crash" op
 
+  dash route --listen ADDR --worker ADDR [--worker ADDR ...]
+             [--request-deadline-ms MS] [--idle-timeout-ms MS]
+             [--probe-interval-ms MS]
+      route the v1 protocol across several `dash serve --listen` workers:
+      sessions are placed by rendezvous hashing on the session id, opens
+      are pinned to router-allocated ids, and a worker that dies is routed
+      around — give every worker the same --store DIR and its sessions
+      fail over to the survivors byte-identically. A "shutdown" frame
+      drains the workers and then the router; SIGINT/SIGTERM drains the
+      router alone, leaving the workers serving
+
   dash artifacts          show the AOT artifact inventory
   dash spectra --dataset <D> --k <K>   sampled γ / α = γ² estimates
 
@@ -79,6 +91,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("serve") => cmd_serve(&args),
+        Some("route") => cmd_route(&args),
         Some("artifacts") => cmd_artifacts(),
         Some("spectra") => cmd_spectra(&args),
         Some("help") | None => {
@@ -186,7 +199,9 @@ fn cmd_experiment(args: &Args) -> Result<(), SelectError> {
             );
         }
         "fig2" | "fig3" | "fig4" => {
-            let figure = figs::FigureId::parse(which).unwrap();
+            let figure = figs::FigureId::parse(which).ok_or_else(|| {
+                SelectError::InvalidSpec(format!("unknown figure '{which}'"))
+            })?;
             let panel = figs::Panel::parse(args.get_or("panel", "all")).ok_or_else(|| {
                 SelectError::InvalidSpec(format!("unknown panel '{}'", args.get_or("panel", "all")))
             })?;
@@ -379,7 +394,9 @@ fn cmd_serve_stdio(args: &Args) -> Result<(), SelectError> {
 /// `--listen unix:/path`): supervised connection handlers over one
 /// [`WireCore`], graceful drain on SIGINT/SIGTERM or a `shutdown` frame.
 fn cmd_serve_listen(args: &Args) -> Result<(), SelectError> {
-    let addr = args.get("listen").expect("checked by caller");
+    let addr = args
+        .get("listen")
+        .ok_or_else(|| SelectError::InvalidSpec("serve --listen needs an address".into()))?;
     let mut core = WireCore::new(Leader::new())
         .with_max_sessions(args.get_usize("max-sessions", 64)?)
         .with_fault_ops(args.get_flag("fault-ops"));
@@ -421,6 +438,56 @@ fn cmd_serve_listen(args: &Args) -> Result<(), SelectError> {
         summary.evictions,
         summary.restores,
         summary.contained_panics,
+        summary.handler_panics
+    );
+    Ok(())
+}
+
+/// The multi-worker router front (`route --listen ADDR --worker ADDR...`):
+/// v1 frames in, v1 frames out, sessions placed across the worker fleet
+/// with crash-safe failover — see
+/// [`dash_select::coordinator::router`] for the full contract.
+fn cmd_route(args: &Args) -> Result<(), SelectError> {
+    let addr = args
+        .get("listen")
+        .ok_or_else(|| SelectError::InvalidSpec("route needs --listen ADDR".into()))?;
+    let workers = args.get_all("worker");
+    if workers.is_empty() {
+        return Err(SelectError::InvalidSpec(
+            "route needs at least one --worker ADDR (repeat for more)".into(),
+        ));
+    }
+    let mut config = RouterConfig::default();
+    let deadline_ms = args.get_u64("request-deadline-ms", 0)?;
+    if deadline_ms > 0 {
+        config.net.request_deadline = std::time::Duration::from_millis(deadline_ms);
+    }
+    let idle_ms = args.get_u64("idle-timeout-ms", 0)?;
+    if idle_ms > 0 {
+        config.net.idle_timeout = std::time::Duration::from_millis(idle_ms);
+    }
+    let probe_ms = args.get_u64("probe-interval-ms", 0)?;
+    if probe_ms > 0 {
+        config.probe_interval = std::time::Duration::from_millis(probe_ms);
+    }
+    let stop = install_drain_signals();
+    let router = Router::bind(addr, &workers)
+        .map_err(|e| SelectError::Backend(format!("bind {addr}: {e}")))?
+        .with_config(config)
+        .with_stop_flag(stop);
+    eprintln!("listening on {} (routing {} workers)", router.local_addr(), workers.len());
+    let summary = router
+        .serve()
+        .map_err(|e| SelectError::Protocol(format!("router transport: {e}")))?;
+    eprintln!(
+        "router: {} connections, {} requests, {} opens; {} failovers, \
+         {} worker deaths, {} revivals; {} handler panics",
+        summary.connections,
+        summary.requests,
+        summary.opens,
+        summary.failovers,
+        summary.worker_deaths,
+        summary.worker_revivals,
         summary.handler_panics
     );
     Ok(())

@@ -224,16 +224,16 @@ fn wire_front_answers_malformed_requests_with_error_replies() {
 
     // a valid open still works after all those rejections...
     let err = server
-        .open_spec(&WireProblem::new("d1", 5, 1), &WirePlan::new("warp-drive"), true, None)
+        .open_spec(&WireProblem::new("d1", 5, 1), &WirePlan::new("warp-drive"), true, None, None)
         .unwrap_err();
     assert!(matches!(err, SelectError::InvalidSpec(_)), "{err:?}");
     let lane = server
-        .open_spec(&WireProblem::new("d1", 5, 1), &WirePlan::new("greedy"), true, None)
+        .open_spec(&WireProblem::new("d1", 5, 1), &WirePlan::new("greedy"), true, None, None)
         .unwrap();
     assert_eq!(lane, 0);
     // ...and the session budget is enforced with backpressure
     let err = server
-        .open_spec(&WireProblem::new("d1", 5, 1), &WirePlan::new("greedy"), true, None)
+        .open_spec(&WireProblem::new("d1", 5, 1), &WirePlan::new("greedy"), true, None, None)
         .unwrap_err();
     assert!(matches!(err, SelectError::Backpressure(_)), "{err:?}");
 }

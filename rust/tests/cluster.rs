@@ -1,0 +1,273 @@
+//! Multi-worker cluster integration over the real `dash route` and
+//! `dash serve --listen` binaries: placement is deterministic and
+//! survives a router restart, the router's `list` is the union of the
+//! workers' lists, and SIGKILLing one worker mid-session fails its
+//! sessions over to the survivor byte-identically (set, generation,
+//! `value.to_bits()`) against an uninterrupted in-process reference.
+//!
+//! All transports are Unix sockets so restarted processes can bind the
+//! exact same address, and both workers share one `--store` directory —
+//! the write-through records in it are the failover channel.
+
+use dash_select::coordinator::{
+    place, ApiReply, ApiRequest, Leader, RetryPolicy, WireClient, WireCore, WirePlan, WireProblem,
+};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+fn tempdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dash-cluster-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A spawned `dash` process (worker or router), SIGKILLed on drop so a
+/// failing assertion never leaks one.
+struct Proc {
+    child: Child,
+}
+
+impl Proc {
+    fn worker(sock: &str, store: &Path) -> Proc {
+        let child = Command::new(env!("CARGO_BIN_EXE_dash"))
+            .args(["serve", "--listen", sock, "--store"])
+            .arg(store)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn dash serve");
+        Proc { child }
+    }
+
+    fn router(sock: &str, workers: &[&str]) -> Proc {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_dash"));
+        cmd.args(["route", "--listen", sock]);
+        for w in workers {
+            cmd.args(["--worker", w]);
+        }
+        let child = cmd
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn dash route");
+        Proc { child }
+    }
+
+    /// SIGKILL — no drain, no cleanup.
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Retries patient enough to ride out process startup, a router restart,
+/// and a worker failover.
+fn patient_retries() -> RetryPolicy {
+    RetryPolicy {
+        max_attempts: 60,
+        base_backoff: Duration::from_millis(10),
+        max_backoff: Duration::from_millis(200),
+    }
+}
+
+const SESSIONS: usize = 6;
+const ITEMS_BEFORE: [usize; 2] = [1, 4];
+const ITEMS_AFTER: [usize; 2] = [2, 5];
+
+fn problem() -> WireProblem {
+    WireProblem::new("d1", 4, 1)
+}
+
+/// The uninterrupted in-process reference every clustered session must
+/// match bit-for-bit: one core, all four inserts.
+fn reference() -> (Vec<usize>, dash_select::coordinator::Generation, u64) {
+    let mut core = WireCore::new(Leader::with_threads(1));
+    let s = core.open_spec(&problem(), &WirePlan::new("greedy"), false, None, None).unwrap();
+    for item in ITEMS_BEFORE.into_iter().chain(ITEMS_AFTER) {
+        core.handle(ApiRequest::Insert { session: s, item, if_generation: None }).unwrap();
+    }
+    match core.handle(ApiRequest::Metrics { session: s }).unwrap() {
+        ApiReply::Snapshot { snapshot } => {
+            (snapshot.set, snapshot.generation, snapshot.value.to_bits())
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+struct Cluster {
+    dir: PathBuf,
+    router_sock: String,
+    worker_socks: [String; 2],
+    workers: Vec<Proc>,
+    router: Proc,
+}
+
+/// Two workers over one shared store, one router in front.
+fn start_cluster(tag: &str) -> Cluster {
+    let dir = tempdir(tag);
+    let store = dir.join("store");
+    let worker_socks = [
+        format!("unix:{}", dir.join("w0.sock").display()),
+        format!("unix:{}", dir.join("w1.sock").display()),
+    ];
+    let router_sock = format!("unix:{}", dir.join("router.sock").display());
+    let workers =
+        vec![Proc::worker(&worker_socks[0], &store), Proc::worker(&worker_socks[1], &store)];
+    let router =
+        Proc::router(&router_sock, &[&worker_socks[0], &worker_socks[1]]);
+    Cluster { dir, router_sock, worker_socks, workers, router }
+}
+
+/// Placement is a pure function of (session id, worker addresses): the
+/// ids the router hands out land on exactly the worker `place` predicts,
+/// the router's `list` is the union of the workers' lists, and a
+/// SIGKILLed-and-restarted router (no session table — placement is
+/// re-derived per request) routes the same sessions to the same workers
+/// and continues the id sequence where its predecessor stopped.
+#[test]
+fn placement_is_deterministic_and_survives_a_router_restart() {
+    let mut cluster = start_cluster("restart");
+    let mut client = WireClient::connect(&cluster.router_sock, 31).with_policy(patient_retries());
+    client.ping().unwrap();
+
+    // router-allocated ids are the dense sequence 0..SESSIONS
+    let mut ids = Vec::new();
+    for _ in 0..SESSIONS {
+        ids.push(client.open(problem(), WirePlan::new("greedy"), false, None).unwrap());
+    }
+    assert_eq!(ids, (0..SESSIONS).collect::<Vec<_>>(), "router must allocate dense ids");
+    for &s in &ids {
+        for item in ITEMS_BEFORE {
+            client.insert(s, item, None).unwrap();
+        }
+    }
+
+    // each worker holds exactly the sessions `place` puts on it
+    let addrs: Vec<&str> = cluster.worker_socks.iter().map(|s| s.as_str()).collect();
+    let mut per_worker: Vec<Vec<usize>> = vec![Vec::new(), Vec::new()];
+    for &s in &ids {
+        per_worker[place(s, &addrs).expect("non-empty fleet")].push(s);
+    }
+    let mut union = Vec::new();
+    for (w, sock) in cluster.worker_socks.iter().enumerate() {
+        let mut direct = WireClient::connect(sock, 37 + w as u64).with_policy(patient_retries());
+        let rows = direct.list().unwrap();
+        let mut got: Vec<usize> = rows.iter().map(|r| r.session).collect();
+        got.sort_unstable();
+        assert_eq!(got, per_worker[w], "worker {w} holds exactly its placed sessions");
+        assert!(rows.iter().all(|r| r.resident), "owned sessions are live lanes");
+        union.extend(got);
+    }
+    union.sort_unstable();
+
+    // the router's list is the union of the workers' lists
+    let routed: Vec<usize> = client.list().unwrap().iter().map(|r| r.session).collect();
+    assert_eq!(routed, union, "router list must merge the worker lists");
+
+    let before: Vec<_> = ids.iter().map(|&s| client.metrics(s).unwrap()).collect();
+
+    // SIGKILL the router mid-fleet; a fresh one on the same address must
+    // route identically from nothing but the worker addresses
+    cluster.router.kill();
+    cluster.router = Proc::router(
+        &cluster.router_sock,
+        &[&cluster.worker_socks[0], &cluster.worker_socks[1]],
+    );
+    let mut client2 =
+        WireClient::connect(&cluster.router_sock, 41).with_policy(patient_retries());
+    for (&s, was) in ids.iter().zip(&before) {
+        let now = client2.metrics(s).unwrap();
+        assert_eq!(now.set, was.set, "session {s}: set changed across router restart");
+        assert_eq!(now.generation, was.generation);
+        assert_eq!(now.value.to_bits(), was.value.to_bits());
+    }
+    let routed2: Vec<usize> = client2.list().unwrap().iter().map(|r| r.session).collect();
+    assert_eq!(routed2, union, "restarted router must see the same fleet state");
+
+    // the restarted router seeds its id counter past the fleet's sessions
+    let next = client2.open(problem(), WirePlan::new("greedy"), false, None).unwrap();
+    assert_eq!(next, SESSIONS, "restarted router must continue the id sequence");
+
+    // graceful drain: workers then router, all exit 0
+    client2.shutdown().unwrap();
+    assert!(cluster.router.child.wait().expect("wait router").success());
+    for w in &mut cluster.workers {
+        assert!(w.child.wait().expect("wait worker").success());
+    }
+    let _ = std::fs::remove_dir_all(&cluster.dir);
+}
+
+/// The chaos extension: SIGKILL one worker while every session is
+/// mid-selection. Concurrent clients finish their selections through the
+/// router byte-identically to the uninterrupted reference — the survivor
+/// adopts the dead worker's sessions from the shared store.
+#[test]
+fn sigkilled_worker_fails_over_byte_identical() {
+    let (want_set, want_gen, want_bits) = reference();
+    let mut cluster = start_cluster("failover");
+    let mut client = WireClient::connect(&cluster.router_sock, 43).with_policy(patient_retries());
+    client.ping().unwrap();
+
+    let mut ids = Vec::new();
+    for _ in 0..SESSIONS {
+        ids.push(client.open(problem(), WirePlan::new("greedy"), false, None).unwrap());
+    }
+    for &s in &ids {
+        for item in ITEMS_BEFORE {
+            client.insert(s, item, None).unwrap();
+        }
+    }
+
+    // kill whichever worker owns session 0 (placement tells us which);
+    // its sessions' last write-through records are all that survive
+    let addrs: Vec<&str> = cluster.worker_socks.iter().map(|s| s.as_str()).collect();
+    let victim = place(ids[0], &addrs).expect("non-empty fleet");
+    cluster.workers[victim].kill();
+
+    // one concurrent client per session finishes the selection through
+    // the router; sessions of the dead worker must fail over in-flight
+    let done: Vec<_> = ids
+        .iter()
+        .map(|&s| {
+            let addr = cluster.router_sock.clone();
+            std::thread::spawn(move || {
+                let mut c = WireClient::connect(&addr, 47 + s as u64)
+                    .with_policy(patient_retries());
+                for item in ITEMS_AFTER {
+                    c.insert(s, item, None).unwrap();
+                }
+                let snap = c.metrics(s).unwrap();
+                (s, snap.set, snap.generation, snap.value.to_bits())
+            })
+        })
+        .collect();
+    for h in done {
+        let (s, set, generation, bits) = h.join().expect("client thread");
+        assert_eq!(set, want_set, "session {s}: set diverged across the failover");
+        assert_eq!(generation, want_gen, "session {s}: generation diverged");
+        assert_eq!(bits, want_bits, "session {s}: value bits diverged");
+    }
+
+    // the fleet still reports every session (the survivor adopted the
+    // victim's), and the drain exits clean
+    let rows = client.list().unwrap();
+    let mut got: Vec<usize> = rows.iter().map(|r| r.session).collect();
+    got.sort_unstable();
+    assert_eq!(got, ids, "every session must survive the worker kill");
+
+    client.shutdown().unwrap();
+    assert!(cluster.router.child.wait().expect("wait router").success());
+    let survivor = 1 - victim;
+    assert!(cluster.workers[survivor].child.wait().expect("wait worker").success());
+    let _ = std::fs::remove_dir_all(&cluster.dir);
+}

@@ -27,6 +27,7 @@ fn open(server: &mut StdioServer, problem: &WireProblem, plan: &WirePlan) -> usi
         plan: plan.clone(),
         driven: false,
         tenant: None,
+        session: None,
     };
     match server.handle(req).unwrap() {
         ApiReply::Opened { session } => session,
@@ -88,6 +89,7 @@ fn churn_at_max_sessions_never_wedges() {
         plan: plan.clone(),
         driven: false,
         tenant: None,
+        session: None,
     };
     match server.handle(req) {
         Err(SelectError::Backpressure(_)) => {}

@@ -141,7 +141,7 @@ fn drive_selection(client: &mut WireClient) -> Result<(usize, Vec<usize>, u64, u
 fn reference_selection() -> (Vec<usize>, u64, u64) {
     let mut core = WireCore::new(Leader::with_threads(1));
     let session = core
-        .open_spec(&WireProblem::new("d1", ROUNDS, 1), &WirePlan::new("greedy"), false, None)
+        .open_spec(&WireProblem::new("d1", ROUNDS, 1), &WirePlan::new("greedy"), false, None, None)
         .unwrap();
     let cands: Vec<usize> = (0..CANDS).collect();
     for _ in 0..ROUNDS {
@@ -213,6 +213,41 @@ fn socket_front_serves_typed_replies_and_errors() {
     let summary = server.stop();
     assert!(summary.requests > 0);
     assert_eq!(summary.handler_panics, 0);
+}
+
+/// Regression (router PR): a connection dropped mid-exchange — the write
+/// landed but the server died before replying — must tear the cached
+/// stream down inside the attempt and redial, never reuse the dead
+/// stream or panic on a connection re-borrow. A bare fake server makes
+/// the drop deterministic where the chaos proxy only makes it likely.
+#[test]
+fn mid_exchange_connection_drop_redials_instead_of_reusing_the_dead_stream() {
+    use std::io::{BufRead, BufReader, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fake = std::thread::spawn(move || {
+        // connection 1: read the request, then drop without a reply — the
+        // client's write succeeded, so only the read half sees the fault
+        let (c1, _) = listener.accept().unwrap();
+        let mut line = String::new();
+        BufReader::new(c1.try_clone().unwrap()).read_line(&mut line).unwrap();
+        drop(c1);
+        // connection 2: the replayed request, served properly
+        let (mut c2, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(c2.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let (id, req) = ApiRequest::decode(&line).unwrap();
+        assert!(matches!(req, ApiRequest::Ping), "the replay must carry the same request");
+        writeln!(c2, "{}", ApiReply::Pong.encode(id)).unwrap();
+        c2.flush().unwrap();
+    });
+
+    let mut client = WireClient::connect(&addr, 23).with_policy(fast_retries());
+    client.ping().expect("the replay after the mid-exchange drop must succeed");
+    assert!(client.reconnects >= 1, "the torn-down exchange must surface as a reconnect");
+    assert!(client.is_connected(), "the successful attempt keeps its fresh connection");
+    fake.join().unwrap();
 }
 
 // ---------------------------------------------------------------------------
@@ -456,7 +491,7 @@ fn client_resumes_across_a_server_restart_byte_identical() {
     let (want_set, want_gen, want_bits) = {
         let mut core = WireCore::new(Leader::with_threads(1));
         let s = core
-            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None, None)
             .unwrap();
         for item in [1, 4, 2, 5] {
             core.handle(ApiRequest::Insert { session: s, item, if_generation: None }).unwrap();

@@ -74,7 +74,7 @@ fn sigkilled_server_restarts_and_selection_finishes_byte_identical() {
     let (want_set, want_gen, want_bits) = {
         let mut core = WireCore::new(Leader::with_threads(1));
         let s = core
-            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None)
+            .open_spec(&WireProblem::new("d1", 4, 1), &WirePlan::new("greedy"), false, None, None)
             .unwrap();
         for item in ITEMS_BEFORE.into_iter().chain(ITEMS_AFTER) {
             core.handle(ApiRequest::Insert { session: s, item, if_generation: None }).unwrap();

@@ -87,6 +87,7 @@ fn gen_request(g: &mut Gen) -> ApiRequest {
             plan: gen_plan(g),
             driven: g.bool(),
             tenant: gen_opt(g, gen_string),
+            session: gen_opt(g, |g| g.usize_in(0, 10_000)),
         },
         1 => ApiRequest::List,
         2 => {
@@ -280,10 +281,21 @@ fn golden_requests() -> Vec<(u64, ApiRequest)> {
         (
             1,
             ApiRequest::Open {
-                problem,
+                problem: problem.clone(),
                 plan: WirePlan::new("greedy"),
                 driven: true,
                 tenant: Some("acme".into()),
+                session: None,
+            },
+        ),
+        (
+            13,
+            ApiRequest::Open {
+                problem,
+                plan: WirePlan::new("greedy"),
+                driven: false,
+                tenant: None,
+                session: Some(42),
             },
         ),
         (2, ApiRequest::List),
