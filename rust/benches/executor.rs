@@ -192,7 +192,7 @@ fn main() {
             ..Default::default()
         },
     );
-    let sm_big = OvrSoftmaxObjective::new(&ds_sm);
+    let sm_big = OvrSoftmaxObjective::new(&ds_sm).expect("classification dataset");
     let sm_st = sm_big.state_for(&lreg_set);
     let (sm_scalar_s, sm_simd_s) = blocked_scalar_vs_simd(
         &mut bench,
@@ -762,6 +762,64 @@ fn main() {
             ("speedup", speedup.into()),
         ]));
     }
+    // ---- sync wrapper overhead: uncontended hot path vs raw std::sync ----
+    // the release wrappers must be zero-cost: poison recovery is a cold
+    // branch, and the lock-order tracker compiles out entirely without
+    // debug_assertions / the `lock-order` feature
+    let sync_iters = 100_000usize;
+    let raw_mutex = std::sync::Mutex::new(0u64);
+    let sync_raw_mutex_s = bench
+        .run("sync raw std mutex lock/unlock x100k", || {
+            for _ in 0..sync_iters {
+                *raw_mutex.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+            }
+        })
+        .mean_s;
+    let wrapped_mutex = dash_select::util::sync::Mutex::new(0u64);
+    let sync_wrapped_mutex_s = bench
+        .run("sync wrapper mutex lock/unlock x100k", || {
+            for _ in 0..sync_iters {
+                *wrapped_mutex.lock() += 1;
+            }
+        })
+        .mean_s;
+    let raw_rwlock = std::sync::RwLock::new(0u64);
+    let sync_raw_rwlock_s = bench
+        .run("sync raw std rwlock read x100k", || {
+            let mut acc = 0u64;
+            for _ in 0..sync_iters {
+                acc = acc.wrapping_add(*raw_rwlock.read().unwrap_or_else(|e| e.into_inner()));
+            }
+            acc
+        })
+        .mean_s;
+    let wrapped_rwlock = dash_select::util::sync::RwLock::new(0u64);
+    let sync_wrapped_rwlock_s = bench
+        .run("sync wrapper rwlock read x100k", || {
+            let mut acc = 0u64;
+            for _ in 0..sync_iters {
+                acc = acc.wrapping_add(*wrapped_rwlock.read());
+            }
+            acc
+        })
+        .mean_s;
+    let sync_tracker = dash_select::util::sync::lock_order_enabled();
+    let sync_mutex_ratio = if sync_raw_mutex_s > 0.0 {
+        sync_wrapped_mutex_s / sync_raw_mutex_s
+    } else {
+        0.0
+    };
+    let sync_rwlock_ratio = if sync_raw_rwlock_s > 0.0 {
+        sync_wrapped_rwlock_s / sync_raw_rwlock_s
+    } else {
+        0.0
+    };
+    println!(
+        "sync wrappers (lock-order tracker {}): mutex {sync_mutex_ratio:.2}x raw, \
+         rwlock read {sync_rwlock_ratio:.2}x raw over {sync_iters} uncontended ops",
+        if sync_tracker { "ON" } else { "off" }
+    );
+
     let reports: Vec<Json> = bench
         .reports
         .iter()
@@ -895,6 +953,19 @@ fn main() {
                 ("requests", cluster_requests.into()),
                 ("elapsed_s", cluster_elapsed.into()),
                 ("requests_per_s", cluster_rps.into()),
+            ]),
+        ),
+        (
+            "sync",
+            Json::obj(vec![
+                ("iters", sync_iters.into()),
+                ("tracker_enabled", sync_tracker.into()),
+                ("raw_mutex_s", sync_raw_mutex_s.into()),
+                ("wrapper_mutex_s", sync_wrapped_mutex_s.into()),
+                ("mutex_overhead_x", sync_mutex_ratio.into()),
+                ("raw_rwlock_read_s", sync_raw_rwlock_s.into()),
+                ("wrapper_rwlock_read_s", sync_wrapped_rwlock_s.into()),
+                ("rwlock_read_overhead_x", sync_rwlock_ratio.into()),
             ]),
         ),
         ("reports", Json::Arr(reports)),

@@ -83,7 +83,7 @@ impl AdaptiveSequencing {
 /// (generation bumps via `session.insert`).
 pub struct AdaptiveSeqDriver {
     cfg: AdaptiveSequencingConfig,
-    tracker: Option<RunTracker>,
+    tracker: RunTracker,
     k: usize,
     started: bool,
     hit_cap: bool,
@@ -95,7 +95,7 @@ impl AdaptiveSeqDriver {
         assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0);
         AdaptiveSeqDriver {
             cfg,
-            tracker: Some(RunTracker::new("adaptive_seq")),
+            tracker: RunTracker::new("adaptive_seq"),
             k: 0,
             started: false,
             hit_cap: false,
@@ -119,7 +119,7 @@ impl SessionDriver for AdaptiveSeqDriver {
         }
         let cfg = &self.cfg;
         let k = self.k;
-        let tracker = self.tracker.as_mut().expect("driver not finished");
+        let tracker = &mut self.tracker;
         if session.len() >= k {
             self.done = true;
             return StepOutcome::Done;
@@ -202,9 +202,9 @@ impl SessionDriver for AdaptiveSeqDriver {
         StepOutcome::Continue
     }
 
-    fn finish(mut self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
-        let tracker = self.tracker.take().expect("finish called once");
-        tracker.finish(session.set().to_vec(), session.value(), self.hit_cap)
+    fn finish(self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
+        let this = *self;
+        this.tracker.finish(session.set().to_vec(), session.value(), this.hit_cap)
     }
 }
 

@@ -306,12 +306,25 @@ impl SessionDriver for DashDriver {
         }
     }
 
-    fn finish(self: Box<Self>, _session: &mut SelectionSession<'_>) -> SelectionResult {
-        let mut out = self.best.expect("at least one guess runs");
-        out.queries = self.total_queries;
-        out.rounds = self.max_rounds.max(out.rounds);
-        out.wall_s = self.timer.elapsed_s();
-        out.algorithm = self.label.into();
+    fn finish(self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
+        let this = *self;
+        // the guess ladder is never empty, so at least one guess always
+        // runs; if that invariant ever breaks, answer from the session
+        // instead of aborting the serving thread
+        let mut out = this.best.unwrap_or_else(|| SelectionResult {
+            algorithm: String::new(),
+            set: session.set().to_vec(),
+            value: session.value(),
+            rounds: 0,
+            queries: 0,
+            wall_s: 0.0,
+            history: Vec::new(),
+            hit_iteration_cap: false,
+        });
+        out.queries = this.total_queries;
+        out.rounds = this.max_rounds.max(out.rounds);
+        out.wall_s = this.timer.elapsed_s();
+        out.algorithm = this.label.into();
         out
     }
 }

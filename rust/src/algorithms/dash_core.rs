@@ -48,7 +48,7 @@ pub(crate) struct GuessParams {
 pub(crate) struct GuessDriver {
     p: GuessParams,
     label: &'static str,
-    tracker: Option<RunTracker>,
+    tracker: RunTracker,
     /// current candidate pool X
     x: Vec<usize>,
     /// per-outer-iteration quantities, set on refresh
@@ -67,7 +67,7 @@ impl GuessDriver {
         GuessDriver {
             p,
             label,
-            tracker: Some(RunTracker::new(label)),
+            tracker: RunTracker::new(label),
             x: Vec::new(),
             t: 0.0,
             filter_thresh: 0.0,
@@ -91,7 +91,7 @@ impl SessionDriver for GuessDriver {
             return StepOutcome::Done;
         }
         let p = &self.p;
-        let tracker = self.tracker.as_mut().expect("driver not finished");
+        let tracker = &mut self.tracker;
         // --- outer-iteration refresh: new pool + thresholds ---
         if self.need_refresh {
             if session.len() >= p.k || tracker.rounds() >= p.max_rounds {
@@ -194,16 +194,17 @@ impl SessionDriver for GuessDriver {
             .collect();
         let fb_sweep = session.sweep(&fallback);
         tracker.add_queries(fb_sweep.fresh);
-        let mut fb = fallback.iter().zip(&fb_sweep.gains);
+        let fb_gain: std::collections::HashMap<usize, f64> =
+            fallback.iter().copied().zip(fb_sweep.gains.iter().copied()).collect();
 
         let mut survivors = Vec::with_capacity(self.x.len());
         for (j, &a) in self.x.iter().enumerate() {
             let est = if counts[j] > 0 {
                 sums[j] / counts[j] as f64
             } else {
-                let (&fa, &g) = fb.next().expect("fallback entry");
-                debug_assert_eq!(fa, a);
-                g
+                // every zero-count candidate is in `fallback` by
+                // construction; a 0.0 marginal (not an abort) if not
+                fb_gain.get(&a).copied().unwrap_or(0.0)
             };
             if est >= self.filter_thresh {
                 survivors.push(a);
@@ -226,8 +227,8 @@ impl SessionDriver for GuessDriver {
         StepOutcome::Continue
     }
 
-    fn finish(mut self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
-        let tracker = self.tracker.take().expect("finish called once");
-        tracker.finish(session.set().to_vec(), session.value(), self.hit_cap)
+    fn finish(self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
+        let this = *self;
+        this.tracker.finish(session.set().to_vec(), session.value(), this.hit_cap)
     }
 }

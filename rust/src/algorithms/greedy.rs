@@ -90,7 +90,7 @@ impl Greedy {
 pub struct GreedyDriver {
     cfg: GreedyConfig,
     label: &'static str,
-    tracker: Option<RunTracker>,
+    tracker: RunTracker,
     remaining: Vec<usize>,
     k: usize,
     iters: usize,
@@ -101,7 +101,7 @@ pub struct GreedyDriver {
 impl GreedyDriver {
     pub fn new(cfg: GreedyConfig, label: &'static str) -> Self {
         GreedyDriver {
-            tracker: Some(RunTracker::new(label)),
+            tracker: RunTracker::new(label),
             cfg,
             label,
             remaining: Vec::new(),
@@ -129,7 +129,7 @@ impl SessionDriver for GreedyDriver {
             return StepOutcome::Done;
         }
         self.iters += 1;
-        let tracker = self.tracker.as_mut().expect("driver not finished");
+        let tracker = &mut self.tracker;
         let sw = session.sweep(&self.remaining);
         tracker.add_queries(sw.fresh);
         let Some((best_i, best_g)) = argmax(&sw.gains) else {
@@ -152,9 +152,9 @@ impl SessionDriver for GreedyDriver {
         }
     }
 
-    fn finish(mut self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
-        let tracker = self.tracker.take().expect("finish called once");
-        tracker.finish(session.set().to_vec(), session.value(), false)
+    fn finish(self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
+        let this = *self;
+        this.tracker.finish(session.set().to_vec(), session.value(), false)
     }
 }
 
@@ -186,7 +186,7 @@ impl Ord for LazyEntry {
 /// so accounting matches the classic lazy-greedy count exactly.
 pub struct LazyGreedyDriver {
     cfg: GreedyConfig,
-    tracker: Option<RunTracker>,
+    tracker: RunTracker,
     heap: BinaryHeap<LazyEntry>,
     stamp: usize,
     k: usize,
@@ -198,7 +198,7 @@ impl LazyGreedyDriver {
     pub fn new(cfg: GreedyConfig) -> Self {
         LazyGreedyDriver {
             cfg,
-            tracker: Some(RunTracker::new("sds_ma_lazy")),
+            tracker: RunTracker::new("sds_ma_lazy"),
             heap: BinaryHeap::new(),
             stamp: 0,
             k: 0,
@@ -217,7 +217,7 @@ impl SessionDriver for LazyGreedyDriver {
         if self.done {
             return StepOutcome::Done;
         }
-        let tracker = self.tracker.as_mut().expect("driver not finished");
+        let tracker = &mut self.tracker;
         if !self.started {
             // initial pass: all singleton gains (1 round)
             let n = session.objective().n();
@@ -272,9 +272,9 @@ impl SessionDriver for LazyGreedyDriver {
         }
     }
 
-    fn finish(mut self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
-        let tracker = self.tracker.take().expect("finish called once");
-        tracker.finish(session.set().to_vec(), session.value(), false)
+    fn finish(self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
+        let this = *self;
+        this.tracker.finish(session.set().to_vec(), session.value(), false)
     }
 }
 

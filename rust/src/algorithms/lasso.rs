@@ -247,7 +247,7 @@ fn soft_threshold(v: f64, t: f64) -> f64 {
 fn make_point(lambda: f64, w: &[f64]) -> LassoPathPoint {
     let mut support: Vec<usize> =
         (0..w.len()).filter(|&j| w[j].abs() > 1e-10).collect();
-    support.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap());
+    support.sort_by(|&a, &b| w[b].abs().total_cmp(&w[a].abs()));
     let weights = support.iter().map(|&j| w[j]).collect();
     LassoPathPoint { lambda, support, weights }
 }

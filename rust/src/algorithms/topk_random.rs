@@ -37,14 +37,14 @@ impl TopK {
 /// commit of the k best, one reporting `eval` of the chosen set.
 pub struct TopKDriver {
     k: usize,
-    tracker: Option<RunTracker>,
+    tracker: RunTracker,
     value: f64,
     done: bool,
 }
 
 impl TopKDriver {
     pub fn new(k: usize) -> Self {
-        TopKDriver { k, tracker: Some(RunTracker::new("top_k")), value: 0.0, done: false }
+        TopKDriver { k, tracker: RunTracker::new("top_k"), value: 0.0, done: false }
     }
 }
 
@@ -58,7 +58,7 @@ impl SessionDriver for TopKDriver {
             return StepOutcome::Done;
         }
         self.done = true;
-        let tracker = self.tracker.as_mut().expect("driver not finished");
+        let tracker = &mut self.tracker;
         let n = session.objective().n();
         let k = self.k.min(n);
         let all: Vec<usize> = (0..n).collect();
@@ -77,9 +77,9 @@ impl SessionDriver for TopKDriver {
         StepOutcome::Done
     }
 
-    fn finish(mut self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
-        let tracker = self.tracker.take().expect("finish called once");
-        tracker.finish(session.set().to_vec(), self.value, false)
+    fn finish(self: Box<Self>, session: &mut SelectionSession<'_>) -> SelectionResult {
+        let this = *self;
+        this.tracker.finish(session.set().to_vec(), this.value, false)
     }
 }
 
@@ -108,19 +108,20 @@ impl RandomSelect {
     /// Mean value over `trials` random draws (the figures report RANDOM as
     /// an average since its variance is large).
     pub fn run_mean(&self, obj: &dyn Objective, rng: &mut Pcg64, trials: usize) -> SelectionResult {
-        let mut best: Option<SelectionResult> = None;
-        let mut sum = 0.0;
-        for _ in 0..trials.max(1) {
+        let trials = trials.max(1);
+        // the first trial runs unconditionally, so there is always a best
+        let mut best = self.run(obj, rng);
+        let mut sum = best.value;
+        for _ in 1..trials {
             let r = self.run(obj, rng);
             sum += r.value;
-            if best.as_ref().map(|b| r.value > b.value).unwrap_or(true) {
-                best = Some(r);
+            if r.value > best.value {
+                best = r;
             }
         }
-        let mut out = best.unwrap();
-        out.value = sum / trials.max(1) as f64;
-        out.algorithm = "random_mean".into();
-        out
+        best.value = sum / trials as f64;
+        best.algorithm = "random_mean".into();
+        best
     }
 }
 

@@ -1,0 +1,169 @@
+//! The committed exemption file, `audit.allow` at the repo root.
+//!
+//! Policy: **shrink-only**. Every entry is an explicit, justified
+//! exception reviewed like code; a new violation means fixing the code,
+//! not growing this file. Stale entries (matching nothing) are hard
+//! errors, so the list cannot silently outlive the code it excuses.
+//!
+//! Grammar (one entry per line; `#` starts a comment):
+//!
+//! ```text
+//! allow <rule> <path> <needle…> -- <justification>
+//! unsafe-file <path> -- <justification>
+//! ```
+//!
+//! An `allow` entry suppresses violations of `<rule>` in `<path>` whose
+//! raw source line contains `<needle…>` (everything between the path and
+//! the ` -- ` separator, so needles may contain spaces). An `unsafe-file`
+//! entry admits `<path>` to the `unsafe` file allowlist — `// SAFETY:`
+//! comments are still required per block there.
+
+/// One `allow` line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllowEntry {
+    /// Rule name this entry suppresses (see [`super::rules`]).
+    pub rule: String,
+    /// Repo-relative path (forward slashes) the entry applies to.
+    pub path: String,
+    /// Substring the flagged raw source line must contain.
+    pub needle: String,
+    /// Why the exemption is sound (required).
+    pub justification: String,
+    /// 1-based line in `audit.allow` (for stale-entry diagnostics).
+    pub line: usize,
+}
+
+/// The parsed `audit.allow` file.
+#[derive(Debug, Default, Clone)]
+pub struct Allowlist {
+    /// `allow` entries, in file order.
+    pub allows: Vec<AllowEntry>,
+    /// `unsafe-file` entries: `(path, justification, line)`.
+    pub unsafe_files: Vec<(String, String, usize)>,
+}
+
+impl Allowlist {
+    /// Total entry count (the acceptance budget is ≤ 10).
+    pub fn len(&self) -> usize {
+        self.allows.len() + self.unsafe_files.len()
+    }
+
+    /// Whether the list has no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Parse `audit.allow` text. Malformed lines are errors, not warnings —
+/// a typo must not silently disable an exemption (the stale-entry check
+/// would catch it later, but with a worse message) or, worse, widen one.
+pub fn parse(text: &str) -> Result<Allowlist, String> {
+    let mut out = Allowlist::default();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (keyword, rest) = line
+            .split_once(char::is_whitespace)
+            .ok_or_else(|| bad(lineno, "missing fields", raw))?;
+        let (spec, justification) = rest
+            .split_once(" -- ")
+            .ok_or_else(|| bad(lineno, "missing ` -- <justification>`", raw))?;
+        let justification = justification.trim();
+        if justification.is_empty() {
+            return Err(bad(lineno, "empty justification", raw));
+        }
+        match keyword {
+            "allow" => {
+                let spec = spec.trim();
+                let (rule, rest) = spec
+                    .split_once(char::is_whitespace)
+                    .ok_or_else(|| bad(lineno, "allow needs `<rule> <path> <needle>`", raw))?;
+                let (path, needle) = rest
+                    .trim()
+                    .split_once(char::is_whitespace)
+                    .ok_or_else(|| bad(lineno, "allow needs a needle after the path", raw))?;
+                let needle = needle.trim();
+                if needle.is_empty() {
+                    return Err(bad(lineno, "empty needle", raw));
+                }
+                out.allows.push(AllowEntry {
+                    rule: rule.to_string(),
+                    path: path.to_string(),
+                    needle: needle.to_string(),
+                    justification: justification.to_string(),
+                    line: lineno,
+                });
+            }
+            "unsafe-file" => {
+                let path = spec.trim();
+                if path.is_empty() || path.contains(char::is_whitespace) {
+                    return Err(bad(lineno, "unsafe-file needs exactly one path", raw));
+                }
+                out.unsafe_files.push((
+                    path.to_string(),
+                    justification.to_string(),
+                    lineno,
+                ));
+            }
+            other => {
+                return Err(bad(
+                    lineno,
+                    &format!("unknown keyword `{other}` (allow | unsafe-file)"),
+                    raw,
+                ));
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn bad(line: usize, what: &str, raw: &str) -> String {
+    format!("audit.allow:{line}: {what}: `{raw}`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_both_entry_kinds() {
+        let text = "\
+# comment
+allow no-panic rust/src/a.rs expect(\"pool shut down\") -- fatal invariant
+
+unsafe-file rust/src/linalg/simd.rs -- std::arch kernels
+";
+        let al = parse(text).expect("parses");
+        assert_eq!(al.len(), 2);
+        assert_eq!(al.allows[0].rule, "no-panic");
+        assert_eq!(al.allows[0].path, "rust/src/a.rs");
+        assert_eq!(al.allows[0].needle, "expect(\"pool shut down\")");
+        assert_eq!(al.allows[0].justification, "fatal invariant");
+        assert_eq!(al.unsafe_files[0].0, "rust/src/linalg/simd.rs");
+    }
+
+    #[test]
+    fn needles_keep_interior_spaces() {
+        let al = parse("allow no-panic rust/src/a.rs at least one guess -- why\n")
+            .expect("parses");
+        assert_eq!(al.allows[0].needle, "at least one guess");
+    }
+
+    #[test]
+    fn malformed_lines_are_errors() {
+        assert!(parse("allow no-panic rust/src/a.rs needle\n").is_err(), "no justification");
+        assert!(parse("allow no-panic -- j\n").is_err(), "missing fields");
+        assert!(parse("permit x y z -- j\n").is_err(), "unknown keyword");
+        assert!(parse("unsafe-file a.rs b.rs -- j\n").is_err(), "two paths");
+        assert!(parse("allow no-panic rust/src/a.rs x --  \n").is_err(), "empty justification");
+    }
+
+    #[test]
+    fn empty_and_comment_only_is_empty() {
+        let al = parse("# nothing\n\n").expect("parses");
+        assert!(al.is_empty());
+    }
+}

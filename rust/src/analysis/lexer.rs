@@ -1,0 +1,517 @@
+//! A masking lexer for Rust source: just enough tokenization to make
+//! substring scanning sound.
+//!
+//! Pattern rules over raw source text would trip on `panic!` inside a doc
+//! comment or a string literal. [`mask`] walks the source once and returns
+//! a [`MaskedSource`]: the text with every comment body and every string /
+//! char literal's *contents* replaced by spaces (delimiters and newlines
+//! kept, so byte offsets and line numbers are unchanged), plus the side
+//! tables the rules need — per-line comment text (for `// SAFETY:`
+//! checks), string literals with their lines (for the wire-format rule),
+//! and which lines fall inside `#[cfg(test)]`-gated items (brace-matched
+//! on the masked text, where every `{`/`}` is real code).
+//!
+//! Handled syntax: line comments, nested block comments, string literals
+//! with escapes, raw strings `r"…"` / `r#"…"#` (any hash depth, `b`
+//! prefixes too), char and byte literals, and lifetimes (`'a` is not a
+//! char literal). This is not a full lexer — it does not need to be; it
+//! only has to agree with rustc about *where code is*.
+
+/// The output of [`mask`]: scan-ready text plus side tables.
+pub struct MaskedSource {
+    /// Source with comment bodies and literal contents blanked; identical
+    /// length and line structure to the input.
+    pub masked: String,
+    /// Concatenated comment text per line (1-based line - 1).
+    pub comments: Vec<String>,
+    /// String-literal contents (unmasked) with their 1-based start lines.
+    pub strings: Vec<(usize, String)>,
+    /// Per line (1-based line - 1): inside a `#[cfg(test)]`-gated brace
+    /// span.
+    pub test_lines: Vec<bool>,
+}
+
+impl MaskedSource {
+    /// Whether 1-based `line` is inside a `#[cfg(test)]` item.
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_lines.get(line.saturating_sub(1)).copied().unwrap_or(false)
+    }
+
+    /// Comment text on 1-based `line` ("" when none).
+    pub fn comment_on(&self, line: usize) -> &str {
+        self.comments
+            .get(line.saturating_sub(1))
+            .map(String::as_str)
+            .unwrap_or("")
+    }
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Code,
+    LineComment,
+    BlockComment { depth: usize },
+    Str,
+    RawStr { hashes: usize },
+    Char,
+}
+
+/// Blank comments and literal contents out of `source` (see module docs).
+pub fn mask(source: &str) -> MaskedSource {
+    let bytes = source.as_bytes();
+    let mut masked = Vec::with_capacity(bytes.len());
+    let nlines = source.lines().count().max(1);
+    let mut comments = vec![String::new(); nlines];
+    let mut strings: Vec<(usize, String)> = Vec::new();
+    let mut cur_string = String::new();
+    let mut cur_string_line = 0usize;
+
+    let mut state = State::Code;
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let b = bytes[i];
+        let nxt = bytes.get(i + 1).copied().unwrap_or(0);
+        match state {
+            State::Code => {
+                if b == b'/' && nxt == b'/' {
+                    state = State::LineComment;
+                    masked.push(b' ');
+                    masked.push(b' ');
+                    i += 2;
+                    continue;
+                }
+                if b == b'/' && nxt == b'*' {
+                    state = State::BlockComment { depth: 1 };
+                    masked.push(b' ');
+                    masked.push(b' ');
+                    i += 2;
+                    continue;
+                }
+                // raw strings: r"…", r#"…"#, br#"…"# — the prefix byte(s)
+                // must not be part of an identifier (`attr"x"` is not raw)
+                let ident_before = i > 0 && is_ident_byte(bytes[i - 1]);
+                if !ident_before && (b == b'r' || (b == b'b' && nxt == b'r')) {
+                    let start = if b == b'b' { i + 2 } else { i + 1 };
+                    let mut hashes = 0usize;
+                    let mut j = start;
+                    while bytes.get(j) == Some(&b'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if bytes.get(j) == Some(&b'"') {
+                        masked.extend_from_slice(&bytes[i..=j]);
+                        i = j + 1;
+                        cur_string.clear();
+                        cur_string_line = line;
+                        state = State::RawStr { hashes };
+                        continue;
+                    }
+                }
+                if !ident_before && b == b'b' && nxt == b'"' {
+                    masked.push(b);
+                    masked.push(nxt);
+                    i += 2;
+                    cur_string.clear();
+                    cur_string_line = line;
+                    state = State::Str;
+                    continue;
+                }
+                if b == b'"' {
+                    masked.push(b);
+                    i += 1;
+                    cur_string.clear();
+                    cur_string_line = line;
+                    state = State::Str;
+                    continue;
+                }
+                if b == b'\'' || (b == b'b' && nxt == b'\'' && !ident_before) {
+                    let q = if b == b'b' { i + 1 } else { i };
+                    // char literal iff an escape follows, or the quote two
+                    // chars (one utf-8 scalar) later closes it; otherwise a
+                    // lifetime
+                    let after = bytes.get(q + 1).copied().unwrap_or(0);
+                    let is_char = after == b'\\'
+                        || closes_char_literal(bytes, q + 1);
+                    if is_char {
+                        masked.extend_from_slice(&bytes[i..=q]);
+                        i = q + 1;
+                        state = State::Char;
+                        continue;
+                    }
+                    masked.push(b);
+                    i += 1;
+                    continue;
+                }
+                masked.push(b);
+                if b == b'\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            State::LineComment => {
+                if b == b'\n' {
+                    masked.push(b);
+                    line += 1;
+                    state = State::Code;
+                } else {
+                    if line <= comments.len() {
+                        push_char(&mut comments[line - 1], bytes, i);
+                    }
+                    masked.push(b' ');
+                }
+                i += 1;
+            }
+            State::BlockComment { depth } => {
+                if b == b'/' && nxt == b'*' {
+                    state = State::BlockComment { depth: depth + 1 };
+                    masked.push(b' ');
+                    masked.push(b' ');
+                    i += 2;
+                    continue;
+                }
+                if b == b'*' && nxt == b'/' {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment { depth: depth - 1 }
+                    };
+                    masked.push(b' ');
+                    masked.push(b' ');
+                    i += 2;
+                    continue;
+                }
+                if b == b'\n' {
+                    masked.push(b);
+                    line += 1;
+                } else {
+                    if line <= comments.len() {
+                        push_char(&mut comments[line - 1], bytes, i);
+                    }
+                    masked.push(b' ');
+                }
+                i += 1;
+            }
+            State::Str => {
+                if b == b'\\' {
+                    masked.push(b' ');
+                    masked.push(b' ');
+                    push_char(&mut cur_string, bytes, i);
+                    push_char(&mut cur_string, bytes, i + 1);
+                    if nxt == b'\n' {
+                        line += 1;
+                        // keep the newline so line numbers stay aligned
+                        *masked.last_mut().unwrap_or(&mut 0) = b'\n';
+                    }
+                    i += 2;
+                    continue;
+                }
+                if b == b'"' {
+                    masked.push(b);
+                    strings.push((cur_string_line, std::mem::take(&mut cur_string)));
+                    state = State::Code;
+                    i += 1;
+                    continue;
+                }
+                push_char(&mut cur_string, bytes, i);
+                if b == b'\n' {
+                    masked.push(b);
+                    line += 1;
+                } else {
+                    masked.push(b' ');
+                }
+                i += 1;
+            }
+            State::RawStr { hashes } => {
+                if b == b'"' {
+                    let mut ok = true;
+                    for h in 0..hashes {
+                        if bytes.get(i + 1 + h) != Some(&b'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        masked.push(b);
+                        for _ in 0..hashes {
+                            masked.push(b'#');
+                        }
+                        strings.push((
+                            cur_string_line,
+                            std::mem::take(&mut cur_string),
+                        ));
+                        state = State::Code;
+                        i += 1 + hashes;
+                        continue;
+                    }
+                }
+                push_char(&mut cur_string, bytes, i);
+                if b == b'\n' {
+                    masked.push(b);
+                    line += 1;
+                } else {
+                    masked.push(b' ');
+                }
+                i += 1;
+            }
+            State::Char => {
+                if b == b'\\' {
+                    masked.push(b' ');
+                    masked.push(b' ');
+                    i += 2;
+                    continue;
+                }
+                if b == b'\'' {
+                    masked.push(b);
+                    state = State::Code;
+                    i += 1;
+                    continue;
+                }
+                masked.push(b' ');
+                if b == b'\n' {
+                    // malformed literal; keep line accounting sane
+                    *masked.last_mut().unwrap_or(&mut 0) = b'\n';
+                    line += 1;
+                }
+                i += 1;
+            }
+        }
+    }
+
+    let masked = String::from_utf8_lossy(&masked).into_owned();
+    let test_lines = mark_test_lines(&masked, nlines);
+    MaskedSource { masked, comments, strings, test_lines }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Whether the bytes starting at `i` are one character followed by a
+/// closing single quote (i.e. `'x'` rather than a lifetime `'x`).
+fn closes_char_literal(bytes: &[u8], i: usize) -> bool {
+    let Some(&first) = bytes.get(i) else { return false };
+    if first == b'\'' {
+        return false;
+    }
+    // utf-8 scalar length from the lead byte
+    let len = match first {
+        b if b < 0x80 => 1,
+        b if b >= 0xF0 => 4,
+        b if b >= 0xE0 => 3,
+        b if b >= 0xC0 => 2,
+        _ => 1,
+    };
+    bytes.get(i + len) == Some(&b'\'')
+}
+
+fn push_char(dst: &mut String, bytes: &[u8], i: usize) {
+    if let Some(&b) = bytes.get(i) {
+        // rule needles are ascii; non-ascii comment/string bytes only need
+        // to survive as *something*
+        dst.push(if b < 0x80 { b as char } else { '?' });
+    }
+}
+
+/// Mark every line covered by a `#[cfg(test)]`-gated braced item, by
+/// brace-matching on the masked text (where braces are always code).
+fn mark_test_lines(masked: &str, nlines: usize) -> Vec<bool> {
+    let mut out = vec![false; nlines];
+    let bytes = masked.as_bytes();
+    let mut search = 0usize;
+    while let Some(rel) = masked[search..].find("cfg(test)") {
+        let at = search + rel;
+        search = at + 1;
+        // must sit inside an attribute: look back for `#[` or `#![` with
+        // only attribute-ish bytes between
+        if !inside_attribute(masked, at) {
+            continue;
+        }
+        // walk forward to the item's opening brace; a `;` first means a
+        // braceless item (e.g. `mod tests;`) — no span to mark
+        let mut j = at;
+        let mut attr_depth = 0usize;
+        let mut opened = None;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'[' => attr_depth += 1,
+                b']' => attr_depth = attr_depth.saturating_sub(1),
+                b'{' if attr_depth == 0 => {
+                    opened = Some(j);
+                    break;
+                }
+                b';' if attr_depth == 0 => break,
+                b'=' if attr_depth == 0 => {
+                    // `#[cfg(test)] const X: … = …;` — still braceless for
+                    // our purposes (any braces belong to the initializer,
+                    // which the forward walk below would handle anyway)
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = opened else { continue };
+        let mut depth = 0usize;
+        let mut k = open;
+        let mut close = bytes.len();
+        while k < bytes.len() {
+            match bytes[k] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = k;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let start_line = line_of(bytes, at);
+        let end_line = line_of(bytes, close.min(bytes.len() - 1));
+        for l in start_line..=end_line.min(nlines) {
+            out[l - 1] = true;
+        }
+    }
+    out
+}
+
+/// Whether the `cfg(test)` at byte `at` sits inside `#[…]` / `#![…]`.
+fn inside_attribute(masked: &str, at: usize) -> bool {
+    let head = &masked.as_bytes()[..at];
+    let mut j = head.len();
+    while j > 0 {
+        j -= 1;
+        match head[j] {
+            b'[' => {
+                // allow `#[` and `#![`
+                if j >= 1 && head[j - 1] == b'#' {
+                    return true;
+                }
+                if j >= 2 && head[j - 1] == b'!' && head[j - 2] == b'#' {
+                    return true;
+                }
+                return false;
+            }
+            b']' | b'{' | b'}' | b';' => return false,
+            _ => {}
+        }
+    }
+    false
+}
+
+fn line_of(bytes: &[u8], at: usize) -> usize {
+    1 + bytes[..at].iter().filter(|&&b| b == b'\n').count()
+}
+
+/// The masked text with all whitespace removed, plus a map from each
+/// squeezed byte back to its 1-based source line — this is what makes
+/// multi-line patterns (`.write()\n    .unwrap()`) one substring search.
+pub struct Squeezed {
+    pub text: String,
+    pub lines: Vec<usize>,
+}
+
+/// Squeeze `masked` (see [`Squeezed`]).
+pub fn squeeze(masked: &str) -> Squeezed {
+    let mut text = String::with_capacity(masked.len());
+    let mut lines = Vec::with_capacity(masked.len());
+    let mut line = 1usize;
+    for ch in masked.chars() {
+        if ch == '\n' {
+            line += 1;
+            continue;
+        }
+        if ch.is_whitespace() {
+            continue;
+        }
+        text.push(ch);
+        lines.push(line);
+    }
+    Squeezed { text, lines }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let x = \"panic!(boom)\"; // panic!(no)\nlet y = 1;\n";
+        let m = mask(src);
+        assert!(!m.masked.contains("panic!"), "{}", m.masked);
+        assert_eq!(m.masked.len(), src.len());
+        assert_eq!(m.strings.len(), 1);
+        assert_eq!(m.strings[0], (1, "panic!(boom)".to_string()));
+        assert!(m.comment_on(1).contains("panic!(no)"));
+    }
+
+    #[test]
+    fn raw_strings_any_hash_depth() {
+        let src = "let s = r#\"unsafe { \"quoted\" }\"#; unsafe_marker();\n";
+        let m = mask(src);
+        assert!(!m.masked.contains("unsafe {"));
+        assert!(m.masked.contains("unsafe_marker"));
+        assert_eq!(m.strings[0].1, "unsafe { \"quoted\" }");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }\n";
+        let m = mask(src);
+        assert!(m.masked.contains("fn f<'a>(x: &'a str)"));
+        assert!(!m.masked.contains("'x'"), "char contents blanked");
+    }
+
+    #[test]
+    fn escaped_quote_in_char_literal() {
+        let src = "let q = '\\''; let w = '\\\\'; code();\n";
+        let m = mask(src);
+        assert!(m.masked.contains("code()"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* a /* panic!() */ still comment */ real();\n";
+        let m = mask(src);
+        assert!(!m.masked.contains("panic!"));
+        assert!(m.masked.contains("real()"));
+    }
+
+    #[test]
+    fn cfg_test_span_is_marked() {
+        let src = "fn live() { x.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { y.unwrap(); }\n\
+                   }\n\
+                   fn after() {}\n";
+        let m = mask(src);
+        assert!(!m.in_test(1));
+        assert!(m.in_test(2));
+        assert!(m.in_test(3));
+        assert!(m.in_test(4));
+        assert!(m.in_test(5));
+        assert!(!m.in_test(6));
+    }
+
+    #[test]
+    fn cfg_test_in_string_does_not_mark() {
+        let src = "let s = \"#[cfg(test)]\";\nfn f() { g.unwrap(); }\n";
+        let m = mask(src);
+        assert!(!m.in_test(2));
+    }
+
+    #[test]
+    fn squeeze_maps_lines_across_breaks() {
+        let src = "a.write()\n    .unwrap();\n";
+        let m = mask(src);
+        let sq = squeeze(&m.masked);
+        let at = sq.text.find(".write().unwrap()").expect("joined");
+        assert_eq!(sq.lines[at], 1);
+        let dot = sq.text.find(".unwrap()").expect("second");
+        assert_eq!(sq.lines[dot], 2);
+    }
+}

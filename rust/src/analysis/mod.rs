@@ -1,0 +1,223 @@
+//! `dash audit`: the in-tree invariant auditor.
+//!
+//! The serving stack's written rules — no panic paths in library code, no
+//! raw poisoning locks, `unsafe` only in audited files with per-block
+//! `// SAFETY:` comments, sorted-key wire frames — were policed by hand
+//! for three PRs running. This module turns them into machine checks the
+//! repo runs on itself: a dependency-free lexer ([`lexer`]), the rule
+//! scanners ([`rules`]), and a committed, shrink-only exemption file
+//! ([`allowlist`], `audit.allow` at the repo root).
+//!
+//! Entry points: [`audit_root`] walks `rust/src`, `rust/tests`,
+//! `rust/benches`, and `examples` under a repo root and applies
+//! `audit.allow`; [`audit_sources`] is the pure core over in-memory
+//! `(path, contents)` pairs (what the self-tests feed with planted
+//! violations). The CLI front is `dash audit [--root DIR]`, a required CI
+//! gate; `tests/audit.rs` also runs [`audit_root`] against this very
+//! repository, so `cargo test` enforces the invariants with no CI in the
+//! loop.
+
+pub mod allowlist;
+pub mod lexer;
+pub mod rules;
+
+pub use allowlist::{parse as parse_allowlist, AllowEntry, Allowlist};
+pub use rules::Violation;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// Directories (repo-relative) the auditor scans for `.rs` files.
+pub const SCAN_DIRS: &[&str] =
+    &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Name of the exemption file at the repo root.
+pub const ALLOW_FILE: &str = "audit.allow";
+
+/// The result of an audit pass.
+#[derive(Debug, Default)]
+pub struct AuditOutcome {
+    /// Violations that survived the allowlist, in path/line order.
+    pub violations: Vec<Violation>,
+    /// Violations suppressed by an `allow` entry, with the entry's
+    /// 1-based line in `audit.allow`.
+    pub suppressed: Vec<(Violation, usize)>,
+    /// Diagnostics for allowlist entries that matched nothing — hard
+    /// errors under the shrink-only policy.
+    pub stale: Vec<String>,
+    /// Number of files scanned.
+    pub files_scanned: usize,
+}
+
+impl AuditOutcome {
+    /// Whether the tree passes: no surviving violations, no stale entries.
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty() && self.stale.is_empty()
+    }
+
+    /// Human-readable report (diagnostics plus a one-line summary).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&v.to_string());
+            out.push('\n');
+        }
+        for s in &self.stale {
+            out.push_str(s);
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "audit: {} file(s), {} violation(s), {} suppressed by \
+             audit.allow, {} stale allowlist entr{}\n",
+            self.files_scanned,
+            self.violations.len(),
+            self.suppressed.len(),
+            self.stale.len(),
+            if self.stale.len() == 1 { "y" } else { "ies" },
+        ));
+        out
+    }
+}
+
+/// Audit in-memory sources (repo-relative path with forward slashes,
+/// contents) against a parsed allowlist. Pure: the self-tests drive this
+/// with planted violations.
+pub fn audit_sources(
+    files: &[(String, String)],
+    allow: &Allowlist,
+) -> AuditOutcome {
+    let unsafe_files: BTreeSet<String> =
+        allow.unsafe_files.iter().map(|(p, _, _)| p.clone()).collect();
+    let mut hits = vec![0usize; allow.allows.len()];
+    let mut unsafe_hits = vec![false; allow.unsafe_files.len()];
+    let mut outcome = AuditOutcome { files_scanned: files.len(), ..Default::default() };
+
+    for (rel, source) in files {
+        for v in rules::scan_file(rel, source, &unsafe_files) {
+            let matched = allow.allows.iter().position(|e| {
+                e.rule == v.rule && e.path == v.file && v.excerpt.contains(&e.needle)
+            });
+            match matched {
+                Some(i) => {
+                    hits[i] += 1;
+                    outcome.suppressed.push((v, allow.allows[i].line));
+                }
+                None => outcome.violations.push(v),
+            }
+        }
+        // an unsafe-file entry is "used" when its file still has unsafe
+        for (i, (p, _, _)) in allow.unsafe_files.iter().enumerate() {
+            if p == rel && has_unsafe(source) {
+                unsafe_hits[i] = true;
+            }
+        }
+    }
+
+    for (i, e) in allow.allows.iter().enumerate() {
+        if hits[i] == 0 {
+            outcome.stale.push(format!(
+                "audit.allow:{}: stale entry (matches nothing — the code it \
+                 excused is gone; delete the line): allow {} {} {}",
+                e.line, e.rule, e.path, e.needle
+            ));
+        }
+    }
+    for (i, (p, _, line)) in allow.unsafe_files.iter().enumerate() {
+        if !unsafe_hits[i] {
+            outcome.stale.push(format!(
+                "audit.allow:{line}: stale unsafe-file entry ({p} has no \
+                 unsafe code or was not scanned; delete the line)"
+            ));
+        }
+    }
+
+    outcome
+        .violations
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    outcome
+}
+
+/// Whether `source` contains the `unsafe` keyword in code (not comments
+/// or strings).
+fn has_unsafe(source: &str) -> bool {
+    let masked = lexer::mask(source);
+    let bytes = masked.masked.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = masked.masked[from..].find("unsafe") {
+        let at = from + rel;
+        from = at + 1;
+        let before = at == 0 || !ident(bytes[at - 1]);
+        let after = bytes.get(at + 6).map(|&b| !ident(b)).unwrap_or(true);
+        if before && after {
+            return true;
+        }
+    }
+    false
+}
+
+fn ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Audit the repository at `root`: read `root/audit.allow` (absent =
+/// empty), walk [`SCAN_DIRS`], scan every `.rs` file. IO problems are
+/// `Err`; rule findings are in the returned outcome.
+pub fn audit_root(root: &Path) -> Result<AuditOutcome, String> {
+    let allow_path = root.join(ALLOW_FILE);
+    let allow = if allow_path.exists() {
+        let text = std::fs::read_to_string(&allow_path)
+            .map_err(|e| format!("reading {}: {e}", allow_path.display()))?;
+        allowlist::parse(&text)?
+    } else {
+        Allowlist::default()
+    };
+    let mut files = Vec::new();
+    for dir in SCAN_DIRS {
+        let base = root.join(dir);
+        if !base.is_dir() {
+            continue;
+        }
+        let mut paths = Vec::new();
+        collect_rs(&base, &mut paths)?;
+        for p in paths {
+            let source = std::fs::read_to_string(&p)
+                .map_err(|e| format!("reading {}: {e}", p.display()))?;
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            files.push((rel, source));
+        }
+    }
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(audit_sources(&files, &allow))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("listing {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("listing {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Walk up from `start` to the first directory that looks like this
+/// repository's root (has `rust/src` and a `Cargo.toml`).
+pub fn find_repo_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = Some(start.to_path_buf());
+    while let Some(d) = dir {
+        if d.join("rust/src").is_dir() && d.join("Cargo.toml").is_file() {
+            return Some(d);
+        }
+        dir = d.parent().map(Path::to_path_buf);
+    }
+    None
+}

@@ -1,0 +1,316 @@
+//! The project-invariant lints. Each rule scans one file's
+//! [`MaskedSource`](super::lexer::MaskedSource) (comments and literals
+//! already blanked) and reports [`Violation`]s; the allowlist layer in
+//! [`super::allowlist`] decides which survive.
+//!
+//! | rule | scope | invariant |
+//! |------|-------|-----------|
+//! | `no-panic` | `rust/src/`, outside `#[cfg(test)]` | no `.unwrap()` / `.expect()` / `panic!` / `todo!` / `unreachable!` — library code answers with `SelectError`, it does not abort a serving thread |
+//! | `unsafe-code` | everywhere | `unsafe` only in files on the `unsafe-file` allowlist, and every such line carries a `// SAFETY:` comment on it or within the 8 lines above |
+//! | `raw-lock` | everywhere but `util/sync.rs` | no `std::sync::Mutex`/`RwLock`/`Condvar`/guards/`PoisonError` — locks go through the poison-recovering, order-tracked `util::sync` wrappers |
+//! | `lock-unwrap` | everywhere | no `.lock().unwrap()` / `.read().expect(…)` etc., even in tests — a poisoned lock must recover, not cascade |
+//! | `wire-sorted-keys` | wire-codec files | no hand-assembled JSON object literals — frames are emitted via `util::json::Json`, whose `BTreeMap` keeps keys sorted (the byte-identity contract) |
+//!
+//! Matching runs on whitespace-squeezed text with a per-byte line map, so
+//! a call chain split across lines (`.write()\n    .unwrap()`) is still
+//! one match, reported at the line the chain starts on.
+
+use super::lexer::{mask, squeeze, MaskedSource, Squeezed};
+use std::collections::BTreeSet;
+
+/// Rule names (also the first token of `allow` entries in `audit.allow`).
+pub const NO_PANIC: &str = "no-panic";
+pub const UNSAFE_CODE: &str = "unsafe-code";
+pub const RAW_LOCK: &str = "raw-lock";
+pub const LOCK_UNWRAP: &str = "lock-unwrap";
+pub const WIRE_SORTED_KEYS: &str = "wire-sorted-keys";
+
+/// Files whose string literals must not hand-assemble JSON frames.
+pub const WIRE_FILES: &[&str] = &[
+    "rust/src/coordinator/wire.rs",
+    "rust/src/coordinator/net.rs",
+    "rust/src/coordinator/router.rs",
+    "rust/src/coordinator/store.rs",
+];
+
+/// The one module allowed to name raw `std::sync` lock types.
+pub const SYNC_WRAPPER_FILE: &str = "rust/src/util/sync.rs";
+
+/// One finding: `file:line`, the rule, a human message, and the trimmed
+/// source line (the allowlist matches needles against the raw line).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    pub excerpt: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}\n    {}",
+            self.file, self.line, self.rule, self.message, self.excerpt
+        )
+    }
+}
+
+/// Scan one file. `rel` is the repo-relative path with forward slashes;
+/// `unsafe_files` is the set of `unsafe-file` allowlist paths.
+pub fn scan_file(
+    rel: &str,
+    source: &str,
+    unsafe_files: &BTreeSet<String>,
+) -> Vec<Violation> {
+    let masked = mask(source);
+    let sq = squeeze(&masked.masked);
+    let raw_lines: Vec<&str> = source.lines().collect();
+    let mut out = Vec::new();
+
+    let mut report = |rule: &'static str, line: usize, message: String| {
+        let excerpt = raw_lines
+            .get(line.saturating_sub(1))
+            .map(|l| truncate(l.trim()))
+            .unwrap_or_default();
+        Violation { rule, file: rel.to_string(), line, message, excerpt }
+    };
+
+    // ---- lock-unwrap: everywhere, tests included -------------------------
+    const GUARD_CALLS: &[&str] = &[".lock()", ".read()", ".write()", ".try_lock()"];
+    for guard in GUARD_CALLS {
+        for tail in &[".unwrap()", ".expect("] {
+            let pat = format!("{guard}{tail}");
+            for at in find_all(&sq.text, &pat) {
+                out.push(report(
+                    LOCK_UNWRAP,
+                    sq.lines[at],
+                    format!(
+                        "`{pat}` — wrapper locks recover poison and return \
+                         guards directly; use crate::util::sync"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // ---- no-panic: rust/src only, outside #[cfg(test)] -------------------
+    if rel.starts_with("rust/src/") {
+        for pat in &[".unwrap()", ".expect("] {
+            for at in find_all(&sq.text, pat) {
+                if masked.in_test(sq.lines[at]) {
+                    continue;
+                }
+                // already reported by lock-unwrap above
+                if GUARD_CALLS.iter().any(|g| sq.text[..at].ends_with(g)) {
+                    continue;
+                }
+                out.push(report(
+                    NO_PANIC,
+                    sq.lines[at],
+                    format!(
+                        "`{pat}` in non-test library code — return a \
+                         SelectError (or restructure so the case cannot \
+                         arise)"
+                    ),
+                ));
+            }
+        }
+        for mac in &["panic!(", "todo!(", "unreachable!("] {
+            for at in find_all(&sq.text, mac) {
+                if masked.in_test(sq.lines[at]) || !boundary_before(&sq.text, at) {
+                    continue;
+                }
+                out.push(report(
+                    NO_PANIC,
+                    sq.lines[at],
+                    format!(
+                        "`{mac})` in non-test library code — a serving \
+                         thread must answer, not abort"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // ---- unsafe-code: everywhere ----------------------------------------
+    for line in unsafe_lines(&masked) {
+        if !unsafe_files.contains(rel) {
+            out.push(report(
+                UNSAFE_CODE,
+                line,
+                "`unsafe` outside the audited unsafe-file allowlist".into(),
+            ));
+            continue;
+        }
+        if !has_safety_comment(&masked, line) {
+            out.push(report(
+                UNSAFE_CODE,
+                line,
+                "`unsafe` without a `// SAFETY:` comment on the line or \
+                 within the 8 lines above"
+                    .into(),
+            ));
+        }
+    }
+
+    // ---- raw-lock: everywhere but the wrapper module ---------------------
+    if rel != SYNC_WRAPPER_FILE {
+        scan_raw_lock(&sq, &mut out, &mut report);
+    }
+
+    // ---- wire-sorted-keys: wire-codec files ------------------------------
+    if WIRE_FILES.contains(&rel) {
+        for (line, content) in &masked.strings {
+            if masked.in_test(*line) {
+                continue;
+            }
+            // literal contents keep their escape bytes, so a JSON object
+            // opener is spelled `{"` in raw strings and `{\"` in ordinary
+            // ones — match both
+            if content.contains("{\"") || content.contains("{\\\"") {
+                out.push(report(
+                    WIRE_SORTED_KEYS,
+                    *line,
+                    "hand-assembled JSON object literal in a wire-codec \
+                     file — emit frames via util::json::Json, whose BTreeMap \
+                     keeps keys sorted (the byte-identity contract)"
+                        .into(),
+                ));
+            }
+        }
+    }
+
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// `std::sync` lock types that must not appear outside the wrapper module.
+const BANNED_SYNC: &[&str] = &[
+    "Mutex",
+    "MutexGuard",
+    "RwLock",
+    "RwLockReadGuard",
+    "RwLockWriteGuard",
+    "Condvar",
+    "PoisonError",
+];
+
+fn scan_raw_lock(
+    sq: &Squeezed,
+    out: &mut Vec<Violation>,
+    report: &mut impl FnMut(&'static str, usize, String) -> Violation,
+) {
+    let msg = |tok: &str| {
+        format!(
+            "raw `std::sync::{tok}` — use the poison-recovering, \
+             order-tracked crate::util::sync wrappers"
+        )
+    };
+    // qualified paths: std::sync::Mutex, use std::sync::Mutex as …
+    for tok in BANNED_SYNC {
+        let pat = format!("std::sync::{tok}");
+        for at in find_all(&sq.text, &pat) {
+            if !ident_boundary_after(&sq.text, at + pat.len()) {
+                continue;
+            }
+            out.push(report(RAW_LOCK, sq.lines[at], msg(tok)));
+        }
+    }
+    // grouped imports: use std::sync::{…, Mutex, …}
+    for at in find_all(&sq.text, "std::sync::{") {
+        let open = at + "std::sync::{".len() - 1;
+        let Some(close) = matching_brace(&sq.text, open) else { continue };
+        let group = &sq.text[open + 1..close];
+        for tok in BANNED_SYNC {
+            for hit in find_all(group, tok) {
+                let before_ok = hit == 0
+                    || !is_ident_char(group.as_bytes()[hit - 1]);
+                let after_ok =
+                    ident_boundary_after(group, hit + tok.len());
+                if before_ok && after_ok {
+                    let pos = open + 1 + hit;
+                    out.push(report(RAW_LOCK, sq.lines[pos], msg(tok)));
+                }
+            }
+        }
+    }
+}
+
+/// 1-based lines (deduped) containing the keyword `unsafe` in code.
+fn unsafe_lines(masked: &MaskedSource) -> Vec<usize> {
+    let mut lines = BTreeSet::new();
+    let bytes = masked.masked.as_bytes();
+    for at in find_all(&masked.masked, "unsafe") {
+        let before_ok = at == 0 || !is_ident_char(bytes[at - 1]);
+        let after_ok = ident_boundary_after(&masked.masked, at + "unsafe".len());
+        if before_ok && after_ok {
+            let line =
+                1 + bytes[..at].iter().filter(|&&b| b == b'\n').count();
+            lines.insert(line);
+        }
+    }
+    lines.into_iter().collect()
+}
+
+/// `// SAFETY:` on the line itself or within the 8 lines above it.
+fn has_safety_comment(masked: &MaskedSource, line: usize) -> bool {
+    let lo = line.saturating_sub(8).max(1);
+    (lo..=line).any(|l| {
+        let c = masked.comment_on(l);
+        c.contains("SAFETY") || c.contains("Safety:")
+    })
+}
+
+fn find_all(haystack: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = haystack[from..].find(needle) {
+        out.push(from + rel);
+        from += rel + 1;
+    }
+    out
+}
+
+fn is_ident_char(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn boundary_before(text: &str, at: usize) -> bool {
+    at == 0 || !is_ident_char(text.as_bytes()[at - 1])
+}
+
+fn ident_boundary_after(text: &str, end: usize) -> bool {
+    text.as_bytes().get(end).map(|&b| !is_ident_char(b)).unwrap_or(true)
+}
+
+fn matching_brace(text: &str, open: usize) -> Option<usize> {
+    let bytes = text.as_bytes();
+    let mut depth = 0usize;
+    for (i, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn truncate(line: &str) -> String {
+    if line.len() <= 120 {
+        line.to_string()
+    } else {
+        let mut end = 117;
+        while !line.is_char_boundary(end) {
+            end -= 1;
+        }
+        format!("{}...", &line[..end])
+    }
+}

@@ -84,7 +84,7 @@ impl Bench {
         };
         println!("{}", report.line());
         self.reports.push(report);
-        self.reports.last().unwrap()
+        &self.reports[self.reports.len() - 1]
     }
 
     /// Record an already-measured value (for end-to-end numbers computed by

@@ -21,26 +21,18 @@
 //! handed, every submitter waiting on that batch gets a typed
 //! [`SelectError`] reply instead of a hung channel or a silently dropped
 //! answer — and the queue itself stays serviceable for the next batch
-//! (poisoned internal locks are recovered, since every guarded region
-//! leaves the data structurally valid).
+//! (poisoned internal locks are recovered by the `util::sync` wrappers,
+//! since every guarded region leaves the data structurally valid).
 
 use crate::coordinator::api::SelectError;
 use crate::objectives::ObjectiveState;
 use crate::oracle::{BatchExecutor, GainCache};
+use crate::util::sync::Mutex;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
-
-/// Lock with poison recovery: a panic in a previous holder (the
-/// caller-supplied flush function, most likely) leaves the data intact —
-/// every guarded region here either fully completes or mutates nothing —
-/// so the queue keeps serving rather than cascading the panic to every
-/// later submitter.
-fn recover<T>(lock: &Mutex<T>) -> MutexGuard<'_, T> {
-    lock.lock().unwrap_or_else(PoisonError::into_inner)
-}
 
 /// Configuration for [`BatchQueue`].
 #[derive(Debug, Clone)]
@@ -129,9 +121,11 @@ impl BatchQueue {
         });
         let served_for_flush = Arc::clone(&served);
         let mut queue = Self::new(cfg, move |items: &[usize]| {
-            // lock order: state → cache (matches `insert`)
-            let st = recover(&served_for_flush.state);
-            let mut memo = recover(&served_for_flush.cache);
+            // lock order: state → cache (matches `insert`; the wrapper's
+            // lock-order detector checks this invariant in instrumented
+            // builds)
+            let st = served_for_flush.state.lock();
+            let mut memo = served_for_flush.cache.lock();
             let (vals, _fresh) = exec.cached_gains(&mut memo, &**st, items);
             vals
         });
@@ -167,9 +161,9 @@ impl BatchQueue {
         // answer the backlog against the state it was submitted under
         self.flush();
         // lock order: state → cache (matches the flush closure)
-        let mut st = recover(&served.state);
+        let mut st = served.state.lock();
         st.insert(a);
-        recover(&served.cache).invalidate();
+        served.cache.lock().invalidate();
         Ok(served.generation.fetch_add(1, Ordering::Relaxed) + 1)
     }
 
@@ -186,7 +180,7 @@ impl BatchQueue {
         self.served
             .as_ref()
             .map(|s| {
-                let c = recover(&s.cache);
+                let c = s.cache.lock();
                 (c.hits, c.misses)
             })
             .unwrap_or((0, 0))
@@ -216,7 +210,7 @@ impl BatchQueue {
         let (tx, rx): (Sender<Result<f64, SelectError>>, Receiver<Result<f64, SelectError>>) =
             channel();
         let should_flush = {
-            let mut q = recover(&self.queue);
+            let mut q = self.queue.lock();
             q.push(Pending { item, reply: tx });
             q.len() >= self.cfg.max_batch || self.deadline_expired()
         };
@@ -277,7 +271,7 @@ impl BatchQueue {
     /// flush function panicked or returned a short/long result vector.
     pub fn flush(&self) {
         let pending: Vec<Pending> = {
-            let mut q = recover(&self.queue);
+            let mut q = self.queue.lock();
             std::mem::take(&mut *q)
         };
         if pending.is_empty() {
@@ -305,7 +299,7 @@ impl BatchQueue {
     }
 
     pub fn queued(&self) -> usize {
-        recover(&self.queue).len()
+        self.queue.lock().len()
     }
 }
 

@@ -259,7 +259,9 @@ impl Leader {
             (ObjectiveChoice::Logistic, Backend::Native) => {
                 Ok(Box::new(LogisticObjective::new(ds)))
             }
-            (ObjectiveChoice::OvrSoftmax, _) => Ok(Box::new(OvrSoftmaxObjective::new(ds))),
+            (ObjectiveChoice::OvrSoftmax, _) => OvrSoftmaxObjective::new(ds)
+                .map(|o| Box::new(o) as Box<dyn Objective>)
+                .map_err(SelectError::InvalidSpec),
             (ObjectiveChoice::Aopt { beta_sq, sigma_sq }, Backend::Native) => {
                 Ok(Box::new(AOptimalityObjective::new(ds, *beta_sq, *sigma_sq)))
             }
@@ -359,18 +361,28 @@ impl Leader {
     /// [`Leader::run`] and [`Leader::run_many`].
     fn finalize(&self, job: &SelectionJob, result: SelectionResult) -> SelectionReport {
         // LASSO reports no objective value; evaluate its set. Recompute the
-        // native value for every algorithm so backends are comparable.
-        let native_obj: Box<dyn Objective> = match &job.objective {
-            ObjectiveChoice::Lreg => Box::new(LinearRegressionObjective::new(&job.dataset)),
-            ObjectiveChoice::R2 => Box::new(R2Objective::new(&job.dataset)),
-            ObjectiveChoice::Logistic => Box::new(LogisticObjective::new(&job.dataset)),
-            ObjectiveChoice::OvrSoftmax => Box::new(OvrSoftmaxObjective::new(&job.dataset)),
+        // native value for every algorithm so backends are comparable. A job
+        // that reached finalize already resolved through [`Leader::objective`],
+        // so the fallible OvrSoftmax constructor cannot fail here; if it
+        // somehow does, keep the value the run reported instead of panicking.
+        let native_obj: Option<Box<dyn Objective>> = match &job.objective {
+            ObjectiveChoice::Lreg => {
+                Some(Box::new(LinearRegressionObjective::new(&job.dataset)))
+            }
+            ObjectiveChoice::R2 => Some(Box::new(R2Objective::new(&job.dataset))),
+            ObjectiveChoice::Logistic => Some(Box::new(LogisticObjective::new(&job.dataset))),
+            ObjectiveChoice::OvrSoftmax => OvrSoftmaxObjective::new(&job.dataset)
+                .ok()
+                .map(|o| Box::new(o) as Box<dyn Objective>),
             ObjectiveChoice::Aopt { beta_sq, sigma_sq } => {
-                Box::new(AOptimalityObjective::new(&job.dataset, *beta_sq, *sigma_sq))
+                Some(Box::new(AOptimalityObjective::new(&job.dataset, *beta_sq, *sigma_sq)))
             }
         };
-        let native_value = native_obj.eval(&result.set);
         let mut result = result;
+        let native_value = match native_obj {
+            Some(obj) => obj.eval(&result.set),
+            None => result.value,
+        };
         if matches!(job.algorithm, AlgorithmChoice::Lasso(_)) {
             result.value = native_value;
         }
@@ -470,7 +482,12 @@ impl Leader {
                     rng: Pcg64::seed_from(job.seed),
                     done: false,
                 },
-                (Some(_), None) => unreachable!("valid driver lanes always resolve"),
+                // valid driver lanes always resolve an objective; answer
+                // with a lane failure rather than aborting the batch if
+                // that pairing ever breaks
+                (Some(_), None) => Lane::Failed(SelectError::Backend(
+                    "driver lane resolved no objective".into(),
+                )),
             });
         }
 

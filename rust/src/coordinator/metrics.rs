@@ -1,7 +1,8 @@
 //! Process metrics registry: named counters and gauges with a text
 //! snapshot, fed by the leader and the experiment harness.
 //!
-//! Hot-path friendly: the maps are behind `RwLock`s with atomic leaves, so
+//! Hot-path friendly: the maps are behind `util::sync::RwLock`s (poison-
+//! recovering, lock-order tracked in instrumented builds) with atomic leaves, so
 //! incrementing or reading an *existing* key takes only a shared read lock
 //! plus one atomic op — pool workers bumping the same counter never
 //! serialize on a registry-wide mutex. The write lock is taken exactly
@@ -9,7 +10,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::RwLock;
+use crate::util::sync::RwLock;
 
 /// Named counters (monotonic) and gauges (last-write-wins, fixed-point
 /// micro units for fractional values).
@@ -26,7 +27,7 @@ impl MetricsRegistry {
 
     pub fn inc(&self, name: &str, by: u64) {
         // fast path: existing key under the shared read lock
-        if let Some(c) = self.counters.read().unwrap().get(name) {
+        if let Some(c) = self.counters.read().get(name) {
             c.fetch_add(by, Ordering::Relaxed);
             return;
         }
@@ -34,7 +35,6 @@ impl MetricsRegistry {
         // have raced us to the insert; fetch_add composes either way)
         self.counters
             .write()
-            .unwrap()
             .entry(name.to_string())
             .or_insert_with(|| AtomicU64::new(0))
             .fetch_add(by, Ordering::Relaxed);
@@ -43,7 +43,6 @@ impl MetricsRegistry {
     pub fn counter(&self, name: &str) -> u64 {
         self.counters
             .read()
-            .unwrap()
             .get(name)
             .map(|c| c.load(Ordering::Relaxed))
             .unwrap_or(0)
@@ -52,13 +51,12 @@ impl MetricsRegistry {
     /// Set a gauge to a float value (stored as micro-units).
     pub fn set_gauge(&self, name: &str, value: f64) {
         let micros = (value * 1e6) as i64;
-        if let Some(g) = self.gauges.read().unwrap().get(name) {
+        if let Some(g) = self.gauges.read().get(name) {
             g.store(micros, Ordering::Relaxed);
             return;
         }
         self.gauges
             .write()
-            .unwrap()
             .entry(name.to_string())
             .or_insert_with(|| AtomicI64::new(0))
             .store(micros, Ordering::Relaxed);
@@ -67,7 +65,6 @@ impl MetricsRegistry {
     pub fn gauge(&self, name: &str) -> f64 {
         self.gauges
             .read()
-            .unwrap()
             .get(name)
             .map(|g| g.load(Ordering::Relaxed) as f64 / 1e6)
             .unwrap_or(0.0)
@@ -76,10 +73,10 @@ impl MetricsRegistry {
     /// Text snapshot, one `name value` per line, sorted.
     pub fn snapshot(&self) -> String {
         let mut out = String::new();
-        for (k, v) in self.counters.read().unwrap().iter() {
+        for (k, v) in self.counters.read().iter() {
             out.push_str(&format!("{k} {}\n", v.load(Ordering::Relaxed)));
         }
-        for (k, v) in self.gauges.read().unwrap().iter() {
+        for (k, v) in self.gauges.read().iter() {
             out.push_str(&format!(
                 "{k} {}\n",
                 crate::util::fmt_f64(v.load(Ordering::Relaxed) as f64 / 1e6)

@@ -300,6 +300,9 @@ pub fn install_drain_signals() -> &'static AtomicBool {
         fn signal(signum: i32, handler: usize) -> usize;
     }
     let handler = drain_on_signal as extern "C" fn(i32) as usize;
+    // SAFETY: `signal` is the POSIX entry point with the documented
+    // (int, handler) -> handler signature; the handler only stores to an
+    // AtomicBool, which is async-signal-safe.
     unsafe {
         signal(2, handler); // SIGINT
         signal(15, handler); // SIGTERM

@@ -170,9 +170,10 @@ impl Dataset {
         for (i, row) in t.rows.iter().enumerate() {
             let mut cells = row.iter();
             if has_y {
-                y.push(
-                    cells.next().unwrap().parse::<f64>().map_err(|e| e.to_string())?,
-                );
+                let cell = cells
+                    .next()
+                    .ok_or_else(|| format!("row {i} has no label cell"))?;
+                y.push(cell.parse::<f64>().map_err(|e| e.to_string())?);
             }
             for (j, c) in cells.enumerate() {
                 x.set(i, j, c.parse::<f64>().map_err(|e| e.to_string())?);

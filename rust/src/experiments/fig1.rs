@@ -48,8 +48,8 @@ pub fn run_fig1(cfg: &Fig1Config) -> Fig1Output {
     let all: Vec<usize> = (0..200).collect();
     let singles = st.gains(&all);
     let a = (0..200)
-        .max_by(|&x, &y| singles[x].partial_cmp(&singles[y]).unwrap())
-        .unwrap();
+        .max_by(|&x, &y| singles[x].total_cmp(&singles[y]))
+        .unwrap_or(0);
 
     let pts = spectra::sandwich_scatter(&obj, a, &cfg.sizes, cfg.trials_per_size, &mut rng);
     let mut scatter = CsvTable::new(&["set_size", "marginal"]);

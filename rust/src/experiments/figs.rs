@@ -132,9 +132,9 @@ pub fn metric_for(figure: FigureId, ds: &Dataset, set: &[usize]) -> f64 {
     match figure {
         FigureId::Fig2 => R2Objective::new(ds).eval(set),
         FigureId::Fig3 => match ds.task {
-            Task::MultiClassification { .. } => {
-                OvrSoftmaxObjective::new(ds).accuracy_on(set, &ds.x, &ds.y)
-            }
+            Task::MultiClassification { .. } => OvrSoftmaxObjective::new(ds)
+                .map(|o| o.accuracy_on(set, &ds.x, &ds.y))
+                .unwrap_or(f64::NAN),
             _ => LogisticObjective::new(ds).accuracy_on(set, &ds.x, &ds.y),
         },
         FigureId::Fig4 => {

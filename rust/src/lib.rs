@@ -45,7 +45,13 @@
 //! [`coordinator::wire`] — one request frame per line, one reply frame per
 //! request, against the same deterministic serving core the in-process
 //! [`coordinator::SessionClient`] uses.
+//!
+//! The crate also audits itself: [`analysis`] implements the `dash audit`
+//! invariant checker (no panic paths in library code, audited `unsafe`,
+//! wrapper-only locking via [`util::sync`], sorted-key wire frames), run
+//! as a hard gate in CI and by `tests/audit.rs`.
 
+pub mod analysis;
 pub mod util;
 pub mod cli;
 pub mod rng;

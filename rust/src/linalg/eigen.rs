@@ -63,7 +63,7 @@ pub fn jacobi_eigh(a: &Matrix) -> (Vec<f64>, Matrix) {
         }
     }
     let mut eig: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
-    eig.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    eig.sort_by(|a, b| a.0.total_cmp(&b.0));
     let vals: Vec<f64> = eig.iter().map(|e| e.0).collect();
     let mut vecs = Matrix::zeros(n, n);
     for (new_j, (_, old_j)) in eig.iter().enumerate() {
@@ -77,7 +77,11 @@ pub fn jacobi_eigh(a: &Matrix) -> (Vec<f64>, Matrix) {
 /// in the experiments stay ≤ a few hundred.
 pub fn sym_extreme_eigs(a: &Matrix) -> (f64, f64) {
     let (vals, _) = jacobi_eigh(a);
-    (*vals.first().unwrap(), *vals.last().unwrap())
+    // vals is empty only for a 0×0 matrix; (0, 0) is the sensible answer
+    match (vals.first(), vals.last()) {
+        (Some(&lo), Some(&hi)) => (lo, hi),
+        _ => (0.0, 0.0),
+    }
 }
 
 #[cfg(test)]

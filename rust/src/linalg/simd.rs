@@ -628,6 +628,8 @@ static SSE2_KERNELS: Kernels = Kernels {
 mod avx2 {
     use std::arch::x86_64::*;
 
+    // SAFETY: callable only when AVX2+FMA are present — the sole callers
+    // are the `*_entry` wrappers gated by runtime feature detection.
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn dot_impl(x: &[f64], y: &[f64]) -> f64 {
         debug_assert_eq!(x.len(), y.len());

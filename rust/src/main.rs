@@ -5,8 +5,10 @@
 //! dash experiment fig1|fig2|fig3|fig4|appendix-a|topk-bound [--scale quick|paper]
 //! dash artifacts                     # show the AOT artifact inventory
 //! dash spectra    --dataset d1 --k 25   # γ / α estimates for a workload
+//! dash audit      [--root DIR]       # run the in-tree invariant auditor
 //! ```
 
+use dash_select::analysis;
 use dash_select::cli::Args;
 use dash_select::coordinator::{
     install_drain_signals, Backend, Leader, NetConfig, NetServer, ObjectiveChoice, PlanSpec,
@@ -71,6 +73,14 @@ USAGE:
   dash artifacts          show the AOT artifact inventory
   dash spectra --dataset <D> --k <K>   sampled γ / α = γ² estimates
 
+  dash audit [--root DIR]
+      run the in-tree invariant auditor over rust/src, rust/tests,
+      rust/benches, and examples: no-panic (library code), unsafe-code
+      (file allowlist + per-block SAFETY comments), raw-lock (util::sync
+      wrappers only), lock-unwrap, wire-sorted-keys. Exemptions come from
+      audit.allow at the repo root (shrink-only: stale entries fail).
+      Exit 0 only on a clean tree — a required CI gate
+
   global: --log error|warn|info|debug
 "#;
 
@@ -94,6 +104,7 @@ fn main() {
         Some("route") => cmd_route(&args),
         Some("artifacts") => cmd_artifacts(),
         Some("spectra") => cmd_spectra(&args),
+        Some("audit") => cmd_audit(&args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())
@@ -300,35 +311,49 @@ fn cmd_serve(args: &Args) -> Result<(), SelectError> {
         ds.name
     );
     let t0 = std::time::Instant::now();
-    let (results, summary) = leader.serve(&specs, ServeConfig::default(), move |clients| {
+    // the closure returns Result so client failures surface as typed
+    // errors through the serve summary instead of panicking the smoke run
+    let (outcome, summary) = leader.serve(&specs, ServeConfig::default(), move |clients| {
         let adhoc = clients[sessions].clone();
-        std::thread::scope(|s| {
+        std::thread::scope(|s| -> Result<Vec<_>, SelectError> {
             let drivers: Vec<_> = clients[..sessions]
                 .iter()
                 .map(|c| {
                     let c = c.clone();
-                    s.spawn(move || c.drive().expect("driven session failed"))
+                    s.spawn(move || c.drive())
                 })
                 .collect();
+            let mut sweepers = Vec::with_capacity(readers);
             for t in 0..readers {
                 let c = adhoc.clone();
-                s.spawn(move || {
+                sweepers.push(s.spawn(move || -> Result<(), SelectError> {
                     let cand: Vec<usize> = (0..n).collect();
                     for i in 0..sweeps {
-                        let sw = c.sweep(&cand).expect("sweep failed");
+                        let sw = c.sweep(&cand)?;
                         assert_eq!(sw.gains.len(), cand.len());
                         if t == 0 && i % 8 == 7 {
-                            c.insert((i * 31) % n).expect("insert failed");
+                            c.insert((i * 31) % n)?;
                         }
                     }
-                });
+                    Ok(())
+                }));
+            }
+            for h in sweepers {
+                h.join().map_err(|_| {
+                    SelectError::ClientPanic("sweep client thread panicked".into())
+                })??;
             }
             drivers
                 .into_iter()
-                .map(|h| h.join().expect("driver client panicked"))
-                .collect::<Vec<_>>()
+                .map(|h| {
+                    h.join().map_err(|_| {
+                        SelectError::ClientPanic("driver client thread panicked".into())
+                    })?
+                })
+                .collect::<Result<Vec<_>, SelectError>>()
         })
     })?;
+    let results = outcome?;
     let dt = t0.elapsed().as_secs_f64().max(1e-9);
     for r in &results {
         println!(
@@ -491,6 +516,37 @@ fn cmd_route(args: &Args) -> Result<(), SelectError> {
         summary.handler_panics
     );
     Ok(())
+}
+
+/// `dash audit [--root DIR]`: run the invariant auditor (see
+/// [`dash_select::analysis`]) and exit nonzero unless the tree is clean.
+fn cmd_audit(args: &Args) -> Result<(), SelectError> {
+    let root = match args.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => {
+            let cwd = std::env::current_dir()
+                .map_err(|e| SelectError::Backend(format!("current dir: {e}")))?;
+            analysis::find_repo_root(&cwd).ok_or_else(|| {
+                SelectError::InvalidSpec(
+                    "no repo root above the current directory (looked for rust/src + \
+                     Cargo.toml); pass --root DIR"
+                        .into(),
+                )
+            })?
+        }
+    };
+    let outcome = analysis::audit_root(&root).map_err(SelectError::Backend)?;
+    print!("{}", outcome.render());
+    if outcome.clean() {
+        Ok(())
+    } else {
+        Err(SelectError::Rejected(format!(
+            "audit failed: {} violation(s), {} stale allowlist entr{}",
+            outcome.violations.len(),
+            outcome.stale.len(),
+            if outcome.stale.len() == 1 { "y" } else { "ies" }
+        )))
+    }
 }
 
 fn cmd_artifacts() -> Result<(), SelectError> {

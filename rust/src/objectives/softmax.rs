@@ -25,11 +25,19 @@ pub struct OvrSoftmaxObjective {
 }
 
 impl OvrSoftmaxObjective {
-    pub fn new(ds: &Dataset) -> Self {
+    /// Build the objective. Non-classification datasets are a typed error
+    /// (the serving stack can route arbitrary dataset/objective pairings
+    /// here, so this must not panic).
+    pub fn new(ds: &Dataset) -> Result<Self, String> {
         let classes = match ds.task {
             Task::MultiClassification { classes } => classes,
             Task::BinaryClassification => 2,
-            _ => panic!("OvrSoftmaxObjective requires a classification dataset"),
+            _ => {
+                return Err(
+                    "OvrSoftmaxObjective requires a classification dataset"
+                        .into(),
+                )
+            }
         };
         let per_class: Vec<LogisticObjective> = (0..classes)
             .map(|c| {
@@ -42,12 +50,12 @@ impl OvrSoftmaxObjective {
                 )
             })
             .collect();
-        OvrSoftmaxObjective {
+        Ok(OvrSoftmaxObjective {
             n: ds.n(),
             classes,
             name: format!("ovr-softmax[{}]", ds.name),
             per_class: Arc::new(per_class),
-        }
+        })
     }
 
     pub fn classes(&self) -> usize {
@@ -65,7 +73,8 @@ impl OvrSoftmaxObjective {
             for &l in labels {
                 counts[l as usize] += 1;
             }
-            return *counts.iter().max().unwrap() as f64 / labels.len() as f64;
+            let majority = counts.iter().max().copied().unwrap_or(0);
+            return majority as f64 / labels.len().max(1) as f64;
         }
         let d = x_eval.rows();
         let xs = x_eval.select_cols(set);
@@ -204,7 +213,7 @@ mod tests {
     fn value_monotone_and_normalized() {
         let mut rng = Pcg64::seed_from(1);
         let ds = small_ds(&mut rng);
-        let obj = OvrSoftmaxObjective::new(&ds);
+        let obj = OvrSoftmaxObjective::new(&ds).unwrap();
         assert_eq!(obj.classes(), 3);
         let mut st = obj.empty_state();
         assert_eq!(st.value(), 0.0);
@@ -221,7 +230,7 @@ mod tests {
     fn gain_consistency() {
         let mut rng = Pcg64::seed_from(2);
         let ds = small_ds(&mut rng);
-        let obj = OvrSoftmaxObjective::new(&ds);
+        let obj = OvrSoftmaxObjective::new(&ds).unwrap();
         let st = obj.state_for(&[1]);
         let g = st.gain(8);
         let delta = obj.eval(&[1, 8]) - obj.eval(&[1]);
@@ -242,17 +251,17 @@ mod tests {
                 ..Default::default()
             },
         );
-        let obj = OvrSoftmaxObjective::new(&ds);
+        let obj = OvrSoftmaxObjective::new(&ds).unwrap();
         let base = obj.accuracy_on(&[], &ds.x, &ds.y);
         let acc = obj.accuracy_on(&ds.true_support, &ds.x, &ds.y);
         assert!(acc > base + 0.1, "acc {acc} vs majority {base}");
     }
 
     #[test]
-    #[should_panic(expected = "classification dataset")]
     fn rejects_regression_data() {
         let mut rng = Pcg64::seed_from(4);
         let ds = crate::data::synthetic::regression_d1(&mut rng, 20, 5, 2, 0.2);
-        let _ = OvrSoftmaxObjective::new(&ds);
+        let err = OvrSoftmaxObjective::new(&ds).unwrap_err();
+        assert!(err.contains("classification dataset"), "{err}");
     }
 }

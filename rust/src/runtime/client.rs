@@ -6,10 +6,11 @@
 //! raw pointers) but is also the right coordinator shape: one owner for
 //! device state, all callers funneling batched requests through a queue.
 
+use crate::util::sync::Mutex;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 /// Opaque id of a compiled module inside the service.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -36,6 +37,11 @@ static GLOBAL: OnceLock<RuntimeClient> = OnceLock::new();
 impl RuntimeClient {
     /// The process-wide runtime handle (service thread spawned on first
     /// use; PJRT client creation errors surface on the first request).
+    ///
+    /// The spawn expect is a fatal startup invariant (allowlisted in
+    /// `audit.allow`): without its service thread the runtime has nothing
+    /// to degrade to.
+    #[allow(clippy::expect_used)]
     pub fn global() -> Result<RuntimeClient> {
         Ok(GLOBAL
             .get_or_init(|| {
@@ -50,11 +56,14 @@ impl RuntimeClient {
     }
 
     fn send(&self, req: Req) -> Result<()> {
-        // a caller that panicked mid-send poisons the mutex; later callers
-        // must see a clean channel error, not a poisoned-lock panic (the
-        // sender itself is still valid — poisoning carries no torn state)
-        let tx = self.tx.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
-        tx.send(req).map_err(|_| anyhow!("pjrt service thread terminated"))
+        // a caller that panicked mid-send poisons the mutex; the wrapper
+        // recovers it so later callers see a clean channel error, not a
+        // poisoned-lock panic (the sender itself is still valid —
+        // poisoning carries no torn state)
+        self.tx
+            .lock()
+            .send(req)
+            .map_err(|_| anyhow!("pjrt service thread terminated"))
     }
 
     /// Backend platform name (e.g. "cpu"); also validates the client came
@@ -91,30 +100,31 @@ fn service_loop(rx: std::sync::mpsc::Receiver<Req>) {
     let mut client: Option<std::result::Result<xla::PjRtClient, String>> = None;
     let mut modules: Vec<xla::PjRtLoadedExecutable> = Vec::new();
 
-    let ensure_client = |slot: &mut Option<std::result::Result<xla::PjRtClient, String>>| {
-        if slot.is_none() {
-            *slot = Some(xla::PjRtClient::cpu().map_err(|e| e.to_string()));
-        }
-    };
+    fn ensure_client(
+        slot: &mut Option<std::result::Result<xla::PjRtClient, String>>,
+    ) -> &std::result::Result<xla::PjRtClient, String> {
+        &*slot.get_or_insert_with(|| {
+            xla::PjRtClient::cpu().map_err(|e| e.to_string())
+        })
+    }
 
     while let Ok(req) = rx.recv() {
         match req {
             Req::Platform { reply } => {
-                ensure_client(&mut client);
-                let r = match client.as_ref().unwrap() {
+                let r = match ensure_client(&mut client) {
                     Ok(c) => Ok(c.platform_name()),
                     Err(e) => Err(e.clone()),
                 };
                 let _ = reply.send(r);
             }
             Req::Compile { path, reply } => {
-                ensure_client(&mut client);
                 // contain panics from the FFI layer to this request: the
                 // service must answer (Err) and keep serving, never die
                 // with in-flight replies dangling
+                let made = ensure_client(&mut client);
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                     || -> std::result::Result<ModuleId, String> {
-                        let c = client.as_ref().unwrap().as_ref().map_err(|e| e.clone())?;
+                        let c = made.as_ref().map_err(|e| e.clone())?;
                         let proto = xla::HloModuleProto::from_text_file(&path)
                             .map_err(|e| format!("parsing HLO text {path:?}: {e}"))?;
                         let comp = xla::XlaComputation::from_proto(&proto);

@@ -328,7 +328,8 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("bad number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -360,7 +361,8 @@ impl<'a> Parser<'a> {
                                 return Err(self.err("bad \\u escape"));
                             }
                             let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5]).unwrap();
+                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                    .map_err(|_| self.err("bad \\u escape"))?;
                             let cp = u32::from_str_radix(hex, 16)
                                 .map_err(|_| self.err("bad \\u escape"))?;
                             // Surrogate pairs unsupported (manifest never emits them);
@@ -376,7 +378,10 @@ impl<'a> Parser<'a> {
                     // copy a full utf-8 sequence
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest
+                        .chars()
+                        .next()
+                        .ok_or_else(|| self.err("unterminated string"))?;
                     s.push(c);
                     self.i += c.len_utf8();
                 }

@@ -28,6 +28,16 @@ impl Level {
         }
     }
 
+    fn from_u8(raw: u8) -> Level {
+        match raw {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+
     fn tag(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
@@ -44,7 +54,7 @@ static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
 fn current_level() -> Level {
     let raw = LEVEL.load(Ordering::Relaxed);
     if raw != u8::MAX {
-        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+        return Level::from_u8(raw);
     }
     let lvl = std::env::var("DASH_LOG")
         .ok()

@@ -1,11 +1,13 @@
 //! General-purpose substrates built from scratch (the image is offline and
-//! ships no general crates): JSON, CSV, timing, logging, a thread pool with
+//! ships no general crates): JSON, CSV, timing, logging, poison-recovering
+//! lock wrappers with lock-order deadlock detection, a thread pool with
 //! parallel-map, a progress meter, and a miniature property-testing harness.
 
 pub mod json;
 pub mod csvio;
 pub mod timer;
 pub mod logging;
+pub mod sync;
 pub mod threadpool;
 pub mod progress;
 pub mod proptest;
@@ -56,7 +58,7 @@ pub fn quantile(xs: &[f64], p: f64) -> f64 {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let idx = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = idx.floor() as usize;
     let hi = idx.ceil() as usize;

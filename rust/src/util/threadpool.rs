@@ -18,21 +18,13 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+use crate::util::sync::{Condvar, Mutex};
 
-/// Lock recovering from poisoning (the batcher's pattern). A thread that
-/// panicked while holding one of the pool's guards marks the mutex
-/// poisoned, but the protected state — a channel handle, a completion
-/// count — is still coherent; cascading the panic into every later
-/// `execute`/`scoped_map` caller would turn one contained fault into a
-/// wedged pool (and, served, a wedged drain path).
-fn recover<T>(lock: &Mutex<T>) -> MutexGuard<'_, T> {
-    lock.lock().unwrap_or_else(PoisonError::into_inner)
-}
+type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// Fixed-size worker pool. Dropping the pool joins all workers.
 ///
@@ -49,6 +41,11 @@ pub struct ThreadPool {
 
 impl ThreadPool {
     /// Create a pool with `size` workers (min 1).
+    ///
+    /// The spawn expect is a fatal startup invariant (allowlisted in
+    /// `audit.allow`): a process that cannot create its worker threads has
+    /// no degraded mode to fall back to.
+    #[allow(clippy::expect_used)]
     pub fn new(size: usize) -> Self {
         let size = size.max(1);
         let (tx, rx) = channel::<Job>();
@@ -59,7 +56,7 @@ impl ThreadPool {
                 std::thread::Builder::new()
                     .name(format!("dash-worker-{i}"))
                     .spawn(move || loop {
-                        let job = { recover(&rx).recv() };
+                        let job = { rx.lock().recv() };
                         match job {
                             Ok(job) => run_job(job),
                             Err(_) => break, // sender dropped -> shut down
@@ -86,8 +83,17 @@ impl ThreadPool {
     }
 
     /// Fire-and-forget job.
+    ///
+    /// The expects are pool-internal fatal invariants (allowlisted in
+    /// `audit.allow`): the sender outlives every `&self` caller by
+    /// construction, and the worker receiver is only dropped in
+    /// `ThreadPool::drop` after this handle is gone.
+    #[allow(clippy::expect_used)]
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        recover(self.tx.as_ref().expect("pool shut down"))
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .lock()
             .send(Box::new(job))
             .expect("worker channel closed");
     }
@@ -100,6 +106,12 @@ impl ThreadPool {
     /// Work is split into `size * 4` contiguous chunks for load balancing.
     /// While waiting, the caller drains the job queue itself, so calling
     /// `scoped_map` from inside a pool job cannot deadlock.
+    ///
+    /// The `panic!` re-raise and the completion expect are the documented
+    /// propagation contract (allowlisted in `audit.allow`): a panicking
+    /// chunk must panic the *caller*, never be swallowed into a partial
+    /// result vector.
+    #[allow(clippy::expect_used)]
     pub fn scoped_map<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send + 'static,
@@ -155,7 +167,7 @@ impl ThreadPool {
                     panicked.store(true, Ordering::SeqCst);
                 }
                 let (lock, cvar) = &*done;
-                *recover(lock) += 1;
+                *lock.lock() += 1;
                 cvar.notify_all();
             });
             start = end;
@@ -168,26 +180,26 @@ impl ThreadPool {
         // would trade the condvar wait for a mutex wait — an idle worker
         // also means the queue will drain without our help.
         loop {
-            if *recover(&done.0) >= dispatched {
+            if *done.0.lock() >= dispatched {
                 break;
             }
             let job = match self.rx.try_lock() {
-                Ok(rx) => rx.try_recv().ok(),
-                Err(_) => None,
+                Some(rx) => rx.try_recv().ok(),
+                None => None,
             };
             match job {
                 Some(job) => run_job(job),
                 None => {
                     let (lock, cvar) = &*done;
-                    let completed = recover(lock);
+                    let completed = lock.lock();
                     if *completed >= dispatched {
                         break;
                     }
-                    // recover here too: waking to a poisoned mutex is the
-                    // one spot that used to panic the *drain* path
-                    let _ = cvar
-                        .wait_timeout(completed, Duration::from_millis(1))
-                        .unwrap_or_else(PoisonError::into_inner);
+                    // the wrapper Condvar recovers a poisoned rewake too:
+                    // that was the one spot that used to panic the *drain*
+                    // path
+                    let _ =
+                        cvar.wait_timeout(completed, Duration::from_millis(1));
                 }
             }
         }
@@ -449,12 +461,12 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(2));
         let p = Arc::clone(&pool);
         let _ = std::thread::spawn(move || {
-            let _guard = p.tx.as_ref().expect("pool live").lock().unwrap();
+            let _guard = p.tx.as_ref().expect("pool live").lock();
             panic!("poison the sender mutex");
         })
         .join();
         assert!(
-            pool.tx.as_ref().expect("pool live").lock().is_err(),
+            pool.tx.as_ref().expect("pool live").is_poisoned(),
             "mutex must be poisoned for the regression to bite"
         );
         // dispatch and the completion barrier must recover the guards

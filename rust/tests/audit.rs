@@ -1,0 +1,225 @@
+//! Self-tests for `dash audit` (rust/src/analysis): each lint fires
+//! exactly once on a planted-violation fixture, the `#[cfg(test)]`
+//! exemption and the allowlist suppress correctly, stale allowlist
+//! entries are hard errors — and the real repository tree is clean, so
+//! `cargo test` enforces the invariants even with no CI in the loop.
+//!
+//! Fixture sources live in string literals; the masking lexer blanks
+//! string contents, so this file does not trip the audit on itself.
+
+use dash_select::analysis::{
+    audit_sources, find_repo_root, parse_allowlist, rules, Allowlist,
+};
+use std::path::Path;
+
+fn scan_one(rel: &str, source: &str) -> Vec<dash_select::analysis::Violation> {
+    let files = vec![(rel.to_string(), source.to_string())];
+    audit_sources(&files, &Allowlist::default()).violations
+}
+
+fn count_rule(vs: &[dash_select::analysis::Violation], rule: &str) -> usize {
+    vs.iter().filter(|v| v.rule == rule).count()
+}
+
+// ---------------------------------------------------------------------------
+// each lint fires exactly once on its planted fixture
+
+#[test]
+fn no_panic_unwrap_fires_exactly_once() {
+    let src = "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+    let vs = scan_one("rust/src/planted.rs", src);
+    assert_eq!(count_rule(&vs, rules::NO_PANIC), 1, "{vs:?}");
+    assert_eq!(vs[0].line, 2);
+    assert!(vs[0].excerpt.contains("x.unwrap()"));
+}
+
+#[test]
+fn no_panic_macros_fire_once_each() {
+    for mac in ["panic!(\"boom\")", "todo!()", "unreachable!()"] {
+        let src = format!("pub fn f() {{\n    {mac};\n}}\n");
+        let vs = scan_one("rust/src/planted.rs", &src);
+        assert_eq!(count_rule(&vs, rules::NO_PANIC), 1, "{mac}: {vs:?}");
+        assert_eq!(vs[0].line, 2, "{mac}");
+    }
+}
+
+#[test]
+fn no_panic_multiline_chain_reports_chain_start() {
+    let src = "pub fn f(x: Option<u8>) -> u8 {\n    x\n        .unwrap()\n}\n";
+    let vs = scan_one("rust/src/planted.rs", src);
+    assert_eq!(count_rule(&vs, rules::NO_PANIC), 1, "{vs:?}");
+}
+
+#[test]
+fn no_panic_skips_tests_comments_strings_and_other_dirs() {
+    // inside #[cfg(test)]
+    let test_mod = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { None::<u8>.unwrap(); }\n}\n";
+    assert!(scan_one("rust/src/planted.rs", test_mod).is_empty());
+    // in a comment
+    let comment = "// call .unwrap() here\npub fn f() {}\n";
+    assert!(scan_one("rust/src/planted.rs", comment).is_empty());
+    // in a string literal
+    let in_str = "pub fn f() -> &'static str {\n    \".unwrap()\"\n}\n";
+    assert!(scan_one("rust/src/planted.rs", in_str).is_empty());
+    // outside rust/src (integration tests may unwrap)
+    let src = "fn t() { None::<u8>.unwrap(); }\n";
+    assert!(scan_one("rust/tests/planted.rs", src).is_empty());
+    // unwrap_or / unwrap_or_else / an ident ending in panic! are not hits
+    let near = "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap_or(0)\n}\n";
+    assert!(scan_one("rust/src/planted.rs", near).is_empty());
+}
+
+#[test]
+fn unsafe_outside_allowlist_fires_exactly_once() {
+    let src = "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let vs = scan_one("rust/src/planted.rs", src);
+    assert_eq!(count_rule(&vs, rules::UNSAFE_CODE), 1, "{vs:?}");
+    assert_eq!(vs[0].line, 2);
+}
+
+#[test]
+fn unsafe_in_allowed_file_requires_safety_comment() {
+    let no_comment = "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let with_comment =
+        "pub fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid\n    unsafe { *p }\n}\n";
+    let allow = parse_allowlist(
+        "unsafe-file rust/src/planted.rs -- fixture\n",
+    )
+    .expect("parses");
+    let bad = audit_sources(
+        &[("rust/src/planted.rs".to_string(), no_comment.to_string())],
+        &allow,
+    );
+    assert_eq!(count_rule(&bad.violations, rules::UNSAFE_CODE), 1, "{:?}", bad.violations);
+    let good = audit_sources(
+        &[("rust/src/planted.rs".to_string(), with_comment.to_string())],
+        &allow,
+    );
+    assert!(good.clean(), "{}", good.render());
+}
+
+#[test]
+fn raw_lock_fires_on_qualified_path_and_grouped_import() {
+    let qualified = "pub struct S {\n    m: std::sync::Mutex<u8>,\n}\n";
+    let vs = scan_one("rust/src/planted.rs", qualified);
+    assert_eq!(count_rule(&vs, rules::RAW_LOCK), 1, "{vs:?}");
+    assert_eq!(vs[0].line, 2);
+
+    let grouped = "use std::sync::{Arc, Mutex};\n";
+    let vs = scan_one("rust/src/planted.rs", grouped);
+    assert_eq!(count_rule(&vs, rules::RAW_LOCK), 1, "{vs:?}");
+
+    // Arc alone is fine; the wrapper module itself is exempt
+    assert!(scan_one("rust/src/planted.rs", "use std::sync::Arc;\n").is_empty());
+    let in_wrapper = "pub struct S {\n    m: std::sync::Mutex<u8>,\n}\n";
+    assert!(scan_one("rust/src/util/sync.rs", in_wrapper).is_empty());
+}
+
+#[test]
+fn lock_unwrap_fires_everywhere_even_in_tests() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn t(m: &std::sync::Mutex<u8>) {\n        let _ = m.lock().unwrap();\n    }\n}\n";
+    let vs = scan_one("rust/tests/planted.rs", src);
+    assert_eq!(count_rule(&vs, rules::LOCK_UNWRAP), 1, "{vs:?}");
+    // ... and not double-reported as no-panic in rust/src
+    let in_src = "pub fn f(m: &M) {\n    m.lock().unwrap();\n}\n";
+    let vs = scan_one("rust/src/planted.rs", in_src);
+    assert_eq!(count_rule(&vs, rules::LOCK_UNWRAP), 1, "{vs:?}");
+    assert_eq!(count_rule(&vs, rules::NO_PANIC), 0, "{vs:?}");
+}
+
+#[test]
+fn wire_sorted_keys_fires_only_in_wire_files() {
+    let src = "pub fn f() -> &'static str {\n    \"{\\\"b\\\":1,\\\"a\\\":2}\"\n}\n";
+    let vs = scan_one("rust/src/coordinator/wire.rs", src);
+    assert_eq!(count_rule(&vs, rules::WIRE_SORTED_KEYS), 1, "{vs:?}");
+    assert!(scan_one("rust/src/planted.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// allowlist semantics
+
+#[test]
+fn allowlist_suppresses_matching_violation() {
+    let src = "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+    let allow = parse_allowlist(
+        "allow no-panic rust/src/planted.rs x.unwrap() -- fixture justification\n",
+    )
+    .expect("parses");
+    let out = audit_sources(
+        &[("rust/src/planted.rs".to_string(), src.to_string())],
+        &allow,
+    );
+    assert!(out.clean(), "{}", out.render());
+    assert_eq!(out.suppressed.len(), 1);
+}
+
+#[test]
+fn allowlist_is_path_and_needle_scoped() {
+    let src = "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+    // wrong path: violation survives AND the entry goes stale
+    let allow = parse_allowlist(
+        "allow no-panic rust/src/other.rs x.unwrap() -- wrong file\n",
+    )
+    .expect("parses");
+    let out = audit_sources(
+        &[("rust/src/planted.rs".to_string(), src.to_string())],
+        &allow,
+    );
+    assert_eq!(out.violations.len(), 1);
+    assert_eq!(out.stale.len(), 1);
+    assert!(!out.clean());
+}
+
+#[test]
+fn stale_allowlist_entries_fail_a_clean_tree() {
+    let src = "pub fn f() {}\n";
+    let allow = parse_allowlist(
+        "allow no-panic rust/src/planted.rs x.unwrap() -- code since fixed\n",
+    )
+    .expect("parses");
+    let out = audit_sources(
+        &[("rust/src/planted.rs".to_string(), src.to_string())],
+        &allow,
+    );
+    assert!(out.violations.is_empty());
+    assert_eq!(out.stale.len(), 1, "{}", out.render());
+    assert!(!out.clean());
+}
+
+#[test]
+fn clean_source_passes() {
+    let src = "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap_or_default()\n}\n";
+    let out = audit_sources(
+        &[("rust/src/planted.rs".to_string(), src.to_string())],
+        &Allowlist::default(),
+    );
+    assert!(out.clean(), "{}", out.render());
+}
+
+// ---------------------------------------------------------------------------
+// the real tree is clean, and the exemption budget holds
+
+#[test]
+fn repository_tree_is_audit_clean() {
+    let here = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = find_repo_root(here).expect("repo root above CARGO_MANIFEST_DIR");
+    let out = dash_select::analysis::audit_root(&root).expect("audit runs");
+    assert!(out.clean(), "dash audit found problems:\n{}", out.render());
+    assert!(out.files_scanned > 50, "scanned only {} files", out.files_scanned);
+}
+
+#[test]
+fn allowlist_budget_is_at_most_ten_justified_entries() {
+    let here = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = find_repo_root(here).expect("repo root");
+    let text = std::fs::read_to_string(root.join(dash_select::analysis::ALLOW_FILE))
+        .expect("audit.allow exists");
+    let allow = parse_allowlist(&text).expect("audit.allow parses");
+    assert!(allow.len() <= 10, "allowlist grew to {} entries", allow.len());
+    for e in &allow.allows {
+        assert!(!e.justification.trim().is_empty(), "{e:?}");
+    }
+    for (path, just, _) in &allow.unsafe_files {
+        assert!(!just.trim().is_empty(), "unsafe-file {path} lacks justification");
+    }
+}

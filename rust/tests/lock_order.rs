@@ -1,0 +1,55 @@
+//! Integration coverage for the `util::sync` lock-order detector through
+//! the public API only (the in-module unit tests also exercise the
+//! internals). One test, sequential phases — the acquisition-order graph
+//! is process-global, so phases must not race each other.
+//!
+//! No actual deadlock is ever risked: the detector records the
+//! `held → wanted` edge *before* blocking, and both inversions here are
+//! performed by one thread against uncontended locks.
+
+use dash_select::util::sync::{lock_order_cycles, lock_order_enabled, Mutex};
+
+#[test]
+fn detector_stays_silent_on_nesting_and_reports_inversion() {
+    if !lock_order_enabled() {
+        // release build without the `lock-order` feature: the API must
+        // stay callable and empty (zero-cost stubs)
+        assert!(lock_order_cycles().is_empty());
+        return;
+    }
+
+    let a = Mutex::new(0u8);
+    let b = Mutex::new(0u8);
+
+    // phase 1: consistent nesting a → b, twice — no cycle may appear
+    for _ in 0..2 {
+        let ga = a.lock();
+        let gb = b.lock();
+        drop(gb);
+        drop(ga);
+    }
+    let before = lock_order_cycles();
+    assert!(
+        !before.iter().any(|c| c.to_string().contains("lock_order.rs")),
+        "consistent nesting must stay silent: {before:?}"
+    );
+
+    // phase 2: the inversion b → a closes the cycle; both acquisition
+    // sites (this file) must be named in the report
+    let gb = b.lock();
+    let ga = a.lock();
+    drop(ga);
+    drop(gb);
+
+    let after = lock_order_cycles();
+    let ours: Vec<String> = after
+        .iter()
+        .map(|c| c.to_string())
+        .filter(|s| s.contains("lock_order.rs"))
+        .collect();
+    assert!(!ours.is_empty(), "ABBA inversion must be reported: {after:?}");
+    assert!(
+        ours.iter().any(|s| s.matches("lock_order.rs").count() >= 2),
+        "the report must carry both acquisition sites: {ours:?}"
+    );
+}

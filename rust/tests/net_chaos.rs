@@ -535,3 +535,35 @@ fn client_resumes_across_a_server_restart_byte_identical() {
     assert!(summary.restores >= 1, "the resumed session must come from the store");
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// Lock-order detector coverage: a full socket exchange — parallel
+/// leader, session store persistence, retries — with the `util::sync`
+/// tracker recording every wrapper acquisition. Any lock-order inversion
+/// anywhere in this binary's process (including the other chaos tests
+/// running alongside) would surface here as a reported cycle.
+#[test]
+fn socket_serving_records_no_lock_order_cycles() {
+    let dir = tempdir("lock-order");
+    let store_dir = dir.join("store");
+    let sd = store_dir.clone();
+    let mut server = start_server("127.0.0.1:0", snappy(), move || {
+        WireCore::new(Leader::with_threads(2))
+            .with_store(SessionStore::open(&sd).expect("store"))
+    });
+    let mut client = WireClient::connect(&server.addr, 23).with_policy(fast_retries());
+    client.ping().unwrap();
+    let (_, set, _, _) = drive_selection(&mut client).unwrap();
+    assert!(!set.is_empty());
+    close_all(&mut client);
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    if dash_select::util::sync::lock_order_enabled() {
+        let cycles = dash_select::util::sync::lock_order_cycles();
+        assert!(
+            cycles.is_empty(),
+            "lock-order inversion under socket serving:\n{}",
+            cycles.iter().map(|c| c.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

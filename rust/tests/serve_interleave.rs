@@ -35,7 +35,8 @@ use dash_select::coordinator::serve::{
 use dash_select::coordinator::SelectError;
 use dash_select::coordinator::session::{drive, SelectionSession};
 use dash_select::coordinator::{
-    AlgorithmChoice, Backend, Leader, ObjectiveChoice, SelectionJob, ServeSpec,
+    AlgorithmChoice, Backend, Leader, ObjectiveChoice, PlanSpec, ProblemSpec, SelectionJob,
+    ServeSpec,
 };
 use dash_select::data::{synthetic, Dataset};
 use dash_select::objectives::{LinearRegressionObjective, Objective, ObjectiveState};
@@ -737,4 +738,31 @@ fn threaded_serve_with_backpressure_matches_solo() {
     assert_eq!(adhoc.set, vec![2, 5, 8]);
     assert!(leader.metrics.counter("serve.requests") >= 33);
     assert!(leader.metrics.counter("serve.coalesced_rounds") >= 1);
+}
+
+/// Lock-order detector coverage: a parallel-engine serve with interleaved
+/// clients takes every wrapper lock in the stack (batcher state/cache,
+/// metrics registry, thread-pool queue and barrier) with the `util::sync`
+/// tracker recording acquisition order. Any inversion in this binary's
+/// process would surface here as a reported cycle.
+#[test]
+fn interleaved_serving_records_no_lock_order_cycles() {
+    let ds = dataset(77);
+    let leader = Leader::with_threads(2);
+    let problem = ProblemSpec::builder(Arc::new(ds)).k(4).seed(77).build().unwrap();
+    let greedy = problem.job(&PlanSpec::greedy().build().unwrap());
+    let dash = problem.job(&PlanSpec::dash().build().unwrap());
+    let a = leader.run(&greedy).unwrap();
+    let b = leader.run(&dash).unwrap();
+    assert_eq!(a.result.set.len(), 4);
+    assert_eq!(b.result.set.len(), 4);
+
+    if dash_select::util::sync::lock_order_enabled() {
+        let cycles = dash_select::util::sync::lock_order_cycles();
+        assert!(
+            cycles.is_empty(),
+            "lock-order inversion under interleaved serving:\n{}",
+            cycles.iter().map(|c| c.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
 }

@@ -16,7 +16,7 @@ use dash_select::objectives::{
 };
 use dash_select::oracle::BatchExecutor;
 use dash_select::rng::Pcg64;
-use std::sync::Mutex;
+use dash_select::util::sync::{Mutex, MutexGuard};
 
 /// Serializes every test in this binary: the dispatch override is global.
 static DISPATCH_LOCK: Mutex<()> = Mutex::new(());
@@ -31,9 +31,9 @@ impl Drop for OverrideGuard {
     }
 }
 
-fn locked() -> std::sync::MutexGuard<'static, ()> {
-    // a panicking test poisons the mutex but leaves the () state intact
-    DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+fn locked() -> MutexGuard<'static, ()> {
+    // a panicking test poisons the mutex; the wrapper recovers it
+    DISPATCH_LOCK.lock()
 }
 
 const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
@@ -151,7 +151,7 @@ fn softmax_sweep_agrees_across_levels() {
             ..Default::default()
         },
     );
-    let obj = OvrSoftmaxObjective::new(&ds);
+    let obj = OvrSoftmaxObjective::new(&ds).expect("classification dataset");
     let sets = [vec![], vec![0, 5]];
     check_levels_agree("ovr-softmax", &obj, &sets);
 }

@@ -125,7 +125,7 @@ fn softmax_blocked_matches_scalar_and_shards_bit_identically() {
             ..Default::default()
         },
     );
-    let obj = OvrSoftmaxObjective::new(&ds);
+    let obj = OvrSoftmaxObjective::new(&ds).expect("classification dataset");
     let sets = [vec![], vec![0, 5]];
     check_objective("ovr-softmax", &obj, &sets);
 }
